@@ -1,0 +1,89 @@
+//! The co-optimization frontier (experiments S2 + hardware axis).
+//!
+//! The paper's Fig.-5 loop jointly picks the block size k: larger k means
+//! more compression and higher simulated throughput, smaller k means higher
+//! accuracy.  This example joins the two axes:
+//!
+//! * accuracy per k from `artifacts/sweep.json` (written by `make sweep`,
+//!   Python training runs); falls back to the trend-only table if absent;
+//! * storage / throughput / efficiency per k from the Rust model
+//!   accounting + FPGA simulator.
+//!
+//! Run: `cargo run --release --example codesign_sweep`
+
+use circnn::fpga::device::CYCLONE_V;
+use circnn::fpga::report::DesignReport;
+use circnn::fpga::schedule::ScheduleConfig;
+use circnn::models::{Layer, Model};
+use circnn::util::json::Json;
+
+/// The sweep MLP (mirrors train.block_size_sweep): 256 -> 256 -> 10 at k.
+fn sweep_model(k: usize) -> Model {
+    Model {
+        name: "sweep_mlp",
+        dataset: "mnist_s",
+        input: (28, 28, 1),
+        layers: vec![
+            Layer::PriorPool { out_dim: 256 },
+            Layer::Flatten,
+            Layer::BcDense { n: 256, m: 256, k },
+            Layer::Dense { n: 256, m: 10 },
+        ],
+        serve_batch: 64,
+        paper_accuracy: 0.0,
+        paper_kfps: 0.0,
+        paper_kfps_per_w: 0.0,
+    }
+}
+
+fn load_sweep_accuracies() -> Option<Vec<(usize, f64)>> {
+    let path = circnn::runtime::Manifest::default_dir().join("sweep.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    let root = Json::parse(&text).ok()?;
+    let rows = root.get("block_size_sweep")?.as_arr()?;
+    Some(
+        rows.iter()
+            .filter_map(|r| {
+                Some((
+                    r.get("k")?.as_usize()?,
+                    r.get("accuracy")?.as_f64()?,
+                ))
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    let accs = load_sweep_accuracies();
+    if accs.is_none() {
+        eprintln!("note: artifacts/sweep.json missing (run `make sweep`) — accuracy column empty");
+    }
+    println!(
+        "{:>5} {:>10} {:>10} {:>12} {:>12} {:>12}",
+        "k", "acc", "storage x", "kFPS (sim)", "kFPS/W", "circ mults"
+    );
+    println!("{}", "-".repeat(68));
+    for k in [2usize, 4, 8, 16, 32, 64, 128] {
+        let m = sweep_model(k);
+        let cfg = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+        let rep = DesignReport::build(&m, &CYCLONE_V, &cfg);
+        let acc = accs
+            .as_ref()
+            .and_then(|a| a.iter().find(|(kk, _)| *kk == k))
+            .map(|(_, a)| format!("{:.2}%", a * 100.0))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:>5} {:>10} {:>9.1}x {:>12.1} {:>12.1} {:>12}",
+            k,
+            acc,
+            m.storage_report(12).reduction,
+            rep.kfps,
+            rep.kfps_per_w,
+            m.circ_mults_per_image()
+        );
+    }
+    println!(
+        "\nthe co-design tradeoff (paper Fig. 5): accuracy falls and efficiency rises with k;\n\
+         the paper picks k in 64-128 for FC layers — the knee of this frontier."
+    );
+}

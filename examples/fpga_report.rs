@@ -1,0 +1,70 @@
+//! Full hardware design report: every Table-1 model on both devices, with
+//! phase/cycle breakdowns, memory maps, dense-baseline comparison, and the
+//! AB1-AB3 ablations — the simulator's complete output surface.
+//!
+//! Run: `cargo run --release --example fpga_report`
+
+use circnn::baselines::dense_fpga::dense_design;
+use circnn::experiments::ablations;
+use circnn::fpga::device::{CYCLONE_V, KINTEX_7};
+use circnn::fpga::report::DesignReport;
+use circnn::fpga::schedule::ScheduleConfig;
+use circnn::models;
+
+fn main() {
+    for dev in [&CYCLONE_V, &KINTEX_7] {
+        println!(
+            "=== {} ({:.0} MHz, {} mults, {} KiB BRAM, {:.2} W max) ===",
+            dev.name,
+            dev.fmax_hz / 1e6,
+            dev.total_mults(),
+            dev.bram_bytes / 1024,
+            dev.power_w(1.0)
+        );
+        for m in models::registry() {
+            let cfg = ScheduleConfig::auto_for(&m, dev);
+            let rep = DesignReport::build(&m, dev, &cfg);
+            let dense = dense_design(&m, dev, &cfg);
+            println!(
+                "\n{} (batch {}):",
+                m.name, cfg.batch
+            );
+            println!(
+                "  circulant: {:>12.2} kFPS  {:>12.2} kFPS/W  {:>9.1} ns/img  util {:>5.1}%",
+                rep.kfps,
+                rep.kfps_per_w,
+                rep.ns_per_image,
+                rep.utilization * 100.0
+            );
+            println!(
+                "  dense:     {:>12.2} kFPS  {:>12.2} kFPS/W  on-chip: {}",
+                dense.kfps,
+                dense.kfps_per_w,
+                if dense.fits_on_chip { "yes" } else { "NO (off-chip derated)" }
+            );
+            println!(
+                "  algorithmic gain: {:.1}x throughput, {:.1}x efficiency",
+                rep.kfps / dense.kfps,
+                rep.kfps_per_w / dense.kfps_per_w
+            );
+            let ph = rep.sched.phase;
+            println!(
+                "  cycles/batch {}: fft {} | mult {} | ifft {} | dense {} | fills {}",
+                rep.sched.cycles_per_batch, ph.fft, ph.mult, ph.ifft, ph.dense, ph.fills
+            );
+            let mem = rep.sched.memory;
+            println!(
+                "  BRAM: weights {} + activations {} + twiddles {} = {} / {} bytes",
+                mem.weight_bytes,
+                mem.activation_bytes,
+                mem.twiddle_bytes,
+                mem.total_bytes,
+                mem.capacity_bytes
+            );
+        }
+        println!();
+    }
+
+    println!("=== ablations (CyClone V) ===");
+    print!("{}", ablations::render());
+}

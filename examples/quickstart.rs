@@ -1,0 +1,70 @@
+//! Quickstart: the whole stack in ~60 lines.
+//!
+//! Loads the AOT-compiled block-circulant MNIST MLP (trained and lowered by
+//! `make artifacts`; weights baked into the HLO), classifies a few synthetic
+//! test images through the PJRT runtime, then asks the FPGA simulator what
+//! the same network does on the paper's CyClone V design point.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use circnn::data;
+use circnn::fpga::device::CYCLONE_V;
+use circnn::fpga::report::DesignReport;
+use circnn::fpga::schedule::ScheduleConfig;
+use circnn::models;
+use circnn::runtime::engine::{argmax_rows, literal_f32, Engine};
+use circnn::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    // 1. artifacts: the contract produced by the Python build path
+    let manifest = Manifest::load(Manifest::default_dir())?;
+    let entry = manifest.model("mnist_mlp_1")?;
+    println!(
+        "model {}: trained accuracy {:.2}% (12-bit circulant; dense twin {:.2}%), {:.0}x smaller",
+        entry.name,
+        entry.accuracy.circulant_12bit * 100.0,
+        entry.accuracy.dense_f32 * 100.0,
+        entry.storage_reduction
+    );
+
+    // 2. runtime: compile the Pallas-kernel-backed artifact once, execute
+    //    from Rust (Python is NOT running — the HLO is self-contained)
+    let art = entry
+        .artifacts_pallas
+        .iter()
+        .chain(&entry.artifacts)
+        .find(|a| a.batch == 64)
+        .expect("batch-64 artifact");
+    let engine = Engine::cpu()?;
+    let exe = engine.load(manifest.path_of(&art.file))?;
+    println!("compiled {} on {}", art.file, engine.platform());
+
+    let ds = data::dataset(&entry.dataset).unwrap();
+    let (mut images, labels) = data::batch(&ds, 0, 64, true);
+    images.resize(64 * ds.pixels(), 0.0);
+    let out = exe.run1(&[literal_f32(&images, &art.input_shape)?])?;
+    let logits = out.to_vec::<f32>()?;
+    let preds = argmax_rows(&logits, 10);
+    let correct = preds.iter().zip(&labels).filter(|(p, y)| p == y).count();
+    println!("classified 64 images: {correct}/64 correct");
+    for i in 0..5 {
+        println!("  image {i}: predicted {} true {}", preds[i], labels[i]);
+    }
+
+    // 3. co-design: what does this network cost on the paper's FPGA?
+    let model = models::by_name("mnist_mlp_1").unwrap();
+    let rep =
+        DesignReport::build(&model, &CYCLONE_V, &ScheduleConfig::auto_for(&model, &CYCLONE_V));
+    println!(
+        "\nFPGA sim ({}): {:.0} kFPS, {:.0} kFPS/W, {:.1} ns/image, \
+         {:.0}% multiplier utilization, model+batch in {} KiB of BRAM",
+        rep.device,
+        rep.kfps,
+        rep.kfps_per_w,
+        rep.ns_per_image,
+        rep.utilization * 100.0,
+        rep.bram_used / 1024
+    );
+    println!("(paper row: 8.6e4 kFPS, 1.57e5 kFPS/W on the physical part)");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! End-to-end serving benchmark (experiment E2E, serving half).
+//!
+//! Starts the coordinator (router -> dynamic batcher -> PJRT executor) and
+//! drives it with concurrent synthetic clients at several batching
+//! policies, reporting throughput, latency percentiles, mean batch
+//! occupancy and padding waste — the serving-side counterpart of the
+//! paper's batch-processing study (Fig. 4 / AB3).
+//!
+//! Run: `cargo run --release --example serve_benchmark`
+
+use std::time::Duration;
+
+use circnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use circnn::data;
+use circnn::runtime::Manifest;
+
+fn drive(model: &str, clients: usize, requests: usize, policy: BatchPolicy) -> anyhow::Result<()> {
+    let server = Server::start(ServerConfig {
+        policy,
+        ..ServerConfig::default()
+    })?;
+    let man = Manifest::load(Manifest::default_dir())?;
+    let ds = data::dataset(&man.model(model)?.dataset).unwrap();
+
+    let t0 = std::time::Instant::now();
+    let mut correct = 0usize;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let server = &server;
+            handles.push(scope.spawn(move || {
+                let per = requests / clients;
+                let mut ok = 0usize;
+                for i in 0..per {
+                    let idx = (c * per + i) as u64;
+                    let (img, label) = data::sample(&ds, idx);
+                    match server.infer(model, &img) {
+                        Ok(resp) if resp.label == label => ok += 1,
+                        Ok(_) => {}
+                        Err(circnn::coordinator::InferError::Rejected) => {}
+                        Err(e) => eprintln!("client {c}: {e}"),
+                    }
+                }
+                ok
+            }));
+        }
+        for h in handles {
+            correct += h.join().unwrap();
+        }
+    });
+    let dt = t0.elapsed();
+    let m = server.metrics();
+    println!(
+        "max_batch={:<3} delay={:>4}us clients={clients}: {:>8.1} req/s  \
+         train-split acc {:>5.1}%  {}",
+        policy.max_batch,
+        policy.max_delay.as_micros(),
+        requests as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / requests as f64,
+        m.summary()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let model = "mnist_mlp_1";
+    let requests = 4096;
+    println!("serving benchmark: {model}, {requests} requests per config\n");
+
+    // the paper's design point: large interleaved batches
+    for (max_batch, delay_us, clients) in [
+        (1usize, 200u64, 8usize), // no batching (per-image pipeline, AB3-like)
+        (8, 500, 8),
+        (64, 2000, 8),  // paper's 50-100 batch regime
+        (64, 2000, 32), // more concurrency -> fuller batches
+    ] {
+        drive(
+            model,
+            clients,
+            requests,
+            BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_micros(delay_us),
+                max_queue: 8192,
+            },
+        )?;
+    }
+    println!("\nexpected shape (paper Fig. 4): larger interleaved batches lift throughput;\n\
+              per-image execution pays pipeline fills / fixed overheads per request.");
+    Ok(())
+}

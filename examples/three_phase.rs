@@ -1,0 +1,86 @@
+//! Fig.-4 three-phase schedule, functionally: run the trained MNIST MLP's
+//! block-circulant layer through the staged executor (phase 1 all FFTs →
+//! phase 2 all spectral MACs → phase 3 all IFFTs) and through the naive
+//! non-decoupled schedule (ablation AB1), showing that
+//!
+//!   * both compute the same layer,
+//!   * the decoupled schedule performs q + p transforms per image where
+//!     the naive one performs 2·p·q, and
+//!   * the executed op counts are exactly the workload the FPGA cycle
+//!     simulator charges for Table 1.
+//!
+//! Run: `cargo run --release --example three_phase`
+
+use circnn::circulant::BlockCirculant;
+use circnn::models::{self, Layer};
+use circnn::native::staged::{bc_dense_naive_schedule, bc_dense_staged};
+use circnn::util::rng::SplitMix;
+
+fn main() {
+    let model = models::by_name("mnist_mlp_1").unwrap();
+    let Some(Layer::BcDense { n, m, k }) = model
+        .layers
+        .iter()
+        .find(|l| matches!(l, Layer::BcDense { .. }))
+        .copied()
+    else {
+        unreachable!("mnist_mlp_1 has a BC dense layer");
+    };
+    let (p, q) = (m / k, n / k);
+    println!("layer: {n}x{m} block-circulant, k={k} ({p}x{q} blocks)\n");
+
+    let mut rng = SplitMix::new(1);
+    let mut bc = BlockCirculant::new(p, q, k, rng.normal_vec(p * q * k));
+    bc.precompute();
+    let batch = 64;
+    let xs = rng.normal_vec(batch * n);
+    let bias = rng.normal_vec(m);
+
+    let mut staged = vec![0.0f32; batch * m];
+    let t0 = std::time::Instant::now();
+    let c_dec = bc_dense_staged(&bc, &xs, batch, &bias, true, &mut staged);
+    let t_dec = t0.elapsed();
+
+    let mut naive = vec![0.0f32; batch * m];
+    let t0 = std::time::Instant::now();
+    let c_nv = bc_dense_naive_schedule(&bc, &xs, batch, &bias, true, &mut naive);
+    let t_nv = t0.elapsed();
+
+    let max_diff = staged
+        .iter()
+        .zip(&naive)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("outputs agree: max |Δ| = {max_diff:.2e} over {} values\n", staged.len());
+    assert!(max_diff < 1e-3, "schedules must compute the same layer");
+
+    let (d1, n1) = (c_dec.per_image(batch), c_nv.per_image(batch));
+    println!("per image           {:>12} {:>12}", "decoupled", "naive (AB1)");
+    println!("forward FFTs        {:>12} {:>12}   (q vs p*q)", d1.ffts, n1.ffts);
+    println!("inverse FFTs        {:>12} {:>12}   (p vs p*q)", d1.iffts, n1.iffts);
+    println!("spectral MAC groups {:>12} {:>12}", d1.mult_groups, n1.mult_groups);
+    println!(
+        "\nbatch of {batch}: decoupled {:.2?} vs naive {:.2?}  ({:.2}x)",
+        t_dec,
+        t_nv,
+        t_nv.as_secs_f64() / t_dec.as_secs_f64()
+    );
+
+    // the counts the cycle simulator charges (models::FftWork) must match
+    // what was just executed — the trust anchor for Table 1
+    let row = model
+        .accounting()
+        .into_iter()
+        .find(|r| r.kind == "bc_dense")
+        .unwrap();
+    assert_eq!(d1.ffts, row.fft_work.ffts_total);
+    assert_eq!(d1.iffts, row.fft_work.iffts_total);
+    assert_eq!(d1.mult_groups, row.fft_work.mult_groups_total);
+    // naive_transforms is the p*q count charged to *each* transform kind
+    assert_eq!(n1.ffts, row.fft_work.naive_transforms);
+    assert_eq!(n1.iffts, row.fft_work.naive_transforms);
+    println!(
+        "\nexecuted transforms == simulator workload (FftWork): \
+         Table 1's cycle counts charge exactly this datapath"
+    );
+}

@@ -1,0 +1,305 @@
+"""AOT export: train the registry models, lower to HLO text, emit manifest.
+
+This is the single build-time entry point (``make artifacts``); Python never
+runs on the request path.  For every model in the registry it:
+
+  1. trains on the synthetic dataset (params cached in ``artifacts/params``),
+  2. evaluates circulant@12-bit and the dense twin,
+  3. bakes the quantized parameters into a jitted forward pass and lowers it
+     to **HLO text** (not ``.serialize()`` — the image's xla_extension 0.5.1
+     rejects jax>=0.5's 64-bit-id protos; the text parser reassigns ids, see
+     /opt/xla-example/README.md), one artifact per serving batch size,
+  4. additionally exports a Pallas-kernel-backed variant of ``mnist_mlp_1``
+     (proof that the L1 kernel lowers into the same interchange format), and
+  5. exports a training pipeline (init + train-step with flattened params)
+     for the end-to-end Rust training example,
+
+then writes ``artifacts/manifest.json`` describing every artifact, the
+per-model accounting (Fig. 3 storage, equivalent GOPS), measured accuracies
+next to the paper's Table-1 rows, and dataset checksums for the Rust mirror.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts [--fast]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data as data_mod
+from . import layers
+from . import model as model_mod
+from . import train as train_mod
+
+QUANT_BITS = 12
+SERVE_BATCHES = (1, 64)
+
+# steps tuned so `make artifacts` stays in single-digit minutes on CPU
+TRAIN_STEPS = {
+    "mnist_mlp_1": 600, "mnist_mlp_2": 600, "mnist_lenet": 400,
+    "svhn_cnn": 400, "cifar_cnn": 400, "cifar_wrn": 300,
+}
+DENSE_TWIN_STEPS = 300
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> XLA HLO text (the interchange format, see module doc).
+
+    ``print_large_constants=True`` is load-bearing: the default elides big
+    literals as ``{...}``, which the consuming parser silently reads as
+    zeros — with baked-in trained weights that turns the whole model into
+    a zero function.  (Found the hard way; pinned by
+    ``test_aot.test_hlo_text_includes_large_constants`` and the Rust
+    runtime round-trip test.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _params_path(out_dir, name):
+    return os.path.join(out_dir, "params", f"{name}.npz")
+
+
+def _flatten_params(params):
+    """Stable flattening of the per-layer param list -> ordered (name, array)."""
+    flat = []
+    for i, p in enumerate(params):
+        if p is None:
+            continue
+        for field in sorted(p.keys()):
+            flat.append((f"L{i:02d}_{field}", p[field]))
+    return flat
+
+
+def _unflatten_params(model, arrays):
+    """Inverse of `_flatten_params` given the model's spec skeleton."""
+    params, it = [], iter(arrays)
+    skeleton = model_mod.init_params(jax.random.PRNGKey(0), model)
+    for p in skeleton:
+        if p is None:
+            params.append(None)
+        else:
+            params.append({field: next(it) for field in sorted(p.keys())})
+    return params
+
+
+def save_params(path, params):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    flat = _flatten_params(params)
+    np.savez(path, **{k: np.asarray(v) for k, v in flat})
+
+
+def load_params(path, model):
+    with np.load(path) as z:
+        names = sorted(z.files)
+        arrays = [jnp.asarray(z[n]) for n in names]
+    return _unflatten_params(model, arrays)
+
+
+def train_or_load(model, out_dir, *, fast=False, force=False):
+    path = _params_path(out_dir, model.name)
+    if os.path.exists(path) and not force:
+        return load_params(path, model), True
+    steps = TRAIN_STEPS[model.name] if model.name in TRAIN_STEPS else 300
+    if fast:
+        steps = min(steps, 60)
+    t0 = time.time()
+    params, losses = train_mod.train(model, steps=steps, quant_bits=QUANT_BITS)
+    print(f"  trained {model.name}: {steps} steps in {time.time()-t0:.1f}s "
+          f"loss {losses[0]:.3f}->{losses[-1]:.3f}", flush=True)
+    save_params(path, params)
+    return params, False
+
+
+def export_inference(model, params, out_dir, *, backend="jnp", suffix=""):
+    """Bake (quantized) params into the forward pass; one HLO per batch size."""
+    h, w, c = model.input_shape
+    entries = []
+    for batch in SERVE_BATCHES:
+        def fwd(x):
+            return (model_mod.apply(params, x, model, backend=backend,
+                                    quant_bits=QUANT_BITS),)
+        spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+        text = to_hlo_text(jax.jit(fwd).lower(spec))
+        fname = f"{model.name}{suffix}_b{batch}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(dict(batch=batch, file=fname,
+                            input_shape=[batch, h, w, c], output_shape=[batch, 10]))
+    return entries
+
+
+def export_training(model, out_dir, *, train_batch=64):
+    """Init + train-step artifacts with flattened params (exp E2E).
+
+    ``<name>_train_init.hlo.txt``: () -> tuple(flat initial params)
+    ``<name>_train_step.hlo.txt``: (*flat_params, *flat_opt_m, *flat_opt_v,
+        t, x, y) -> tuple(*new_params, *new_m, *new_v, new_t, loss)
+    The Rust driver treats the whole optimizer state as an opaque ordered
+    list of literals it feeds back each step.
+    """
+    h, w, c = model.input_shape
+    key = jax.random.PRNGKey(0)
+    params0 = model_mod.init_params(key, model)
+    flat0 = _flatten_params(params0)
+    names = [n for n, _ in flat0]
+    arrays0 = [v for _, v in flat0]
+
+    def rebuild(arrays):
+        return _unflatten_params(model, list(arrays))
+
+    def loss_fn(arrays, x, y):
+        logits = model_mod.apply(rebuild(arrays), x, model, quant_bits=QUANT_BITS)
+        return train_mod.cross_entropy(logits, y)
+
+    lr, b1, b2, eps = 1e-3, 0.9, 0.999, 1e-8
+
+    def train_step(*args):
+        nparam = len(names)
+        arrays = list(args[:nparam])
+        ms = list(args[nparam:2 * nparam])
+        vs = list(args[2 * nparam:3 * nparam])
+        t = args[3 * nparam]
+        x, y = args[3 * nparam + 1], args[3 * nparam + 2]
+        loss, grads = jax.value_and_grad(loss_fn)(arrays, x, y)
+        t = t + 1
+        tf = t.astype(jnp.float32)
+        out_p, out_m, out_v = [], [], []
+        for pth, g, m_, v_ in zip(arrays, grads, ms, vs):
+            m_ = b1 * m_ + (1 - b1) * g
+            v_ = b2 * v_ + (1 - b2) * g * g
+            mhat = m_ / (1 - b1 ** tf)
+            vhat = v_ / (1 - b2 ** tf)
+            out_p.append(pth - lr * mhat / (jnp.sqrt(vhat) + eps))
+            out_m.append(m_)
+            out_v.append(v_)
+        return tuple(out_p + out_m + out_v + [t, loss])
+
+    def train_init():
+        zeros = [jnp.zeros_like(a) for a in arrays0]
+        return tuple(list(arrays0) + zeros + [jnp.zeros_like(a) for a in arrays0]
+                     + [jnp.zeros((), jnp.int32)])
+
+    init_text = to_hlo_text(jax.jit(train_init).lower())
+    init_file = f"{model.name}_train_init.hlo.txt"
+    with open(os.path.join(out_dir, init_file), "w") as f:
+        f.write(init_text)
+
+    specs = ([jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays0] * 3
+             + [jax.ShapeDtypeStruct((), jnp.int32),
+                jax.ShapeDtypeStruct((train_batch, h, w, c), jnp.float32),
+                jax.ShapeDtypeStruct((train_batch,), jnp.int32)])
+    step_text = to_hlo_text(jax.jit(train_step).lower(*specs))
+    step_file = f"{model.name}_train_step.hlo.txt"
+    with open(os.path.join(out_dir, step_file), "w") as f:
+        f.write(step_text)
+
+    return dict(
+        init_file=init_file, step_file=step_file, batch=train_batch,
+        param_names=names,
+        param_shapes=[list(a.shape) for a in arrays0],
+        state_layout="params*N, adam_m*N, adam_v*N, t(i32), then step args x,y",
+        loss_index=3 * len(names) + 1,
+    )
+
+
+def build_manifest(out_dir, *, fast=False):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = dict(
+        version=1,
+        quant_bits=QUANT_BITS,
+        generated_unix=int(time.time()),
+        datasets={
+            name: dict(shape=list(data_mod.DATASETS[name][:3]),
+                       num_classes=data_mod.NUM_CLASSES,
+                       modes=data_mod.MODES,
+                       noise_amp=float(data_mod.NOISE_AMP),
+                       checksum=str(data_mod.checksum(name)))
+            for name in data_mod.DATASETS
+        },
+        models=[],
+    )
+
+    for name, model in model_mod.REGISTRY.items():
+        print(f"[aot] {name}", flush=True)
+        params, cached = train_or_load(model, out_dir, fast=fast)
+        acc = train_mod.evaluate(params, model, quant_bits=QUANT_BITS)
+        acc_f32 = train_mod.evaluate(params, model, quant_bits=None)
+
+        # dense twin (uncompressed baseline) accuracy
+        twin_path = _params_path(out_dir, name + "_dense")
+        twin_model = model
+        if os.path.exists(twin_path):
+            twin_params = load_params_dense(twin_path, twin_model)
+        else:
+            steps = min(DENSE_TWIN_STEPS, 60) if fast else DENSE_TWIN_STEPS
+            twin_params, _ = train_mod.train(twin_model, steps=steps, dense_twin=True)
+            save_params(twin_path, twin_params)
+        twin_acc = train_mod.evaluate(twin_params, twin_model, dense_twin=True)
+
+        artifacts = export_inference(model, params, out_dir)
+        entry = dict(
+            name=name,
+            dataset=model.dataset,
+            description=model.description,
+            input_shape=list(model.input_shape),
+            serve_batch=model.batch,
+            accuracy=dict(circulant_12bit=acc, circulant_f32=acc_f32,
+                          dense_f32=twin_acc),
+            paper=dict(accuracy=model.paper_accuracy, kfps=model.paper_kfps,
+                       kfps_per_w=model.paper_kfps_per_w),
+            storage=model_mod.storage_report(model, bits=QUANT_BITS),
+            equivalent_ops_per_image=model_mod.equivalent_ops_per_image(model),
+            layers=model_mod.accounting(model),
+            artifacts=artifacts,
+        )
+        if name == "mnist_mlp_1":
+            entry["artifacts_pallas"] = export_inference(
+                model, params, out_dir, backend="pallas", suffix="_pallas")
+            entry["training"] = export_training(model, out_dir)
+        manifest["models"].append(entry)
+        print(f"  acc circ12={acc:.4f} circ32={acc_f32:.4f} dense={twin_acc:.4f} "
+              f"storage x{entry['storage']['reduction']:.1f}", flush=True)
+
+    path = os.path.join(out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {path}", flush=True)
+    return manifest
+
+
+def load_params_dense(path, model):
+    with np.load(path) as z:
+        names = sorted(z.files)
+        arrays = [jnp.asarray(z[n]) for n in names]
+    params, it = [], iter(arrays)
+    skeleton = model_mod.init_params(jax.random.PRNGKey(0), model, dense_twin=True)
+    for p in skeleton:
+        if p is None:
+            params.append(None)
+        else:
+            params.append({field: next(it) for field in sorted(p.keys())})
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="cut training steps (CI / test mode)")
+    args = ap.parse_args()
+    build_manifest(args.out_dir, fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Deterministic synthetic datasets standing in for MNIST / SVHN / CIFAR-10.
+
+No network access is available in this environment, so per DESIGN.md §2 the
+real datasets are substituted by synthetic class-conditional image
+generators with matched shapes (28x28x1 and 32x32x3, 10 classes).  The
+generator is built on the splitmix64 PRNG with *closed-form per-element
+states*, so ``rust/src/data`` reproduces every float bit-for-bit: the same
+u64 arithmetic, the same top-24-bit-to-f32 mapping, the same element order.
+Integration tests compare checksums across the language boundary.
+
+Task structure: each class has ``MODES`` prototype templates (coarse grids
+upsampled nearest-neighbor), and each sample is ``clip(contrast * template
++ brightness + noise)``.  Multi-modal prototypes + jitter make accuracy
+capacity-dependent, which is what the paper's block-size/accuracy trade-off
+(Fig. 5 co-optimization loop) needs; absolute accuracies are reported next
+to the paper's real-dataset numbers in EXPERIMENTS.md, never in place of
+them.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+GAMMA = np.uint64(0x9E3779B97F4A7C15)
+MODES = 10
+NOISE_AMP = np.float32(1.0)
+TEST_INDEX_OFFSET = 1 << 20
+
+DATASETS = {
+    # name: (H, W, C, coarse_grid, upsample_factor)
+    "mnist_s": (28, 28, 1, 7, 4),
+    "svhn_s": (32, 32, 3, 8, 4),
+    "cifar_s": (32, 32, 3, 8, 4),
+}
+NUM_CLASSES = 10
+
+_DS_SEED = {"mnist_s": np.uint64(101), "svhn_s": np.uint64(202), "cifar_s": np.uint64(303)}
+
+
+def mix(z):
+    """splitmix64 finalizer (vectorized over uint64 arrays)."""
+    z = np.uint64(z) if np.isscalar(z) else z.astype(np.uint64)
+    with np.errstate(over="ignore"):
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def combine(*vals) -> np.uint64:
+    """Hash a tuple of small integers into a stream seed (order-sensitive)."""
+    h = np.uint64(0x243F6A8885A308D3)
+    with np.errstate(over="ignore"):
+        for v in vals:
+            h = mix(h ^ (np.uint64(v) + GAMMA))
+    return h
+
+
+def u01_stream(seed: np.uint64, n: int) -> np.ndarray:
+    """``n`` uniform f32 values in [0,1): closed-form splitmix64 stream.
+
+    Element ``i`` depends only on ``seed`` and ``i`` (state = seed +
+    (i+1)*GAMMA), so Rust can generate any slice independently and the two
+    implementations agree bit-for-bit (24-bit mantissa path is exact).
+    """
+    with np.errstate(over="ignore"):
+        states = np.uint64(seed) + GAMMA * np.arange(1, n + 1, dtype=np.uint64)
+    z = mix(states)
+    return ((z >> np.uint64(40)).astype(np.float32)) / np.float32(16777216.0)
+
+
+def class_template(name: str, cls: int, mode: int) -> np.ndarray:
+    """Prototype image for (class, mode): coarse grid, nearest-upsampled."""
+    h, w, c, grid, factor = DATASETS[name]
+    seed = combine(_DS_SEED[name], 1, cls, mode)
+    coarse = u01_stream(seed, grid * grid * c).reshape(grid, grid, c)
+    up = np.repeat(np.repeat(coarse, factor, axis=0), factor, axis=1)
+    return up[:h, :w, :].astype(np.float32)
+
+
+def sample(name: str, index: int) -> tuple[np.ndarray, int]:
+    """Deterministic sample ``index`` of dataset ``name``: (image, label)."""
+    h, w, c, _, _ = DATASETS[name]
+    cls = index % NUM_CLASSES
+    mode = (index // NUM_CLASSES) % MODES
+    template = class_template(name, cls, mode)
+    seed = combine(_DS_SEED[name], 2, cls, index)
+    vals = u01_stream(seed, 2 + h * w * c)
+    contrast = np.float32(0.7) + np.float32(0.6) * vals[0]
+    brightness = np.float32(-0.15) + np.float32(0.3) * vals[1]
+    noise = (vals[2:].reshape(h, w, c) - np.float32(0.5)) * NOISE_AMP
+    img = np.clip(template * contrast + brightness + noise, 0.0, 1.0).astype(np.float32)
+    return img, cls
+
+
+def batch(name: str, start: int, count: int, *, test: bool = False):
+    """Generate ``count`` consecutive samples starting at ``start``.
+
+    Test-split indices live at ``TEST_INDEX_OFFSET`` so the splits are
+    disjoint by construction.
+    """
+    base = start + (TEST_INDEX_OFFSET if test else 0)
+    h, w, c, _, _ = DATASETS[name]
+    xs = np.empty((count, h, w, c), dtype=np.float32)
+    ys = np.empty((count,), dtype=np.int32)
+    for i in range(count):
+        xs[i], ys[i] = sample(name, base + i)
+    return xs, ys
+
+
+def checksum(name: str, count: int = 16) -> int:
+    """Order-sensitive u64 checksum over the f32 bit patterns of the first
+    ``count`` training images — compared against the Rust mirror in
+    integration tests."""
+    xs, ys = batch(name, 0, count)
+    bits = xs.reshape(-1).view(np.uint32).astype(np.uint64)
+    h = np.uint64(0)
+    with np.errstate(over="ignore"):
+        for b in bits:
+            h = mix(h ^ (b + GAMMA))
+        for y in ys:
+            h = mix(h ^ (np.uint64(int(y)) + GAMMA))
+    return int(h)

@@ -1,0 +1,99 @@
+"""Layer-1 fused Pallas kernel: one whole block-circulant FC layer.
+
+Fuses the paper's three-phase datapath — (1) rFFT of the q input blocks,
+(2) spectral multiply-accumulate against the precomputed weight spectra,
+(3) Hermitian IFFT + bias + ReLU — into a single ``pallas_call``, exactly
+the schedule Fig. 4 time-multiplexes onto the FPGA's one FFT unit.
+
+The decoupling optimizations are structural here:
+  * ``FFT(w_ij)`` is precomputed (kernel takes spectra, not weights);
+  * ``FFT(x_j)`` is computed once per block-column (q rFFTs, not p*q);
+  * the IFFT sits outside the sum over j (p IFFTs, not p*q);
+  * only the ``k//2+1`` half-spectrum is stored/multiplied.
+
+Grid: 1-D over batch tiles.  Per grid step the VMEM working set is the
+input tile ``(bt, n)``, its spectra ``(bt, q, kh)``, the full weight spectra
+``(p, q, kh)`` and the output tile ``(bt, m)`` — the "whole model on chip"
+design point of the paper, which the VMEM-footprint estimator in
+DESIGN.md §9 checks against the 2 MiB budget.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fft_core
+
+DEFAULT_BATCH_TILE = 16
+
+
+def _batch_tile(batch: int) -> int:
+    tile = min(DEFAULT_BATCH_TILE, batch)
+    while batch % tile != 0:
+        tile -= 1
+    return tile
+
+
+def _layer_kernel(x_ref, wfr_ref, wfi_ref, b_ref, o_ref, *, k: int, relu: bool):
+    x = x_ref[...]  # (bt, n)
+    wfr, wfi = wfr_ref[...], wfi_ref[...]  # (p, q, kh)
+    bias = b_ref[...]  # (m,)
+    bt = x.shape[0]
+    p, q, kh = wfr.shape
+    # Phase 1: q rFFTs per sample (decoupled: computed once, reused for all i).
+    xb = x.reshape(bt, q, k)
+    xfr, xfi = fft_core.rfft_halfspec(xb)  # (bt, q, kh)
+    # Phase 2: spectral multiply-accumulate over j for every block-row i.
+    accr = jnp.einsum("pqk,bqk->bpk", wfr, xfr) - jnp.einsum("pqk,bqk->bpk", wfi, xfi)
+    acci = jnp.einsum("pqk,bqk->bpk", wfr, xfi) + jnp.einsum("pqk,bqk->bpk", wfi, xfr)
+    # Phase 3: p Hermitian IFFTs, bias, activation (the FPGA folds bias+ReLU
+    # into the IFFT pipeline's two extra stages).
+    y = fft_core.irfft_halfspec(accr, acci, k)  # (bt, p, k)
+    y = y.reshape(bt, p * k) + bias[None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def circulant_layer_pallas(x, wfr, wfi, bias, *, k: int, relu: bool = True):
+    """Fused block-circulant FC layer.
+
+    ``x``: ``(batch, q*k)`` activations; ``wfr``/``wfi``: ``(p, q, k//2+1)``
+    precomputed weight half-spectra; ``bias``: ``(p*k,)``.
+    Returns ``(batch, p*k)``.
+    """
+    batch, n = x.shape
+    p, q, kh = wfr.shape
+    if n != q * k:
+        raise ValueError(f"input width {n} != q*k = {q * k}")
+    m = p * k
+    bt = _batch_tile(batch)
+    x_spec = pl.BlockSpec((bt, n), lambda i: (i, 0))
+    w_spec = pl.BlockSpec((p, q, kh), lambda i: (0, 0, 0))
+    b_spec = pl.BlockSpec((m,), lambda i: (0,))
+    o_spec = pl.BlockSpec((bt, m), lambda i: (i, 0))
+    return pl.pallas_call(
+        lambda a, b, c, d, e: _layer_kernel(a, b, c, d, e, k=k, relu=relu),
+        grid=(batch // bt,),
+        in_specs=[x_spec, w_spec, w_spec, b_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, m), x.dtype),
+        interpret=True,
+    )(x, wfr, wfi, bias)
+
+
+def vmem_footprint_bytes(batch_tile: int, n: int, m: int, p: int, q: int, k: int) -> int:
+    """Estimated VMEM working set per grid step, in bytes (f32).
+
+    Used by the perf pass (DESIGN.md §9) to check the "whole working set on
+    chip" budget for every model/block-size configuration.
+    """
+    kh = k // 2 + 1
+    x_tile = batch_tile * n
+    x_spec = 2 * batch_tile * q * kh
+    w_spec = 2 * p * q * kh
+    acc = 2 * batch_tile * p * kh
+    out = batch_tile * m + m
+    return 4 * (x_tile + x_spec + w_spec + acc + out)

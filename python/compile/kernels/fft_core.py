@@ -1,0 +1,141 @@
+"""Shared radix-2 FFT building blocks for the Pallas kernels.
+
+The FPGA datapath in the paper is a single pipelined k-point FFT unit,
+time-multiplexed across FFTs and IFFTs (IFFT = conjugate trick on the same
+butterfly structure).  We reproduce exactly that dataflow here: an iterative
+radix-2 decimation-in-time FFT expressed as ``log2(k)`` vectorized butterfly
+stages over separated real/imag planes.  These helpers are pure ``jnp``
+functions so they can be called *inside* Pallas kernels (interpret mode) and
+from plain JAX code alike — one numeric structure shared by the kernel, the
+model, and the cycle-level simulator on the Rust side.
+
+Spectra are kept as separated real/imag ``float32`` planes throughout: this
+mirrors the FPGA's separate real/imag datapaths, and both the Pallas
+interpreter and the PJRT literal API are friendlier to f32 planes than to
+``complex64``.
+"""
+
+from __future__ import annotations
+
+
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def bit_reversal_permutation(k: int):
+    """Bit-reversal permutation for a k-point radix-2 FFT (k a power of 2).
+
+    Built from ``iota`` + shifts (traced ops, not a captured constant) so it
+    is legal inside a Pallas kernel body.  This is the input reorder the
+    FPGA performs with its addressing unit before the butterfly cascade.
+    """
+    if k & (k - 1) != 0 or k < 1:
+        raise ValueError(f"k must be a power of 2, got {k}")
+    bits = k.bit_length() - 1
+    idx = jnp.arange(k, dtype=jnp.int32)
+    rev = jnp.zeros_like(idx)
+    for b in range(bits):
+        rev = rev | (((idx >> b) & 1) << (bits - 1 - b))
+    return rev
+
+
+def _twiddles(stage: int, inverse: bool, dtype):
+    """Twiddle factors for one butterfly stage (traced ops).
+
+    Stage ``s`` (0-based) combines blocks of size ``2**s`` into ``2**(s+1)``;
+    the half-block twiddles are ``exp(-+ 2*pi*i * t / 2**(s+1))`` for
+    ``t in [0, 2**s)``.  On the FPGA these constants live in a small ROM per
+    pipeline stage; here they are computed at trace time with ``iota`` +
+    ``cos``/``sin`` so Pallas does not see captured constants.
+    """
+    half = 1 << stage
+    t = jnp.arange(half, dtype=dtype)
+    sign = 1.0 if inverse else -1.0
+    ang = sign * 2.0 * np.pi * t / (2.0 * half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def fft_stages(xr, xi, *, inverse: bool = False):
+    """Iterative radix-2 DIT FFT over the last axis of (real, imag) planes.
+
+    ``xr``/``xi`` have shape ``(..., k)`` with ``k`` a power of two known at
+    trace time.  Returns ``(yr, yi)`` of the same shape.  For ``inverse=True``
+    computes the *unscaled* inverse DFT; callers divide by ``k`` (the FPGA
+    folds the 1/k scaling into the final pipeline stage, we do the same at
+    the call site so the butterfly cascade is identical for FFT and IFFT —
+    the paper's "IFFT on the same FFT structure with a simple pre-processing
+    step").
+    """
+    k = xr.shape[-1]
+    stages = k.bit_length() - 1
+    perm = bit_reversal_permutation(k)
+    xr = jnp.take(xr, perm, axis=-1)
+    xi = jnp.take(xi, perm, axis=-1)
+    lead = xr.shape[:-1]
+    for s in range(stages):
+        half = 1 << s
+        m = half * 2
+        twr, twi = _twiddles(s, inverse, xr.dtype)
+        xr = xr.reshape(lead + (k // m, m))
+        xi = xi.reshape(lead + (k // m, m))
+        ur, ui = xr[..., :half], xi[..., :half]
+        vr_, vi_ = xr[..., half:], xi[..., half:]
+        # complex multiply v * twiddle
+        vr = vr_ * twr - vi_ * twi
+        vi = vr_ * twi + vi_ * twr
+        xr = jnp.concatenate([ur + vr, ur - vr], axis=-1)
+        xi = jnp.concatenate([ui + vi, ui - vi], axis=-1)
+        xr = xr.reshape(lead + (k,))
+        xi = xi.reshape(lead + (k,))
+    return xr, xi
+
+
+def fft(xr, xi):
+    """Forward k-point FFT over the last axis (real/imag planes)."""
+    return fft_stages(xr, xi, inverse=False)
+
+
+def ifft(xr, xi):
+    """Inverse k-point FFT over the last axis, including the 1/k scaling."""
+    k = xr.shape[-1]
+    yr, yi = fft_stages(xr, xi, inverse=True)
+    return yr / k, yi / k
+
+
+def rfft_halfspec(x):
+    """Real-input FFT returning only the first ``k//2 + 1`` bins.
+
+    The paper's hardware optimization: for real-valued ``x`` the spectrum is
+    conjugate-symmetric, so only half needs to be stored or multiplied.
+    Returns ``(yr, yi)`` of shape ``(..., k//2 + 1)``.
+    """
+    k = x.shape[-1]
+    yr, yi = fft_stages(x, jnp.zeros_like(x), inverse=False)
+    kh = k // 2 + 1
+    return yr[..., :kh], yi[..., :kh]
+
+
+def irfft_halfspec(yr, yi, k: int):
+    """Inverse of :func:`rfft_halfspec`: half-spectrum -> real signal.
+
+    Reconstructs the full conjugate-symmetric spectrum then runs the inverse
+    butterfly cascade; the imaginary output plane is discarded (it is zero up
+    to rounding for a symmetric spectrum).  This mirrors the FPGA's
+    Hermitian-symmetric IFFT pre-processing stage.
+    """
+    kh = k // 2 + 1
+    if yr.shape[-1] != kh:
+        raise ValueError(f"expected half-spectrum of {kh} bins, got {yr.shape[-1]}")
+    # mirror bins 1..k/2-1 conjugated, reversed
+    tail_r = yr[..., 1:-1][..., ::-1]
+    tail_i = -yi[..., 1:-1][..., ::-1]
+    fr = jnp.concatenate([yr, tail_r], axis=-1)
+    fi = jnp.concatenate([yi, tail_i], axis=-1)
+    xr, _ = ifft(fr, fi)
+    return xr
+
+
+def complex_mul(ar, ai, br, bi):
+    """Element-wise complex multiply on separated planes."""
+    return ar * br - ai * bi, ar * bi + ai * br

@@ -1,0 +1,114 @@
+"""Layer-1 Pallas kernels: the k-point FFT/IFFT butterfly datapath.
+
+Each kernel is the software twin of the paper's single pipelined FFT unit:
+``log2(k)`` butterfly stages over separated real/imag planes, preceded by a
+bit-reversal reorder, with IFFT realized on the same structure via the
+conjugate/pre-processing trick (see :mod:`fft_core`).
+
+Kernels run with ``interpret=True`` — the CPU PJRT plugin cannot execute
+Mosaic custom calls — and are validated against the O(k^2) DFT oracle in
+:mod:`ref` by ``python/tests/test_fft_kernel.py``.
+
+Grid layout: 1-D grid over row tiles; each grid step transforms a
+``(rows_per_tile, k)`` block held in VMEM.  For the block sizes the paper
+uses (k in 4..256) a tile of 128 rows needs at most
+``128 * 256 * 4 B * 2 planes = 256 KiB`` of VMEM — comfortably inside a TPU
+core's ~16 MiB and matching the paper's "whole working set on chip" design
+point.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fft_core
+
+DEFAULT_ROW_TILE = 128
+
+
+def _row_tile(rows: int) -> int:
+    tile = min(DEFAULT_ROW_TILE, rows)
+    while rows % tile != 0:
+        tile -= 1
+    return tile
+
+
+def _fft_kernel(xr_ref, xi_ref, or_ref, oi_ref, *, inverse: bool):
+    xr, xi = xr_ref[...], xi_ref[...]
+    yr, yi = fft_core.fft_stages(xr, xi, inverse=inverse)
+    if inverse:
+        k = xr.shape[-1]
+        yr, yi = yr / k, yi / k
+    or_ref[...] = yr
+    oi_ref[...] = yi
+
+
+def fft_pallas(xr, xi, *, inverse: bool = False):
+    """k-point FFT (or scaled IFFT) of ``(rows, k)`` real/imag planes."""
+    rows, k = xr.shape
+    tile = _row_tile(rows)
+    spec = pl.BlockSpec((tile, k), lambda i: (i, 0))
+    out = jax.ShapeDtypeStruct((rows, k), xr.dtype)
+    return pl.pallas_call(
+        lambda a, b, c, d: _fft_kernel(a, b, c, d, inverse=inverse),
+        grid=(rows // tile,),
+        in_specs=[spec, spec],
+        out_specs=(spec, spec),
+        out_shape=(out, out),
+        interpret=True,
+    )(xr, xi)
+
+
+def _rfft_kernel(x_ref, or_ref, oi_ref):
+    x = x_ref[...]
+    yr, yi = fft_core.fft_stages(x, jnp.zeros_like(x), inverse=False)
+    kh = x.shape[-1] // 2 + 1
+    or_ref[...] = yr[..., :kh]
+    oi_ref[...] = yi[..., :kh]
+
+
+def rfft_pallas(x):
+    """Real-input FFT of ``(rows, k)`` -> half-spectrum ``(rows, k//2+1)`` planes.
+
+    Implements the paper's real-FFT symmetry optimization: only the first
+    ``k//2+1`` bins leave the kernel, halving spectrum storage and the
+    phase-2 multiplier count.
+    """
+    rows, k = x.shape
+    kh = k // 2 + 1
+    tile = _row_tile(rows)
+    in_spec = pl.BlockSpec((tile, k), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tile, kh), lambda i: (i, 0))
+    out = jax.ShapeDtypeStruct((rows, kh), x.dtype)
+    return pl.pallas_call(
+        _rfft_kernel,
+        grid=(rows // tile,),
+        in_specs=[in_spec],
+        out_specs=(out_spec, out_spec),
+        out_shape=(out, out),
+        interpret=True,
+    )(x)
+
+
+def _irfft_kernel(yr_ref, yi_ref, o_ref, *, k: int):
+    o_ref[...] = fft_core.irfft_halfspec(yr_ref[...], yi_ref[...], k)
+
+
+def irfft_pallas(yr, yi, k: int):
+    """Hermitian-symmetric IFFT: half-spectrum ``(rows, k//2+1)`` -> real ``(rows, k)``."""
+    rows, kh = yr.shape
+    if kh != k // 2 + 1:
+        raise ValueError(f"half-spectrum width {kh} does not match k={k}")
+    tile = _row_tile(rows)
+    in_spec = pl.BlockSpec((tile, kh), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((tile, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        lambda a, b, c: _irfft_kernel(a, b, c, k=k),
+        grid=(rows // tile,),
+        in_specs=[in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, k), yr.dtype),
+        interpret=True,
+    )(yr, yi)

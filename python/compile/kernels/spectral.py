@@ -1,0 +1,64 @@
+"""Layer-1 Pallas kernel: phase-2 spectral multiply-accumulate.
+
+This is the element-wise multiplier array of the paper's three-phase FPGA
+datapath: given the precomputed half-spectra of the weight defining vectors
+``Wf (p, q, kh)`` and of the input blocks ``Xf (batch, q, kh)``, produce
+
+    Yf[b, i] = sum_j  Wf[i, j] o Xf[b, j]          (complex, element-wise)
+
+On the FPGA this phase re-uses the FFT unit's hardware multipliers; on
+TPU-shaped hardware it is pure VPU work over the ``kh`` lanes (deliberately
+*not* an MXU op — the paper's point is replacing the dense matmul with
+element-wise spectral work).
+
+Grid: ``(batch_tiles, p)``.  Each step holds one weight block-row
+``(q, kh)`` and one input tile ``(bt, q, kh)`` in VMEM — for the paper's
+largest FC configuration (k=128, q<=32) that is under 1 MiB, matching the
+BRAM-resident design point.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BATCH_TILE = 32
+
+
+def _batch_tile(batch: int) -> int:
+    tile = min(DEFAULT_BATCH_TILE, batch)
+    while batch % tile != 0:
+        tile -= 1
+    return tile
+
+
+def _spectral_kernel(wfr_ref, wfi_ref, xfr_ref, xfi_ref, yr_ref, yi_ref):
+    # wf*: (1, q, kh) — block-row i of the weight spectra
+    # xf*: (bt, q, kh) — input-tile spectra
+    wfr, wfi = wfr_ref[0], wfi_ref[0]
+    xfr, xfi = xfr_ref[...], xfi_ref[...]
+    # complex multiply-accumulate over the q block-columns
+    yr = jnp.sum(xfr * wfr[None] - xfi * wfi[None], axis=1)
+    yi = jnp.sum(xfr * wfi[None] + xfi * wfr[None], axis=1)
+    yr_ref[...] = yr[:, None, :]
+    yi_ref[...] = yi[:, None, :]
+
+
+def spectral_matmul_pallas(wfr, wfi, xfr, xfi):
+    """Phase-2 kernel: ``(p,q,kh)`` x ``(batch,q,kh)`` -> ``(batch,p,kh)`` spectra."""
+    p, q, kh = wfr.shape
+    batch = xfr.shape[0]
+    bt = _batch_tile(batch)
+    w_spec = pl.BlockSpec((1, q, kh), lambda b, i: (i, 0, 0))
+    x_spec = pl.BlockSpec((bt, q, kh), lambda b, i: (b, 0, 0))
+    y_spec = pl.BlockSpec((bt, 1, kh), lambda b, i: (b, i, 0))
+    out = jax.ShapeDtypeStruct((batch, p, kh), xfr.dtype)
+    return pl.pallas_call(
+        _spectral_kernel,
+        grid=(batch // bt, p),
+        in_specs=[w_spec, w_spec, x_spec, x_spec],
+        out_specs=(y_spec, y_spec),
+        out_shape=(out, out),
+        interpret=True,
+    )(wfr, wfi, xfr, xfi)

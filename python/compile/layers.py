@@ -1,0 +1,258 @@
+"""Layer-2 building blocks: block-circulant FC and CONV layers.
+
+Three interchangeable execution backends compute the same numbers:
+
+* ``"jnp"`` — ``jnp.fft.rfft``/``irfft`` (lowers to the plain HLO ``fft`` op
+  the Rust PJRT runtime executes; the AOT export path).
+* ``"pallas"`` — the fused Layer-1 kernel (the FPGA datapath twin).
+* ``"core"`` — the shared butterfly implementation in :mod:`kernels.fft_core`
+  (used to cross-check the other two).
+
+The decoupling optimizations are structural in all three: weight spectra are
+precomputed once, input-block FFTs are computed once per block-column, and
+the IFFT sits outside the accumulation (q rFFTs + p IFFTs per sample, not
+p*q of each).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import fft_core
+from .kernels.circulant_layer import circulant_layer_pallas
+
+
+# ---------------------------------------------------------------------------
+# quantization (the paper's 12-bit fixed-point datapath)
+# ---------------------------------------------------------------------------
+
+def fake_quant(x, bits: int = 12):
+    """Symmetric uniform fake-quantization with a straight-through estimator.
+
+    Models the FPGA's ``bits``-bit fixed-point datapath during training and
+    evaluation; the forward value is quantized, the gradient passes through
+    unchanged (STE).  Scale is per-tensor max-abs, matching the simple
+    fixed-point calibration the paper's hardware uses.
+    """
+    if bits is None:
+        return x
+    levels = float(2 ** (bits - 1) - 1)
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8) / levels
+    q = jnp.round(x / scale) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+# ---------------------------------------------------------------------------
+# block-circulant FC
+# ---------------------------------------------------------------------------
+
+def init_bc_dense(key, n: int, m: int, k: int):
+    """Initialize a block-circulant FC layer: defining vectors + bias.
+
+    Weight scale matches He-init of the *equivalent dense layer*: each output
+    element is a sum of n products where the effective dense entry is some
+    ``w_blocks`` element, so ``std = sqrt(2/n)`` applies to the defining
+    vectors directly.
+    """
+    if n % k or m % k:
+        raise ValueError(f"k={k} must divide n={n} and m={m}")
+    p, q = m // k, n // k
+    kw, _ = jax.random.split(key)
+    w = jax.random.normal(kw, (p, q, k), dtype=jnp.float32) * np.sqrt(2.0 / n)
+    b = jnp.zeros((m,), dtype=jnp.float32)
+    return {"w": w, "b": b}
+
+
+def bc_dense_spectra(w_blocks):
+    """Precompute the half-spectra of the defining vectors (real/imag planes).
+
+    This is the paper's offline ``FFT(w_ij)`` precomputation: at inference
+    time only the spectra exist — in the HLO artifacts they are baked
+    constants, in the FPGA they sit in BRAM.
+    """
+    wf = jnp.fft.rfft(w_blocks, axis=-1)
+    return jnp.real(wf).astype(jnp.float32), jnp.imag(wf).astype(jnp.float32)
+
+
+def bc_dense_apply(params, x, *, k: int, activation: str = "relu",
+                   backend: str = "jnp", quant_bits=None):
+    """Apply a block-circulant FC layer to ``x`` of shape ``(batch, n)``."""
+    w, b = params["w"], params["b"]
+    if quant_bits is not None:
+        w = fake_quant(w, quant_bits)
+        x = fake_quant(x, quant_bits)
+    p, q, _ = w.shape
+    batch = x.shape[0]
+    if backend == "pallas":
+        wfr, wfi = bc_dense_spectra(w)
+        y = circulant_layer_pallas(x, wfr, wfi, b, k=k, relu=(activation == "relu"))
+        return y
+    if backend == "jnp":
+        xf = jnp.fft.rfft(x.reshape(batch, q, k), axis=-1)
+        wf = jnp.fft.rfft(w, axis=-1)
+        acc = jnp.einsum("pqk,bqk->bpk", wf, xf)
+        y = jnp.fft.irfft(acc, n=k, axis=-1).reshape(batch, p * k)
+    elif backend == "core":
+        xfr, xfi = fft_core.rfft_halfspec(x.reshape(batch, q, k))
+        wfr, wfi = fft_core.rfft_halfspec(w)
+        ar = jnp.einsum("pqk,bqk->bpk", wfr, xfr) - jnp.einsum("pqk,bqk->bpk", wfi, xfi)
+        ai = jnp.einsum("pqk,bqk->bpk", wfr, xfi) + jnp.einsum("pqk,bqk->bpk", wfi, xfr)
+        y = fft_core.irfft_halfspec(ar, ai, k).reshape(batch, p * k)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    y = y + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# dense twins (uncompressed baselines)
+# ---------------------------------------------------------------------------
+
+def init_dense(key, n: int, m: int):
+    kw, _ = jax.random.split(key)
+    w = jax.random.normal(kw, (n, m), dtype=jnp.float32) * np.sqrt(2.0 / n)
+    return {"w": w, "b": jnp.zeros((m,), dtype=jnp.float32)}
+
+
+def dense_apply(params, x, *, activation: str = "relu", quant_bits=None):
+    w, b = params["w"], params["b"]
+    if quant_bits is not None:
+        w = fake_quant(w, quant_bits)
+        x = fake_quant(x, quant_bits)
+    y = x @ w + b[None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# im2col and CONV layers
+# ---------------------------------------------------------------------------
+
+def im2col(x, r: int, k: int):
+    """Vectorized im2col with the block-contiguous channel ordering.
+
+    ``x``: ``(batch, H, W, C)``, ``C`` divisible by ``k``; VALID patches.
+    Returns ``(batch, oh, ow, (C//k)*r*r, k)`` — j enumerates
+    ``(c_block, di, dj)`` with the k channel lanes contiguous, exactly the
+    ``x_j`` block layout Eqn. (1) needs.
+    """
+    b, h, w, c = x.shape
+    qc = c // k
+    oh, ow = h - r + 1, w - r + 1
+    taps = []
+    for di in range(r):
+        for dj in range(r):
+            taps.append(x[:, di : di + oh, dj : dj + ow, :])
+    # (b, oh, ow, r*r, qc, k) -> (b, oh, ow, qc, r*r, k)
+    stacked = jnp.stack(taps, axis=3).reshape(b, oh, ow, r * r, qc, k)
+    ordered = jnp.transpose(stacked, (0, 1, 2, 4, 3, 5))
+    return ordered.reshape(b, oh, ow, qc * r * r, k)
+
+
+def init_bc_conv(key, c: int, p_out: int, r: int, k: int):
+    """Block-circulant CONV layer (CirCNN convention over the C/P dims)."""
+    if c % k or p_out % k:
+        raise ValueError(f"k={k} must divide C={c} and P={p_out}")
+    fan_in = c * r * r
+    kw, _ = jax.random.split(key)
+    w = jax.random.normal(kw, (p_out // k, (c // k) * r * r, k), dtype=jnp.float32)
+    w = w * np.sqrt(2.0 / fan_in)
+    return {"w": w, "b": jnp.zeros((p_out,), dtype=jnp.float32)}
+
+
+def bc_conv_apply(params, x, *, r: int, k: int, activation: str = "relu",
+                  padding: str = "valid", quant_bits=None):
+    """Block-circulant CONV via im2col + the spectral FC machinery.
+
+    The paper's CONV generalization: after im2col the weight matrix
+    ``F (Cr^2 x P)`` is block-circulant, so the same FFT -> elementwise ->
+    IFFT procedure applies with q' = (C/k) r^2 column blocks.
+    """
+    w, b = params["w"], params["b"]
+    if quant_bits is not None:
+        w = fake_quant(w, quant_bits)
+        x = fake_quant(x, quant_bits)
+    if padding == "same":
+        pad = (r - 1) // 2
+        x = jnp.pad(x, ((0, 0), (pad, r - 1 - pad), (pad, r - 1 - pad), (0, 0)))
+    elif padding != "valid":
+        raise ValueError(f"unknown padding {padding!r}")
+    bsz = x.shape[0]
+    cols = im2col(x, r, k)  # (b, oh, ow, q', k)
+    oh, ow = cols.shape[1], cols.shape[2]
+    xf = jnp.fft.rfft(cols, axis=-1)
+    wf = jnp.fft.rfft(w, axis=-1)  # (p', q', kh)
+    acc = jnp.einsum("pqk,bhwqk->bhwpk", wf, xf)
+    y = jnp.fft.irfft(acc, n=k, axis=-1)  # (b, oh, ow, p', k)
+    y = y.reshape(bsz, oh, ow, -1) + b[None, None, None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+def init_conv(key, c: int, p_out: int, r: int):
+    fan_in = c * r * r
+    kw, _ = jax.random.split(key)
+    f = jax.random.normal(kw, (r, r, c, p_out), dtype=jnp.float32) * np.sqrt(2.0 / fan_in)
+    return {"w": f, "b": jnp.zeros((p_out,), dtype=jnp.float32)}
+
+
+def conv_apply(params, x, *, activation: str = "relu", padding: str = "valid",
+               quant_bits=None):
+    """Dense VALID/SAME convolution (uncompressed baseline / stem layers)."""
+    f, b = params["w"], params["b"]
+    if quant_bits is not None:
+        f = fake_quant(f, quant_bits)
+        x = fake_quant(x, quant_bits)
+    y = jax.lax.conv_general_dilated(
+        x, f, window_strides=(1, 1),
+        padding="SAME" if padding == "same" else "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    y = y + b[None, None, None, :]
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# pooling and the paper's "prior pooling" input reduction
+# ---------------------------------------------------------------------------
+
+def avg_pool2(x):
+    """2x2 average pooling, stride 2 (NHWC)."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).mean(axis=(2, 4))
+
+
+def max_pool2(x):
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def prior_pool(x, out_dim: int):
+    """The paper's input-size reduction for the MNIST MLPs.
+
+    1-D average pooling of the flattened image down to ``out_dim`` values:
+    window = ceil(dim/out_dim), zero-pad the tail so windows tile evenly.
+    Deterministic and mirrored bit-for-bit by ``rust/src/data/prior_pool``.
+    """
+    b = x.shape[0]
+    flat = x.reshape(b, -1)
+    dim = flat.shape[1]
+    win = -(-dim // out_dim)  # ceil
+    padded = jnp.pad(flat, ((0, 0), (0, win * out_dim - dim)))
+    return padded.reshape(b, out_dim, win).mean(axis=2)

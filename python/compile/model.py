@@ -1,0 +1,315 @@
+"""Layer-2 model definitions: the six Table-1 networks + dense twins.
+
+A small spec-driven composable model system: a model is a list of
+``LayerSpec``s interpreted by :func:`init_params` / :func:`apply`.  Each
+block-circulant model has a *dense twin* (same architecture, uncompressed
+weights) used for the paper's baseline accounting and accuracy comparison.
+
+The registry mirrors Table 1 of the paper:
+
+  mnist_mlp_1   MLP, prior-pooled 256-d input   (paper row: 92.9%)
+  mnist_mlp_2   MLP, prior-pooled 128-d input   (paper row: 95.6%)
+  mnist_lenet   LeNet-5-like CNN                (paper row: 99.0%)
+  svhn_cnn      small CNN                       (paper row: 96.2%)
+  cifar_cnn     small CNN                       (paper row: 80.3%)
+  cifar_wrn     wide-ResNet-lite with residual  (paper row: 94.75%)
+                block-circulant CONV blocks
+
+Block sizes follow the paper's co-optimization guidance: 64-128 for FC
+layers, smaller (4-16) for CONV layers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One layer of a model.
+
+    ``kind``: bc_dense | dense | bc_conv | conv | avg_pool2 | max_pool2 |
+    flatten | prior_pool | residual_begin | residual_end.
+    Residual markers bracket a sequence whose input is added back to its
+    output (shapes must match; used by cifar_wrn).
+    """
+    kind: str
+    n: int = 0            # fc in-dim
+    m: int = 0            # fc out-dim
+    c: int = 0            # conv in-channels
+    p: int = 0            # conv out-channels
+    r: int = 0            # conv kernel size
+    k: int = 0            # circulant block size (0 = dense)
+    activation: str = "relu"
+    padding: str = "valid"
+    out_dim: int = 0      # prior_pool target
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    dataset: str
+    input_shape: tuple   # (H, W, C)
+    specs: tuple         # tuple[LayerSpec, ...]
+    batch: int = 64      # artifact batch size (paper: 50-100 interleaved)
+    paper_accuracy: float = 0.0
+    paper_kfps: float = 0.0
+    paper_kfps_per_w: float = 0.0
+    description: str = ""
+
+    @property
+    def num_classes(self) -> int:
+        return 10
+
+
+def _mlp(name, dataset, pooled, hidden, k_fc, paper):
+    """Prior-pooled MLP: pool -> BC hidden layers -> small dense head."""
+    sp = [LayerSpec("prior_pool", out_dim=pooled), LayerSpec("flatten")]
+    n = pooled
+    for h in hidden:
+        sp.append(LayerSpec("bc_dense", n=n, m=h, k=k_fc))
+        n = h
+    sp.append(LayerSpec("dense", n=n, m=10, activation="none"))
+    acc, kfps, eff = paper
+    return ModelSpec(name, dataset, (28, 28, 1), tuple(sp), 64, acc, kfps, eff,
+                     f"MLP {pooled}->{'->'.join(map(str, hidden))}->10, k={k_fc}")
+
+
+def _registry():
+    models = {}
+
+    models["mnist_mlp_1"] = _mlp(
+        "mnist_mlp_1", "mnist_s", 256, [256], 128, (92.9, 8.6e4, 1.57e5))
+    models["mnist_mlp_2"] = _mlp(
+        "mnist_mlp_2", "mnist_s", 128, [256, 256], 64, (95.6, 2.9e4, 5.2e4))
+
+    # LeNet-5-like: 28x28x1 -> conv5(8) -> pool -> bc_conv5(16,k4) -> pool
+    # -> fc 256->128 (k64) -> head
+    models["mnist_lenet"] = ModelSpec(
+        "mnist_lenet", "mnist_s", (28, 28, 1),
+        (
+            LayerSpec("conv", c=1, p=8, r=5),
+            LayerSpec("avg_pool2"),
+            LayerSpec("bc_conv", c=8, p=16, r=5, k=4),
+            LayerSpec("avg_pool2"),
+            LayerSpec("flatten"),
+            LayerSpec("bc_dense", n=256, m=128, k=64),
+            LayerSpec("dense", n=128, m=10, activation="none"),
+        ),
+        64, 99.0, 363.0, 659.5, "LeNet-5-like CNN, conv k=4 / fc k=64")
+
+    # SVHN: 32x32x3 -> conv3(16) -> pool -> bc_conv3(32,k8) -> pool ->
+    # bc_conv3(32,k8) -> pool -> fc 128->128(k64) -> head
+    models["svhn_cnn"] = ModelSpec(
+        "svhn_cnn", "svhn_s", (32, 32, 3),
+        (
+            LayerSpec("conv", c=3, p=16, r=3, padding="same"),
+            LayerSpec("max_pool2"),
+            LayerSpec("bc_conv", c=16, p=32, r=3, k=8, padding="same"),
+            LayerSpec("max_pool2"),
+            LayerSpec("bc_conv", c=32, p=32, r=3, k=8, padding="same"),
+            LayerSpec("max_pool2"),
+            LayerSpec("flatten"),
+            LayerSpec("bc_dense", n=512, m=128, k=64),
+            LayerSpec("dense", n=128, m=10, activation="none"),
+        ),
+        64, 96.2, 384.9, 699.7, "small CNN, conv k=8 / fc k=64")
+
+    # CIFAR-10 simple CNN (the 80.3% row): same topology as svhn_cnn.
+    models["cifar_cnn"] = ModelSpec(
+        "cifar_cnn", "cifar_s", (32, 32, 3),
+        (
+            LayerSpec("conv", c=3, p=16, r=3, padding="same"),
+            LayerSpec("max_pool2"),
+            LayerSpec("bc_conv", c=16, p=32, r=3, k=8, padding="same"),
+            LayerSpec("max_pool2"),
+            LayerSpec("bc_conv", c=32, p=32, r=3, k=8, padding="same"),
+            LayerSpec("max_pool2"),
+            LayerSpec("flatten"),
+            LayerSpec("bc_dense", n=512, m=128, k=64),
+            LayerSpec("dense", n=128, m=10, activation="none"),
+        ),
+        64, 80.3, 1383.0, 2514.0, "small CNN, conv k=8 / fc k=64")
+
+    # Wide-ResNet-lite (the 94.75% row): conv stem + two residual
+    # block-circulant CONV blocks + BC fc.
+    models["cifar_wrn"] = ModelSpec(
+        "cifar_wrn", "cifar_s", (32, 32, 3),
+        (
+            LayerSpec("conv", c=3, p=32, r=3, padding="same"),
+            LayerSpec("max_pool2"),
+            LayerSpec("residual_begin"),
+            LayerSpec("bc_conv", c=32, p=32, r=3, k=8, padding="same"),
+            LayerSpec("bc_conv", c=32, p=32, r=3, k=8, padding="same", activation="none"),
+            LayerSpec("residual_end"),
+            LayerSpec("max_pool2"),
+            LayerSpec("residual_begin"),
+            LayerSpec("bc_conv", c=32, p=32, r=3, k=8, padding="same"),
+            LayerSpec("bc_conv", c=32, p=32, r=3, k=8, padding="same", activation="none"),
+            LayerSpec("residual_end"),
+            LayerSpec("max_pool2"),
+            LayerSpec("flatten"),
+            LayerSpec("bc_dense", n=512, m=256, k=64),
+            LayerSpec("dense", n=256, m=10, activation="none"),
+        ),
+        64, 94.75, 13.95, 25.4, "wide-ResNet-lite, residual BC conv blocks")
+
+    return models
+
+
+REGISTRY = _registry()
+MODEL_NAMES = tuple(REGISTRY.keys())
+
+
+# ---------------------------------------------------------------------------
+# init / apply
+# ---------------------------------------------------------------------------
+
+def init_params(key, model: ModelSpec, *, dense_twin: bool = False):
+    """Initialize the parameter list (one dict or None per LayerSpec)."""
+    params = []
+    for spec in model.specs:
+        key, sub = jax.random.split(key)
+        if spec.kind == "bc_dense":
+            params.append(layers.init_dense(sub, spec.n, spec.m) if dense_twin
+                          else layers.init_bc_dense(sub, spec.n, spec.m, spec.k))
+        elif spec.kind == "dense":
+            params.append(layers.init_dense(sub, spec.n, spec.m))
+        elif spec.kind == "bc_conv":
+            params.append(layers.init_conv(sub, spec.c, spec.p, spec.r) if dense_twin
+                          else layers.init_bc_conv(sub, spec.c, spec.p, spec.r, spec.k))
+        elif spec.kind == "conv":
+            params.append(layers.init_conv(sub, spec.c, spec.p, spec.r))
+        else:
+            params.append(None)
+    return params
+
+
+def apply(params, x, model: ModelSpec, *, dense_twin: bool = False,
+          backend: str = "jnp", quant_bits=None):
+    """Forward pass.  ``x``: (batch, H, W, C) raw images; returns logits."""
+    residual_stack = []
+    for spec, p in zip(model.specs, params):
+        if spec.kind == "bc_dense":
+            if dense_twin:
+                x = layers.dense_apply(p, x, activation=spec.activation,
+                                       quant_bits=quant_bits)
+            else:
+                x = layers.bc_dense_apply(p, x, k=spec.k, activation=spec.activation,
+                                          backend=backend, quant_bits=quant_bits)
+        elif spec.kind == "dense":
+            x = layers.dense_apply(p, x, activation=spec.activation,
+                                   quant_bits=quant_bits)
+        elif spec.kind == "bc_conv":
+            if dense_twin:
+                x = layers.conv_apply(p, x, activation=spec.activation,
+                                      padding=spec.padding, quant_bits=quant_bits)
+            else:
+                x = layers.bc_conv_apply(p, x, r=spec.r, k=spec.k,
+                                         activation=spec.activation,
+                                         padding=spec.padding, quant_bits=quant_bits)
+        elif spec.kind == "conv":
+            x = layers.conv_apply(p, x, activation=spec.activation,
+                                  padding=spec.padding, quant_bits=quant_bits)
+        elif spec.kind == "avg_pool2":
+            x = layers.avg_pool2(x)
+        elif spec.kind == "max_pool2":
+            x = layers.max_pool2(x)
+        elif spec.kind == "flatten":
+            x = x.reshape(x.shape[0], -1)
+        elif spec.kind == "prior_pool":
+            x = layers.prior_pool(x, spec.out_dim)
+        elif spec.kind == "residual_begin":
+            residual_stack.append(x)
+        elif spec.kind == "residual_end":
+            x = jnp.maximum(x + residual_stack.pop(), 0.0)
+        else:
+            raise ValueError(f"unknown layer kind {spec.kind!r}")
+    return x
+
+
+# ---------------------------------------------------------------------------
+# accounting (shared with the manifest and the Rust model registry)
+# ---------------------------------------------------------------------------
+
+def _conv_out_hw(h, w, r, padding):
+    if padding == "same":
+        return h, w
+    return h - r + 1, w - r + 1
+
+
+def accounting(model: ModelSpec):
+    """Per-layer parameter / storage / op accounting.
+
+    Returns a list of dicts with, per weight layer: dense params, circulant
+    params, dense MACs and circulant real-mult count per image — the inputs
+    to Fig. 3 (storage reduction) and the equivalent-GOPS normalization of
+    Fig. 6.  Circulant op model (decoupled, half-spectrum):
+      FC:   q rFFTs + p*q*kh complex mults + p IFFTs
+      CONV: per output pixel, same with q' = (C/k) r^2.
+    An n-point real FFT costs ~ (n/2) log2(n) complex mults = 2 n log2(n)
+    real mults (4 real mult / complex mult); a complex mult = 4 real mults.
+    """
+    h, w, _ = model.input_shape
+    rows = []
+    for spec in model.specs:
+        if spec.kind == "prior_pool":
+            h, w = spec.out_dim, 1
+        elif spec.kind in ("avg_pool2", "max_pool2"):
+            h, w = h // 2, w // 2
+        elif spec.kind in ("conv", "bc_conv"):
+            oh, ow = _conv_out_hw(h, w, spec.r, spec.padding)
+            dense_params = spec.r * spec.r * spec.c * spec.p
+            dense_macs = oh * ow * dense_params
+            if spec.kind == "bc_conv":
+                k = spec.k
+                kh = k // 2 + 1
+                qb = (spec.c // k) * spec.r * spec.r
+                pb = spec.p // k
+                circ_params = pb * qb * k
+                fft_mults = 2 * k * max(1, k.bit_length() - 1)
+                circ_mults = oh * ow * (qb * fft_mults + pb * qb * kh * 4 + pb * fft_mults)
+            else:
+                circ_params, circ_mults = dense_params, dense_macs
+            rows.append(dict(kind=spec.kind, shape=f"{spec.c}x{spec.p}x{spec.r}x{spec.r}",
+                             k=spec.k, dense_params=dense_params, circ_params=circ_params,
+                             dense_macs=dense_macs, circ_mults=circ_mults))
+            h, w = oh, ow
+        elif spec.kind in ("dense", "bc_dense"):
+            dense_params = spec.n * spec.m
+            dense_macs = dense_params
+            if spec.kind == "bc_dense":
+                k = spec.k
+                kh = k // 2 + 1
+                pb, qb = spec.m // k, spec.n // k
+                circ_params = pb * qb * k
+                fft_mults = 2 * k * max(1, k.bit_length() - 1)
+                circ_mults = qb * fft_mults + pb * qb * kh * 4 + pb * fft_mults
+            else:
+                circ_params, circ_mults = dense_params, dense_macs
+            rows.append(dict(kind=spec.kind, shape=f"{spec.n}x{spec.m}", k=spec.k,
+                             dense_params=dense_params, circ_params=circ_params,
+                             dense_macs=dense_macs, circ_mults=circ_mults))
+    return rows
+
+
+def storage_report(model: ModelSpec, *, bits: int = 12, dense_bits: int = 32):
+    """Fig.-3-style storage reduction: dense f32 model vs circulant
+    ``bits``-bit model (parameter reduction x quantization)."""
+    acc = accounting(model)
+    dense_bytes = sum(r["dense_params"] for r in acc) * dense_bits // 8
+    circ_bytes = sum(r["circ_params"] for r in acc) * bits // 8
+    return dict(dense_bytes=dense_bytes, circ_bytes=circ_bytes,
+                reduction=dense_bytes / max(1, circ_bytes))
+
+
+def equivalent_ops_per_image(model: ModelSpec) -> int:
+    """Dense-equivalent (mult+add) op count per image — the paper's
+    'equivalent GOPS' normalization basis."""
+    return 2 * sum(r["dense_macs"] for r in accounting(model))

@@ -1,0 +1,201 @@
+"""Layer-2 training: Adam, quant-aware fine-tuning, and Bayesian VI.
+
+The paper trains the defining vectors ``w_ij`` directly — Eqns. (2)/(3)
+show the gradients are themselves FFT->elementwise->IFFT computations, and
+JAX autodiff recovers exactly that structure from our forward definition
+(verified by ``test_train.py::test_gradient_matches_explicit_matrix``).
+
+Bayesian learning follows the paper's variational-inference co-optimization
+step: every weight is ``w = mu + softplus(rho) * eps`` with a standard
+normal prior; training learns (mu, rho) by maximizing the ELBO (data
+log-likelihood minus KL), inference uses the mean ``mu`` — "the inference
+phase (implemented in hardware) will be the same, using the average
+estimate of each weight."
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import data as data_mod
+from . import model as model_mod
+
+
+# ---------------------------------------------------------------------------
+# loss / metrics
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# hand-rolled Adam (no optax in this environment)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# point training
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: model_mod.ModelSpec, *, dense_twin=False,
+                    quant_bits=None, lr=1e-3):
+    """Jitted (params, opt, x, y) -> (params, opt, loss) Adam step."""
+
+    def loss_fn(params, x, y):
+        logits = model_mod.apply(params, x, model, dense_twin=dense_twin,
+                                 quant_bits=quant_bits)
+        return cross_entropy(logits, y)
+
+    @jax.jit
+    def step(params, opt, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    return step
+
+
+def train(model: model_mod.ModelSpec, *, steps=400, batch=64, train_size=4096,
+          dense_twin=False, quant_bits=None, lr=1e-3, seed=0, log_every=0):
+    """Train on the synthetic dataset; returns (params, loss_history)."""
+    xs, ys = data_mod.batch(model.dataset, 0, train_size)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    key = jax.random.PRNGKey(seed)
+    params = model_mod.init_params(key, model, dense_twin=dense_twin)
+    opt = adam_init(params)
+    step = make_train_step(model, dense_twin=dense_twin, quant_bits=quant_bits, lr=lr)
+    losses = []
+    n_batches = train_size // batch
+    for s in range(steps):
+        lo = (s % n_batches) * batch
+        params, opt, loss = step(params, opt, xs[lo:lo + batch], ys[lo:lo + batch])
+        losses.append(float(loss))
+        if log_every and s % log_every == 0:
+            print(f"  [{model.name}] step {s:4d} loss {float(loss):.4f}", flush=True)
+    return params, losses
+
+
+def evaluate(params, model: model_mod.ModelSpec, *, test_size=1024, batch=128,
+             dense_twin=False, quant_bits=None):
+    """Test-split accuracy."""
+    xs, ys = data_mod.batch(model.dataset, 0, test_size, test=True)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    fwd = jax.jit(functools.partial(model_mod.apply, model=model,
+                                    dense_twin=dense_twin, quant_bits=quant_bits))
+    correct = 0
+    for lo in range(0, test_size, batch):
+        logits = fwd(params, xs[lo:lo + batch])
+        correct += int(jnp.sum(jnp.argmax(logits, -1) == ys[lo:lo + batch]))
+    return correct / test_size
+
+
+# ---------------------------------------------------------------------------
+# Bayesian variational inference
+# ---------------------------------------------------------------------------
+
+def vi_init(params, rho0=-5.0):
+    """Wrap point params into (mu, rho) variational parameters."""
+    return {
+        "mu": params,
+        "rho": jax.tree_util.tree_map(lambda p: jnp.full_like(p, rho0), params),
+    }
+
+
+def vi_sample(vparams, key):
+    leaves, treedef = jax.tree_util.tree_flatten(vparams["mu"])
+    keys = jax.random.split(key, len(leaves))
+    rho_leaves = jax.tree_util.tree_leaves(vparams["rho"])
+    sampled = [mu + jax.nn.softplus(rho) * jax.random.normal(k, mu.shape)
+               for mu, rho, k in zip(leaves, rho_leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, sampled)
+
+
+def vi_kl(vparams, prior_sigma=0.1):
+    """KL( N(mu, sigma^2) || N(0, prior_sigma^2) ), summed over weights."""
+    total = 0.0
+    for mu, rho in zip(jax.tree_util.tree_leaves(vparams["mu"]),
+                       jax.tree_util.tree_leaves(vparams["rho"])):
+        sigma = jax.nn.softplus(rho)
+        total = total + jnp.sum(
+            jnp.log(prior_sigma / sigma)
+            + (sigma ** 2 + mu ** 2) / (2 * prior_sigma ** 2) - 0.5)
+    return total
+
+
+def train_bayes(model: model_mod.ModelSpec, *, steps=400, batch=64,
+                train_size=512, kl_weight=1e-4, lr=1e-3, seed=0):
+    """Variational-inference training (paper: most effective for small data).
+
+    Returns (mean_params, loss_history): inference uses the mean estimate,
+    exactly as the paper's hardware does.
+    """
+    xs, ys = data_mod.batch(model.dataset, 0, train_size)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    key = jax.random.PRNGKey(seed)
+    key, init_key = jax.random.split(key)
+    vparams = vi_init(model_mod.init_params(init_key, model))
+    opt = adam_init(vparams)
+
+    def elbo_loss(vparams, x, y, k):
+        sampled = vi_sample(vparams, k)
+        logits = model_mod.apply(sampled, x, model)
+        return cross_entropy(logits, y) + kl_weight * vi_kl(vparams)
+
+    @jax.jit
+    def step(vparams, opt, x, y, k):
+        loss, grads = jax.value_and_grad(elbo_loss)(vparams, x, y, k)
+        vparams, opt = adam_update(vparams, grads, opt, lr=lr)
+        return vparams, opt, loss
+
+    losses = []
+    n_batches = max(1, train_size // batch)
+    for s in range(steps):
+        key, sub = jax.random.split(key)
+        lo = (s % n_batches) * batch
+        vparams, opt, loss = step(vparams, opt, xs[lo:lo + batch], ys[lo:lo + batch], sub)
+        losses.append(float(loss))
+    return vparams["mu"], losses
+
+
+# ---------------------------------------------------------------------------
+# block-size sweep (the co-optimization loop's accuracy axis, exp S2)
+# ---------------------------------------------------------------------------
+
+def block_size_sweep(ks=(2, 4, 8, 16, 32, 64), *, steps=300, seed=0):
+    """Accuracy vs block size on the MNIST-like task (fixed 256-256 MLP)."""
+    results = []
+    for k in ks:
+        spec = model_mod._mlp("sweep_mlp", "mnist_s", 256, [256], k, (0, 0, 0))
+        params, _ = train(spec, steps=steps, seed=seed)
+        acc = evaluate(params, spec)
+        storage = model_mod.storage_report(spec)
+        results.append(dict(k=k, accuracy=acc, reduction=storage["reduction"]))
+    return results

@@ -1,0 +1,50 @@
+"""Experiment S2/S3 driver: block-size sweep + Bayesian-vs-point study.
+
+Writes ``artifacts/sweep.json`` consumed by ``examples/codesign_sweep.rs``
+(the co-optimization frontier) and EXPERIMENTS.md.
+
+Usage: ``cd python && python -m compile.train_sweep --out ../artifacts/sweep.json``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from . import model as model_mod
+from . import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/sweep.json")
+    ap.add_argument("--steps", type=int, default=400)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    print("[sweep] block-size sweep (S2)", flush=True)
+    sweep = train_mod.block_size_sweep(steps=args.steps)
+    for row in sweep:
+        print(f"  k={row['k']:3d} acc={row['accuracy']:.4f} "
+              f"storage x{row['reduction']:.1f}", flush=True)
+
+    print("[sweep] Bayesian VI vs point, small data (S3)", flush=True)
+    spec = model_mod.REGISTRY["mnist_mlp_1"]
+    bayes_rows = []
+    for n in (128, 256, 512):
+        point, _ = train_mod.train(spec, steps=300, train_size=n, seed=2)
+        acc_point = train_mod.evaluate(point, spec, test_size=512)
+        mean, _ = train_mod.train_bayes(spec, steps=300, train_size=n, seed=2)
+        acc_bayes = train_mod.evaluate(mean, spec, test_size=512)
+        bayes_rows.append(dict(train_size=n, point=acc_point, bayes=acc_bayes))
+        print(f"  n={n:4d} point={acc_point:.4f} bayes={acc_bayes:.4f}", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump(dict(block_size_sweep=sweep, bayes_vs_point=bayes_rows,
+                       steps=args.steps, elapsed_s=time.time() - t0), f, indent=1)
+    print(f"[sweep] wrote {args.out} in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

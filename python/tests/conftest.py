@@ -1,0 +1,7 @@
+"""Pytest path setup: make the ``compile`` package importable whether pytest
+is invoked from ``python/`` (the Makefile default) or the repo root."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,69 @@
+"""Fused block-circulant layer kernel vs the explicit-matrix oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import circulant_layer, fft_core, ref
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=4),
+    q=st.integers(min_value=1, max_value=4),
+    logk=st.integers(min_value=1, max_value=6),
+    batch=st.integers(min_value=1, max_value=8),
+    relu=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fused_layer_matches_oracle(p, q, logk, batch, relu, seed):
+    k = 1 << logk
+    rng = np.random.default_rng(seed)
+    wb = _randn(rng, p, q, k)
+    xs = _randn(rng, batch, q * k)
+    bias = _randn(rng, p * k)
+    wfr, wfi = fft_core.rfft_halfspec(wb)
+    y = circulant_layer.circulant_layer_pallas(xs, wfr, wfi, bias, k=k, relu=relu)
+    expected = ref.circulant_layer_ref(wb, bias, xs, activation="relu" if relu else "none")
+    np.testing.assert_allclose(y, expected, rtol=2e-3, atol=2e-3)
+
+
+def test_relu_clamps_negative():
+    k = 4
+    wb = jnp.zeros((1, 1, k))
+    wfr, wfi = fft_core.rfft_halfspec(wb)
+    bias = jnp.asarray([-1.0, -2.0, 3.0, 0.0], dtype=jnp.float32)
+    y = circulant_layer.circulant_layer_pallas(
+        jnp.ones((2, k)), wfr, wfi, bias, k=k, relu=True
+    )
+    np.testing.assert_allclose(y, jnp.broadcast_to(jnp.maximum(bias, 0.0), (2, k)))
+
+
+def test_input_width_mismatch_raises():
+    wfr = jnp.zeros((1, 2, 3))
+    with pytest.raises(ValueError):
+        circulant_layer.circulant_layer_pallas(
+            jnp.zeros((1, 5)), wfr, wfr, jnp.zeros((4,)), k=4
+        )
+
+
+def test_vmem_footprint_within_budget_for_paper_configs():
+    # DESIGN.md §9: per-grid-step working set <= 2 MiB for every Table-1
+    # FC configuration (k up to 128/256, q up to 32).
+    for (n, m, k) in [(256, 256, 128), (1024, 1024, 128), (512, 256, 64), (4096, 1024, 256)]:
+        p, q = m // k, n // k
+        fp = circulant_layer.vmem_footprint_bytes(
+            circulant_layer.DEFAULT_BATCH_TILE, n, m, p, q, k
+        )
+        assert fp <= 2 * 1024 * 1024, (n, m, k, fp)
+
+
+def test_batch_tile_divides_batch():
+    for batch in range(1, 40):
+        t = circulant_layer._batch_tile(batch)
+        assert batch % t == 0 and 1 <= t <= circulant_layer.DEFAULT_BATCH_TILE

@@ -1,0 +1,85 @@
+"""Synthetic dataset generator: determinism, shape, split, PRNG contract.
+
+The PRNG contract (splitmix64, closed-form per-element states, top-24-bit
+f32 mapping) is what the Rust mirror reproduces bit-for-bit; these tests pin
+it down so a refactor on either side trips an alarm.
+"""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+def test_known_splitmix64_vector():
+    # Reference values for seed 1234567: classic splitmix64 outputs.
+    s = np.uint64(1234567)
+    with np.errstate(over="ignore"):
+        z1 = data.mix(s + data.GAMMA)
+    # recompute by hand with python ints to cross-check the numpy path
+    def pymix(z):
+        z &= (1 << 64) - 1
+        z = (z ^ (z >> 30)) * 0xBF58476D1CE4E5B9 & ((1 << 64) - 1)
+        z = (z ^ (z >> 27)) * 0x94D049BB133111EB & ((1 << 64) - 1)
+        return (z ^ (z >> 31)) & ((1 << 64) - 1)
+    assert int(z1) == pymix((1234567 + 0x9E3779B97F4A7C15) & ((1 << 64) - 1))
+
+
+def test_u01_stream_range_and_determinism():
+    v1 = data.u01_stream(np.uint64(42), 1000)
+    v2 = data.u01_stream(np.uint64(42), 1000)
+    np.testing.assert_array_equal(v1, v2)
+    assert v1.dtype == np.float32
+    assert float(v1.min()) >= 0.0 and float(v1.max()) < 1.0
+    # mean of U[0,1) over 1000 samples
+    assert abs(float(v1.mean()) - 0.5) < 0.05
+
+
+def test_u01_stream_prefix_consistency():
+    # closed-form states: a prefix of a longer stream equals the short stream
+    a = data.u01_stream(np.uint64(7), 10)
+    b = data.u01_stream(np.uint64(7), 100)[:10]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_sample_deterministic_and_shaped():
+    for name, (h, w, c, _, _) in data.DATASETS.items():
+        img1, y1 = data.sample(name, 12345)
+        img2, y2 = data.sample(name, 12345)
+        np.testing.assert_array_equal(img1, img2)
+        assert img1.shape == (h, w, c) and img1.dtype == np.float32
+        assert y1 == y2 == 12345 % 10
+        assert img1.min() >= 0.0 and img1.max() <= 1.0
+
+
+def test_train_test_split_disjoint():
+    xtr, _ = data.batch("mnist_s", 0, 4)
+    xte, _ = data.batch("mnist_s", 0, 4, test=True)
+    assert not np.array_equal(xtr, xte)
+
+
+def test_labels_balanced():
+    _, ys = data.batch("mnist_s", 0, 100)
+    counts = np.bincount(ys, minlength=10)
+    np.testing.assert_array_equal(counts, np.full(10, 10))
+
+
+def test_class_templates_differ_between_classes_and_modes():
+    t00 = data.class_template("mnist_s", 0, 0)
+    t10 = data.class_template("mnist_s", 1, 0)
+    t01 = data.class_template("mnist_s", 0, 1)
+    assert not np.array_equal(t00, t10)
+    assert not np.array_equal(t00, t01)
+
+
+def test_checksum_stable():
+    # Regression pin: if this changes, the Rust mirror must change too.
+    c1 = data.checksum("mnist_s", count=4)
+    c2 = data.checksum("mnist_s", count=4)
+    assert c1 == c2
+    assert isinstance(c1, int) and c1 > 0
+
+
+def test_dataset_checksums_differ():
+    sums = {name: data.checksum(name, count=2) for name in data.DATASETS}
+    assert len(set(sums.values())) == len(sums)

@@ -1,0 +1,142 @@
+"""fft_core vs the O(k^2) DFT oracle + structural FFT identities.
+
+This is the base of the correctness pyramid: every other component (Pallas
+kernels, circulant layers, HLO artifacts, the Rust substrate) is validated
+directly or transitively against these identities.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fft_core, ref
+
+POW2 = [2, 4, 8, 16, 32, 64, 128, 256]
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("k", POW2)
+def test_fft_matches_naive_dft(k):
+    rng = np.random.default_rng(k)
+    xr, xi = _randn(rng, 3, k), _randn(rng, 3, k)
+    yr, yi = fft_core.fft(xr, xi)
+    rr, ri = ref.naive_dft(xr, xi)
+    np.testing.assert_allclose(yr, rr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(yi, ri, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("k", POW2)
+def test_ifft_matches_naive_inverse_dft(k):
+    rng = np.random.default_rng(k + 1)
+    xr, xi = _randn(rng, 2, k), _randn(rng, 2, k)
+    yr, yi = fft_core.ifft(xr, xi)
+    rr, ri = ref.naive_dft(xr, xi, inverse=True)
+    np.testing.assert_allclose(yr, rr / k, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(yi, ri / k, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logk=st.integers(min_value=1, max_value=8),
+    rows=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fft_ifft_roundtrip(logk, rows, seed):
+    k = 1 << logk
+    rng = np.random.default_rng(seed)
+    xr, xi = _randn(rng, rows, k), _randn(rng, rows, k)
+    yr, yi = fft_core.fft(xr, xi)
+    br, bi = fft_core.ifft(yr, yi)
+    np.testing.assert_allclose(br, xr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(bi, xi, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    logk=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rfft_halfspec_roundtrip(logk, seed):
+    k = 1 << logk
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, 4, k)
+    hr, hi = fft_core.rfft_halfspec(x)
+    assert hr.shape == (4, k // 2 + 1)
+    back = fft_core.irfft_halfspec(hr, hi, k)
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-3)
+
+
+def test_rfft_matches_jnp_rfft():
+    # Cross-check against jax's own FFT (the one L2 lowers into HLO).
+    rng = np.random.default_rng(7)
+    x = _randn(rng, 5, 64)
+    hr, hi = fft_core.rfft_halfspec(x)
+    expected = jnp.fft.rfft(x, axis=-1)
+    np.testing.assert_allclose(hr, expected.real, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(hi, expected.imag, rtol=1e-3, atol=1e-3)
+
+
+def test_fft_linearity():
+    rng = np.random.default_rng(3)
+    a, b = _randn(rng, 2, 32), _randn(rng, 2, 32)
+    z = jnp.zeros_like(a)
+    ya, _ = fft_core.fft(a, z)
+    yb, _ = fft_core.fft(b, z)
+    ysum, _ = fft_core.fft(a + 2.0 * b, z)
+    np.testing.assert_allclose(ysum, ya + 2.0 * yb, rtol=1e-3, atol=1e-3)
+
+
+def test_parseval_energy_preserved():
+    rng = np.random.default_rng(5)
+    x = _randn(rng, 1, 128)
+    hr, hi = fft_core.fft(x, jnp.zeros_like(x))
+    time_energy = float(jnp.sum(x * x))
+    freq_energy = float(jnp.sum(hr * hr + hi * hi)) / 128
+    assert abs(time_energy - freq_energy) < 1e-2 * max(1.0, time_energy)
+
+
+def test_fft_of_delta_is_flat():
+    x = jnp.zeros((1, 16)).at[0, 0].set(1.0)
+    yr, yi = fft_core.fft(x, jnp.zeros_like(x))
+    np.testing.assert_allclose(yr, jnp.ones_like(yr), atol=1e-5)
+    np.testing.assert_allclose(yi, jnp.zeros_like(yi), atol=1e-5)
+
+
+def test_halfspec_is_conjugate_symmetric_info():
+    # The dropped half must be reconstructible: spectrum of real input is
+    # conjugate-symmetric (the paper's storage-halving argument).
+    rng = np.random.default_rng(11)
+    x = _randn(rng, 2, 32)
+    fr, fi = fft_core.fft(x, jnp.zeros_like(x))
+    np.testing.assert_allclose(fr[..., 1:], fr[..., 1:][..., ::-1], rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(fi[..., 1:], -fi[..., 1:][..., ::-1], rtol=1e-3, atol=1e-3)
+
+
+def test_bit_reversal_is_involution():
+    for k in POW2:
+        perm = np.asarray(fft_core.bit_reversal_permutation(k))
+        np.testing.assert_array_equal(perm[perm], np.arange(k))
+
+
+def test_bad_k_raises():
+    with pytest.raises(ValueError):
+        fft_core.bit_reversal_permutation(12)
+    with pytest.raises(ValueError):
+        fft_core.irfft_halfspec(jnp.zeros((1, 4)), jnp.zeros((1, 4)), 16)
+
+
+@pytest.mark.parametrize("k", [4, 16, 64])
+def test_circulant_convolution_theorem(k):
+    # C @ x == IFFT(FFT(w) o FFT(x)) — the identity the whole paper rests on.
+    rng = np.random.default_rng(k)
+    w, x = _randn(rng, k), _randn(rng, k)
+    direct = ref.circulant(w) @ x
+    wfr, wfi = fft_core.rfft_halfspec(w[None])
+    xfr, xfi = fft_core.rfft_halfspec(x[None])
+    pr, pi = fft_core.complex_mul(wfr, wfi, xfr, xfi)
+    spec = fft_core.irfft_halfspec(pr, pi, k)[0]
+    np.testing.assert_allclose(direct, spec, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,82 @@
+"""Pallas FFT/IFFT kernels vs the fft_core / naive-DFT oracles.
+
+Hypothesis sweeps shapes (row counts that do and don't divide the tile,
+all power-of-two k in the paper's range) — per DESIGN.md these kernels are
+the software twin of the FPGA's single pipelined FFT unit.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fft_core, fft_kernel, ref
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logk=st.integers(min_value=1, max_value=7),
+    rows=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_fft_pallas_matches_oracle(logk, rows, seed):
+    k = 1 << logk
+    rng = np.random.default_rng(seed)
+    xr, xi = _randn(rng, rows, k), _randn(rng, rows, k)
+    yr, yi = fft_kernel.fft_pallas(xr, xi)
+    rr, ri = ref.naive_dft(xr, xi)
+    np.testing.assert_allclose(yr, rr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(yi, ri, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    logk=st.integers(min_value=1, max_value=7),
+    rows=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_rfft_irfft_pallas_roundtrip(logk, rows, seed):
+    k = 1 << logk
+    rng = np.random.default_rng(seed)
+    x = _randn(rng, rows, k)
+    hr, hi = fft_kernel.rfft_pallas(x)
+    assert hr.shape == (rows, k // 2 + 1)
+    back = fft_kernel.irfft_pallas(hr, hi, k)
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("k", [4, 32, 128])
+def test_ifft_pallas_matches_core(k):
+    rng = np.random.default_rng(k)
+    xr, xi = _randn(rng, 6, k), _randn(rng, 6, k)
+    yr, yi = fft_kernel.fft_pallas(xr, xi, inverse=True)
+    cr, ci = fft_core.ifft(xr, xi)
+    np.testing.assert_allclose(yr, cr, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(yi, ci, rtol=1e-3, atol=1e-3)
+
+
+def test_rfft_pallas_matches_jnp():
+    rng = np.random.default_rng(1)
+    x = _randn(rng, 4, 64)
+    hr, hi = fft_kernel.rfft_pallas(x)
+    expected = jnp.fft.rfft(x, axis=-1)
+    np.testing.assert_allclose(hr, expected.real, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(hi, expected.imag, rtol=1e-3, atol=1e-3)
+
+
+def test_large_row_count_tiled():
+    # More rows than the default tile: exercises the 1-D grid.
+    rng = np.random.default_rng(2)
+    x = _randn(rng, 3 * fft_kernel.DEFAULT_ROW_TILE, 16)
+    hr, hi = fft_kernel.rfft_pallas(x)
+    back = fft_kernel.irfft_pallas(hr, hi, 16)
+    np.testing.assert_allclose(back, x, rtol=1e-3, atol=1e-3)
+
+
+def test_irfft_width_mismatch_raises():
+    with pytest.raises(ValueError):
+        fft_kernel.irfft_pallas(jnp.zeros((2, 5)), jnp.zeros((2, 5)), 32)

@@ -1,0 +1,151 @@
+"""Layer-2 layers vs the explicit-matrix oracles, across all three backends."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import layers
+from compile.kernels import ref
+
+
+def _randn(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# --------------------------------------------------------------------- FC
+
+@pytest.mark.parametrize("backend", ["jnp", "core", "pallas"])
+def test_bc_dense_matches_oracle(backend):
+    n, m, k, batch = 24, 16, 8, 5
+    rng = np.random.default_rng(0)
+    params = {"w": _randn(rng, m // k, n // k, k), "b": _randn(rng, m)}
+    x = _randn(rng, batch, n)
+    y = layers.bc_dense_apply(params, x, k=k, backend=backend)
+    expected = ref.circulant_layer_ref(params["w"], params["b"], x)
+    np.testing.assert_allclose(y, expected, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=4),
+    q=st.integers(min_value=1, max_value=4),
+    logk=st.integers(min_value=1, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_bc_dense_backends_agree(p, q, logk, seed):
+    k = 1 << logk
+    n, m = q * k, p * k
+    rng = np.random.default_rng(seed)
+    params = {"w": _randn(rng, p, q, k), "b": _randn(rng, m)}
+    x = _randn(rng, 3, n)
+    ys = [layers.bc_dense_apply(params, x, k=k, backend=b)
+          for b in ("jnp", "core", "pallas")]
+    np.testing.assert_allclose(ys[0], ys[1], rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(ys[0], ys[2], rtol=2e-3, atol=2e-3)
+
+
+def test_bc_dense_init_shape_checks():
+    with pytest.raises(ValueError):
+        layers.init_bc_dense(jax.random.PRNGKey(0), 10, 16, 4)  # 4 !| 10
+
+
+def test_bc_dense_storage_is_linear_in_n():
+    # O(n) storage: the param count of a bc layer is p*q*k = n*m/k.
+    p = layers.init_bc_dense(jax.random.PRNGKey(0), 64, 64, 16)
+    assert p["w"].size == 64 * 64 // 16
+
+
+# --------------------------------------------------------------------- conv
+
+def test_im2col_matches_ref():
+    rng = np.random.default_rng(1)
+    x = _randn(rng, 2, 6, 6, 4)
+    got = layers.im2col(x, r=3, k=2)  # (b, oh, ow, q', k)
+    b, oh, ow, qp, k = got.shape
+    flat = got.reshape(b * oh * ow, qp * k)
+    expected = ref.im2col_ref(x, r=3, k=2)
+    np.testing.assert_allclose(flat, expected, rtol=1e-6)
+
+
+def test_bc_conv_matches_oracle():
+    rng = np.random.default_rng(2)
+    c, p_out, r, k = 4, 4, 3, 2
+    x = _randn(rng, 2, 7, 7, c)
+    params = {"w": _randn(rng, p_out // k, (c // k) * r * r, k),
+              "b": jnp.zeros((p_out,))}
+    y = layers.bc_conv_apply(params, x, r=r, k=k, activation="none")
+    expected = ref.block_circulant_conv2d_ref(x, params["w"], r, k)
+    np.testing.assert_allclose(y, expected.reshape(y.shape), rtol=2e-3, atol=2e-3)
+
+
+def test_bc_conv_same_padding_preserves_hw():
+    rng = np.random.default_rng(3)
+    x = _randn(rng, 1, 8, 8, 4)
+    params = layers.init_bc_conv(jax.random.PRNGKey(0), 4, 8, 3, 2)
+    y = layers.bc_conv_apply(params, x, r=3, k=2, padding="same")
+    assert y.shape == (1, 8, 8, 8)
+
+
+def test_dense_conv_matches_naive_ref():
+    rng = np.random.default_rng(4)
+    x = _randn(rng, 2, 6, 6, 3)
+    params = layers.init_conv(jax.random.PRNGKey(1), 3, 5, 3)
+    y = layers.conv_apply(params, x, activation="none")
+    expected = ref.conv2d_ref(x, params["w"]) + params["b"]
+    np.testing.assert_allclose(y, expected, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------- quant
+
+def test_fake_quant_identity_for_none():
+    x = jnp.asarray([1.0, -2.0])
+    assert layers.fake_quant(x, None) is x
+
+
+def test_fake_quant_levels():
+    # 12-bit symmetric: max-abs maps to 2047 levels; error <= scale/2.
+    rng = np.random.default_rng(5)
+    x = _randn(rng, 1000)
+    q = layers.fake_quant(x, 12)
+    scale = float(jnp.max(jnp.abs(x))) / 2047
+    assert float(jnp.max(jnp.abs(q - x))) <= scale / 2 + 1e-7
+
+
+def test_fake_quant_gradient_is_straight_through():
+    g = jax.grad(lambda x: jnp.sum(layers.fake_quant(x, 8) ** 2))(jnp.asarray([0.3, -0.7]))
+    # d/dx of q(x)^2 with STE is 2*q(x)
+    q = layers.fake_quant(jnp.asarray([0.3, -0.7]), 8)
+    np.testing.assert_allclose(g, 2 * q, rtol=1e-5)
+
+
+@pytest.mark.parametrize("bits,tol", [(4, 0.1), (8, 6e-3), (12, 4e-4)])
+def test_quant_error_shrinks_with_bits(bits, tol):
+    rng = np.random.default_rng(6)
+    x = _randn(rng, 4096)
+    err = float(jnp.max(jnp.abs(layers.fake_quant(x, bits) - x)))
+    assert err < tol * float(jnp.max(jnp.abs(x)))
+
+
+# --------------------------------------------------------------------- pooling
+
+def test_avg_pool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    y = layers.avg_pool2(x)
+    np.testing.assert_allclose(y[0, :, :, 0], [[2.5, 4.5], [10.5, 12.5]])
+
+
+def test_max_pool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    y = layers.max_pool2(x)
+    np.testing.assert_allclose(y[0, :, :, 0], [[5, 7], [13, 15]])
+
+
+def test_prior_pool_shape_and_mean():
+    x = jnp.ones((2, 28, 28, 1))
+    y = layers.prior_pool(x, 256)
+    assert y.shape == (2, 256)
+    # 784 -> window 4, padded to 1024: first 196 windows average 1.0,
+    # remaining windows include zero padding.
+    np.testing.assert_allclose(y[:, :190], 1.0, rtol=1e-6)

@@ -1,0 +1,95 @@
+"""Model registry: shapes, twins, accounting invariants (Fig. 3 inputs)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import data, model as M
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_forward_shapes(name):
+    spec = M.REGISTRY[name]
+    params = M.init_params(jax.random.PRNGKey(0), spec)
+    x = jnp.asarray(data.batch(spec.dataset, 0, 2)[0])
+    y = M.apply(params, x, spec)
+    assert y.shape == (2, 10)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_dense_twin_shapes(name):
+    spec = M.REGISTRY[name]
+    params = M.init_params(jax.random.PRNGKey(0), spec, dense_twin=True)
+    x = jnp.asarray(data.batch(spec.dataset, 0, 2)[0])
+    y = M.apply(params, x, spec, dense_twin=True)
+    assert y.shape == (2, 10)
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_quantized_forward_close_to_f32(name):
+    spec = M.REGISTRY[name]
+    params = M.init_params(jax.random.PRNGKey(0), spec)
+    x = jnp.asarray(data.batch(spec.dataset, 0, 2)[0])
+    y32 = M.apply(params, x, spec)
+    y12 = M.apply(params, x, spec, quant_bits=12)
+    # 12-bit fixed point: small relative error on logits
+    assert float(jnp.max(jnp.abs(y32 - y12))) < 0.15 * float(jnp.max(jnp.abs(y32)) + 1.0)
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_storage_reduction_positive(name):
+    rep = M.storage_report(M.REGISTRY[name])
+    # Fig. 3: significant model size compression on every benchmark —
+    # parameter reduction x (32/12) quantization.
+    assert rep["reduction"] > 10.0
+    assert rep["circ_bytes"] < rep["dense_bytes"]
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_circulant_params_match_storage_formula(name):
+    # per-layer circ params == dense params / k for every compressed layer
+    for row in M.accounting(M.REGISTRY[name]):
+        if row["kind"] in ("bc_dense", "bc_conv"):
+            assert row["circ_params"] == row["dense_params"] // row["k"]
+        else:
+            assert row["circ_params"] == row["dense_params"]
+
+
+@pytest.mark.parametrize("name", M.MODEL_NAMES)
+def test_complexity_reduction(name):
+    # O(n log n) vs O(n^2): circulant mults strictly below dense MACs for
+    # every compressed layer of every registry model.
+    for row in M.accounting(M.REGISTRY[name]):
+        if row["kind"] in ("bc_dense", "bc_conv") and row["k"] >= 8:
+            assert row["circ_mults"] < row["dense_macs"], row
+
+
+def test_equivalent_ops_match_paper_scale():
+    # Sanity: MLP models are ~0.1-0.3 MOP/image, CNNs are MOP-scale.
+    ops = {n: M.equivalent_ops_per_image(M.REGISTRY[n]) for n in M.MODEL_NAMES}
+    assert 5e4 < ops["mnist_mlp_1"] < 1e6
+    assert ops["cifar_wrn"] > ops["mnist_mlp_1"]
+
+
+def test_whole_model_fits_on_chip():
+    # The paper's headline design point: every Table-1 model (12-bit,
+    # circulant) fits in the CyClone V's ~2 MB of on-chip block memory.
+    for name in M.MODEL_NAMES:
+        rep = M.storage_report(M.REGISTRY[name])
+        assert rep["circ_bytes"] < 2 * 1024 * 1024, (name, rep)
+
+
+def test_registry_matches_table1_rows():
+    # Paper metadata baked into the registry (used by the Rust Table-1 bench).
+    assert M.REGISTRY["mnist_mlp_1"].paper_accuracy == 92.9
+    assert M.REGISTRY["cifar_wrn"].paper_accuracy == 94.75
+    assert M.REGISTRY["svhn_cnn"].paper_kfps == 384.9
+    assert len(M.MODEL_NAMES) == 6
+
+
+def test_residual_model_runs_and_differs_from_plain():
+    spec = M.REGISTRY["cifar_wrn"]
+    kinds = [s.kind for s in spec.specs]
+    assert kinds.count("residual_begin") == kinds.count("residual_end") == 2

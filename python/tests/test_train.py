@@ -1,0 +1,101 @@
+"""Training: gradient structure (Eqns. 2-3), convergence, VI, sweep shape."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import layers, model as M, train as T
+from compile.kernels import ref
+
+
+def test_gradient_matches_explicit_matrix():
+    # Paper Eqns. (2)/(3): training learns the defining vectors directly;
+    # autodiff through the FFT forward must equal the gradient obtained by
+    # differentiating through the explicit block-circulant matrix.
+    n, m, k = 8, 8, 4
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(m // k, n // k, k)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(3, n)).astype(np.float32))
+    tgt = jnp.asarray(rng.normal(size=(3, m)).astype(np.float32))
+
+    def loss_fft(w):
+        params = {"w": w, "b": jnp.zeros((m,))}
+        y = layers.bc_dense_apply(params, x, k=k, activation="none")
+        return jnp.sum((y - tgt) ** 2)
+
+    def loss_explicit(w):
+        y = ref.block_circulant_matmul(w, x)
+        return jnp.sum((y - tgt) ** 2)
+
+    g_fft = jax.grad(loss_fft)(w)
+    g_exp = jax.grad(loss_explicit)(w)
+    np.testing.assert_allclose(g_fft, g_exp, rtol=1e-3, atol=1e-3)
+
+
+def test_training_reduces_loss():
+    spec = M.REGISTRY["mnist_mlp_1"]
+    _, losses = T.train(spec, steps=150, train_size=512)
+    assert losses[-1] < losses[0] * 0.5
+
+
+def test_training_reaches_usable_accuracy():
+    spec = M.REGISTRY["mnist_mlp_1"]
+    params, _ = T.train(spec, steps=300)
+    acc = T.evaluate(params, spec, test_size=512)
+    assert acc > 0.8
+
+
+def test_quant_aware_training_close_to_f32():
+    spec = M.REGISTRY["mnist_mlp_1"]
+    p32, _ = T.train(spec, steps=200, seed=1)
+    p12, _ = T.train(spec, steps=200, seed=1, quant_bits=12)
+    a32 = T.evaluate(p32, spec, test_size=512)
+    a12 = T.evaluate(p12, spec, test_size=512, quant_bits=12)
+    # paper: 12-bit costs ~1-2% accuracy at most
+    assert a12 > a32 - 0.05
+
+
+def test_adam_step_moves_params():
+    spec = M.REGISTRY["mnist_mlp_1"]
+    params = M.init_params(jax.random.PRNGKey(0), spec)
+    opt = T.adam_init(params)
+    step = T.make_train_step(spec)
+    from compile import data
+    xs, ys = data.batch(spec.dataset, 0, 64)
+    new_params, _, loss = step(params, opt, jnp.asarray(xs), jnp.asarray(ys))
+    assert float(loss) > 0
+    before = params[2]["w"]
+    after = new_params[2]["w"]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+def test_bayes_vi_trains_and_infers_with_mean():
+    spec = M.REGISTRY["mnist_mlp_1"]
+    mean_params, losses = T.train_bayes(spec, steps=150, train_size=256)
+    assert losses[-1] < losses[0]
+    acc = T.evaluate(mean_params, spec, test_size=256)
+    assert acc > 0.3  # small-data regime; must beat chance comfortably
+
+
+def test_bayes_comparable_to_point_on_small_data():
+    # Paper: "Bayesian training is the most effective for small data
+    # training and small-to-medium neural networks."  On our synthetic task
+    # VI lands within a few points of point training (measured ~0.83 vs
+    # ~0.86 at 256 samples; honest result recorded in EXPERIMENTS.md §S3) —
+    # we assert comparability, not superiority.
+    spec = M.REGISTRY["mnist_mlp_1"]
+    small = 256
+    point, _ = T.train(spec, steps=300, train_size=small, seed=2)
+    acc_point = T.evaluate(point, spec, test_size=512)
+    bayes, _ = T.train_bayes(spec, steps=300, train_size=small, seed=2)
+    acc_bayes = T.evaluate(bayes, spec, test_size=512)
+    assert acc_bayes >= acc_point - 0.06
+
+
+def test_vi_kl_positive_and_decreasing_in_sigma_match():
+    spec = M.REGISTRY["mnist_mlp_1"]
+    params = M.init_params(jax.random.PRNGKey(0), spec)
+    v = T.vi_init(params, rho0=-5.0)
+    kl = float(T.vi_kl(v, prior_sigma=0.1))
+    assert kl > 0

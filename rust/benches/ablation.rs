@@ -1,0 +1,45 @@
+//! Bench AB1-AB3: the design-choice ablations of DESIGN.md §6 — decoupled
+//! FFT/IFFT placement, real-input half-spectrum symmetry, and batch
+//! interleaving — swept over every registry model and over batch sizes
+//! (the bubble-amortization curve behind Fig. 4).
+
+use circnn::experiments::ablations;
+use circnn::fpga::device::CYCLONE_V;
+use circnn::fpga::schedule::{simulate, ScheduleConfig};
+use circnn::models;
+
+fn main() {
+    println!("{}", ablations::render());
+
+    // batch-size amortization (AB3's underlying curve): ns/image vs batch
+    println!("== batch interleaving: ns/image vs batch (mnist_mlp_1) ==");
+    let m = models::by_name("mnist_mlp_1").unwrap();
+    println!("{:>7} {:>14} {:>14}", "batch", "interleaved", "per-image");
+    for b in [1u64, 2, 4, 8, 16, 32, 64] {
+        let on = simulate(&m, &CYCLONE_V, &ScheduleConfig { batch: b, ..Default::default() });
+        let off = simulate(
+            &m,
+            &CYCLONE_V,
+            &ScheduleConfig { batch: b, interleave: false, ..Default::default() },
+        );
+        println!(
+            "{:>7} {:>12.1}ns {:>12.1}ns",
+            b,
+            on.ns_per_image(),
+            off.ns_per_image()
+        );
+    }
+
+    // ablations must all point the right way — guard the shape in bench too
+    for m in models::registry() {
+        for row in ablations::ablate(&m) {
+            assert!(
+                row.retained <= 1.0 + 1e-9,
+                "{} / {}: ablation helped?!",
+                row.model,
+                row.ablation
+            );
+        }
+    }
+    println!("\nall ablations degrade throughput when disabled (shape holds)");
+}

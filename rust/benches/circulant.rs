@@ -1,0 +1,90 @@
+//! Bench S1: the O(n log n) vs O(n^2) crossover (the paper's core
+//! algorithmic claim), measured on the pure-Rust substrate.
+//!
+//! Prints dense vs block-circulant matvec times over a grid of matrix
+//! sizes and block sizes, plus the FFT-plan primitives the simulator's
+//! cycle model is built from.  `harness = false`: uses `util::benchkit`.
+
+use circnn::circulant::{dense, BlockCirculant, FftPlan};
+use circnn::util::benchkit::Bench;
+use circnn::util::rng::SplitMix;
+
+fn main() {
+    let bench = Bench::default();
+    let mut rng = SplitMix::new(0xBEEF);
+
+    println!("== FFT plan primitives ==");
+    for k in [64usize, 128, 256, 512] {
+        let plan = FftPlan::new(k);
+        let mut re = rng.normal_vec(k);
+        let mut im = rng.normal_vec(k);
+        bench.run(&format!("fft/k{k}"), 1, || plan.fft(&mut re, &mut im));
+        let kh = plan.half_bins();
+        let x = rng.normal_vec(k);
+        let (mut hr, mut hi) = (vec![0.0; kh], vec![0.0; kh]);
+        let mut scratch = vec![0.0; 2 * k];
+        bench.run(&format!("rfft_halfspec/k{k}"), 1, || {
+            plan.rfft_halfspec(&x, &mut hr, &mut hi, &mut scratch)
+        });
+    }
+
+    println!("\n== dense vs block-circulant matvec (k = 64) ==");
+    println!(
+        "{:>6} {:>6} | {:>12} {:>12} {:>9}",
+        "n", "k", "dense", "circulant", "speedup"
+    );
+    for n in [256usize, 512, 1024, 2048, 4096] {
+        let k = 64;
+        let pq = n / k;
+        let mut bc = BlockCirculant::new(pq, pq, k, rng.normal_vec(pq * pq * k));
+        bc.precompute();
+        let w = bc.to_dense();
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0f32; n];
+        let d = bench.run(&format!("dense_matvec/n{n}"), 1, || {
+            dense::matvec(&w, n, n, &x, &mut y)
+        });
+        let c = bench.run(&format!("circ_matvec/n{n}_k{k}"), 1, || {
+            bc.matvec(&x, &mut y)
+        });
+        println!(
+            "{:>6} {:>6} | {:>10.1}us {:>10.1}us {:>8.2}x",
+            n,
+            k,
+            d.median_ns() / 1e3,
+            c.median_ns() / 1e3,
+            d.median_ns() / c.median_ns()
+        );
+    }
+
+    println!("\n== block-size sweep at n = 2048 (compression/speed frontier) ==");
+    for k in [16usize, 32, 64, 128, 256] {
+        let n = 2048;
+        let pq = n / k;
+        let mut bc = BlockCirculant::new(pq, pq, k, rng.normal_vec(pq * pq * k));
+        bc.precompute();
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0f32; n];
+        let m = bench.run(&format!("circ_matvec/n{n}_k{k}"), 1, || {
+            bc.matvec(&x, &mut y)
+        });
+        println!(
+            "   k={k:<4} params {:>8} ({:>5.1}x fewer)  median {:.1}us",
+            bc.param_count(),
+            (n * n) as f64 / bc.param_count() as f64,
+            m.median_ns() / 1e3
+        );
+    }
+
+    println!("\n== precompute (offline FFT(w) step) ==");
+    for k in [64usize, 128] {
+        let n = 1024;
+        let pq = n / k;
+        let w = rng.normal_vec(pq * pq * k);
+        bench.run(&format!("precompute/n{n}_k{k}"), 1, || {
+            let mut bc = BlockCirculant::new(pq, pq, k, w.clone());
+            bc.precompute();
+            bc
+        });
+    }
+}

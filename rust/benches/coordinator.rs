@@ -1,0 +1,103 @@
+//! Bench: coordinator overhead — serving throughput across batching
+//! policies vs the raw-engine roofline measured in `benches/runtime.rs`,
+//! plus the pure-logic hot paths (batcher push/drain, router lookup) that
+//! must stay allocation-light (DESIGN.md §9: coordinator adds <10%
+//! overhead over raw execute at batch 64).
+
+use std::time::{Duration, Instant};
+
+use circnn::coordinator::{BatchPolicy, BatchQueue, Router, Server, ServerConfig};
+use circnn::data;
+use circnn::runtime::engine::{literal_f32, Engine};
+use circnn::runtime::Manifest;
+use circnn::util::benchkit::Bench;
+
+fn serve_throughput(policy: BatchPolicy, clients: usize, requests: usize) -> anyhow::Result<f64> {
+    let server = Server::start(ServerConfig { policy, ..ServerConfig::default() })?;
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    // warmup (compile)
+    server.infer("mnist_mlp_1", &img).unwrap();
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let server = &server;
+            let img = &img;
+            scope.spawn(move || {
+                for _ in 0..requests / clients {
+                    let _ = server.infer("mnist_mlp_1", img);
+                }
+            });
+        }
+    });
+    let rps = requests as f64 / t0.elapsed().as_secs_f64();
+    let m = server.metrics();
+    println!(
+        "policy max_batch={:<3} delay={:>5}us clients={clients:<3} -> {:>9.0} img/s  {}",
+        policy.max_batch,
+        policy.max_delay.as_micros(),
+        rps,
+        m.summary()
+    );
+    server.shutdown();
+    Ok(rps)
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::default();
+
+    println!("== pure-logic hot paths ==");
+    let policy = BatchPolicy::default();
+    bench.run("batcher/push_drain_64", 64, || {
+        let mut q = BatchQueue::new(policy);
+        let now = Instant::now();
+        for i in 0..64u32 {
+            let _ = q.push(i, now);
+        }
+        q.drain_batch()
+    });
+
+    if let Ok(man) = Manifest::load(Manifest::default_dir()) {
+        let router = Router::from_manifest(&man);
+        let (img, _) = data::sample(&data::MNIST_S, 0);
+        bench.run("router/validate", 1, || {
+            router.validate("mnist_mlp_1", &img).unwrap()
+        });
+
+        // raw-engine roofline for the overhead comparison
+        let engine = Engine::cpu()?;
+        let e = man.model("mnist_mlp_1")?;
+        let a = e.artifacts.iter().max_by_key(|a| a.batch).unwrap();
+        let exe = engine.load(man.path_of(&a.file))?;
+        let ds = data::dataset(&e.dataset).unwrap();
+        let (xs, _) = data::batch(&ds, 0, a.batch, true);
+        let lit = literal_f32(&xs, &a.input_shape)?;
+        let raw = bench.run("raw_execute/b64", a.batch as u64, || {
+            exe.run1(std::slice::from_ref(&lit)).unwrap()
+        });
+        let roofline = raw.throughput();
+
+        println!("\n== end-to-end serving (coordinator) vs raw roofline {roofline:.0} img/s ==");
+        let mut best = 0.0f64;
+        for (max_batch, delay_us, clients) in
+            [(1usize, 200u64, 8usize), (8, 500, 8), (64, 2000, 32), (64, 2000, 64)]
+        {
+            let rps = serve_throughput(
+                BatchPolicy {
+                    max_batch,
+                    max_delay: Duration::from_micros(delay_us),
+                    max_queue: 16384,
+                },
+                clients,
+                8192,
+            )?;
+            best = best.max(rps);
+        }
+        println!(
+            "\nbest coordinator throughput = {:.1}% of raw roofline",
+            100.0 * best / roofline
+        );
+    } else {
+        eprintln!("artifacts missing: serving benches skipped (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,32 @@
+//! Bench F6: regenerate the Fig. 6 scatter (equivalent GOPS vs GOPS/W for
+//! the proposed designs on both devices against the reference-FPGA corpus)
+//! and time the design-space evaluation — one `DesignReport` per
+//! (model, device) pair is the unit the co-optimization loop of Fig. 5
+//! sweeps, so its cost bounds how fine a design sweep can afford to be.
+
+use circnn::experiments::fig6;
+use circnn::fpga::device::{CYCLONE_V, KINTEX_7};
+use circnn::fpga::report::DesignReport;
+use circnn::fpga::schedule::ScheduleConfig;
+use circnn::models;
+use circnn::util::benchkit::Bench;
+
+fn main() {
+    println!("{}", fig6::render());
+
+    let bench = Bench::default();
+    println!("== generation cost ==");
+    for dev in [&CYCLONE_V, &KINTEX_7] {
+        for m in models::registry() {
+            let cfg = ScheduleConfig::auto_for(&m, dev);
+            bench.run(&format!("design_report/{}/{}", dev.name, m.name), 1, || {
+                DesignReport::build(&m, dev, &cfg)
+            });
+        }
+    }
+    bench.run("fig6_points/full", 1, fig6::points);
+
+    let gain = fig6::min_efficiency_gain();
+    println!("\nmin efficiency gain of proposed (CyClone V) over reference corpus: {gain:.1}x");
+    assert!(gain >= 5.0, "Fig. 6 shape collapsed");
+}

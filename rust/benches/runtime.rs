@@ -1,0 +1,83 @@
+//! Bench: the PJRT runtime hot path — compile cost (paid once per model
+//! variant, the "bitstream load"), per-batch execute latency, and the
+//! derived images/s for batch-1 vs batch-64 and plain vs Pallas-kernel
+//! artifacts.  This is the L3 perf baseline the coordinator overhead is
+//! measured against (DESIGN.md §9).
+
+use circnn::data;
+use circnn::runtime::engine::{literal_f32, Engine};
+use circnn::runtime::Manifest;
+use circnn::util::benchkit::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let man = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    let engine = Engine::cpu()?;
+    println!("PJRT platform: {}\n", engine.platform());
+
+    // compile cost: load each mnist artifact fresh (cache defeated by a
+    // fresh engine per iteration would be too slow; report one-shot times)
+    println!("== compile (one-shot, per artifact) ==");
+    for e in &man.models {
+        for a in &e.artifacts {
+            let fresh = Engine::cpu()?;
+            let t0 = std::time::Instant::now();
+            fresh.load(man.path_of(&a.file))?;
+            println!("compile {:40} {:>10.1}ms", a.file, t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+
+    let bench = Bench::default();
+    println!("\n== execute (steady-state, cached executable) ==");
+    for e in &man.models {
+        let ds = data::dataset(&e.dataset).unwrap();
+        for (arts, tag) in [(&e.artifacts, "plain"), (&e.artifacts_pallas, "pallas")] {
+            for a in arts {
+                let exe = engine.load(man.path_of(&a.file))?;
+                let (xs, _) = data::batch(&ds, 0, a.batch, true);
+                let lit = literal_f32(&xs, &a.input_shape)?;
+                bench.run(
+                    &format!("execute/{}/{}/b{}", e.name, tag, a.batch),
+                    a.batch as u64,
+                    || exe.run1(std::slice::from_ref(&lit)).unwrap(),
+                );
+            }
+        }
+    }
+
+    // native pure-Rust engine vs PJRT — the two execution substrates of the
+    // same trained models (parity pinned in rust/tests/native_parity.rs)
+    println!("\n== native engine (pure Rust, no PJRT) ==");
+    for e in &man.models {
+        let Some(m) = circnn::models::by_name(&e.name) else { continue };
+        let path = man.dir.join("params").join(format!("{}.npz", e.name));
+        let Ok(native) = circnn::native::NativeModel::load(&m, &path, Some(12)) else {
+            continue;
+        };
+        let ds = data::dataset(&e.dataset).unwrap();
+        let (h, w, c) = m.input;
+        for batch in [1usize, 64] {
+            let (xs, _) = data::batch(&ds, 0, batch, true);
+            bench.run(&format!("native/{}/b{}", e.name, batch), batch as u64, || {
+                native.forward(&xs, batch, h, w, c)
+            });
+        }
+    }
+
+    // literal construction (hot-path allocation cost the batcher pays)
+    println!("\n== literal construction ==");
+    let e = man.model("mnist_mlp_1")?;
+    let a = e.artifacts.iter().max_by_key(|a| a.batch).unwrap();
+    let ds = data::dataset(&e.dataset).unwrap();
+    let (xs, _) = data::batch(&ds, 0, a.batch, true);
+    bench.run("literal_f32/b64_mnist", a.batch as u64, || {
+        literal_f32(&xs, &a.input_shape).unwrap()
+    });
+
+    Ok(())
+}

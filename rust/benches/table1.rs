@@ -1,0 +1,45 @@
+//! Bench T1: regenerate Table 1 end-to-end and time its moving parts.
+//!
+//! Prints the full regenerated table (simulator + baseline models + trained
+//! accuracies from the manifest when present), the paper's headline ratios,
+//! and benchmark timings of the table generation itself — the "experiment
+//! harness must be cheap enough to sweep" requirement.
+
+use circnn::experiments::{table1, try_manifest};
+use circnn::fpga::device::CYCLONE_V;
+use circnn::fpga::schedule::{simulate, ScheduleConfig};
+use circnn::models;
+use circnn::util::benchkit::Bench;
+
+fn main() {
+    let man = try_manifest();
+    if man.is_none() {
+        eprintln!("note: artifacts/manifest.json missing — paper accuracies used instead");
+    }
+
+    // the regenerated table itself
+    println!("{}", table1::render(man.as_ref()));
+
+    let bench = Bench::default();
+    println!("== generation cost ==");
+    for m in models::registry() {
+        let cfg = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+        bench.run(&format!("simulate/{}", m.name), cfg.batch, || {
+            simulate(&m, &CYCLONE_V, &cfg)
+        });
+    }
+    bench.run("table1_rows/full", 1, || table1::rows(man.as_ref()));
+
+    // headline invariants, asserted so `cargo bench` also guards the shape
+    let rows = table1::rows(man.as_ref());
+    let h = table1::headline(&rows);
+    println!(
+        "\nheadline: {:.0}x speedup vs TrueNorth (paper >=152x), \
+         {:.0}x energy vs TrueNorth (paper >=71x), \
+         {:.0}x energy vs reference FPGA (paper >=31x)",
+        h.speedup_vs_truenorth, h.energy_gain_vs_truenorth, h.energy_gain_vs_reference_fpga
+    );
+    assert!(h.speedup_vs_truenorth >= 152.0);
+    assert!(h.energy_gain_vs_truenorth >= 71.0);
+    assert!(h.energy_gain_vs_reference_fpga >= 31.0);
+}

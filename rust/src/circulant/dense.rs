@@ -1,0 +1,74 @@
+//! Dense (uncompressed) matrix baselines — the O(n^2) comparator for the
+//! paper's complexity-crossover claims and the dense-FPGA baseline model.
+
+/// `out = W x` for row-major `W (m x n)`.
+pub fn matvec(w: &[f32], m: usize, n: usize, x: &[f32], out: &mut [f32]) {
+    assert_eq!(w.len(), m * n);
+    assert_eq!(x.len(), n);
+    assert_eq!(out.len(), m);
+    for i in 0..m {
+        let row = &w[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for (a, b) in row.iter().zip(x.iter()) {
+            acc += a * b;
+        }
+        out[i] = acc;
+    }
+}
+
+/// Batched `Y = X W^T`: `xs` row-major `(batch, n)`, out `(batch, m)`.
+pub fn matmul(w: &[f32], m: usize, n: usize, xs: &[f32], batch: usize, out: &mut [f32]) {
+    for b in 0..batch {
+        matvec(w, m, n, &xs[b * n..(b + 1) * n], &mut out[b * m..(b + 1) * m]);
+    }
+}
+
+/// ReLU in place.
+pub fn relu(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// `y += bias` broadcast over rows of a row-major `(batch, m)` buffer.
+pub fn add_bias(y: &mut [f32], bias: &[f32]) {
+    let m = bias.len();
+    for row in y.chunks_mut(m) {
+        for (v, b) in row.iter_mut().zip(bias.iter()) {
+            *v += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_known_values() {
+        // W = [[1,2],[3,4],[5,6]], x = [1, -1]
+        let w = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = [0.0; 3];
+        matvec(&w, 3, 2, &[1.0, -1.0], &mut out);
+        assert_eq!(out, [-1.0, -1.0, -1.0]);
+    }
+
+    #[test]
+    fn matmul_is_rowwise_matvec() {
+        let w = [1.0, 0.0, 0.0, 2.0];
+        let xs = [1.0, 1.0, 3.0, -1.0];
+        let mut out = [0.0; 4];
+        matmul(&w, 2, 2, &xs, 2, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0, -2.0]);
+    }
+
+    #[test]
+    fn relu_and_bias() {
+        let mut y = [-1.0, 2.0, -3.0, 4.0];
+        add_bias(&mut y, &[1.0, 1.0]);
+        relu(&mut y);
+        assert_eq!(y, [0.0, 3.0, 0.0, 5.0]);
+    }
+}

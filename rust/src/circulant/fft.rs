@@ -1,0 +1,315 @@
+//! Iterative radix-2 FFT on separated real/imag planes.
+//!
+//! The same dataflow the paper pipelines in FPGA fabric: bit-reversal
+//! reorder followed by `log2(k)` butterfly stages; IFFT runs on the same
+//! structure with conjugated twiddles and a final 1/k scale.  Twiddles and
+//! the reversal permutation are precomputed per block size in [`FftPlan`]
+//! (the FPGA's per-stage ROMs).
+
+/// Precomputed plan for a k-point radix-2 FFT (k a power of two).
+#[derive(Debug, Clone)]
+pub struct FftPlan {
+    pub k: usize,
+    perm: Vec<u32>,
+    /// per stage: (cos, sin) twiddles of length 2^stage (forward sign)
+    stages: Vec<(Vec<f32>, Vec<f32>)>,
+}
+
+impl FftPlan {
+    /// Build a plan for `k`-point transforms.  Panics if `k` is not a
+    /// nonzero power of two (a configuration error, not a runtime input).
+    pub fn new(k: usize) -> Self {
+        assert!(k.is_power_of_two() && k > 0, "k must be a power of 2, got {k}");
+        let bits = k.trailing_zeros() as usize;
+        let mut perm = vec![0u32; k];
+        for (i, slot) in perm.iter_mut().enumerate() {
+            let mut rev = 0usize;
+            for b in 0..bits {
+                rev |= ((i >> b) & 1) << (bits - 1 - b);
+            }
+            *slot = rev as u32;
+        }
+        let mut stages = Vec::with_capacity(bits);
+        for s in 0..bits {
+            let half = 1usize << s;
+            let mut cos = Vec::with_capacity(half);
+            let mut sin = Vec::with_capacity(half);
+            for t in 0..half {
+                let ang = -2.0 * std::f64::consts::PI * t as f64 / (2.0 * half as f64);
+                cos.push(ang.cos() as f32);
+                sin.push(ang.sin() as f32);
+            }
+            stages.push((cos, sin));
+        }
+        Self { k, perm, stages }
+    }
+
+    /// Number of bins in the packed half-spectrum (k/2 + 1).
+    #[inline]
+    pub fn half_bins(&self) -> usize {
+        self.k / 2 + 1
+    }
+
+    /// In-place unscaled forward FFT of one k-point signal.
+    pub fn fft(&self, re: &mut [f32], im: &mut [f32]) {
+        self.transform(re, im, false);
+    }
+
+    /// In-place inverse FFT (including the 1/k scale).
+    pub fn ifft(&self, re: &mut [f32], im: &mut [f32]) {
+        self.transform(re, im, true);
+        let scale = 1.0 / self.k as f32;
+        for v in re.iter_mut() {
+            *v *= scale;
+        }
+        for v in im.iter_mut() {
+            *v *= scale;
+        }
+    }
+
+    fn transform(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
+        let k = self.k;
+        debug_assert_eq!(re.len(), k);
+        debug_assert_eq!(im.len(), k);
+        // bit-reversal permutation (swap once per pair)
+        for i in 0..k {
+            let j = self.perm[i] as usize;
+            if j > i {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        for (s, (cos, sin)) in self.stages.iter().enumerate() {
+            let half = 1usize << s;
+            let m = half * 2;
+            let mut base = 0;
+            while base < k {
+                for t in 0..half {
+                    let (c, s_) = (cos[t], if inverse { -sin[t] } else { sin[t] });
+                    let (i0, i1) = (base + t, base + t + half);
+                    let (vr, vi) = (re[i1], im[i1]);
+                    let tr = vr * c - vi * s_;
+                    let ti = vr * s_ + vi * c;
+                    let (ur, ui) = (re[i0], im[i0]);
+                    re[i0] = ur + tr;
+                    im[i0] = ui + ti;
+                    re[i1] = ur - tr;
+                    im[i1] = ui - ti;
+                }
+                base += m;
+            }
+        }
+    }
+
+    /// Real-input FFT packed to the half spectrum (k/2+1 bins) — the paper's
+    /// conjugate-symmetry storage optimization.  `out_re`/`out_im` must have
+    /// `half_bins()` elements; `scratch` holds 2k f32 of workspace.
+    pub fn rfft_halfspec(
+        &self,
+        x: &[f32],
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let k = self.k;
+        debug_assert_eq!(x.len(), k);
+        debug_assert!(scratch.len() >= 2 * k);
+        let (re, rest) = scratch.split_at_mut(k);
+        let im = &mut rest[..k];
+        re.copy_from_slice(x);
+        im.fill(0.0);
+        self.fft(re, im);
+        out_re.copy_from_slice(&re[..self.half_bins()]);
+        out_im.copy_from_slice(&im[..self.half_bins()]);
+    }
+
+    /// Hermitian-symmetric inverse: half spectrum -> real k-point signal.
+    pub fn irfft_halfspec(
+        &self,
+        in_re: &[f32],
+        in_im: &[f32],
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let k = self.k;
+        let kh = self.half_bins();
+        debug_assert_eq!(in_re.len(), kh);
+        debug_assert!(scratch.len() >= 2 * k);
+        let (re, rest) = scratch.split_at_mut(k);
+        let im = &mut rest[..k];
+        re[..kh].copy_from_slice(in_re);
+        im[..kh].copy_from_slice(in_im);
+        // mirror bins 1..k/2-1 conjugated
+        for t in 1..k - kh + 1 {
+            re[kh - 1 + t] = in_re[kh - 1 - t];
+            im[kh - 1 + t] = -in_im[kh - 1 - t];
+        }
+        self.ifft(re, im);
+        out.copy_from_slice(&re[..k]);
+    }
+
+    /// Real multiplications in one k-point FFT under the paper's cost model
+    /// (4 real mults per complex butterfly mult, k/2 butterflies per stage).
+    pub fn real_mults(&self) -> u64 {
+        let stages = self.k.trailing_zeros() as u64;
+        2 * self.k as u64 * stages
+    }
+}
+
+/// Element-wise complex multiply-accumulate on separated planes:
+/// `acc += a o b` over `len` lanes.  This is phase 2 of the datapath.
+#[inline]
+pub fn complex_mul_acc(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    for t in 0..ar.len() {
+        acc_r[t] += ar[t] * br[t] - ai[t] * bi[t];
+        acc_i[t] += ar[t] * bi[t] + ai[t] * br[t];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_all_close, forall};
+    use crate::util::rng::SplitMix;
+
+    /// O(k^2) DFT oracle (mirrors ref.naive_dft).
+    fn naive_dft(re: &[f32], im: &[f32], inverse: bool) -> (Vec<f32>, Vec<f32>) {
+        let k = re.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        let mut or_ = vec![0.0f32; k];
+        let mut oi = vec![0.0f32; k];
+        for out in 0..k {
+            let (mut sr, mut si) = (0.0f64, 0.0f64);
+            for t in 0..k {
+                let ang = sign * 2.0 * std::f64::consts::PI * (out * t) as f64 / k as f64;
+                let (c, s) = (ang.cos(), ang.sin());
+                sr += re[t] as f64 * c - im[t] as f64 * s;
+                si += re[t] as f64 * s + im[t] as f64 * c;
+            }
+            or_[out] = sr as f32;
+            oi[out] = si as f32;
+        }
+        (or_, oi)
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        for k in [2usize, 4, 8, 16, 64, 128, 256] {
+            let mut rng = SplitMix::new(k as u64);
+            let re0 = rng.normal_vec(k);
+            let im0 = rng.normal_vec(k);
+            let (mut re, mut im) = (re0.clone(), im0.clone());
+            FftPlan::new(k).fft(&mut re, &mut im);
+            let (er, ei) = naive_dft(&re0, &im0, false);
+            assert_all_close(&re, &er, 1e-3, 1e-3).unwrap();
+            assert_all_close(&im, &ei, 1e-3, 1e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_fft_ifft_roundtrip() {
+        forall(
+            "fft→ifft identity",
+            |r| {
+                let k = 1usize << (1 + r.below(8)) as usize;
+                (k, r.normal_vec(k), r.normal_vec(k))
+            },
+            |(k, re0, im0)| {
+                let plan = FftPlan::new(*k);
+                let (mut re, mut im) = (re0.clone(), im0.clone());
+                plan.fft(&mut re, &mut im);
+                plan.ifft(&mut re, &mut im);
+                assert_all_close(&re, re0, 1e-3, 1e-3)?;
+                assert_all_close(&im, im0, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_rfft_halfspec_roundtrip() {
+        forall(
+            "rfft→irfft identity",
+            |r| {
+                let k = 1usize << (1 + r.below(8)) as usize;
+                (k, r.normal_vec(k))
+            },
+            |(k, x)| {
+                let plan = FftPlan::new(*k);
+                let kh = plan.half_bins();
+                let mut scratch = vec![0.0; 2 * k];
+                let (mut hr, mut hi) = (vec![0.0; kh], vec![0.0; kh]);
+                plan.rfft_halfspec(x, &mut hr, &mut hi, &mut scratch);
+                let mut back = vec![0.0; *k];
+                plan.irfft_halfspec(&hr, &hi, &mut back, &mut scratch);
+                assert_all_close(&back, x, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fft_linearity() {
+        forall(
+            "fft linearity",
+            |r| {
+                let k = 1usize << (1 + r.below(6)) as usize;
+                (k, r.normal_vec(k), r.normal_vec(k))
+            },
+            |(k, a, b)| {
+                let plan = FftPlan::new(*k);
+                let z = vec![0.0f32; *k];
+                let (mut ar, mut ai) = (a.clone(), z.clone());
+                plan.fft(&mut ar, &mut ai);
+                let (mut br, mut bi) = (b.clone(), z.clone());
+                plan.fft(&mut br, &mut bi);
+                let sum: Vec<f32> = a.iter().zip(b).map(|(x, y)| x + 2.0 * y).collect();
+                let (mut sr, mut si) = (sum, z);
+                plan.fft(&mut sr, &mut si);
+                let expect: Vec<f32> = ar.iter().zip(&br).map(|(x, y)| x + 2.0 * y).collect();
+                assert_all_close(&sr, &expect, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn delta_transforms_to_flat_spectrum() {
+        let k = 16;
+        let mut re = vec![0.0f32; k];
+        let mut im = vec![0.0f32; k];
+        re[0] = 1.0;
+        FftPlan::new(k).fft(&mut re, &mut im);
+        for t in 0..k {
+            assert!((re[t] - 1.0).abs() < 1e-6 && im[t].abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parseval_energy() {
+        let k = 128;
+        let mut rng = SplitMix::new(9);
+        let x = rng.normal_vec(k);
+        let (mut re, mut im) = (x.clone(), vec![0.0; k]);
+        FftPlan::new(k).fft(&mut re, &mut im);
+        let te: f32 = x.iter().map(|v| v * v).sum();
+        let fe: f32 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f32>() / k as f32;
+        assert!((te - fe).abs() < 1e-2 * te.max(1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "power of 2")]
+    fn non_pow2_panics() {
+        FftPlan::new(12);
+    }
+
+    #[test]
+    fn real_mults_formula() {
+        assert_eq!(FftPlan::new(8).real_mults(), 2 * 8 * 3);
+        assert_eq!(FftPlan::new(128).real_mults(), 2 * 128 * 7);
+    }
+}

@@ -1,0 +1,278 @@
+//! Fixed-point FFT datapath — the arithmetic the FPGA actually performs.
+//!
+//! The rest of the stack models the paper's 12-bit datapath with
+//! *fake-quantization* (float values snapped to a 12-bit grid).  This
+//! module implements the real thing: two's-complement fixed-point
+//! butterflies with quantized twiddle ROMs and post-multiply rescaling,
+//! the way the bits move through the FPGA's DSP blocks.  The precision
+//! experiment (`circnn precision`, `experiments::precision`) uses it to
+//! regenerate the justification for the paper's 12-bit choice: SNR through
+//! the full FFT→∘→IFFT pipeline vs. datapath width.
+//!
+//! Format: values are `i32` holding `frac` fractional bits (Q-format);
+//! twiddles hold `frac` fractional bits in `i32`; every multiply runs in
+//! `i64` and is rescaled by `>> frac` with round-to-nearest.  The inverse
+//! transform's 1/k scale is exact (k is a power of two → arithmetic shift).
+
+use super::fft::FftPlan;
+
+/// Fixed-point transform context for one block size and datapath width.
+#[derive(Debug, Clone)]
+pub struct FixedFft {
+    pub k: usize,
+    /// fractional bits of the datapath (the paper's 12-bit design uses
+    /// ~10-11 fractional bits after sign and margin; we expose it directly)
+    pub frac: u32,
+    perm: Vec<u32>,
+    /// per stage: quantized (cos, sin) twiddles
+    stages: Vec<(Vec<i32>, Vec<i32>)>,
+}
+
+/// Round-to-nearest rescale of an i64 product by `frac` bits.
+#[inline]
+fn rescale(v: i64, frac: u32) -> i64 {
+    let half = 1i64 << (frac - 1);
+    (v + half) >> frac
+}
+
+impl FixedFft {
+    /// Build the context: bit-reversal permutation + quantized twiddle ROMs.
+    pub fn new(k: usize, frac: u32) -> Self {
+        assert!(k.is_power_of_two() && k > 1, "k must be a power of 2 > 1");
+        assert!((4..=24).contains(&frac), "frac out of the modeled range");
+        let bits = k.trailing_zeros() as usize;
+        let mut perm = vec![0u32; k];
+        for (i, slot) in perm.iter_mut().enumerate() {
+            let mut rev = 0usize;
+            for b in 0..bits {
+                rev |= ((i >> b) & 1) << (bits - 1 - b);
+            }
+            *slot = rev as u32;
+        }
+        let scale = (1i64 << frac) as f64;
+        let mut stages = Vec::with_capacity(bits);
+        for s in 0..bits {
+            let half = 1usize << s;
+            let mut cos = Vec::with_capacity(half);
+            let mut sin = Vec::with_capacity(half);
+            for t in 0..half {
+                let ang = -2.0 * std::f64::consts::PI * t as f64 / (2.0 * half as f64);
+                cos.push((ang.cos() * scale).round() as i32);
+                sin.push((ang.sin() * scale).round() as i32);
+            }
+            stages.push((cos, sin));
+        }
+        Self { k, frac, perm, stages }
+    }
+
+    /// Quantize a float signal into the datapath format.
+    pub fn to_fixed(&self, x: &[f32]) -> Vec<i32> {
+        let s = (1i64 << self.frac) as f32;
+        x.iter().map(|&v| (v * s).round() as i32).collect()
+    }
+
+    /// Back to float.
+    pub fn to_float(&self, x: &[i32]) -> Vec<f32> {
+        let s = (1i64 << self.frac) as f32;
+        x.iter().map(|&v| v as f32 / s).collect()
+    }
+
+    /// In-place fixed-point FFT (forward; `inverse` flips twiddle signs and
+    /// applies the exact 1/k shift at the end).
+    pub fn transform(&self, re: &mut [i32], im: &mut [i32], inverse: bool) {
+        let k = self.k;
+        debug_assert_eq!(re.len(), k);
+        for i in 0..k {
+            let j = self.perm[i] as usize;
+            if j > i {
+                re.swap(i, j);
+                im.swap(i, j);
+            }
+        }
+        for (s, (cos, sin)) in self.stages.iter().enumerate() {
+            let half = 1usize << s;
+            let m = half * 2;
+            let mut base = 0;
+            while base < k {
+                for t in 0..half {
+                    let c = cos[t] as i64;
+                    let s_ = if inverse { -(sin[t] as i64) } else { sin[t] as i64 };
+                    let (i0, i1) = (base + t, base + t + half);
+                    let (vr, vi) = (re[i1] as i64, im[i1] as i64);
+                    // DSP-block multiply + rescale (round to nearest)
+                    let tr = rescale(vr * c - vi * s_, self.frac);
+                    let ti = rescale(vr * s_ + vi * c, self.frac);
+                    let (ur, ui) = (re[i0] as i64, im[i0] as i64);
+                    re[i0] = (ur + tr) as i32;
+                    im[i0] = (ui + ti) as i32;
+                    re[i1] = (ur - tr) as i32;
+                    im[i1] = (ui - ti) as i32;
+                }
+                base += m;
+            }
+        }
+        if inverse {
+            let shift = k.trailing_zeros();
+            for v in re.iter_mut() {
+                *v = (rescale((*v as i64) << self.frac, self.frac + shift)) as i32;
+            }
+            for v in im.iter_mut() {
+                *v = (rescale((*v as i64) << self.frac, self.frac + shift)) as i32;
+            }
+        }
+    }
+
+    /// Full fixed-point circulant matvec `y = C(w) x` — FFT, element-wise
+    /// complex multiply (rescaled), IFFT — on one k-point block.
+    pub fn circulant_matvec(&self, w: &[f32], x: &[f32]) -> Vec<f32> {
+        let k = self.k;
+        assert_eq!(w.len(), k);
+        assert_eq!(x.len(), k);
+        let (mut wr, mut wi) = (self.to_fixed(w), vec![0i32; k]);
+        self.transform(&mut wr, &mut wi, false);
+        let (mut xr, mut xi) = (self.to_fixed(x), vec![0i32; k]);
+        self.transform(&mut xr, &mut xi, false);
+        let (mut yr, mut yi) = (vec![0i32; k], vec![0i32; k]);
+        for t in 0..k {
+            let (a, b) = (wr[t] as i64, wi[t] as i64);
+            let (c, d) = (xr[t] as i64, xi[t] as i64);
+            yr[t] = rescale(a * c - b * d, self.frac) as i32;
+            yi[t] = rescale(a * d + b * c, self.frac) as i32;
+        }
+        self.transform(&mut yr, &mut yi, true);
+        self.to_float(&yr)
+    }
+}
+
+/// Signal-to-noise ratio (dB) of `got` against the reference `want`.
+pub fn snr_db(want: &[f32], got: &[f32]) -> f64 {
+    let sig: f64 = want.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    let noise: f64 = want
+        .iter()
+        .zip(got)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    if noise == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig / noise).log10()
+}
+
+/// Float-reference circulant matvec for SNR baselines.
+pub fn float_circulant_matvec(w: &[f32], x: &[f32]) -> Vec<f32> {
+    let k = w.len();
+    let plan = FftPlan::new(k);
+    let (mut wr, mut wi) = (w.to_vec(), vec![0.0f32; k]);
+    plan.fft(&mut wr, &mut wi);
+    let (mut xr, mut xi) = (x.to_vec(), vec![0.0f32; k]);
+    plan.fft(&mut xr, &mut xi);
+    let (mut yr, mut yi) = (vec![0.0f32; k], vec![0.0f32; k]);
+    for t in 0..k {
+        yr[t] = wr[t] * xr[t] - wi[t] * xi[t];
+        yi[t] = wr[t] * xi[t] + wi[t] * xr[t];
+    }
+    plan.ifft(&mut yr, &mut yi);
+    yr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_all_close, forall};
+    use crate::util::rng::SplitMix;
+
+    #[test]
+    fn prop_fixed_fft_roundtrip() {
+        forall(
+            "fixed FFT -> IFFT identity within grid noise",
+            |r| {
+                let k = 1usize << (2 + r.below(6));
+                (k, r.normal_vec(k))
+            },
+            |(k, x)| {
+                let f = FixedFft::new(*k, 14);
+                let mut re = f.to_fixed(x);
+                let mut im = vec![0i32; *k];
+                f.transform(&mut re, &mut im, false);
+                f.transform(&mut re, &mut im, true);
+                let back = f.to_float(&re);
+                assert_all_close(&back, x, 5e-3, 5e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_fixed_matvec_tracks_float_at_high_precision() {
+        forall(
+            "fixed-point circulant matvec ~ float at 16 fractional bits",
+            |r| {
+                let k = 1usize << (2 + r.below(5));
+                // unit-ish dynamic range, like normalized activations
+                let scale = 0.5f32;
+                let w: Vec<f32> = r.normal_vec(k).iter().map(|v| v * scale / k as f32).collect();
+                let x: Vec<f32> = r.normal_vec(k).iter().map(|v| v * scale).collect();
+                (k, w, x)
+            },
+            |(k, w, x)| {
+                let fx = FixedFft::new(*k, 16);
+                let got = fx.circulant_matvec(w, x);
+                let want = float_circulant_matvec(w, x);
+                let snr = snr_db(&want, &got);
+                if snr > 40.0 {
+                    Ok(())
+                } else {
+                    Err(format!("SNR {snr:.1} dB too low at 16 fractional bits"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn snr_improves_with_width() {
+        let mut rng = SplitMix::new(12);
+        let k = 128;
+        let w: Vec<f32> = rng.normal_vec(k).iter().map(|v| v / k as f32).collect();
+        let x = rng.normal_vec(k);
+        let want = float_circulant_matvec(&w, &x);
+        let mut last = f64::NEG_INFINITY;
+        for frac in [6u32, 8, 10, 12, 14, 16] {
+            let got = FixedFft::new(k, frac).circulant_matvec(&w, &x);
+            let snr = snr_db(&want, &got);
+            assert!(
+                snr > last - 1.0, // allow tiny non-monotonic noise
+                "SNR should grow with width: {snr:.1} dB at frac={frac} after {last:.1}"
+            );
+            last = snr.max(last);
+        }
+        // ~6 dB/bit: 12 fractional bits must clear 35 dB on this workload
+        let snr12 = snr_db(&want, &FixedFft::new(k, 12).circulant_matvec(&w, &x));
+        assert!(snr12 > 35.0, "12-bit datapath SNR {snr12:.1} dB");
+    }
+
+    #[test]
+    fn ifft_scale_is_exact_shift() {
+        // delta in -> delta back, bit-exact at any width (shift, not divide)
+        let k = 64;
+        let f = FixedFft::new(k, 12);
+        let mut re = vec![0i32; k];
+        let mut im = vec![0i32; k];
+        re[0] = 1 << 12;
+        f.transform(&mut re, &mut im, false);
+        f.transform(&mut re, &mut im, true);
+        assert_eq!(re[0], 1 << 12);
+        assert!(re[1..].iter().all(|&v| v.abs() <= 1), "{re:?}");
+    }
+
+    #[test]
+    fn snr_helper() {
+        assert_eq!(snr_db(&[1.0, 0.0], &[1.0, 0.0]), f64::INFINITY);
+        let s = snr_db(&[1.0, 1.0], &[1.0, 0.9]);
+        assert!(s > 10.0 && s < 30.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of 2")]
+    fn rejects_non_pow2() {
+        FixedFft::new(12, 12);
+    }
+}

@@ -1,0 +1,134 @@
+//! im2col with the block-contiguous channel ordering — the CONV-layer
+//! reformulation of the paper's Fig. 2, mirrored from
+//! `python/compile/layers.im2col`.
+//!
+//! Patch vectors are ordered `(c_block, di, dj, c_in_block)` so that every
+//! group of `k` consecutive values is one input block `x_j` of Eqn. (1)
+//! (j enumerates `(c_block, di, dj)`), letting the CONV layer reuse the FC
+//! spectral machinery unchanged.
+
+/// VALID-padding im2col.  `x` is NHWC row-major `(h, w, c)` for one image
+/// (`x.len() == h*w*c`), `c % k == 0`.  Output is row-major
+/// `(oh*ow, (c/k)*r*r*k)`.
+pub fn im2col(x: &[f32], h: usize, w: usize, c: usize, r: usize, k: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h * w * c);
+    assert_eq!(c % k, 0, "k must divide the channel count");
+    let qc = c / k;
+    let (oh, ow) = (h - r + 1, w - r + 1);
+    let patch = qc * r * r * k;
+    let mut out = vec![0.0f32; oh * ow * patch];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * patch;
+            let mut col = 0;
+            for cb in 0..qc {
+                for di in 0..r {
+                    for dj in 0..r {
+                        let src = ((oy + di) * w + (ox + dj)) * c + cb * k;
+                        out[row + col..row + col + k].copy_from_slice(&x[src..src + k]);
+                        col += k;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// SAME (zero) padding helper: pads `x (h, w, c)` so a VALID r-conv keeps
+/// the spatial size; returns `(padded, new_h, new_w)`.
+pub fn pad_same(x: &[f32], h: usize, w: usize, c: usize, r: usize) -> (Vec<f32>, usize, usize) {
+    let lo = (r - 1) / 2;
+    let hi = r - 1 - lo;
+    let (nh, nw) = (h + r - 1, w + r - 1);
+    let mut out = vec![0.0f32; nh * nw * c];
+    for y in 0..h {
+        let dst = ((y + lo) * nw + lo) * c;
+        let src = y * w * c;
+        out[dst..dst + w * c].copy_from_slice(&x[src..src + w * c]);
+    }
+    let _ = hi;
+    (out, nh, nw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix;
+
+    #[test]
+    fn shapes_and_ordering() {
+        // 1 channel-block of k=2 over a 3x3 image, r=2 -> 4 patches
+        let h = 3;
+        let w = 3;
+        let c = 2;
+        let k = 2;
+        let r = 2;
+        let x: Vec<f32> = (0..h * w * c).map(|v| v as f32).collect();
+        let cols = im2col(&x, h, w, c, r, k);
+        let patch = (c / k) * r * r * k; // 8
+        assert_eq!(cols.len(), 4 * patch);
+        // first patch, first tap (di=0,dj=0) = channels of pixel (0,0)
+        assert_eq!(&cols[0..2], &[0.0, 1.0]);
+        // second tap (di=0, dj=1) = pixel (0,1)
+        assert_eq!(&cols[2..4], &[2.0, 3.0]);
+        // third tap (di=1, dj=0) = pixel (1,0)
+        assert_eq!(&cols[4..6], &[6.0, 7.0]);
+    }
+
+    #[test]
+    fn conv_via_im2col_matches_direct() {
+        // dense conv through im2col == direct nested-loop convolution
+        let (h, w, c, r) = (5, 5, 2, 3);
+        let p_out = 3;
+        let mut rng = SplitMix::new(1);
+        let x = rng.normal_vec(h * w * c);
+        let f = rng.normal_vec(r * r * c * p_out); // layout (di, dj, c, p)
+        let (oh, ow) = (h - r + 1, w - r + 1);
+
+        // direct
+        let mut direct = vec![0.0f32; oh * ow * p_out];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for po in 0..p_out {
+                    let mut acc = 0.0;
+                    for di in 0..r {
+                        for dj in 0..r {
+                            for ch in 0..c {
+                                let xv = x[((oy + di) * w + (ox + dj)) * c + ch];
+                                let fv = f[((di * r + dj) * c + ch) * p_out + po];
+                                acc += xv * fv;
+                            }
+                        }
+                    }
+                    direct[(oy * ow + ox) * p_out + po] = acc;
+                }
+            }
+        }
+
+        // im2col with k = c (single channel block): patch order (di,dj,ch)
+        let cols = im2col(&x, h, w, c, r, c);
+        let patch = r * r * c;
+        let mut got = vec![0.0f32; oh * ow * p_out];
+        for row in 0..oh * ow {
+            for po in 0..p_out {
+                let mut acc = 0.0;
+                for t in 0..patch {
+                    // cols order: (di, dj, ch); f order: (di, dj, ch, po)
+                    acc += cols[row * patch + t] * f[t * p_out + po];
+                }
+                got[row * p_out + po] = acc;
+            }
+        }
+        crate::util::prop::assert_all_close(&got, &direct, 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn pad_same_centers_content() {
+        let x = vec![1.0; 2 * 2 * 1];
+        let (p, nh, nw) = pad_same(&x, 2, 2, 1, 3);
+        assert_eq!((nh, nw), (4, 4));
+        assert_eq!(p.iter().filter(|&&v| v != 0.0).count(), 4);
+        assert_eq!(p[(1 * 4 + 1) * 1], 1.0); // (1,1) holds original (0,0)
+    }
+}

@@ -1,0 +1,19 @@
+//! The algorithmic substrate: from-scratch FFT and block-circulant numerics.
+//!
+//! This mirrors `python/compile/kernels/fft_core.py` exactly (same radix-2
+//! DIT butterfly cascade, same unscaled-forward / 1/k-inverse convention,
+//! same half-spectrum packing) so that the Pallas kernels, the HLO
+//! artifacts, the simulator's cycle accounting and this pure-Rust fallback
+//! inference path all share one numeric structure.  The simulator's cycle
+//! model (`crate::fpga`) is literally the butterfly schedule implemented
+//! here.
+
+pub mod block;
+pub mod dense;
+pub mod fft;
+pub mod fixed;
+pub mod im2col;
+pub mod quant;
+
+pub use block::BlockCirculant;
+pub use fft::FftPlan;

@@ -1,0 +1,119 @@
+//! Fixed-point quantization — the paper's 12-bit FPGA datapath precision.
+//!
+//! Mirrors `python/compile/layers.fake_quant`: symmetric uniform, per-tensor
+//! max-abs scale.  [`Quantized`] additionally provides the packed integer
+//! representation used for the storage accounting (Fig. 3's "bit
+//! quantization" factor) and by the simulator's memory model.
+
+/// Quantize/dequantize in place (fake-quant): the value grid of a
+/// `bits`-bit symmetric fixed-point representation.
+pub fn fake_quant(x: &mut [f32], bits: u32) {
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+    let scale = max_abs / levels;
+    for v in x.iter_mut() {
+        *v = (*v / scale).round() * scale;
+    }
+}
+
+/// A tensor stored as `bits`-bit integers + one f32 scale.
+#[derive(Debug, Clone)]
+pub struct Quantized {
+    pub bits: u32,
+    pub scale: f32,
+    /// values in [-(2^(bits-1)-1), 2^(bits-1)-1], stored widened
+    pub values: Vec<i16>,
+}
+
+impl Quantized {
+    /// Quantize a float tensor (bits <= 16).
+    pub fn encode(x: &[f32], bits: u32) -> Self {
+        assert!((2..=16).contains(&bits), "bits must be in 2..=16");
+        let levels = ((1u32 << (bits - 1)) - 1) as f32;
+        let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+        let scale = max_abs / levels;
+        let values = x
+            .iter()
+            .map(|v| (v / scale).round().clamp(-levels, levels) as i16)
+            .collect();
+        Self { bits, scale, values }
+    }
+
+    /// Dequantize back to floats.
+    pub fn decode(&self) -> Vec<f32> {
+        self.values.iter().map(|&v| v as f32 * self.scale).collect()
+    }
+
+    /// Storage in bytes at the nominal bit width (packed), as counted by
+    /// the paper's storage-reduction figure.
+    pub fn packed_bytes(&self) -> usize {
+        (self.values.len() * self.bits as usize).div_ceil(8)
+    }
+
+    /// Worst-case absolute quantization error (scale / 2).
+    pub fn max_error(&self) -> f32 {
+        self.scale / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn prop_roundtrip_error_bounded() {
+        forall(
+            "quant error <= scale/2",
+            |r| {
+                let n = 1 + r.below(100) as usize;
+                let bits = 4 + r.below(9) as u32;
+                (r.normal_vec(n), bits)
+            },
+            |(x, bits)| {
+                let q = Quantized::encode(x, *bits);
+                let back = q.decode();
+                let bound = q.max_error() + 1e-6;
+                for (a, b) in x.iter().zip(&back) {
+                    if (a - b).abs() > bound {
+                        return Err(format!("error {} > bound {bound}", (a - b).abs()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fake_quant_matches_encode_decode() {
+        let x = [0.5f32, -1.25, 0.33, 0.9999];
+        let mut fq = x;
+        fake_quant(&mut fq, 12);
+        let ed = Quantized::encode(&x, 12).decode();
+        for (a, b) in fq.iter().zip(&ed) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let mut rng = crate::util::rng::SplitMix::new(2);
+        let x = rng.normal_vec(512);
+        let e4 = Quantized::encode(&x, 4).max_error();
+        let e8 = Quantized::encode(&x, 8).max_error();
+        let e12 = Quantized::encode(&x, 12).max_error();
+        assert!(e4 > e8 && e8 > e12);
+    }
+
+    #[test]
+    fn packed_bytes_12bit() {
+        let q = Quantized::encode(&vec![0.1; 100], 12);
+        assert_eq!(q.packed_bytes(), 150); // 100 * 12 / 8
+    }
+
+    #[test]
+    fn zero_tensor_safe() {
+        let q = Quantized::encode(&[0.0, 0.0], 12);
+        assert_eq!(q.decode(), vec![0.0, 0.0]);
+    }
+}

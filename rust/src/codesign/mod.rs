@@ -1,0 +1,398 @@
+//! The algorithm–hardware co-optimization loop of Fig. 5, as a first-class
+//! feature: given a benchmark network, a device, and an accuracy
+//! requirement, jointly select
+//!
+//!   * the **block sizes** (FC and CONV layers separately — the paper's
+//!     "model selection and optimization": k controls the accuracy ↔
+//!     compression trade-off),
+//!   * the **fixed-point width** (the hardware datapath precision), and
+//!   * the **batch size** (largest interleaved batch whose working set
+//!     fits on-chip — the "hardware optimization" leg),
+//!
+//! maximizing simulated energy efficiency (kFPS/W) subject to the accuracy
+//! constraint, with throughput as the tie-breaker.  The search is exact
+//! enumeration: the design space is small (tens of points) and the cycle
+//! simulator evaluates a point in ~100 ns (bench `fig6`), exactly why the
+//! paper can afford the loop of Fig. 5.
+//!
+//! Accuracy along the frontier comes from a *measured* model: the
+//! block-size sweep the Python pipeline trains (`make sweep` →
+//! `artifacts/sweep.json`, experiment S2), interpolated geometrically
+//! between measured k points and penalized for sub-12-bit precision. When
+//! the sweep artifact is absent a conservative built-in table (recorded
+//! from the same sweep, seed-pinned) is used so the search stays
+//! deterministic and artifact-optional.
+
+use crate::fpga::device::Device;
+use crate::fpga::report::DesignReport;
+use crate::fpga::schedule::ScheduleConfig;
+use crate::models::{Layer, Model};
+use crate::util::json::Json;
+
+/// Accuracy model: measured (k, accuracy) pairs for the block-size sweep
+/// plus a precision penalty, both on the synthetic benchmark task.
+#[derive(Debug, Clone)]
+pub struct AccuracyModel {
+    /// measured (k, accuracy) points, ascending k (k = FC block size)
+    pub points: Vec<(usize, f64)>,
+    /// accuracy lost per bit below 12 (measured 12-bit vs f32 deltas are
+    /// ~0.1-0.5%; dropping bits costs roughly this much per bit)
+    pub per_bit_penalty: f64,
+}
+
+/// Built-in fallback: the S2 sweep measured at session seeds (see
+/// EXPERIMENTS.md §S2).
+const BUILTIN_SWEEP: &[(usize, f64)] = &[
+    (2, 0.9951),
+    (4, 0.9961),
+    (8, 0.9893),
+    (16, 0.9736),
+    (32, 0.9541),
+    (64, 0.9385),
+    (128, 0.9287),
+];
+
+impl Default for AccuracyModel {
+    fn default() -> Self {
+        Self { points: BUILTIN_SWEEP.to_vec(), per_bit_penalty: 0.004 }
+    }
+}
+
+impl AccuracyModel {
+    /// Load the measured sweep from `artifacts/sweep.json` when present.
+    pub fn from_artifacts(dir: &std::path::Path) -> Self {
+        let Ok(text) = std::fs::read_to_string(dir.join("sweep.json")) else {
+            return Self::default();
+        };
+        let Ok(root) = Json::parse(&text) else {
+            return Self::default();
+        };
+        let Some(arr) = root.get("block_size_sweep").and_then(|v| v.as_arr()) else {
+            return Self::default();
+        };
+        let mut points = Vec::new();
+        for e in arr {
+            if let (Some(k), Some(a)) = (
+                e.get("k").and_then(|v| v.as_usize()),
+                e.get("accuracy").and_then(|v| v.as_f64()),
+            ) {
+                points.push((k, a));
+            }
+        }
+        if points.len() < 2 {
+            return Self::default();
+        }
+        points.sort_by_key(|&(k, _)| k);
+        Self { points, per_bit_penalty: 0.004 }
+    }
+
+    /// Predicted accuracy at FC block size `k` and datapath width `bits`.
+    ///
+    /// Log-linear interpolation in k between measured points, clamped at
+    /// the ends; bits below 12 pay `per_bit_penalty` each (12-bit itself is
+    /// what the sweep measured — the paper's design point).
+    pub fn predict(&self, k: usize, bits: u64) -> f64 {
+        let base = if k <= self.points[0].0 {
+            self.points[0].1
+        } else if k >= self.points[self.points.len() - 1].0 {
+            self.points[self.points.len() - 1].1
+        } else {
+            let mut acc = self.points[0].1;
+            for w in self.points.windows(2) {
+                let ((k0, a0), (k1, a1)) = (w[0], w[1]);
+                if k >= k0 && k <= k1 {
+                    let t = ((k as f64).ln() - (k0 as f64).ln())
+                        / ((k1 as f64).ln() - (k0 as f64).ln());
+                    acc = a0 + t * (a1 - a0);
+                    break;
+                }
+            }
+            acc
+        };
+        (base - self.per_bit_penalty * (12.0f64 - bits as f64).max(0.0)).clamp(0.0, 1.0)
+    }
+}
+
+/// One evaluated design point of the Fig.-5 loop.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub k_fc: usize,
+    pub k_conv: usize,
+    pub bits: u64,
+    pub batch: u64,
+    pub predicted_accuracy: f64,
+    pub kfps: f64,
+    pub kfps_per_w: f64,
+    pub storage_reduction: f64,
+    pub fits_on_chip: bool,
+}
+
+/// Search configuration.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub fc_blocks: Vec<usize>,
+    pub conv_blocks: Vec<usize>,
+    pub bit_widths: Vec<u64>,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        Self {
+            // the paper: "a proper block size ranges from 64 to 256 ...
+            // for FC layers and may be smaller for CONV layers"; we sweep
+            // wider to expose the frontier
+            fc_blocks: vec![8, 16, 32, 64, 128, 256],
+            conv_blocks: vec![2, 4, 8, 16],
+            bit_widths: vec![8, 10, 12, 16],
+        }
+    }
+}
+
+/// Rescale a registry model's block sizes, keeping divisibility: each
+/// BC layer gets the largest candidate ≤ requested that divides its dims.
+pub fn with_block_sizes(model: &Model, k_fc: usize, k_conv: usize) -> Model {
+    let mut m = model.clone();
+    for layer in &mut m.layers {
+        match layer {
+            Layer::BcDense { n, m: om, k } => {
+                *k = largest_dividing(k_fc, &[*n, *om]);
+            }
+            Layer::BcConv { c, p, k, .. } => {
+                *k = largest_dividing(k_conv, &[*c, *p]);
+            }
+            _ => {}
+        }
+    }
+    m
+}
+
+fn largest_dividing(want: usize, dims: &[usize]) -> usize {
+    let mut k = want.next_power_of_two().min(256);
+    while k > 1 {
+        if dims.iter().all(|d| d % k == 0) {
+            return k;
+        }
+        k /= 2;
+    }
+    1
+}
+
+/// Evaluate one (k_fc, k_conv, bits) triple on `device`; batch is chosen by
+/// the memory model (the hardware-optimization leg).
+pub fn evaluate(
+    model: &Model,
+    device: &Device,
+    acc_model: &AccuracyModel,
+    k_fc: usize,
+    k_conv: usize,
+    bits: u64,
+) -> DesignPoint {
+    let variant = with_block_sizes(model, k_fc, k_conv);
+    let base = ScheduleConfig { bits, ..ScheduleConfig::default() };
+    let batch = crate::fpga::memory::max_fitting_batch(
+        &variant,
+        device.bram_bytes,
+        bits,
+        64,
+        base.half_spectrum,
+        base.in_place,
+    );
+    let cfg = ScheduleConfig { batch, ..base };
+    let rep = DesignReport::build(&variant, device, &cfg);
+    DesignPoint {
+        k_fc,
+        k_conv,
+        bits,
+        batch,
+        predicted_accuracy: acc_model.predict(k_fc, bits),
+        kfps: rep.kfps,
+        kfps_per_w: rep.kfps_per_w,
+        storage_reduction: variant.storage_report(bits).reduction,
+        fits_on_chip: rep.sched.memory.fits,
+    }
+}
+
+/// Outcome of the co-optimization search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// every evaluated feasible point
+    pub frontier: Vec<DesignPoint>,
+    /// best feasible point (max kFPS/W, kFPS tie-break), if any
+    pub best: Option<DesignPoint>,
+    pub min_accuracy: f64,
+}
+
+/// The Fig.-5 loop: enumerate the space, keep on-chip + accuracy-feasible
+/// points, maximize energy efficiency.
+pub fn optimize(
+    model: &Model,
+    device: &Device,
+    space: &SearchSpace,
+    acc_model: &AccuracyModel,
+    min_accuracy: f64,
+) -> SearchResult {
+    let has_conv = model
+        .layers
+        .iter()
+        .any(|l| matches!(l, Layer::BcConv { .. }));
+    let conv_choices: &[usize] = if has_conv { &space.conv_blocks } else { &[4] };
+    let mut frontier = Vec::new();
+    for &k_fc in &space.fc_blocks {
+        for &k_conv in conv_choices {
+            for &bits in &space.bit_widths {
+                let pt = evaluate(model, device, acc_model, k_fc, k_conv, bits);
+                if pt.fits_on_chip && pt.predicted_accuracy >= min_accuracy {
+                    frontier.push(pt);
+                }
+            }
+        }
+    }
+    frontier.sort_by(|a, b| {
+        b.kfps_per_w
+            .partial_cmp(&a.kfps_per_w)
+            .unwrap()
+            .then(b.kfps.partial_cmp(&a.kfps).unwrap())
+    });
+    let best = frontier.first().cloned();
+    SearchResult { frontier, best, min_accuracy }
+}
+
+/// Render a search result as the report the CLI prints.
+pub fn render(model: &Model, device: &Device, res: &SearchResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "co-optimization (Fig. 5): {} on {}, accuracy >= {:.1}%\n",
+        model.name,
+        device.name,
+        100.0 * res.min_accuracy
+    ));
+    out.push_str(&format!(
+        "{:>6} {:>7} {:>5} {:>6} {:>9} {:>12} {:>12} {:>10}\n",
+        "k_fc", "k_conv", "bits", "batch", "pred acc", "kFPS", "kFPS/W", "storage x"
+    ));
+    out.push_str(&"-".repeat(76));
+    out.push('\n');
+    for (i, p) in res.frontier.iter().take(12).enumerate() {
+        out.push_str(&format!(
+            "{:>6} {:>7} {:>5} {:>6} {:>8.2}% {:>12.1} {:>12.1} {:>9.1}x{}\n",
+            p.k_fc,
+            p.k_conv,
+            p.bits,
+            p.batch,
+            100.0 * p.predicted_accuracy,
+            p.kfps,
+            p.kfps_per_w,
+            p.storage_reduction,
+            if i == 0 { "  <- selected" } else { "" }
+        ));
+    }
+    if res.frontier.is_empty() {
+        out.push_str("no feasible design point (accuracy bound too tight for this space)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::CYCLONE_V;
+    use crate::models;
+
+    fn mlp() -> Model {
+        models::by_name("mnist_mlp_1").unwrap()
+    }
+
+    #[test]
+    fn accuracy_model_monotone_in_k_and_bits() {
+        let am = AccuracyModel::default();
+        // larger blocks -> equal-or-less accuracy over the measured knee
+        for w in [8usize, 16, 32, 64].windows(2) {
+            assert!(am.predict(w[0], 12) >= am.predict(w[1], 12), "k {} vs {}", w[0], w[1]);
+        }
+        // fewer bits -> less accuracy
+        assert!(am.predict(64, 8) < am.predict(64, 12));
+        // 16-bit pays no penalty relative to 12 (sweep measured at 12)
+        assert_eq!(am.predict(64, 16), am.predict(64, 12));
+        // interpolation stays within the bracketing measurements
+        let a24 = am.predict(24, 12);
+        assert!(a24 <= am.predict(16, 12) && a24 >= am.predict(32, 12));
+    }
+
+    #[test]
+    fn with_block_sizes_respects_divisibility() {
+        let m = with_block_sizes(&mlp(), 256, 4);
+        for l in &m.layers {
+            if let Layer::BcDense { n, m: om, k } = l {
+                assert_eq!(n % k, 0);
+                assert_eq!(om % k, 0);
+                assert!(*k <= 256);
+            }
+        }
+        // 256 doesn't divide a 256x256 layer evenly at k=256? it does —
+        // but k is also capped by the dims themselves
+        let lenet = models::by_name("mnist_lenet").unwrap();
+        let v = with_block_sizes(&lenet, 256, 16);
+        for l in &v.layers {
+            if let Layer::BcConv { c, p, k, .. } = l {
+                assert_eq!(c % k, 0);
+                assert_eq!(p % k, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_finds_feasible_best_and_respects_constraint() {
+        let am = AccuracyModel::default();
+        let res = optimize(&mlp(), &CYCLONE_V, &SearchSpace::default(), &am, 0.95);
+        let best = res.best.expect("a feasible point exists at 95%");
+        assert!(best.predicted_accuracy >= 0.95);
+        assert!(best.fits_on_chip);
+        // frontier is sorted by efficiency
+        for w in res.frontier.windows(2) {
+            assert!(w[0].kfps_per_w >= w[1].kfps_per_w);
+        }
+    }
+
+    #[test]
+    fn tighter_accuracy_never_improves_efficiency() {
+        let am = AccuracyModel::default();
+        let loose = optimize(&mlp(), &CYCLONE_V, &SearchSpace::default(), &am, 0.90);
+        let tight = optimize(&mlp(), &CYCLONE_V, &SearchSpace::default(), &am, 0.97);
+        let (l, t) = (loose.best.unwrap(), tight.best.unwrap());
+        assert!(
+            l.kfps_per_w >= t.kfps_per_w,
+            "the accuracy/efficiency trade-off must be monotone: {} < {}",
+            l.kfps_per_w,
+            t.kfps_per_w
+        );
+        // and the tight bound forces smaller blocks or more bits
+        assert!(t.k_fc <= l.k_fc || t.bits >= l.bits);
+    }
+
+    #[test]
+    fn infeasible_bound_returns_empty() {
+        let am = AccuracyModel::default();
+        let res = optimize(&mlp(), &CYCLONE_V, &SearchSpace::default(), &am, 0.9999);
+        assert!(res.best.is_none());
+        assert!(res.frontier.is_empty());
+        assert!(render(&mlp(), &CYCLONE_V, &res).contains("no feasible"));
+    }
+
+    #[test]
+    fn sweep_artifact_loads_when_present() {
+        let am = AccuracyModel::from_artifacts(&crate::runtime::Manifest::default_dir());
+        assert!(am.points.len() >= 2);
+        // either the artifact's sweep or the builtin — both monotone-ish
+        assert!(am.predict(2, 12) > am.predict(128, 12));
+    }
+
+    #[test]
+    fn conv_models_search_conv_blocks() {
+        let am = AccuracyModel::default();
+        let lenet = models::by_name("mnist_lenet").unwrap();
+        let res = optimize(&lenet, &CYCLONE_V, &SearchSpace::default(), &am, 0.90);
+        assert!(res.best.is_some());
+        // conv variants must appear in the frontier
+        assert!(res.frontier.iter().any(|p| p.k_conv != res.frontier[0].k_conv));
+    }
+}

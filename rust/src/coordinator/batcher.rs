@@ -1,0 +1,214 @@
+//! Dynamic batching: the paper's batch-processing knob as a serving policy.
+//!
+//! Pure logic (no threads, no engine) so the policy is unit- and
+//! property-testable: requests accumulate per model; a batch is released
+//! when it reaches `max_batch` (the paper's 50-100 design point, we default
+//! to the artifact's 64) or when the oldest request has waited `max_delay`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// release as soon as this many requests are queued
+    pub max_batch: usize,
+    /// release a partial batch once the oldest entry is this old
+    pub max_delay: Duration,
+    /// admission limit: queue length beyond which pushes are rejected
+    /// (backpressure)
+    pub max_queue: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 64,
+            max_delay: Duration::from_millis(2),
+            max_queue: 4096,
+        }
+    }
+}
+
+/// A queued unit of work.
+#[derive(Debug)]
+pub struct Pending<T> {
+    pub item: T,
+    pub enqueued: Instant,
+}
+
+/// Outcome of a push.  Rejection hands the item back so the caller can
+/// reply with a backpressure error instead of silently dropping it.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushOutcome<T> {
+    /// accepted; no batch ready yet
+    Queued,
+    /// accepted and the queue reached `max_batch` — caller should drain
+    BatchReady,
+    /// rejected: queue full (backpressure); the item is returned
+    Rejected(T),
+}
+
+/// Per-model request queue implementing the policy.
+#[derive(Debug)]
+pub struct BatchQueue<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> BatchQueue<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Push a request at time `now`.
+    pub fn push(&mut self, item: T, now: Instant) -> PushOutcome<T> {
+        if self.queue.len() >= self.policy.max_queue {
+            return PushOutcome::Rejected(item);
+        }
+        self.queue.push_back(Pending {
+            item,
+            enqueued: now,
+        });
+        if self.queue.len() >= self.policy.max_batch {
+            PushOutcome::BatchReady
+        } else {
+            PushOutcome::Queued
+        }
+    }
+
+    /// True when a (possibly partial) batch should be released at `now`.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(front) => now.duration_since(front.enqueued) >= self.policy.max_delay,
+            None => false,
+        }
+    }
+
+    /// Time until the deadline of the oldest entry (drives the executor's
+    /// poll timeout); `None` when empty.
+    pub fn next_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|front| {
+            self.policy
+                .max_delay
+                .saturating_sub(now.duration_since(front.enqueued))
+        })
+    }
+
+    /// Remove and return up to `max_batch` requests.
+    pub fn drain_batch(&mut self) -> Vec<Pending<T>> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).collect()
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max_batch: usize, delay_ms: u64, max_queue: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_delay: Duration::from_millis(delay_ms),
+            max_queue,
+        }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let mut q = BatchQueue::new(policy(4, 1000, 100));
+        let t0 = Instant::now();
+        assert_eq!(q.push(1, t0), PushOutcome::Queued);
+        assert_eq!(q.push(2, t0), PushOutcome::Queued);
+        assert_eq!(q.push(3, t0), PushOutcome::Queued);
+        assert_eq!(q.push(4, t0), PushOutcome::BatchReady);
+        let batch = q.drain_batch();
+        assert_eq!(batch.len(), 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn deadline_releases_partial_batch() {
+        let mut q = BatchQueue::new(policy(64, 2, 100));
+        let t0 = Instant::now();
+        q.push(1, t0);
+        assert!(!q.ready(t0));
+        assert!(q.ready(t0 + Duration::from_millis(3)));
+        assert_eq!(q.drain_batch().len(), 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut q = BatchQueue::new(policy(64, 1, 2));
+        let t0 = Instant::now();
+        assert_eq!(q.push(1, t0), PushOutcome::Queued);
+        assert_eq!(q.push(2, t0), PushOutcome::Queued);
+        assert_eq!(q.push(3, t0), PushOutcome::Rejected(3));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn drain_caps_at_max_batch() {
+        let mut q = BatchQueue::new(policy(2, 1000, 100));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            q.push(i, t0);
+        }
+        assert_eq!(q.drain_batch().len(), 2);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn next_deadline_counts_down() {
+        let mut q = BatchQueue::new(policy(64, 10, 100));
+        let t0 = Instant::now();
+        assert!(q.next_deadline(t0).is_none());
+        q.push(1, t0);
+        let d = q.next_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn prop_queue_never_exceeds_max_queue() {
+        crate::util::prop::forall(
+            "bounded queue",
+            |r| {
+                let cap = 1 + r.below(20) as usize;
+                let pushes = r.below(100) as usize;
+                (cap, pushes)
+            },
+            |&(cap, pushes)| {
+                let mut q = BatchQueue::new(policy(8, 1000, cap));
+                let t0 = Instant::now();
+                for i in 0..pushes {
+                    q.push(i, t0);
+                    if q.len() > cap {
+                        return Err(format!("queue grew to {} > cap {cap}", q.len()));
+                    }
+                    if q.len() == 8 {
+                        q.drain_batch();
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

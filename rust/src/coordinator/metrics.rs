@@ -1,0 +1,137 @@
+//! Serving metrics: lock-free counters + a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log-spaced latency buckets (upper bounds, microseconds).
+const BUCKETS_US: [u64; 12] = [
+    10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, u64::MAX,
+];
+
+/// Shared serving metrics (all atomic; cheap to clone via Arc).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    /// total occupied slots over all executed batches
+    pub batched_items: AtomicU64,
+    /// total padded (wasted) slots
+    pub padded_slots: AtomicU64,
+    latency_buckets: [AtomicU64; 12],
+    latency_sum_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(11);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_latency_us(&self) -> f64 {
+        let n = self.responses.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate latency percentile from the histogram (returns the
+    /// bucket's upper bound).
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        let total: u64 = self
+            .latency_buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (total as f64 * p / 100.0).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.latency_buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return BUCKETS_US[i];
+            }
+        }
+        BUCKETS_US[11]
+    }
+
+    /// Mean occupied batch size.
+    pub fn mean_batch_size(&self) -> f64 {
+        let batches = self.batches.load(Ordering::Relaxed);
+        if batches == 0 {
+            return 0.0;
+        }
+        self.batched_items.load(Ordering::Relaxed) as f64 / batches as f64
+    }
+
+    /// Fraction of executed slots wasted on padding.
+    pub fn padding_fraction(&self) -> f64 {
+        let items = self.batched_items.load(Ordering::Relaxed);
+        let padded = self.padded_slots.load(Ordering::Relaxed);
+        if items + padded == 0 {
+            return 0.0;
+        }
+        padded as f64 / (items + padded) as f64
+    }
+
+    /// One-line summary for logs / examples.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} rejected={} batches={} mean_batch={:.1} \
+             padding={:.1}% mean_latency={:.0}us p95<={}us",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.padding_fraction() * 100.0,
+            self.mean_latency_us(),
+            self.latency_percentile_us(95.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let m = Metrics::new();
+        for _ in 0..99 {
+            m.record_latency(Duration::from_micros(50));
+        }
+        m.record_latency(Duration::from_millis(50));
+        assert_eq!(m.latency_percentile_us(50.0), 100);
+        assert_eq!(m.latency_percentile_us(99.9), 100_000);
+    }
+
+    #[test]
+    fn batch_stats() {
+        let m = Metrics::new();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_items.fetch_add(96, Ordering::Relaxed);
+        m.padded_slots.fetch_add(32, Ordering::Relaxed);
+        assert!((m.mean_batch_size() - 48.0).abs() < 1e-9);
+        assert!((m.padding_fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency_us(), 0.0);
+        assert_eq!(m.latency_percentile_us(95.0), 0);
+        assert_eq!(m.mean_batch_size(), 0.0);
+        assert!(m.summary().contains("requests=0"));
+    }
+}

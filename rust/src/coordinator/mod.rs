@@ -1,0 +1,28 @@
+//! Layer-3 coordinator: the serving half of the co-design stack.
+//!
+//! Architecture (vLLM-router-like, scaled to this paper's serving story):
+//!
+//! ```text
+//!  clients ──► Router ──► per-model BatchQueue ──► executor thread
+//!              (validate,  (dynamic batching:       (owns the PJRT Engine,
+//!               dispatch,   size + deadline          pads to the artifact
+//!               admission)  policy, paper's          batch, executes, scatters
+//!                           50-100 batch)            replies)
+//! ```
+//!
+//! The executor thread is the software twin of the paper's single FPGA:
+//! `PjRtClient` is not `Send`, so exactly one thread owns it and the
+//! datapath is strictly serialized — batching is what buys throughput,
+//! precisely as in Fig. 4.  The batcher implements the paper's
+//! batch-processing design point (default max batch 64, bounded queueing
+//! with explicit backpressure).
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, BatchQueue};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::{InferError, Response, Server, ServerConfig};

@@ -1,0 +1,193 @@
+//! Request router: validate and dispatch to per-model queues.
+//!
+//! The router is the admission front of the coordinator: it checks the
+//! target model exists, the payload has the right geometry, and applies
+//! queue backpressure.  Routing is by model name — each name maps to one
+//! compiled artifact (≈ one bitstream), mirroring the paper's
+//! reconfigurability story.
+
+use std::collections::HashMap;
+
+use crate::runtime::manifest::{Manifest, ModelEntry};
+
+/// Routing error taxonomy (stable for clients/tests).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum RouteError {
+    #[error("unknown model {0:?}")]
+    UnknownModel(String),
+    #[error("bad input size: expected {expected}, got {got}")]
+    BadInputSize { expected: usize, got: usize },
+    #[error("non-finite value in input at index {0}")]
+    NonFinite(usize),
+}
+
+/// Immutable routing table derived from the manifest.
+#[derive(Debug, Clone)]
+pub struct Router {
+    table: HashMap<String, RouteTarget>,
+}
+
+/// What the router knows about one model.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RouteTarget {
+    pub model: String,
+    pub dataset: String,
+    /// per-image element count (H*W*C)
+    pub image_elems: usize,
+    /// artifact batch the executor pads to
+    pub exec_batch: usize,
+}
+
+impl Router {
+    /// Build the routing table from the manifest.
+    pub fn from_manifest(man: &Manifest) -> Self {
+        let mut table = HashMap::new();
+        for m in &man.models {
+            table.insert(m.name.clone(), RouteTarget::from_entry(m));
+        }
+        Self { table }
+    }
+
+    pub fn models(&self) -> impl Iterator<Item = &str> {
+        self.table.keys().map(|s| s.as_str())
+    }
+
+    pub fn target(&self, model: &str) -> Result<&RouteTarget, RouteError> {
+        self.table
+            .get(model)
+            .ok_or_else(|| RouteError::UnknownModel(model.to_string()))
+    }
+
+    /// Validate one request payload for `model`.
+    pub fn validate(&self, model: &str, image: &[f32]) -> Result<&RouteTarget, RouteError> {
+        let target = self.target(model)?;
+        if image.len() != target.image_elems {
+            return Err(RouteError::BadInputSize {
+                expected: target.image_elems,
+                got: image.len(),
+            });
+        }
+        if let Some(i) = image.iter().position(|v| !v.is_finite()) {
+            return Err(RouteError::NonFinite(i));
+        }
+        Ok(target)
+    }
+}
+
+impl RouteTarget {
+    pub fn from_entry(m: &ModelEntry) -> Self {
+        let image_elems: usize = m.input_shape.iter().product();
+        // pad to the largest exported batch (the paper's interleaved batch)
+        let exec_batch = m
+            .artifacts
+            .iter()
+            .map(|a| a.batch)
+            .max()
+            .unwrap_or(m.serve_batch);
+        Self {
+            model: m.name.clone(),
+            dataset: m.dataset.clone(),
+            image_elems,
+            exec_batch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Accuracy, ArtifactEntry};
+
+    fn entry(name: &str) -> ModelEntry {
+        ModelEntry {
+            name: name.into(),
+            dataset: "mnist_s".into(),
+            input_shape: vec![28, 28, 1],
+            serve_batch: 64,
+            accuracy: Accuracy {
+                circulant_12bit: 0.9,
+                circulant_f32: 0.9,
+                dense_f32: 0.95,
+            },
+            paper_accuracy: 92.9,
+            paper_kfps: 1.0,
+            paper_kfps_per_w: 1.0,
+            storage_reduction: 50.0,
+            equivalent_ops_per_image: 1,
+            artifacts: vec![
+                ArtifactEntry {
+                    batch: 1,
+                    file: "a_b1.hlo.txt".into(),
+                    input_shape: vec![1, 28, 28, 1],
+                    output_shape: vec![1, 10],
+                },
+                ArtifactEntry {
+                    batch: 64,
+                    file: "a_b64.hlo.txt".into(),
+                    input_shape: vec![64, 28, 28, 1],
+                    output_shape: vec![64, 10],
+                },
+            ],
+            artifacts_pallas: vec![],
+            training: None,
+        }
+    }
+
+    fn router() -> Router {
+        let mut table = HashMap::new();
+        table.insert("m".to_string(), RouteTarget::from_entry(&entry("m")));
+        Router { table }
+    }
+
+    #[test]
+    fn routes_known_model() {
+        let r = router();
+        let t = r.validate("m", &vec![0.0; 784]).unwrap();
+        assert_eq!(t.exec_batch, 64);
+        assert_eq!(t.image_elems, 784);
+    }
+
+    #[test]
+    fn rejects_unknown_model() {
+        assert_eq!(
+            router().validate("nope", &[]),
+            Err(RouteError::UnknownModel("nope".into()))
+        );
+    }
+
+    #[test]
+    fn rejects_bad_geometry() {
+        assert_eq!(
+            router().validate("m", &vec![0.0; 100]),
+            Err(RouteError::BadInputSize {
+                expected: 784,
+                got: 100
+            })
+        );
+    }
+
+    #[test]
+    fn rejects_non_finite() {
+        let mut img = vec![0.0f32; 784];
+        img[7] = f32::NAN;
+        assert_eq!(router().validate("m", &img), Err(RouteError::NonFinite(7)));
+    }
+
+    #[test]
+    fn prop_validation_is_total() {
+        // router never panics on arbitrary inputs
+        let r = router();
+        crate::util::prop::forall(
+            "router total",
+            |rng| {
+                let n = rng.below(1000) as usize;
+                rng.normal_vec(n)
+            },
+            |img| {
+                let _ = r.validate("m", img);
+                let _ = r.validate("other", img);
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,333 @@
+//! The serving front-end: threads + channels around router, batcher, engine.
+//!
+//! One executor thread owns the (non-`Send`) PJRT engine and all batch
+//! queues; any number of client threads call [`Server::infer`].  The
+//! bounded request channel plus the per-queue `max_queue` give two layers
+//! of backpressure, and all hot-path buffers (the padded batch input) are
+//! reused across batches.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::batcher::{BatchPolicy, BatchQueue, PushOutcome};
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::router::{RouteError, Router};
+use crate::runtime::engine::{argmax_rows, literal_f32, Engine};
+use crate::runtime::manifest::Manifest;
+
+/// Inference result for one image.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub label: u32,
+    pub logits: Vec<f32>,
+    /// end-to-end latency (enqueue -> response)
+    pub latency: Duration,
+    /// occupied size of the batch this request rode in
+    pub batch_occupancy: usize,
+}
+
+/// Serving error taxonomy.
+#[derive(Debug, thiserror::Error)]
+pub enum InferError {
+    #[error("routing: {0}")]
+    Route(#[from] RouteError),
+    #[error("rejected: server overloaded")]
+    Rejected,
+    #[error("server shut down")]
+    Shutdown,
+    #[error("execution failed: {0}")]
+    Engine(String),
+}
+
+/// Server construction knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub artifacts_dir: PathBuf,
+    pub policy: BatchPolicy,
+    /// serve the Pallas-kernel-backed artifact variant where available
+    pub use_pallas: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: Manifest::default_dir(),
+            policy: BatchPolicy::default(),
+            use_pallas: false,
+        }
+    }
+}
+
+struct Request {
+    model: String,
+    image: Vec<f32>,
+    /// client-side submit time — the end-to-end latency origin (includes
+    /// channel wait, unlike the batcher's queue-entry stamp)
+    submitted: Instant,
+    resp: mpsc::Sender<Result<Response, InferError>>,
+}
+
+/// A running coordinator.
+pub struct Server {
+    router: Arc<Router>,
+    tx: Option<mpsc::SyncSender<Request>>,
+    metrics: Arc<Metrics>,
+    executor: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Load the manifest, spawn the executor thread, return the handle.
+    pub fn start(config: ServerConfig) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(&config.artifacts_dir)?;
+        let router = Arc::new(Router::from_manifest(&manifest));
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::sync_channel::<Request>(config.policy.max_queue);
+        let exec_metrics = metrics.clone();
+        let executor = std::thread::Builder::new()
+            .name("circnn-executor".into())
+            .spawn(move || executor_loop(manifest, config, rx, exec_metrics))?;
+        Ok(Self {
+            router,
+            tx: Some(tx),
+            metrics,
+            executor: Some(executor),
+        })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Blocking inference of one image.
+    pub fn infer(&self, model: &str, image: &[f32]) -> Result<Response, InferError> {
+        let rx = self.infer_async(model, image)?;
+        rx.recv().map_err(|_| InferError::Shutdown)?
+    }
+
+    /// Enqueue one image; returns the response channel immediately.
+    pub fn infer_async(
+        &self,
+        model: &str,
+        image: &[f32],
+    ) -> Result<mpsc::Receiver<Result<Response, InferError>>, InferError> {
+        self.router.validate(model, image)?;
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let req = Request {
+            model: model.to_string(),
+            image: image.to_vec(),
+            submitted: Instant::now(),
+            resp: resp_tx,
+        };
+        match self
+            .tx
+            .as_ref()
+            .ok_or(InferError::Shutdown)?
+            .try_send(req)
+        {
+            Ok(()) => Ok(resp_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(InferError::Rejected)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(InferError::Shutdown),
+        }
+    }
+
+    /// Graceful shutdown: drain in-flight work and join the executor.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the channel; executor drains and exits
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// State the executor keeps per model.
+struct ModelState {
+    queue: BatchQueue<Request>,
+    artifact_path: PathBuf,
+    input_shape: Vec<usize>,
+    exec_batch: usize,
+    image_elems: usize,
+    classes: usize,
+    /// reused padded input buffer (hot-path allocation avoidance)
+    scratch: Vec<f32>,
+}
+
+fn executor_loop(
+    manifest: Manifest,
+    config: ServerConfig,
+    rx: mpsc::Receiver<Request>,
+    metrics: Arc<Metrics>,
+) {
+    let engine = match Engine::cpu() {
+        Ok(e) => e,
+        Err(err) => {
+            // fail every request with a clear message
+            drain_with_error(rx, &format!("PJRT init failed: {err}"));
+            return;
+        }
+    };
+
+    let mut states: HashMap<String, ModelState> = HashMap::new();
+    for m in &manifest.models {
+        let arts = if config.use_pallas && !m.artifacts_pallas.is_empty() {
+            &m.artifacts_pallas
+        } else {
+            &m.artifacts
+        };
+        let Some(art) = arts.iter().max_by_key(|a| a.batch) else {
+            continue;
+        };
+        let image_elems: usize = m.input_shape.iter().product();
+        states.insert(
+            m.name.clone(),
+            ModelState {
+                queue: BatchQueue::new(config.policy),
+                artifact_path: manifest.path_of(&art.file),
+                input_shape: art.input_shape.clone(),
+                exec_batch: art.batch,
+                image_elems,
+                classes: *art.output_shape.last().unwrap_or(&10),
+                scratch: vec![0.0; art.batch * image_elems],
+            },
+        );
+    }
+
+    loop {
+        // poll timeout: earliest queue deadline, else a coarse tick
+        let now = Instant::now();
+        let timeout = states
+            .values()
+            .filter_map(|s| s.queue.next_deadline(now))
+            .min()
+            .unwrap_or(Duration::from_millis(50));
+
+        match rx.recv_timeout(timeout) {
+            Ok(req) => {
+                let Some(state) = states.get_mut(&req.model) else {
+                    let _ = req
+                        .resp
+                        .send(Err(InferError::Route(RouteError::UnknownModel(
+                            req.model.clone(),
+                        ))));
+                    continue;
+                };
+                match state.queue.push(req, Instant::now()) {
+                    PushOutcome::Rejected(req) => {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = req.resp.send(Err(InferError::Rejected));
+                    }
+                    PushOutcome::BatchReady => {
+                        execute_batch(&engine, state, &metrics);
+                    }
+                    PushOutcome::Queued => {}
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                // drain remaining queued work, then exit
+                for state in states.values_mut() {
+                    while !state.queue.is_empty() {
+                        execute_batch(&engine, state, &metrics);
+                    }
+                }
+                return;
+            }
+        }
+
+        // deadline-triggered partial batches
+        let now = Instant::now();
+        for state in states.values_mut() {
+            if state.queue.ready(now) {
+                execute_batch(&engine, state, &metrics);
+            }
+        }
+    }
+}
+
+fn drain_with_error(rx: mpsc::Receiver<Request>, msg: &str) {
+    while let Ok(req) = rx.recv() {
+        let _ = req.resp.send(Err(InferError::Engine(msg.to_string())));
+    }
+}
+
+fn execute_batch(engine: &Engine, state: &mut ModelState, metrics: &Metrics) {
+    let pending = state.queue.drain_batch();
+    if pending.is_empty() {
+        return;
+    }
+    let occupied = pending.len();
+    let padded = state.exec_batch - occupied;
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics
+        .batched_items
+        .fetch_add(occupied as u64, Ordering::Relaxed);
+    metrics
+        .padded_slots
+        .fetch_add(padded as u64, Ordering::Relaxed);
+
+    // assemble the padded batch into the reused scratch buffer
+    state.scratch.fill(0.0);
+    for (slot, p) in pending.iter().enumerate() {
+        let dst = slot * state.image_elems;
+        state.scratch[dst..dst + state.image_elems].copy_from_slice(&p.item.image);
+    }
+
+    let result = engine
+        .load(&state.artifact_path)
+        .and_then(|model| {
+            let lit = literal_f32(&state.scratch, &state.input_shape)?;
+            model.run1(&[lit])
+        })
+        .and_then(|out| Ok(out.to_vec::<f32>()?));
+
+    match result {
+        Ok(logits) => {
+            let labels = argmax_rows(&logits, state.classes);
+            for (slot, p) in pending.into_iter().enumerate() {
+                let latency = p.item.submitted.elapsed();
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                metrics.record_latency(latency);
+                let row = &logits[slot * state.classes..(slot + 1) * state.classes];
+                let _ = p.item.resp.send(Ok(Response {
+                    label: labels[slot],
+                    logits: row.to_vec(),
+                    latency,
+                    batch_occupancy: occupied,
+                }));
+            }
+        }
+        Err(err) => {
+            let msg = err.to_string();
+            for p in pending {
+                let _ = p.item.resp.send(Err(InferError::Engine(msg.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Server tests require compiled artifacts + the PJRT runtime; they live
+    // in rust/tests/coordinator_load.rs.  The pure logic (batcher, router,
+    // metrics) is tested in its own modules.
+}

@@ -1,0 +1,198 @@
+//! Bit-exact Rust mirror of the Python synthetic datasets
+//! (`python/compile/data.py`).
+//!
+//! Both sides generate data from closed-form splitmix64 streams
+//! ([`crate::util::rng`]), so every f32 matches bit-for-bit: the serving
+//! examples, the Rust training driver, and the Python training pipeline all
+//! see the same samples.  The contract is pinned by the dataset checksums in
+//! the artifact manifest (`rust/tests/integration.rs`).
+
+use crate::util::rng::{combine, mix, u01_at, GAMMA};
+
+pub const NUM_CLASSES: usize = 10;
+pub const MODES: u64 = 10;
+pub const NOISE_AMP: f32 = 1.0;
+pub const TEST_INDEX_OFFSET: u64 = 1 << 20;
+
+/// Dataset geometry (mirrors `data.DATASETS`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub grid: usize,
+    pub factor: usize,
+    seed: u64,
+}
+
+impl DatasetSpec {
+    pub fn pixels(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+pub const MNIST_S: DatasetSpec = DatasetSpec {
+    name: "mnist_s", h: 28, w: 28, c: 1, grid: 7, factor: 4, seed: 101,
+};
+pub const SVHN_S: DatasetSpec = DatasetSpec {
+    name: "svhn_s", h: 32, w: 32, c: 3, grid: 8, factor: 4, seed: 202,
+};
+pub const CIFAR_S: DatasetSpec = DatasetSpec {
+    name: "cifar_s", h: 32, w: 32, c: 3, grid: 8, factor: 4, seed: 303,
+};
+
+/// Look up a dataset by name.
+pub fn dataset(name: &str) -> Option<DatasetSpec> {
+    match name {
+        "mnist_s" => Some(MNIST_S),
+        "svhn_s" => Some(SVHN_S),
+        "cifar_s" => Some(CIFAR_S),
+        _ => None,
+    }
+}
+
+/// Prototype image for `(class, mode)` — coarse grid, nearest-upsampled
+/// (mirrors `data.class_template`).
+pub fn class_template(ds: &DatasetSpec, cls: u64, mode: u64) -> Vec<f32> {
+    let seed = combine(&[ds.seed, 1, cls, mode]);
+    let mut out = vec![0.0f32; ds.pixels()];
+    for y in 0..ds.h {
+        for x in 0..ds.w {
+            for ch in 0..ds.c {
+                let gy = (y / ds.factor).min(ds.grid - 1);
+                let gx = (x / ds.factor).min(ds.grid - 1);
+                let idx = ((gy * ds.grid) + gx) * ds.c + ch;
+                out[(y * ds.w + x) * ds.c + ch] = u01_at(seed, idx as u64);
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic sample `index`: `(image, label)` (mirrors `data.sample`).
+pub fn sample(ds: &DatasetSpec, index: u64) -> (Vec<f32>, u32) {
+    let cls = index % NUM_CLASSES as u64;
+    let mode = (index / NUM_CLASSES as u64) % MODES;
+    let template = class_template(ds, cls, mode);
+    let seed = combine(&[ds.seed, 2, cls, index]);
+    let contrast = 0.7f32 + 0.6f32 * u01_at(seed, 0);
+    let brightness = -0.15f32 + 0.3f32 * u01_at(seed, 1);
+    let mut img = vec![0.0f32; ds.pixels()];
+    for (i, t) in template.iter().enumerate() {
+        let noise = (u01_at(seed, 2 + i as u64) - 0.5f32) * NOISE_AMP;
+        img[i] = (t * contrast + brightness + noise).clamp(0.0, 1.0);
+    }
+    (img, cls as u32)
+}
+
+/// `count` consecutive samples starting at `start`; `test` selects the
+/// disjoint test split.  Images are concatenated row-major.
+pub fn batch(ds: &DatasetSpec, start: u64, count: usize, test: bool) -> (Vec<f32>, Vec<u32>) {
+    let base = start + if test { TEST_INDEX_OFFSET } else { 0 };
+    let mut xs = Vec::with_capacity(count * ds.pixels());
+    let mut ys = Vec::with_capacity(count);
+    for i in 0..count as u64 {
+        let (img, y) = sample(ds, base + i);
+        xs.extend_from_slice(&img);
+        ys.push(y);
+    }
+    (xs, ys)
+}
+
+/// Order-sensitive u64 checksum over the first `count` training images —
+/// must equal `data.checksum` on the Python side (pinned in the manifest).
+pub fn checksum(ds: &DatasetSpec, count: usize) -> u64 {
+    let (xs, ys) = batch(ds, 0, count, false);
+    let mut h: u64 = 0;
+    for v in &xs {
+        h = mix(h ^ (v.to_bits() as u64).wrapping_add(GAMMA));
+    }
+    for &y in &ys {
+        h = mix(h ^ (y as u64).wrapping_add(GAMMA));
+    }
+    h
+}
+
+/// The paper's "prior pooling" input reduction for the MNIST MLPs
+/// (mirrors `layers.prior_pool`): 1-D average pooling of the flattened
+/// image to `out_dim` values with zero-padded tail.
+pub fn prior_pool(img: &[f32], out_dim: usize) -> Vec<f32> {
+    let dim = img.len();
+    let win = dim.div_ceil(out_dim);
+    let mut out = vec![0.0f32; out_dim];
+    for (o, slot) in out.iter_mut().enumerate() {
+        let lo = o * win;
+        let mut sum = 0.0f32;
+        for t in lo..(lo + win).min(dim) {
+            sum += img[t];
+        }
+        *slot = sum / win as f32;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_deterministic_and_in_range() {
+        for ds in [&MNIST_S, &SVHN_S, &CIFAR_S] {
+            let (a, ya) = sample(ds, 12345);
+            let (b, yb) = sample(ds, 12345);
+            assert_eq!(a, b);
+            assert_eq!(ya, yb);
+            assert_eq!(ya, (12345 % 10) as u32);
+            assert_eq!(a.len(), ds.pixels());
+            assert!(a.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn splits_disjoint() {
+        let (tr, _) = batch(&MNIST_S, 0, 2, false);
+        let (te, _) = batch(&MNIST_S, 0, 2, true);
+        assert_ne!(tr, te);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let (_, ys) = batch(&MNIST_S, 0, 100, false);
+        let mut counts = [0usize; 10];
+        for y in ys {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn templates_differ() {
+        assert_ne!(class_template(&MNIST_S, 0, 0), class_template(&MNIST_S, 1, 0));
+        assert_ne!(class_template(&MNIST_S, 0, 0), class_template(&MNIST_S, 0, 1));
+    }
+
+    #[test]
+    fn checksums_differ_between_datasets() {
+        let a = checksum(&MNIST_S, 2);
+        let b = checksum(&SVHN_S, 2);
+        let c = checksum(&CIFAR_S, 2);
+        assert!(a != b && b != c && a != c);
+    }
+
+    #[test]
+    fn prior_pool_shape_and_means() {
+        let img = vec![1.0f32; 784];
+        let pooled = prior_pool(&img, 256);
+        assert_eq!(pooled.len(), 256);
+        // 784 -> win 4 -> first 196 windows full of ones
+        assert!(pooled[..190].iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        assert!(pooled[200..].iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn dataset_lookup() {
+        assert_eq!(dataset("mnist_s"), Some(MNIST_S));
+        assert!(dataset("nope").is_none());
+    }
+}

@@ -1,0 +1,105 @@
+//! Experiments AB1-AB3: ablations of the paper's hardware design choices.
+//!
+//! * **AB1 decoupling** — FFT/IFFT placement: q FFTs + p IFFTs (decoupled)
+//!   vs p*q of each (naive Eqn.-1 evaluation).
+//! * **AB2 real-FFT symmetry** — half-spectrum storage/multiplication vs
+//!   full spectrum.
+//! * **AB3 batch interleaving** — Fig.-4 batch pipelining vs per-image
+//!   pipeline fills.
+
+use crate::fpga::device::CYCLONE_V;
+use crate::fpga::schedule::{simulate, ScheduleConfig, ScheduleResult};
+use crate::models::{self, Model};
+
+/// One ablation row: design point on/off and the cost of turning it off.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub model: String,
+    pub ablation: &'static str,
+    pub kfps_on: f64,
+    pub kfps_off: f64,
+    /// throughput retained when the optimization is disabled
+    pub retained: f64,
+}
+
+fn run(model: &Model, cfg: &ScheduleConfig) -> ScheduleResult {
+    simulate(model, &CYCLONE_V, cfg)
+}
+
+/// All ablations for one model.
+pub fn ablate(model: &Model) -> Vec<AblationRow> {
+    let base = ScheduleConfig::auto_for(model, &CYCLONE_V);
+    let on = run(model, &base);
+    let variants: [(&'static str, ScheduleConfig); 3] = [
+        ("AB1_decoupling", ScheduleConfig { decouple: false, ..base }),
+        ("AB2_half_spectrum", ScheduleConfig { half_spectrum: false, ..base }),
+        ("AB3_batch_interleave", ScheduleConfig { interleave: false, ..base }),
+    ];
+    variants
+        .into_iter()
+        .map(|(name, cfg)| {
+            let off = run(model, &cfg);
+            AblationRow {
+                model: model.name.to_string(),
+                ablation: name,
+                kfps_on: on.kfps(),
+                kfps_off: off.kfps(),
+                retained: off.kfps() / on.kfps(),
+            }
+        })
+        .collect()
+}
+
+pub fn render() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<14} {:<22} {:>14} {:>14} {:>10}\n",
+        "Model", "Ablation (disabled)", "kFPS on", "kFPS off", "retained"
+    ));
+    out.push_str(&"-".repeat(80));
+    out.push('\n');
+    for m in models::registry() {
+        for row in ablate(&m) {
+            out.push_str(&format!(
+                "{:<14} {:<22} {:>14.2} {:>14.2} {:>9.1}%\n",
+                row.model,
+                row.ablation,
+                row.kfps_on,
+                row.kfps_off,
+                row.retained * 100.0
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_optimization_helps_every_model() {
+        for m in models::registry() {
+            for row in ablate(&m) {
+                assert!(
+                    row.retained < 1.0,
+                    "{} {}: retained {}",
+                    row.model,
+                    row.ablation,
+                    row.retained
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn interleaving_matters_most_for_small_models() {
+        // pipeline fills dominate small workloads: the MLP should lose more
+        // from disabling interleaving than the big CNN does
+        let mlp = ablate(&models::by_name("mnist_mlp_1").unwrap());
+        let wrn = ablate(&models::by_name("cifar_wrn").unwrap());
+        let mlp_ab3 = mlp.iter().find(|r| r.ablation == "AB3_batch_interleave").unwrap();
+        let wrn_ab3 = wrn.iter().find(|r| r.ablation == "AB3_batch_interleave").unwrap();
+        assert!(mlp_ab3.retained < wrn_ab3.retained);
+    }
+}

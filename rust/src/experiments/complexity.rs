@@ -1,0 +1,116 @@
+//! Experiment S1: the O(n log n) vs O(n^2) claim, measured.
+//!
+//! Sweeps matrix size n and block size k, comparing the wall-clock of the
+//! from-scratch circulant matvec against the dense matvec, plus the
+//! analytic op counts.  The crossover (where FFT-based wins) and the
+//! asymptotic slope are the paper's algorithmic claim; `rust/benches/
+//! circulant.rs` runs the same sweep under the bench harness.
+
+use std::time::Instant;
+
+use crate::circulant::{dense, BlockCirculant};
+use crate::util::rng::SplitMix;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub n: usize,
+    pub k: usize,
+    pub dense_ns: f64,
+    pub circ_ns: f64,
+    pub speedup: f64,
+    pub dense_macs: u64,
+    pub circ_mults: u64,
+}
+
+/// Time one closure (median of `reps`).
+fn time_ns<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[reps / 2]
+}
+
+/// Run the sweep over square n x n matrices.
+pub fn sweep(ns: &[usize], k: usize, reps: usize) -> Vec<SweepPoint> {
+    let mut rng = SplitMix::new(42);
+    let mut out = Vec::new();
+    for &n in ns {
+        if n % k != 0 {
+            continue;
+        }
+        let pq = n / k;
+        let mut bc = BlockCirculant::new(pq, pq, k, rng.normal_vec(pq * pq * k));
+        bc.precompute();
+        let dense_w = bc.to_dense();
+        let x = rng.normal_vec(n);
+        let mut y = vec![0.0f32; n];
+
+        let dense_ns = time_ns(reps, || dense::matvec(&dense_w, n, n, &x, &mut y));
+        let circ_ns = time_ns(reps, || bc.matvec(&x, &mut y));
+
+        let kh = (k / 2 + 1) as u64;
+        let fm = crate::models::fft_real_mults(k);
+        let circ_mults = pq as u64 * fm * 2 + (pq * pq) as u64 * kh * 4;
+        out.push(SweepPoint {
+            n,
+            k,
+            dense_ns,
+            circ_ns,
+            speedup: dense_ns / circ_ns,
+            dense_macs: (n * n) as u64,
+            circ_mults,
+        });
+    }
+    out
+}
+
+pub fn render(points: &[SweepPoint]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>6} {:>5} {:>12} {:>12} {:>9} {:>12} {:>12}\n",
+        "n", "k", "dense ns", "circ ns", "speedup", "dense MACs", "circ mults"
+    ));
+    out.push_str(&"-".repeat(74));
+    out.push('\n');
+    for p in points {
+        out.push_str(&format!(
+            "{:>6} {:>5} {:>12.0} {:>12.0} {:>8.2}x {:>12} {:>12}\n",
+            p.n, p.k, p.dense_ns, p.circ_ns, p.speedup, p.dense_macs, p.circ_mults
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_counts_grow_asymptotically_slower() {
+        let pts = sweep(&[256, 512, 1024, 2048], 64, 3);
+        assert!(pts.len() >= 3);
+        // op-count ratio dense/circ grows with n: O(n^2) vs O(n log n)
+        let first = pts.first().unwrap();
+        let last = pts.last().unwrap();
+        let r0 = first.dense_macs as f64 / first.circ_mults as f64;
+        let r1 = last.dense_macs as f64 / last.circ_mults as f64;
+        assert!(r1 > r0 * 1.5, "ratios {r0} -> {r1}");
+    }
+
+    #[test]
+    fn measured_speedup_at_large_n() {
+        // at n=2048, k=64 the FFT path must clearly win on wall clock
+        let pts = sweep(&[2048], 64, 5);
+        assert!(pts[0].speedup > 2.0, "speedup {}", pts[0].speedup);
+    }
+
+    #[test]
+    fn skips_non_dividing_sizes() {
+        assert!(sweep(&[100], 64, 1).is_empty());
+    }
+}

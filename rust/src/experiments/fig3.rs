@@ -1,0 +1,95 @@
+//! Experiment F3: Fig. 3 — weight storage reduction per benchmark.
+//!
+//! The overall compression is parameter reduction (x k per compressed
+//! layer) times bit quantization (32-bit float -> 12-bit fixed).
+
+use crate::models;
+use crate::runtime::manifest::Manifest;
+
+/// One bar of Fig. 3.
+#[derive(Debug, Clone)]
+pub struct Bar {
+    pub model: String,
+    pub dataset: String,
+    pub dense_bytes: u64,
+    pub circ_bytes: u64,
+    pub reduction: f64,
+    /// parameter-count reduction alone (no quantization)
+    pub param_reduction: f64,
+}
+
+pub fn bars() -> Vec<Bar> {
+    models::registry()
+        .iter()
+        .map(|m| {
+            let rep12 = m.storage_report(12);
+            let rep32 = m.storage_report(32);
+            Bar {
+                model: m.name.to_string(),
+                dataset: m.dataset.to_string(),
+                dense_bytes: rep12.dense_bytes,
+                circ_bytes: rep12.circ_bytes,
+                reduction: rep12.reduction,
+                param_reduction: rep32.reduction,
+            }
+        })
+        .collect()
+}
+
+/// Render as an ASCII bar chart + table.
+pub fn render(manifest: Option<&Manifest>) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<14} {:<9} {:>12} {:>12} {:>9} {:>9} {:>10}\n",
+        "Model", "Dataset", "Dense(B)", "Circ12(B)", "Params x", "Total x", "Manifest x"
+    ));
+    out.push_str(&"-".repeat(80));
+    out.push('\n');
+    for b in bars() {
+        let man_red = manifest
+            .and_then(|m| m.model(&b.model).ok())
+            .map(|e| format!("{:9.1}", e.storage_reduction))
+            .unwrap_or_else(|| "        -".into());
+        out.push_str(&format!(
+            "{:<14} {:<9} {:>12} {:>12} {:>8.1}x {:>8.1}x {:>10}\n",
+            b.model, b.dataset, b.dense_bytes, b.circ_bytes, b.param_reduction, b.reduction,
+            man_red
+        ));
+    }
+    out.push('\n');
+    for b in bars() {
+        let width = (b.reduction / 2.0).round() as usize;
+        out.push_str(&format!(
+            "{:<14} |{} {:.1}x\n",
+            b.model,
+            "#".repeat(width.min(60)),
+            b.reduction
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_bars_all_compressed() {
+        let bs = bars();
+        assert_eq!(bs.len(), 6);
+        for b in &bs {
+            // Fig. 3's claim: significant compression on every benchmark
+            assert!(b.reduction > 10.0, "{}: {}", b.model, b.reduction);
+            // total = params x quantization (32/12)
+            let expected = b.param_reduction * 32.0 / 12.0;
+            assert!((b.reduction - expected).abs() / expected < 0.01);
+        }
+    }
+
+    #[test]
+    fn render_shows_bars() {
+        let text = render(None);
+        assert!(text.contains("mnist_mlp_1"));
+        assert!(text.contains('#'));
+    }
+}

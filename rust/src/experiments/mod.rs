@@ -1,0 +1,30 @@
+//! Experiment generators: every table and figure of the paper's evaluation.
+//!
+//! | id | paper artifact | generator |
+//! |----|----------------|-----------|
+//! | T1 | Table 1 (accuracy / kFPS / kFPS/W vs TrueNorth, FINN, Alemdar) | [`table1`] |
+//! | F3 | Fig. 3 (weight storage reduction) | [`fig3`] |
+//! | F6 | Fig. 6 (GOPS vs GOPS/W scatter) | [`fig6`] |
+//! | A1 | analog / emerging-device comparison (~TOPS/W, ns/image) | [`analog`] |
+//! | S1 | O(n log n) vs O(n^2) crossover | [`complexity`] |
+//! | AB1-3 | decoupling / symmetry / batching ablations | [`ablations`] |
+//!
+//! Accuracies come from the manifest when available (measured on the
+//! synthetic substitute datasets) and are always printed next to the
+//! paper's published values — never in place of them.
+
+pub mod ablations;
+pub mod analog;
+pub mod complexity;
+pub mod fig3;
+pub mod fig6;
+pub mod precision;
+pub mod table1;
+
+use crate::runtime::manifest::Manifest;
+
+/// Load the manifest if it exists (experiments degrade gracefully to
+/// paper-row accuracies when artifacts have not been built).
+pub fn try_manifest() -> Option<Manifest> {
+    Manifest::load(Manifest::default_dir()).ok()
+}

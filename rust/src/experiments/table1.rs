@@ -1,0 +1,212 @@
+//! Experiment T1: regenerate Table 1.
+//!
+//! Proposed rows come from the FPGA simulator on the CyClone V model at
+//! 12-bit; baseline rows come from the TrueNorth and binary-FPGA analytical
+//! models.  The paper's headline ratios are computed at matched accuracy
+//! rows: >=152x speedup and >=71x energy efficiency vs TrueNorth, >=31x
+//! energy efficiency vs the best reference FPGA (FINN).
+
+use crate::baselines::{reference_fpga, truenorth};
+use crate::fpga::device::CYCLONE_V;
+use crate::fpga::report::DesignReport;
+use crate::fpga::schedule::ScheduleConfig;
+use crate::models;
+use crate::runtime::manifest::Manifest;
+
+/// One row of the regenerated table.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub name: String,
+    pub dataset: String,
+    pub platform: String,
+    pub precision_bits: u64,
+    /// measured accuracy on the synthetic substitute (None for baselines,
+    /// which report their published accuracy)
+    pub accuracy: f64,
+    pub paper_accuracy: f64,
+    pub kfps: f64,
+    pub kfps_per_w: f64,
+    pub proposed: bool,
+}
+
+/// The paper's headline ratios, computed from the regenerated rows.
+#[derive(Debug, Clone, Copy)]
+pub struct Headline {
+    /// min over matched-accuracy pairs of proposed_kfps / truenorth_kfps
+    pub speedup_vs_truenorth: f64,
+    /// min over matched pairs of proposed_eff / truenorth_eff
+    pub energy_gain_vs_truenorth: f64,
+    /// min proposed_eff / best reference-FPGA eff on the same dataset
+    pub energy_gain_vs_reference_fpga: f64,
+}
+
+/// Generate all rows.
+pub fn rows(manifest: Option<&Manifest>) -> Vec<Row> {
+    let mut out = Vec::new();
+    for m in models::registry() {
+        let cfg = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+        let rep = DesignReport::build(&m, &CYCLONE_V, &cfg);
+        let accuracy = manifest
+            .and_then(|man| man.model(m.name).ok())
+            .map(|e| e.accuracy.circulant_12bit)
+            .unwrap_or(m.paper_accuracy / 100.0);
+        out.push(Row {
+            name: format!("proposed_{}", m.name),
+            dataset: m.dataset.to_string(),
+            platform: "cyclone_v (sim)".into(),
+            precision_bits: 12,
+            accuracy,
+            paper_accuracy: m.paper_accuracy / 100.0,
+            kfps: rep.kfps,
+            kfps_per_w: rep.kfps_per_w,
+            proposed: true,
+        });
+    }
+    for t in truenorth::table1_rows() {
+        out.push(Row {
+            name: t.name.into(),
+            dataset: t.dataset.into(),
+            platform: "truenorth (model)".into(),
+            precision_bits: 2,
+            accuracy: t.accuracy,
+            paper_accuracy: t.accuracy,
+            kfps: t.kfps(),
+            kfps_per_w: t.kfps_per_w(),
+            proposed: false,
+        });
+    }
+    for r in reference_fpga::table1_rows() {
+        out.push(Row {
+            name: r.name.into(),
+            dataset: r.dataset.into(),
+            platform: "ref fpga (model)".into(),
+            precision_bits: r.precision_bits,
+            accuracy: r.accuracy,
+            paper_accuracy: r.accuracy,
+            kfps: r.kfps(),
+            kfps_per_w: r.kfps_per_w(),
+            proposed: false,
+        });
+    }
+    out
+}
+
+/// Compute the headline ratios from the regenerated rows.
+///
+/// Matching follows the paper's "under the same test accuracy": each
+/// proposed design is compared against same-dataset baselines in the same
+/// accuracy class (|Δ accuracy| <= 2.5%, paper-accuracy basis since the
+/// baselines' accuracies are published values on the real datasets).  With
+/// the paper's own numbers this rule reproduces exactly its >=152x / >=71x
+/// / >=31x minima (the SVHN pair for TrueNorth, the MLP-2/FINN pair for the
+/// reference FPGA).
+pub fn headline(rows: &[Row]) -> Headline {
+    let mut speedup = f64::INFINITY;
+    let mut energy_tn = f64::INFINITY;
+    let mut energy_ref = f64::INFINITY;
+    for p in rows.iter().filter(|r| r.proposed) {
+        for b in rows.iter().filter(|r| !r.proposed && r.dataset == p.dataset) {
+            // same accuracy class only
+            if (p.paper_accuracy - b.paper_accuracy).abs() > 0.025 {
+                continue;
+            }
+            let su = p.kfps / b.kfps;
+            let eg = p.kfps_per_w / b.kfps_per_w;
+            if b.platform.contains("truenorth") {
+                speedup = speedup.min(su);
+                energy_tn = energy_tn.min(eg);
+            } else {
+                energy_ref = energy_ref.min(eg);
+            }
+        }
+    }
+    Headline {
+        speedup_vs_truenorth: speedup,
+        energy_gain_vs_truenorth: energy_tn,
+        energy_gain_vs_reference_fpga: energy_ref,
+    }
+}
+
+/// Render the table + headline as text.
+pub fn render(manifest: Option<&Manifest>) -> String {
+    let rows = rows(manifest);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<28} {:<9} {:<19} {:>4} {:>9} {:>9} {:>14} {:>14}\n",
+        "Name", "Dataset", "Platform", "Prec", "Acc", "PaperAcc", "kFPS", "kFPS/W"
+    ));
+    out.push_str(&"-".repeat(112));
+    out.push('\n');
+    for r in &rows {
+        out.push_str(&format!(
+            "{:<28} {:<9} {:<19} {:>4} {:>8.2}% {:>8.2}% {:>14.3} {:>14.3}\n",
+            r.name,
+            r.dataset,
+            r.platform,
+            r.precision_bits,
+            r.accuracy * 100.0,
+            r.paper_accuracy * 100.0,
+            r.kfps,
+            r.kfps_per_w,
+        ));
+    }
+    let h = headline(&rows);
+    out.push_str(&format!(
+        "\nheadline ratios (regenerated / paper):\n\
+           speedup vs TrueNorth      {:>10.1}x   (paper: >=152x)\n\
+           energy eff vs TrueNorth   {:>10.1}x   (paper: >=71x)\n\
+           energy eff vs ref FPGA    {:>10.1}x   (paper: >=31x)\n",
+        h.speedup_vs_truenorth, h.energy_gain_vs_truenorth, h.energy_gain_vs_reference_fpga
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_all_row_groups() {
+        let rows = rows(None);
+        assert_eq!(rows.iter().filter(|r| r.proposed).count(), 6);
+        assert_eq!(
+            rows.iter().filter(|r| r.platform.contains("truenorth")).count(),
+            4
+        );
+        assert_eq!(
+            rows.iter().filter(|r| r.platform.contains("ref fpga")).count(),
+            4
+        );
+    }
+
+    #[test]
+    fn headline_shapes_hold() {
+        // The paper's qualitative claims must come out of the regenerated
+        // numbers: large speedup and energy gains vs TrueNorth, a
+        // significant efficiency gain vs the best reference FPGA.
+        let h = headline(&rows(None));
+        assert!(
+            h.speedup_vs_truenorth >= 100.0,
+            "speedup {} too small",
+            h.speedup_vs_truenorth
+        );
+        assert!(
+            h.energy_gain_vs_truenorth >= 50.0,
+            "energy gain {} too small",
+            h.energy_gain_vs_truenorth
+        );
+        assert!(
+            h.energy_gain_vs_reference_fpga >= 10.0,
+            "ref-fpga gain {} too small",
+            h.energy_gain_vs_reference_fpga
+        );
+    }
+
+    #[test]
+    fn render_contains_paper_anchors() {
+        let text = render(None);
+        assert!(text.contains(">=152x"));
+        assert!(text.contains("proposed_mnist_mlp_1"));
+        assert!(text.contains("truenorth_mnist_95"));
+    }
+}

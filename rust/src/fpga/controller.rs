@@ -1,0 +1,258 @@
+//! The hierarchical control framework of the paper, made explicit: an
+//! event-level controller that *emits the schedule* the cycle model
+//! (`schedule::simulate`) only totals.
+//!
+//! Hierarchy (outer to inner), exactly Fig. 4:
+//!
+//! ```text
+//!   batch controller            — one pass per batch
+//!     └ layer controller        — outer loop over DNN layers
+//!         └ phase controller    — FFT → multiply → IFFT (3 phases/layer)
+//!             └ stream issue    — per-image work streamed through the
+//!                                 deeply pipelined unit (+ fill bubbles)
+//! ```
+//!
+//! [`trace`] returns the full event list with start/end cycles; its total
+//! duration must equal `simulate()`'s `cycles_per_batch` *by construction
+//! of a different code path* — pinned by `total_matches_cycle_model`, this
+//! is the simulator's internal consistency check. [`render_timeline`]
+//! draws the occupancy timeline the paper describes qualitatively.
+
+use crate::fpga::device::Device;
+use crate::fpga::fft_unit::FftUnit;
+use crate::fpga::schedule::ScheduleConfig;
+use crate::models::{fft_real_mults, Model};
+
+/// What the datapath is doing during an event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activity {
+    /// pipeline fill bubbles (no useful output)
+    Fill,
+    /// input-block FFT streaming
+    Fft,
+    /// element-wise spectral multiply-accumulate
+    Multiply,
+    /// output-block IFFT + bias + activation
+    Ifft,
+    /// dense stem/head MAC streaming
+    Dense,
+}
+
+/// One scheduled interval on the (time-multiplexed) datapath.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub layer: usize,
+    pub kind: &'static str,
+    pub activity: Activity,
+    pub start: u64,
+    pub end: u64,
+}
+
+impl Event {
+    pub fn cycles(&self) -> u64 {
+        self.end - self.start
+    }
+}
+
+/// The emitted schedule for one batch.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    pub total_cycles: u64,
+}
+
+impl Trace {
+    /// Cycles spent in an activity class.
+    pub fn cycles_in(&self, activity: Activity) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.activity == activity)
+            .map(Event::cycles)
+            .sum()
+    }
+
+    /// Fraction of the batch spent on fill bubbles — the quantity batch
+    /// interleaving (AB3) minimizes.
+    pub fn bubble_fraction(&self) -> f64 {
+        self.cycles_in(Activity::Fill) as f64 / self.total_cycles.max(1) as f64
+    }
+}
+
+/// Emit the event schedule for one batch of `model` on `device` under
+/// `cfg` — the same workload walk as `schedule::simulate`, but as explicit
+/// intervals issued by the three-level controller.
+pub fn trace(model: &Model, device: &Device, cfg: &ScheduleConfig) -> Trace {
+    let pool = device.total_mults();
+    let batch = cfg.batch.max(1);
+    let reps = if cfg.interleave { 1 } else { batch };
+    let per_rep_batch = if cfg.interleave { batch } else { 1 };
+
+    let mut events = Vec::new();
+    let mut now = 0u64;
+    let mut push = |layer: usize, kind: &'static str, activity: Activity, cycles: u64, now: &mut u64| {
+        if cycles == 0 {
+            return;
+        }
+        events.push(Event { layer, kind, activity, start: *now, end: *now + cycles });
+        *now += cycles;
+    };
+
+    for (layer_idx, row) in model.accounting().iter().enumerate() {
+        let fw = row.fft_work;
+        if fw.k == 0 {
+            // dense stem/head: one fill + streamed MACs per controller rep
+            for _ in 0..reps {
+                push(layer_idx, row.kind, Activity::Fill, 4, &mut now);
+            }
+            let work = row.dense_macs * batch;
+            push(layer_idx, row.kind, Activity::Dense, work.div_ceil(pool), &mut now);
+            continue;
+        }
+
+        let unit = FftUnit::new(fw.k, 8);
+        let kh = if cfg.half_spectrum { (fw.k / 2 + 1) as u64 } else { fw.k as u64 };
+        let (ffts, iffts) = if cfg.decouple {
+            (fw.ffts_total, fw.iffts_total)
+        } else {
+            (fw.naive_transforms, fw.naive_transforms)
+        };
+        let fm = fft_real_mults(fw.k);
+
+        // ---- phase 1: input FFTs.  The phase controller pays the pipeline
+        // fill once per rep, then streams every image's transforms.
+        for _ in 0..reps {
+            push(layer_idx, row.kind, Activity::Fill, unit.pipeline_depth_fft(), &mut now);
+        }
+        // streaming work is split across reps; the per-rep quantum keeps
+        // integer rounding identical to the aggregate cycle model
+        let fft_work = ffts * batch * fm;
+        push(layer_idx, row.kind, Activity::Fft, fft_work.div_ceil(pool), &mut now);
+        let _ = per_rep_batch;
+
+        // ---- phase 2: spectral multiply-accumulate
+        for _ in 0..reps {
+            push(layer_idx, row.kind, Activity::Fill, 2, &mut now);
+        }
+        let mult_work = fw.mult_groups_total * batch * kh * 4;
+        push(layer_idx, row.kind, Activity::Multiply, mult_work.div_ceil(pool), &mut now);
+
+        // ---- phase 3: output IFFTs (+ bias, activation in the last stages)
+        for _ in 0..reps {
+            push(layer_idx, row.kind, Activity::Fill, unit.pipeline_depth_ifft(), &mut now);
+        }
+        let ifft_work = iffts * batch * fm;
+        push(layer_idx, row.kind, Activity::Ifft, ifft_work.div_ceil(pool), &mut now);
+    }
+
+    Trace { events, total_cycles: now }
+}
+
+/// ASCII occupancy timeline: one row per layer, columns are time buckets,
+/// letters mark the dominant activity (F=fft, M=multiply, I=ifft, D=dense,
+/// ·=fill).
+pub fn render_timeline(model: &Model, device: &Device, cfg: &ScheduleConfig, width: usize) -> String {
+    let tr = trace(model, device, cfg);
+    let layers = 1 + tr.events.iter().map(|e| e.layer).max().unwrap_or(0);
+    let scale = tr.total_cycles.max(1) as f64 / width as f64;
+    let mut rows = vec![vec![' '; width]; layers];
+    for e in &tr.events {
+        let (a, b) = (
+            (e.start as f64 / scale) as usize,
+            ((e.end as f64 / scale).ceil() as usize).min(width),
+        );
+        let ch = match e.activity {
+            Activity::Fill => '.',
+            Activity::Fft => 'F',
+            Activity::Multiply => 'M',
+            Activity::Ifft => 'I',
+            Activity::Dense => 'D',
+        };
+        for slot in rows[e.layer].iter_mut().take(b).skip(a) {
+            *slot = ch;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{}: {} cycles/batch (batch {}), {:.2}% fill bubbles\n",
+        model.name,
+        tr.total_cycles,
+        cfg.batch,
+        100.0 * tr.bubble_fraction()
+    ));
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!("L{i:02} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str("     F=fft  M=multiply  I=ifft  D=dense  .=fill\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::CYCLONE_V;
+    use crate::fpga::schedule::simulate;
+    use crate::models;
+
+    #[test]
+    fn total_matches_cycle_model() {
+        // the controller's emitted schedule and the aggregate cycle model
+        // are independent walks of the same workload; totals must agree
+        // exactly, for every model and every ablation configuration
+        for m in models::registry() {
+            for cfg in [
+                ScheduleConfig::default(),
+                ScheduleConfig { decouple: false, ..Default::default() },
+                ScheduleConfig { half_spectrum: false, ..Default::default() },
+                ScheduleConfig { interleave: false, ..Default::default() },
+                ScheduleConfig { batch: 1, ..Default::default() },
+            ] {
+                let t = trace(&m, &CYCLONE_V, &cfg);
+                let s = simulate(&m, &CYCLONE_V, &cfg);
+                assert_eq!(
+                    t.total_cycles, s.cycles_per_batch,
+                    "{} {:?}: controller and cycle model disagree",
+                    m.name, cfg
+                );
+                assert_eq!(t.cycles_in(Activity::Fft), s.phase.fft, "{}", m.name);
+                assert_eq!(t.cycles_in(Activity::Multiply), s.phase.mult, "{}", m.name);
+                assert_eq!(t.cycles_in(Activity::Ifft), s.phase.ifft, "{}", m.name);
+                assert_eq!(t.cycles_in(Activity::Dense), s.phase.dense, "{}", m.name);
+                assert_eq!(t.cycles_in(Activity::Fill), s.phase.fills, "{}", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn events_are_contiguous_and_ordered() {
+        let m = models::by_name("svhn_cnn").unwrap();
+        let t = trace(&m, &CYCLONE_V, &ScheduleConfig::default());
+        let mut prev_end = 0;
+        for e in &t.events {
+            assert_eq!(e.start, prev_end, "single time-multiplexed datapath: no gaps/overlap");
+            assert!(e.end > e.start);
+            prev_end = e.end;
+        }
+        assert_eq!(prev_end, t.total_cycles);
+    }
+
+    #[test]
+    fn interleaving_shrinks_bubble_fraction() {
+        let m = models::by_name("mnist_mlp_1").unwrap();
+        let on = trace(&m, &CYCLONE_V, &ScheduleConfig::default());
+        let off = trace(
+            &m,
+            &CYCLONE_V,
+            &ScheduleConfig { interleave: false, ..Default::default() },
+        );
+        assert!(on.bubble_fraction() < off.bubble_fraction());
+    }
+
+    #[test]
+    fn timeline_renders() {
+        let m = models::by_name("mnist_lenet").unwrap();
+        let text = render_timeline(&m, &CYCLONE_V, &ScheduleConfig::default(), 72);
+        assert!(text.contains("cycles/batch"));
+        assert!(text.contains("L00"));
+        assert!(text.contains('M'), "multiply phase must appear:\n{text}");
+    }
+}

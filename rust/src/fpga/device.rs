@@ -1,0 +1,118 @@
+//! FPGA device resource + power models.
+//!
+//! Constants come from the public datasheets of the parts the paper uses;
+//! the 12-bit fixed-point datapath lets both DSP blocks and LUT fabric
+//! implement multipliers (the paper's "resource re-use ... automatically
+//! determined in the FPGA synthesis process").
+
+/// An FPGA device model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Device {
+    pub name: &'static str,
+    /// datapath clock (Hz)
+    pub fmax_hz: f64,
+    /// 12-bit real multipliers implementable in DSP blocks
+    pub dsp_mults: u64,
+    /// additional 12-bit multipliers implementable in LUT fabric
+    pub lut_mults: u64,
+    /// on-chip block RAM capacity in bytes
+    pub bram_bytes: u64,
+    /// static (leakage + clocking) power, W
+    pub static_w: f64,
+    /// dynamic power at 100% datapath utilization, W
+    pub dynamic_w: f64,
+}
+
+impl Device {
+    /// Total parallel 12-bit multipliers (the shared pool the three-phase
+    /// schedule time-multiplexes).
+    pub fn total_mults(&self) -> u64 {
+        self.dsp_mults + self.lut_mults
+    }
+
+    /// Peak real-mult throughput (mults/s).
+    pub fn peak_mults_per_s(&self) -> f64 {
+        self.total_mults() as f64 * self.fmax_hz
+    }
+
+    /// Power at a given average datapath utilization in [0, 1].
+    pub fn power_w(&self, utilization: f64) -> f64 {
+        self.static_w + self.dynamic_w * utilization.clamp(0.0, 1.0)
+    }
+}
+
+/// Intel (Altera) CyClone V 5CEA9 — the paper's default low-power part.
+///
+/// 342 variable-precision DSP blocks (2 independent 18x18 each -> 684
+/// 12-bit mults), 85K ALMs of which a fraction implements ~2K additional
+/// 12-bit multipliers, 3970 Kb M10K block RAM.  The power envelope is
+/// calibrated so full-utilization total power is ~0.55 W — the constant
+/// wattage implied by every proposed Table-1 row (kFPS / (kFPS/W)).
+pub const CYCLONE_V: Device = Device {
+    name: "cyclone_v_5cea9",
+    fmax_hz: 200e6,
+    dsp_mults: 684,
+    lut_mults: 2048,
+    bram_bytes: 3_970 * 1024 / 8 * 1024 / 1024, // 3970 Kb ≈ 496 KiB
+    static_w: 0.35,
+    dynamic_w: 0.20,
+};
+
+/// Xilinx Kintex-7 XC7K325T — the paper's higher-performance part.
+///
+/// 840 DSP48E1 slices, 203K LUT6 (~4K extra 12-bit mults), 16 Mb BRAM.
+pub const KINTEX_7: Device = Device {
+    name: "kintex7_xc7k325t",
+    fmax_hz: 350e6,
+    dsp_mults: 840,
+    lut_mults: 4096,
+    bram_bytes: 16 * 1024 * 1024 / 8, // 16 Mb = 2 MiB
+    static_w: 0.5,
+    dynamic_w: 6.5,
+};
+
+/// Look up a device by name (CLI).
+pub fn by_name(name: &str) -> Option<Device> {
+    match name {
+        "cyclone_v" | "cyclone_v_5cea9" => Some(CYCLONE_V),
+        "kintex7" | "kintex7_xc7k325t" => Some(KINTEX_7),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyclone_v_full_power_matches_table1_implied_wattage() {
+        // every proposed Table-1 row implies ~0.55 W on the CyClone V
+        let p = CYCLONE_V.power_w(1.0);
+        assert!((p - 0.55).abs() < 1e-9, "{p}");
+    }
+
+    #[test]
+    fn kintex_is_faster_but_hungrier() {
+        assert!(KINTEX_7.peak_mults_per_s() > CYCLONE_V.peak_mults_per_s());
+        assert!(KINTEX_7.power_w(1.0) > CYCLONE_V.power_w(1.0));
+    }
+
+    #[test]
+    fn utilization_clamped() {
+        assert_eq!(CYCLONE_V.power_w(2.0), CYCLONE_V.power_w(1.0));
+        assert_eq!(CYCLONE_V.power_w(-1.0), CYCLONE_V.static_w);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(by_name("cyclone_v").unwrap().name, "cyclone_v_5cea9");
+        assert!(by_name("virtex").is_none());
+    }
+
+    #[test]
+    fn bram_capacity_realistic() {
+        // 5CEA9 M10K ≈ 0.5 MiB; Kintex-7 2 MiB
+        assert!(CYCLONE_V.bram_bytes > 400 * 1024 && CYCLONE_V.bram_bytes < 600 * 1024);
+        assert_eq!(KINTEX_7.bram_bytes, 2 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,114 @@
+//! The pipelined k-point FFT unit — the paper's basic computing block.
+//!
+//! One FFT structure is implemented once and time-multiplexed for FFTs and
+//! IFFTs and for every layer (reconfigurability properties (i)-(iii) in the
+//! paper).  The model follows the paper's pipeline accounting for a
+//! 128-point unit: `log2(k)` butterfly stages + 4 memory read/write stages,
+//! and 2 extra stages when operating as IFFT (Hermitian pre-processing,
+//! bias + ReLU on the output side).
+
+/// Static configuration of the FFT structure implemented in fabric.
+#[derive(Debug, Clone, Copy)]
+pub struct FftUnit {
+    /// transform size (the largest block size used by the model; smaller
+    /// blocks run on the same structure — the recursive property)
+    pub k: usize,
+    /// streaming lanes: samples accepted per cycle
+    pub lanes: u64,
+}
+
+impl FftUnit {
+    pub fn new(k: usize, lanes: u64) -> Self {
+        assert!(k.is_power_of_two() && k >= 2);
+        assert!(lanes >= 1);
+        Self { k, lanes }
+    }
+
+    /// Butterfly pipeline stages (log2 k).
+    pub fn butterfly_stages(&self) -> u64 {
+        self.k.trailing_zeros() as u64
+    }
+
+    /// Pipeline depth as FFT: butterflies + 4 memory stages (paper: a
+    /// 128-point FFT "needs 7 pipeline stages plus 4 additional stages
+    /// corresponding to memory reading and writing").
+    pub fn pipeline_depth_fft(&self) -> u64 {
+        self.butterfly_stages() + 4
+    }
+
+    /// Pipeline depth as IFFT: 2 extra stages (pre-processing, bias+ReLU).
+    pub fn pipeline_depth_ifft(&self) -> u64 {
+        self.pipeline_depth_fft() + 2
+    }
+
+    /// Issue interval: cycles between successive k-point transforms once
+    /// the pipeline is full (streaming k samples at `lanes`/cycle).
+    pub fn issue_cycles(&self, k_actual: usize) -> u64 {
+        (k_actual as u64).div_ceil(self.lanes)
+    }
+
+    /// Real multipliers consumed by the unit: `lanes/2` butterflies per
+    /// stage, 4 real mults per complex twiddle multiply.
+    pub fn mults_used(&self) -> u64 {
+        (self.lanes / 2).max(1) * self.butterfly_stages() * 4
+    }
+
+    /// Cycles to stream `count` transforms of size `k_actual` including one
+    /// pipeline fill (the fill is paid once per *phase*, which is what
+    /// batch interleaving amortizes).
+    pub fn stream_cycles(&self, count: u64, k_actual: usize, inverse: bool) -> u64 {
+        if count == 0 {
+            return 0;
+        }
+        let fill = if inverse {
+            self.pipeline_depth_ifft()
+        } else {
+            self.pipeline_depth_fft()
+        };
+        fill + count * self.issue_cycles(k_actual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_128pt_pipeline_accounting() {
+        let u = FftUnit::new(128, 8);
+        assert_eq!(u.butterfly_stages(), 7); // "7 pipeline stages"
+        assert_eq!(u.pipeline_depth_fft(), 11); // "+4 memory stages"
+        assert_eq!(u.pipeline_depth_ifft(), 13); // "+2 for IFFT pre/post"
+    }
+
+    #[test]
+    fn issue_interval_scales_with_lanes() {
+        let u1 = FftUnit::new(128, 1);
+        let u8 = FftUnit::new(128, 8);
+        assert_eq!(u1.issue_cycles(128), 128);
+        assert_eq!(u8.issue_cycles(128), 16);
+        // smaller transforms on the same structure (recursive property)
+        assert_eq!(u8.issue_cycles(8), 1);
+    }
+
+    #[test]
+    fn stream_amortizes_fill() {
+        let u = FftUnit::new(64, 8);
+        let one = u.stream_cycles(1, 64, false);
+        let hundred = u.stream_cycles(100, 64, false);
+        // fill paid once: 100 transforms cost < 100x one transform
+        assert!(hundred < 100 * one);
+        assert_eq!(hundred, u.pipeline_depth_fft() + 100 * 8);
+    }
+
+    #[test]
+    fn zero_count_costs_nothing() {
+        assert_eq!(FftUnit::new(16, 4).stream_cycles(0, 16, true), 0);
+    }
+
+    #[test]
+    fn mult_usage() {
+        // 8 lanes, 128-pt: 4 butterflies/stage * 7 stages * 4 = 112 mults
+        assert_eq!(FftUnit::new(128, 8).mults_used(), 112);
+    }
+}

@@ -1,0 +1,170 @@
+//! On-chip memory model: whole model in BRAM, in-place activations.
+//!
+//! The paper's key energy lever is never touching off-chip DRAM: the
+//! circulant model (12-bit spectra), the batch's activations (in-place:
+//! layer i's outputs overwrite layer i-1's), and the twiddle ROMs must all
+//! fit in block RAM.  [`memory_report`] checks that and quantifies the
+//! real-FFT-symmetry ablation (AB2: full spectra double the weight bytes).
+
+use crate::models::{Layer, Model};
+
+/// Memory accounting for one model/configuration on one device.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryReport {
+    pub weight_bytes: u64,
+    pub activation_bytes: u64,
+    pub twiddle_bytes: u64,
+    pub total_bytes: u64,
+    pub capacity_bytes: u64,
+    pub fits: bool,
+}
+
+/// Compute the BRAM footprint.
+///
+/// * `bits` — fixed-point width (12 in the paper).
+/// * `batch` — pictures interleaved in flight (paper: 50-100).
+/// * `half_spectrum` — store `FFT(w_ij)` as k/2+1 complex bins (the paper's
+///   real-input symmetry optimization) instead of k bins.
+/// * `in_place` — outputs overwrite inputs (single activation buffer);
+///   otherwise double-buffered.
+pub fn memory_report(
+    model: &Model,
+    capacity_bytes: u64,
+    bits: u64,
+    batch: u64,
+    half_spectrum: bool,
+    in_place: bool,
+) -> MemoryReport {
+    let mut weight_values: u64 = 0;
+    let mut max_k: u64 = 0;
+    for layer in &model.layers {
+        match *layer {
+            Layer::BcDense { n, m, k } => {
+                let (pb, qb) = ((m / k) as u64, (n / k) as u64);
+                let bins = if half_spectrum { (k / 2 + 1) as u64 } else { k as u64 };
+                // complex spectra: 2 planes
+                weight_values += pb * qb * bins * 2;
+                weight_values += m as u64; // bias
+                max_k = max_k.max(k as u64);
+            }
+            Layer::BcConv { c, p, r, k, .. } => {
+                let (pb, qb) = ((p / k) as u64, ((c / k) * r * r) as u64);
+                let bins = if half_spectrum { (k / 2 + 1) as u64 } else { k as u64 };
+                weight_values += pb * qb * bins * 2;
+                weight_values += p as u64;
+                max_k = max_k.max(k as u64);
+            }
+            Layer::Dense { n, m } => weight_values += (n * m + m) as u64,
+            Layer::Conv { c, p, r, .. } => weight_values += (r * r * c * p + p) as u64,
+            _ => {}
+        }
+    }
+    let weight_bytes = weight_values * bits / 8;
+
+    // activations: peak per image at datapath precision, in-place or 2x
+    let per_image = model.peak_activation_bytes() / 4 * bits / 8;
+    let buffers = if in_place { 1 } else { 2 };
+    let activation_bytes = per_image * batch * buffers;
+
+    // twiddle ROMs for the largest FFT structure: k complex values, plus
+    // the bit-reversal table
+    let twiddle_bytes = max_k * 2 * bits / 8 + max_k * 2;
+
+    let total = weight_bytes + activation_bytes + twiddle_bytes;
+    MemoryReport {
+        weight_bytes,
+        activation_bytes,
+        twiddle_bytes,
+        total_bytes: total,
+        capacity_bytes,
+        fits: total <= capacity_bytes,
+    }
+}
+
+/// Largest power-of-two batch (capped at `cap`) whose working set fits the
+/// device — the memory half of the co-optimization loop (Fig. 5): batch as
+/// large as the BRAM allows, at least 1.
+pub fn max_fitting_batch(
+    model: &Model,
+    capacity_bytes: u64,
+    bits: u64,
+    cap: u64,
+    half_spectrum: bool,
+    in_place: bool,
+) -> u64 {
+    let mut batch = cap.max(1).next_power_of_two();
+    if batch > cap {
+        batch /= 2;
+    }
+    while batch > 1 {
+        if memory_report(model, capacity_bytes, bits, batch, half_spectrum, in_place).fits {
+            return batch;
+        }
+        batch /= 2;
+    }
+    1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::CYCLONE_V;
+    use crate::models;
+
+    #[test]
+    fn every_table1_model_fits_cyclone_v_at_its_auto_batch() {
+        for m in models::registry() {
+            let batch = max_fitting_batch(&m, CYCLONE_V.bram_bytes, 12, 64, true, true);
+            let rep = memory_report(&m, CYCLONE_V.bram_bytes, 12, batch, true, true);
+            assert!(
+                rep.fits,
+                "{} at batch {batch}: {} > {}",
+                m.name, rep.total_bytes, rep.capacity_bytes
+            );
+            assert!(batch >= 8, "{}: auto batch {batch} too small", m.name);
+        }
+    }
+
+    #[test]
+    fn mlp_supports_the_full_paper_batch() {
+        // the MNIST MLPs hold the paper's 50-100 picture batch on-chip
+        let m = models::by_name("mnist_mlp_1").unwrap();
+        assert_eq!(max_fitting_batch(&m, CYCLONE_V.bram_bytes, 12, 64, true, true), 64);
+    }
+
+    #[test]
+    fn full_spectrum_costs_more_weight_memory() {
+        let m = models::by_name("mnist_mlp_1").unwrap();
+        let half = memory_report(&m, CYCLONE_V.bram_bytes, 12, 64, true, true);
+        let full = memory_report(&m, CYCLONE_V.bram_bytes, 12, 64, false, true);
+        assert!(full.weight_bytes > half.weight_bytes);
+        // bc spectra roughly double (kh = k/2+1 vs k bins); the uncompressed
+        // classifier head dilutes the total ratio
+        let ratio = full.weight_bytes as f64 / half.weight_bytes as f64;
+        assert!(ratio > 1.05 && ratio < 2.2, "{ratio}");
+    }
+
+    #[test]
+    fn in_place_halves_activation_memory() {
+        let m = models::by_name("cifar_wrn").unwrap();
+        let ip = memory_report(&m, CYCLONE_V.bram_bytes, 12, 64, true, true);
+        let db = memory_report(&m, CYCLONE_V.bram_bytes, 12, 64, true, false);
+        assert_eq!(db.activation_bytes, 2 * ip.activation_bytes);
+    }
+
+    #[test]
+    fn activation_scales_with_batch() {
+        let m = models::by_name("svhn_cnn").unwrap();
+        let b1 = memory_report(&m, CYCLONE_V.bram_bytes, 12, 1, true, true);
+        let b64 = memory_report(&m, CYCLONE_V.bram_bytes, 12, 64, true, true);
+        assert_eq!(b64.activation_bytes, 64 * b1.activation_bytes);
+        assert_eq!(b64.weight_bytes, b1.weight_bytes);
+    }
+
+    #[test]
+    fn oversized_batch_overflows() {
+        let m = models::by_name("cifar_wrn").unwrap();
+        let rep = memory_report(&m, CYCLONE_V.bram_bytes, 12, 100_000, true, true);
+        assert!(!rep.fits);
+    }
+}

@@ -1,0 +1,34 @@
+//! Cycle-level simulator of the paper's FPGA datapath.
+//!
+//! The paper evaluates on physical Intel CyClone V / Xilinx Kintex-7 parts;
+//! none are available here, so per DESIGN.md §2 this module substitutes a
+//! simulator of exactly the architecture the paper describes:
+//!
+//! * a single k-point pipelined FFT structure time-multiplexed across FFTs
+//!   and IFFTs and across all layers ([`fft_unit`]),
+//! * three-phase operation (FFT → element-wise multiply-accumulate → IFFT +
+//!   bias + activation) with batch-interleaved deep pipelining, Fig. 4
+//!   ([`schedule`]),
+//! * whole-model-in-BRAM memory with in-place activation buffers
+//!   ([`memory`]),
+//! * resource re-use: one pool of hardware multipliers shared by the FFT
+//!   butterflies and the phase-2 multiplier array ([`device`]),
+//! * a static + utilization-scaled dynamic power model ([`energy`]).
+//!
+//! Table 1 / Fig. 6 quantities are *derived* from the schedule (cycles →
+//! kFPS at fmax; power model → kFPS/W); only device constants (fmax, DSP
+//! and LUT-multiplier counts, BRAM capacity, power envelope) are taken from
+//! the datasheets of the parts the paper cites.  Ratios against baselines
+//! are therefore regenerated, not transcribed.
+
+pub mod controller;
+pub mod device;
+pub mod energy;
+pub mod fft_unit;
+pub mod memory;
+pub mod report;
+pub mod schedule;
+
+pub use device::Device;
+pub use report::DesignReport;
+pub use schedule::{simulate, ScheduleConfig, ScheduleResult};

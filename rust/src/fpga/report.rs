@@ -1,0 +1,87 @@
+//! One-stop design report: schedule + memory + energy for a design point.
+
+use crate::fpga::device::Device;
+use crate::fpga::energy::{energy_report, EnergyReport};
+use crate::fpga::schedule::{simulate, ScheduleConfig, ScheduleResult};
+use crate::models::Model;
+
+/// Everything the Table-1 / Fig-6 generators need about one design point.
+#[derive(Debug, Clone)]
+pub struct DesignReport {
+    pub model: String,
+    pub dataset: String,
+    pub device: &'static str,
+    pub bits: u64,
+    pub kfps: f64,
+    pub kfps_per_w: f64,
+    pub ns_per_image: f64,
+    pub utilization: f64,
+    pub equivalent_gops: f64,
+    pub equivalent_gops_per_w: f64,
+    pub bram_used: u64,
+    pub bram_capacity: u64,
+    pub sched: ScheduleResult,
+    pub energy: EnergyReport,
+}
+
+impl DesignReport {
+    /// Simulate `model` on `device` under `cfg` and collect all metrics.
+    pub fn build(model: &Model, device: &Device, cfg: &ScheduleConfig) -> Self {
+        let sched = simulate(model, device, cfg);
+        let energy = energy_report(model, &sched);
+        DesignReport {
+            model: model.name.to_string(),
+            dataset: model.dataset.to_string(),
+            device: device.name,
+            bits: cfg.bits,
+            kfps: sched.kfps(),
+            kfps_per_w: sched.kfps_per_w(),
+            ns_per_image: sched.ns_per_image(),
+            utilization: sched.utilization,
+            equivalent_gops: energy.equivalent_gops,
+            equivalent_gops_per_w: energy.equivalent_gops_per_w,
+            bram_used: sched.memory.total_bytes,
+            bram_capacity: sched.memory.capacity_bytes,
+            sched,
+            energy,
+        }
+    }
+
+    /// Table-1-style row.
+    pub fn table_row(&self, accuracy: Option<f64>) -> String {
+        format!(
+            "{:<24} {:<10} {:<18} {:>4}  {:>8}  {:>12.4}  {:>12.4}",
+            self.model,
+            self.dataset,
+            self.device,
+            self.bits,
+            accuracy.map_or("-".to_string(), |a| format!("{:.2}%", a * 100.0)),
+            self.kfps,
+            self.kfps_per_w,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::CYCLONE_V;
+    use crate::models;
+
+    #[test]
+    fn report_is_self_consistent() {
+        let m = models::by_name("mnist_mlp_1").unwrap();
+        let r = DesignReport::build(&m, &CYCLONE_V, &ScheduleConfig::default());
+        assert!((r.kfps / r.kfps_per_w - r.energy.power_w).abs() < 1e-9);
+        assert!((r.ns_per_image - 1e9 / (r.kfps * 1e3)).abs() < 1e-3);
+        assert!(r.bram_used <= r.bram_capacity);
+    }
+
+    #[test]
+    fn table_row_renders() {
+        let m = models::by_name("svhn_cnn").unwrap();
+        let r = DesignReport::build(&m, &CYCLONE_V, &ScheduleConfig::default());
+        let row = r.table_row(Some(0.962));
+        assert!(row.contains("svhn_cnn") && row.contains("96.20%"));
+    }
+}

@@ -1,0 +1,326 @@
+//! The three-phase, batch-interleaved schedule of Fig. 4.
+//!
+//! An outer loop walks the layers of the DNN; within each layer the three
+//! calculation phases run in sequence (FFT of the input blocks, element-wise
+//! multiply-accumulate, IFFT + bias + activation), and within each phase the
+//! work of *every picture in the batch* streams back-to-back through the
+//! deep pipeline.  Pipeline fills are therefore paid once per (layer, phase)
+//! — the whole point of the paper's batch processing — unless interleaving
+//! is disabled (ablation AB3), in which case each picture pays its own
+//! fills.
+//!
+//! Resource re-use (the paper's §resource re-use) is modeled by a single
+//! pool of `device.total_mults()` hardware multipliers that each phase
+//! time-multiplexes: FFT butterflies, the phase-2 multiplier array, and the
+//! dense stem/head layers all draw from the same pool.
+
+use crate::fpga::device::Device;
+use crate::fpga::fft_unit::FftUnit;
+use crate::fpga::memory::{memory_report, MemoryReport};
+use crate::models::{fft_real_mults, Model};
+
+/// Simulation knobs (defaults = the paper's design point).
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleConfig {
+    /// pictures interleaved per batch (paper: 50-100)
+    pub batch: u64,
+    /// decouple FFT/IFFT: q FFTs + p IFFTs per position instead of p*q each
+    /// (ablation AB1 turns this off)
+    pub decouple: bool,
+    /// exploit real-input conjugate symmetry: k/2+1 multiply lanes and half
+    /// spectrum storage (ablation AB2 turns this off)
+    pub half_spectrum: bool,
+    /// batch-interleaved pipelining per Fig. 4 (ablation AB3 turns this off)
+    pub interleave: bool,
+    /// in-place activation memory
+    pub in_place: bool,
+    /// fixed-point width
+    pub bits: u64,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        Self {
+            batch: 64,
+            decouple: true,
+            half_spectrum: true,
+            interleave: true,
+            in_place: true,
+            bits: 12,
+        }
+    }
+}
+
+impl ScheduleConfig {
+    /// The co-optimized design point for `model` on `device`: all paper
+    /// optimizations on, batch = largest power of two (<= 64) whose working
+    /// set fits in BRAM (Fig. 5's joint model/hardware selection).
+    pub fn auto_for(model: &Model, device: &Device) -> Self {
+        let base = Self::default();
+        let batch = crate::fpga::memory::max_fitting_batch(
+            model,
+            device.bram_bytes,
+            base.bits,
+            64,
+            base.half_spectrum,
+            base.in_place,
+        );
+        Self { batch, ..base }
+    }
+}
+
+/// Cycle breakdown of one simulated batch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PhaseCycles {
+    pub fft: u64,
+    pub mult: u64,
+    pub ifft: u64,
+    /// dense stem/head layers on the shared multiplier array
+    pub dense: u64,
+    /// pipeline-fill bubbles (all phases)
+    pub fills: u64,
+}
+
+impl PhaseCycles {
+    pub fn total(&self) -> u64 {
+        self.fft + self.mult + self.ifft + self.dense + self.fills
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct ScheduleResult {
+    pub model_name: String,
+    pub device: Device,
+    pub config: ScheduleConfig,
+    pub cycles_per_batch: u64,
+    pub phase: PhaseCycles,
+    /// average fraction of the multiplier pool busy over the batch
+    pub utilization: f64,
+    pub memory: MemoryReport,
+}
+
+impl ScheduleResult {
+    pub fn seconds_per_batch(&self) -> f64 {
+        self.cycles_per_batch as f64 / self.device.fmax_hz
+    }
+
+    pub fn fps(&self) -> f64 {
+        self.config.batch as f64 / self.seconds_per_batch()
+    }
+
+    pub fn ns_per_image(&self) -> f64 {
+        1e9 / self.fps()
+    }
+
+    pub fn power_w(&self) -> f64 {
+        self.device.power_w(self.utilization)
+    }
+
+    pub fn kfps(&self) -> f64 {
+        self.fps() / 1e3
+    }
+
+    pub fn kfps_per_w(&self) -> f64 {
+        self.kfps() / self.power_w()
+    }
+}
+
+/// Run the cycle model for `model` on `device` under `cfg`.
+pub fn simulate(model: &Model, device: &Device, cfg: &ScheduleConfig) -> ScheduleResult {
+    let pool = device.total_mults();
+    let batch = cfg.batch.max(1);
+    let mut phase = PhaseCycles::default();
+    let mut busy_mult_cycles: u128 = 0;
+
+    // fills are paid per phase-visit: once per (layer, phase) when
+    // interleaving, once per (layer, phase, image) otherwise
+    let fill_mult = if cfg.interleave { 1 } else { batch };
+
+    for row in model.accounting() {
+        let fw = row.fft_work;
+        if fw.k == 0 {
+            // dense stem/head layer: MACs stream through the multiplier
+            // array; 4-stage fill for the read-mult-add-write pipeline
+            let work = row.dense_macs * batch;
+            let cycles = work.div_ceil(pool);
+            phase.dense += cycles;
+            phase.fills += 4 * fill_mult;
+            busy_mult_cycles += work as u128;
+            continue;
+        }
+
+        let unit = FftUnit::new(fw.k, 8);
+        let kh = if cfg.half_spectrum {
+            (fw.k / 2 + 1) as u64
+        } else {
+            fw.k as u64
+        };
+        let (ffts, iffts) = if cfg.decouple {
+            (fw.ffts_total, fw.iffts_total)
+        } else {
+            (fw.naive_transforms, fw.naive_transforms)
+        };
+        let fm = fft_real_mults(fw.k);
+        let transforms_in = ffts * batch;
+        let transforms_out = iffts * batch;
+        let mult_work = fw.mult_groups_total * batch * kh * 4;
+
+        // phase 1: input FFTs — the whole pool implements parallel
+        // butterfly pipelines, so throughput is work/pool
+        let fft_work = transforms_in * fm;
+        phase.fft += fft_work.div_ceil(pool);
+        phase.fills += unit.pipeline_depth_fft() * fill_mult;
+
+        // phase 2: element-wise multiply-accumulate (re-uses the same pool)
+        phase.mult += mult_work.div_ceil(pool);
+        phase.fills += 2 * fill_mult;
+
+        // phase 3: output IFFTs + bias + activation
+        let ifft_work = transforms_out * fm;
+        phase.ifft += ifft_work.div_ceil(pool);
+        phase.fills += unit.pipeline_depth_ifft() * fill_mult;
+
+        busy_mult_cycles += (fft_work + mult_work + ifft_work) as u128;
+    }
+
+    let cycles = phase.total().max(1);
+    let utilization = (busy_mult_cycles as f64 / (cycles as u128 * pool as u128) as f64)
+        .clamp(0.0, 1.0);
+    let memory = memory_report(
+        model,
+        device.bram_bytes,
+        cfg.bits,
+        batch,
+        cfg.half_spectrum,
+        cfg.in_place,
+    );
+
+    ScheduleResult {
+        model_name: model.name.to_string(),
+        device: *device,
+        config: *cfg,
+        cycles_per_batch: cycles,
+        phase,
+        utilization,
+        memory,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::device::{CYCLONE_V, KINTEX_7};
+    use crate::models;
+
+    fn sim(name: &str, cfg: &ScheduleConfig) -> ScheduleResult {
+        simulate(&models::by_name(name).unwrap(), &CYCLONE_V, cfg)
+    }
+
+    #[test]
+    fn mlp1_throughput_order_of_magnitude() {
+        // Paper row: 8.6e4 kFPS on CyClone V.  The honest datasheet-derived
+        // model lands within ~3x (the paper's exact multiplier provisioning
+        // is not published); the *ratios* vs baselines are what must hold.
+        let r = sim("mnist_mlp_1", &ScheduleConfig::default());
+        let kfps = r.kfps();
+        assert!(kfps > 8.6e4 / 3.0 && kfps < 8.6e4 * 3.0, "kfps {kfps}");
+    }
+
+    #[test]
+    fn all_models_fit_and_simulate() {
+        for m in models::registry() {
+            let r = simulate(&m, &CYCLONE_V, &ScheduleConfig::auto_for(&m, &CYCLONE_V));
+            assert!(r.memory.fits, "{}", m.name);
+            assert!(r.fps() > 0.0);
+            assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn throughput_ordering_matches_model_size() {
+        // smaller workloads -> higher fps (Table 1's ordering)
+        let cfg = ScheduleConfig::default();
+        let mlp1 = sim("mnist_mlp_1", &cfg).fps();
+        let lenet = sim("mnist_lenet", &cfg).fps();
+        let wrn = sim("cifar_wrn", &cfg).fps();
+        assert!(mlp1 > lenet && lenet > wrn);
+    }
+
+    #[test]
+    fn decoupling_helps() {
+        // AB1: without decoupling, p*q FFTs and IFFTs instead of q and p
+        let on = sim("mnist_mlp_1", &ScheduleConfig::default());
+        let off = sim(
+            "mnist_mlp_1",
+            &ScheduleConfig {
+                decouple: false,
+                ..Default::default()
+            },
+        );
+        assert!(off.cycles_per_batch > on.cycles_per_batch);
+        assert!(off.phase.fft > on.phase.fft);
+        assert!(off.phase.ifft > on.phase.ifft);
+    }
+
+    #[test]
+    fn half_spectrum_halves_mult_phase() {
+        // AB2: full-spectrum multiply does ~2x the lanes
+        let on = sim("mnist_mlp_1", &ScheduleConfig::default());
+        let off = sim(
+            "mnist_mlp_1",
+            &ScheduleConfig {
+                half_spectrum: false,
+                ..Default::default()
+            },
+        );
+        let ratio = off.phase.mult as f64 / on.phase.mult as f64;
+        assert!(ratio > 1.7 && ratio < 2.2, "{ratio}");
+    }
+
+    #[test]
+    fn batch_interleaving_amortizes_fills() {
+        // AB3: per-image fills at batch 64 cost 64x the bubbles
+        let on = sim("mnist_mlp_1", &ScheduleConfig::default());
+        let off = sim(
+            "mnist_mlp_1",
+            &ScheduleConfig {
+                interleave: false,
+                ..Default::default()
+            },
+        );
+        assert_eq!(off.phase.fills, 64 * on.phase.fills);
+        assert!(off.fps() < on.fps());
+    }
+
+    #[test]
+    fn larger_batch_increases_throughput_until_memory() {
+        let f1 = sim(
+            "mnist_mlp_1",
+            &ScheduleConfig {
+                batch: 1,
+                ..Default::default()
+            },
+        )
+        .fps();
+        let f64_ = sim("mnist_mlp_1", &ScheduleConfig::default()).fps();
+        assert!(f64_ > f1);
+    }
+
+    #[test]
+    fn kintex_outruns_cyclone() {
+        let m = models::by_name("mnist_mlp_1").unwrap();
+        let cv = simulate(&m, &CYCLONE_V, &ScheduleConfig::default());
+        let k7 = simulate(&m, &KINTEX_7, &ScheduleConfig::default());
+        assert!(k7.fps() > cv.fps());
+        // but CyClone V wins on efficiency (the paper's low-power pick)
+        assert!(cv.kfps_per_w() > k7.kfps_per_w());
+    }
+
+    #[test]
+    fn power_between_static_and_full() {
+        let r = sim("cifar_wrn", &ScheduleConfig::default());
+        assert!(r.power_w() >= CYCLONE_V.static_w);
+        assert!(r.power_w() <= CYCLONE_V.power_w(1.0) + 1e-12);
+    }
+}

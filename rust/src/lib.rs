@@ -1,0 +1,51 @@
+//! # CirCNN-Flow
+//!
+//! Production reproduction of *"Towards Ultra-High Performance and Energy
+//! Efficiency of Deep Learning Systems: An Algorithm-Hardware Co-Optimization
+//! Framework"* (Wang et al., AAAI 2018).
+//!
+//! The crate is the Layer-3 (request-path) half of a three-layer stack:
+//!
+//! * **Layer 1** (`python/compile/kernels`): Pallas kernels for the paper's
+//!   FFT→∘→IFFT datapath (build-time only).
+//! * **Layer 2** (`python/compile`): JAX block-circulant models, trained and
+//!   AOT-lowered to HLO text artifacts.
+//! * **Layer 3** (this crate): a pure-Rust coordinator that loads the
+//!   artifacts through PJRT ([`runtime`]), serves batched inference
+//!   ([`coordinator`]), and regenerates every table and figure of the
+//!   paper's evaluation through a cycle-level FPGA datapath simulator
+//!   ([`fpga`]) and analytical baseline models ([`baselines`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the binary
+//! is self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`circulant`] | from-scratch FFT / block-circulant numerics (the algorithmic substrate, shared with the simulator) |
+//! | [`codesign`] | the Fig.-5 algorithm-hardware co-optimization search |
+//! | [`data`] | bit-exact Rust mirror of the Python synthetic datasets |
+//! | [`models`] | registry of the six Table-1 networks + accounting |
+//! | [`fpga`] | cycle-level simulator of the paper's FPGA datapath |
+//! | [`baselines`] | TrueNorth / reference-FPGA / analog analytical models |
+//! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT) |
+//! | [`runtime`] | PJRT engine: load + execute HLO artifacts |
+//! | [`coordinator`] | router, dynamic batcher, three-phase scheduler |
+//! | [`experiments`] | Table-1 / Fig-3 / Fig-6 / analog report generators |
+//! | [`util`] | JSON, PRNG, property-test and bench harness kits |
+
+pub mod baselines;
+pub mod circulant;
+pub mod codesign;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod fpga;
+pub mod models;
+pub mod native;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,443 @@
+//! `circnn` — the CirCNN-Flow command-line launcher.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts
+//! (DESIGN.md §6) plus the serving/training drivers:
+//!
+//! ```text
+//! circnn table1                 regenerate Table 1 (+ headline ratios)
+//! circnn fig3                   regenerate Fig. 3 (storage reduction)
+//! circnn fig6                   regenerate Fig. 6 (GOPS vs GOPS/W)
+//! circnn analog                 analog / emerging-device comparison (A1)
+//! circnn ablations              AB1-AB3 design-choice ablations
+//! circnn sweep                  O(n log n) vs O(n^2) crossover (S1)
+//! circnn simulate [flags]       one FPGA-sim design point
+//! circnn infer [flags]          run images through a compiled artifact
+//! circnn serve [flags]          serving demo: batched requests + metrics
+//! circnn train-demo [flags]     train-step artifact driver (loss curve)
+//! circnn models                 list registry models + accounting
+//! ```
+//!
+//! Arguments are parsed by hand (`clap` is outside the offline dependency
+//! closure); every flag has the form `--key value` or `--flag`.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use circnn::baselines::dense_fpga;
+use circnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use circnn::data;
+use circnn::experiments::{ablations, analog, complexity, fig3, fig6, table1, try_manifest};
+use circnn::fpga::device;
+use circnn::fpga::report::DesignReport;
+use circnn::fpga::schedule::ScheduleConfig;
+use circnn::models;
+use circnn::runtime::engine::{argmax_rows, literal_f32, literal_i32, Engine};
+use circnn::runtime::manifest::Manifest;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[args.len().min(1)..]);
+    let result = match cmd {
+        "table1" => cmd_table1(),
+        "fig3" => cmd_fig3(),
+        "fig6" => cmd_fig6(),
+        "analog" => cmd_analog(),
+        "ablations" => cmd_ablations(),
+        "sweep" => cmd_sweep(&flags),
+        "codesign" => cmd_codesign(&flags),
+        "precision" => {
+            print!("{}", circnn::experiments::precision::render());
+            Ok(())
+        }
+        "simulate" => cmd_simulate(&flags),
+        "infer" => cmd_infer(&flags),
+        "serve" => cmd_serve(&flags),
+        "train-demo" => cmd_train_demo(&flags),
+        "models" => cmd_models(),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(err) = result {
+        eprintln!("error: {err:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+circnn — CirCNN-Flow: block-circulant DNN co-design framework (AAAI'18 repro)
+
+experiments:
+  table1 | fig3 | fig6 | analog | ablations | sweep | precision
+
+co-optimization (Fig. 5):
+  codesign  --model NAME [--device cyclone_v|kintex7] [--min-accuracy 0.95]
+
+simulator:
+  simulate --model NAME [--device cyclone_v|kintex7] [--batch N]
+           [--no-decouple] [--full-spectrum] [--no-interleave] [--dense]
+           [--timeline]   (hierarchical-controller event trace, Fig. 4)
+
+runtime (needs `make artifacts`):
+  infer      --model NAME [--count N] [--batch 1|64] [--pallas]
+             [--engine native]   (pure-Rust, no PJRT)
+  serve      [--model NAME] [--requests N] [--clients N] [--max-batch N]
+  train-demo [--steps N]
+
+misc:
+  models     list the registry with accounting
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = args
+                .get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned();
+            match val {
+                Some(v) => {
+                    flags.insert(key.to_string(), v);
+                    i += 2;
+                }
+                None => {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn flag_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags
+        .get(key)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn flag_bool(flags: &HashMap<String, String>, key: &str) -> bool {
+    flags.get(key).map(|v| v == "true").unwrap_or(false)
+}
+
+// ---------------------------------------------------------------- commands
+
+fn cmd_table1() -> anyhow::Result<()> {
+    let man = try_manifest();
+    if man.is_none() {
+        eprintln!("note: no artifacts/manifest.json — using paper accuracies");
+    }
+    print!("{}", table1::render(man.as_ref()));
+    Ok(())
+}
+
+fn cmd_fig3() -> anyhow::Result<()> {
+    print!("{}", fig3::render(try_manifest().as_ref()));
+    Ok(())
+}
+
+fn cmd_fig6() -> anyhow::Result<()> {
+    print!("{}", fig6::render());
+    Ok(())
+}
+
+fn cmd_analog() -> anyhow::Result<()> {
+    print!("{}", analog::render());
+    Ok(())
+}
+
+fn cmd_ablations() -> anyhow::Result<()> {
+    print!("{}", ablations::render());
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let k = flag_usize(flags, "k", 64);
+    let reps = flag_usize(flags, "reps", 9);
+    let ns = [256, 512, 1024, 2048, 4096];
+    let pts = complexity::sweep(&ns, k, reps);
+    print!("{}", complexity::render(&pts));
+    Ok(())
+}
+
+fn cmd_codesign(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("mnist_mlp_1");
+    let model = models::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
+    let dev_name = flags.get("device").map(String::as_str).unwrap_or("cyclone_v");
+    let dev = device::by_name(dev_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown device {dev_name:?}"))?;
+    let min_acc: f64 = flags
+        .get("min-accuracy")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.95);
+    let am = circnn::codesign::AccuracyModel::from_artifacts(&Manifest::default_dir());
+    let res = circnn::codesign::optimize(
+        &model,
+        &dev,
+        &circnn::codesign::SearchSpace::default(),
+        &am,
+        min_acc,
+    );
+    print!("{}", circnn::codesign::render(&model, &dev, &res));
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("mnist_mlp_1");
+    let model = models::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?} (see `circnn models`)"))?;
+    let dev_name = flags.get("device").map(String::as_str).unwrap_or("cyclone_v");
+    let dev = device::by_name(dev_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown device {dev_name:?}"))?;
+    let cfg = ScheduleConfig {
+        batch: flag_usize(flags, "batch", 64) as u64,
+        decouple: !flag_bool(flags, "no-decouple"),
+        half_spectrum: !flag_bool(flags, "full-spectrum"),
+        interleave: !flag_bool(flags, "no-interleave"),
+        in_place: true,
+        bits: flag_usize(flags, "bits", 12) as u64,
+    };
+    let rep = DesignReport::build(&model, &dev, &cfg);
+    if flag_bool(flags, "timeline") {
+        print!("{}", circnn::fpga::controller::render_timeline(&model, &dev, &cfg, 96));
+        return Ok(());
+    }
+    println!("model        {model_name}");
+    println!("device       {} @ {:.0} MHz", dev.name, dev.fmax_hz / 1e6);
+    println!("config       {cfg:?}");
+    println!("cycles/batch {}", rep.sched.cycles_per_batch);
+    println!("phases       {:?}", rep.sched.phase);
+    println!("kFPS         {:.3}", rep.kfps);
+    println!("kFPS/W       {:.3}", rep.kfps_per_w);
+    println!("ns/image     {:.2}", rep.ns_per_image);
+    println!("utilization  {:.1}%", rep.utilization * 100.0);
+    println!("eq GOPS      {:.1}", rep.equivalent_gops);
+    println!("eq GOPS/W    {:.1}", rep.equivalent_gops_per_w);
+    println!(
+        "BRAM         {} / {} bytes ({})",
+        rep.bram_used,
+        rep.bram_capacity,
+        if rep.sched.memory.fits { "fits" } else { "OVERFLOW" }
+    );
+    if flag_bool(flags, "dense") {
+        let d = dense_fpga::dense_design(&model, &dev, &cfg);
+        println!(
+            "dense twin   {:.3} kFPS, {:.3} kFPS/W, on-chip: {}",
+            d.kfps, d.kfps_per_w, d.fits_on_chip
+        );
+        println!("circ/dense   {:.1}x throughput", rep.kfps / d.kfps);
+    }
+    Ok(())
+}
+
+fn cmd_models() -> anyhow::Result<()> {
+    println!(
+        "{:<14} {:<9} {:>12} {:>12} {:>9} {:>14} {:>12}",
+        "Model", "Dataset", "DenseParams", "CircParams", "Storage", "eqOps/img", "PaperAcc"
+    );
+    println!("{}", "-".repeat(88));
+    for m in models::registry() {
+        let acc = m.accounting();
+        let dp: u64 = acc.iter().map(|r| r.dense_params).sum();
+        let cp: u64 = acc.iter().map(|r| r.circ_params).sum();
+        println!(
+            "{:<14} {:<9} {:>12} {:>12} {:>8.1}x {:>14} {:>11.2}%",
+            m.name,
+            m.dataset,
+            dp,
+            cp,
+            m.storage_report(12).reduction,
+            m.equivalent_ops_per_image(),
+            m.paper_accuracy
+        );
+    }
+    Ok(())
+}
+
+fn cmd_infer(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("mnist_mlp_1");
+    let count = flag_usize(flags, "count", 256);
+    let batch = flag_usize(flags, "batch", 64);
+    if flags.get("engine").map(String::as_str) == Some("native") {
+        return cmd_infer_native(model_name, count, batch);
+    }
+    let man = Manifest::load(Manifest::default_dir())?;
+    let entry = man.model(model_name)?;
+    let arts = if flag_bool(flags, "pallas") {
+        &entry.artifacts_pallas
+    } else {
+        &entry.artifacts
+    };
+    let art = arts
+        .iter()
+        .find(|a| a.batch == batch)
+        .ok_or_else(|| anyhow::anyhow!("no batch-{batch} artifact for {model_name}"))?;
+    let ds = data::dataset(&entry.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", entry.dataset))?;
+
+    let engine = Engine::cpu()?;
+    let exe = engine.load(man.path_of(&art.file))?;
+    println!("loaded {} on {}", art.file, engine.platform());
+
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < count {
+        let n = batch.min(count - done);
+        let (mut xs, ys) = data::batch(&ds, done as u64, n, true);
+        xs.resize(batch * ds.pixels(), 0.0); // pad the tail batch
+        let lit = literal_f32(&xs, &art.input_shape)?;
+        let out = exe.run1(&[lit])?;
+        let logits = out.to_vec::<f32>()?;
+        let preds = argmax_rows(&logits, 10);
+        correct += preds
+            .iter()
+            .zip(&ys)
+            .filter(|(p, y)| *p == *y)
+            .count();
+        done += n;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{done} images in {:.3}s -> {:.1} img/s, accuracy {:.2}% \
+         (manifest: {:.2}%, paper on real data: {:.2}%)",
+        dt.as_secs_f64(),
+        done as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / done as f64,
+        100.0 * entry.accuracy.circulant_12bit,
+        entry.paper_accuracy
+    );
+    Ok(())
+}
+
+/// Pure-Rust inference: no PJRT, no artifacts beyond the parameter archive
+/// — the native block-circulant substrate (`circnn::native`).
+fn cmd_infer_native(model_name: &str, count: usize, batch: usize) -> anyhow::Result<()> {
+    let model = models::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
+    let man = Manifest::load(Manifest::default_dir())?;
+    let entry = man.model(model_name)?;
+    let path = man.dir.join("params").join(format!("{model_name}.npz"));
+    let native = circnn::native::NativeModel::load(&model, &path, Some(12))?;
+    let ds = data::dataset(model.dataset).unwrap();
+    let (h, w, c) = model.input;
+    println!("loaded {} (native block-circulant engine, 12-bit)", path.display());
+
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    let t0 = Instant::now();
+    while done < count {
+        let n = batch.min(count - done);
+        let (xs, ys) = data::batch(&ds, done as u64, n, true);
+        let preds = native.classify(&xs, n, h, w, c);
+        correct += preds.iter().zip(&ys).filter(|(p, y)| *p == *y).count();
+        done += n;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "{done} images in {:.3}s -> {:.1} img/s, accuracy {:.2}% (manifest 12-bit: {:.2}%)",
+        dt.as_secs_f64(),
+        done as f64 / dt.as_secs_f64(),
+        100.0 * correct as f64 / done as f64,
+        100.0 * entry.accuracy.circulant_12bit
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model = flags
+        .get("model")
+        .cloned()
+        .unwrap_or_else(|| "mnist_mlp_1".to_string());
+    let requests = flag_usize(flags, "requests", 2048);
+    let clients = flag_usize(flags, "clients", 8);
+    let policy = BatchPolicy {
+        max_batch: flag_usize(flags, "max-batch", 64),
+        ..BatchPolicy::default()
+    };
+    let server = Server::start(ServerConfig {
+        policy,
+        use_pallas: flag_bool(flags, "pallas"),
+        ..ServerConfig::default()
+    })?;
+    let man = Manifest::load(Manifest::default_dir())?;
+    let ds = data::dataset(&man.model(&model)?.dataset).unwrap();
+
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let server = &server;
+            let model = &model;
+            scope.spawn(move || {
+                let per = requests / clients;
+                for i in 0..per {
+                    let (img, _) = data::sample(&ds, (c * per + i) as u64);
+                    match server.infer(model, &img) {
+                        Ok(_) | Err(circnn::coordinator::InferError::Rejected) => {}
+                        Err(e) => eprintln!("client {c}: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed();
+    println!("served {requests} requests from {clients} clients in {:.3}s", dt.as_secs_f64());
+    println!("throughput: {:.1} req/s", requests as f64 / dt.as_secs_f64());
+    println!("{}", server.metrics().summary());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_train_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let steps = flag_usize(flags, "steps", 50);
+    let man = Manifest::load(Manifest::default_dir())?;
+    let entry = man.model("mnist_mlp_1")?;
+    let tr = entry
+        .training
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("no training artifacts in manifest"))?;
+    let ds = data::dataset(&entry.dataset).unwrap();
+
+    let engine = Engine::cpu()?;
+    let init = engine.load(man.path_of(&tr.init_file))?;
+    let step = engine.load(man.path_of(&tr.step_file))?;
+    println!("training {} for {steps} steps (batch {})", entry.name, tr.batch);
+
+    let mut state = init.run(&[])?;
+    let t0 = Instant::now();
+    for s in 0..steps {
+        let (xs, ys) = data::batch(&ds, (s * tr.batch) as u64, tr.batch, false);
+        let x = literal_f32(&xs, &[tr.batch, 28, 28, 1])?;
+        let y = literal_i32(
+            &ys.iter().map(|&v| v as i32).collect::<Vec<_>>(),
+            &[tr.batch],
+        )?;
+        let mut args = std::mem::take(&mut state);
+        args.push(x);
+        args.push(y);
+        let mut out = step.run(&args)?;
+        let loss = out
+            .get(tr.loss_index)
+            .ok_or_else(|| anyhow::anyhow!("loss index out of range"))?
+            .to_vec::<f32>()?[0];
+        out.truncate(tr.loss_index); // keep params + opt state + t
+        state = out;
+        if s % 10 == 0 || s + 1 == steps {
+            println!("  step {s:4}  loss {loss:.4}");
+        }
+    }
+    println!("done in {:.2}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,501 @@
+//! Registry of the six Table-1 networks: architecture, block sizes, and the
+//! parameter / storage / operation accounting shared with the Python
+//! manifest (`python/compile/model.py` — the two sides must agree; pinned by
+//! `rust/tests/integration.rs` against `artifacts/manifest.json`).
+//!
+//! The accounting feeds everything downstream: Fig. 3 (storage reduction),
+//! Fig. 6 (equivalent GOPS normalization), and the FPGA simulator's workload
+//! description (FFT / multiply / IFFT counts per layer, exp T1/AB*).
+
+/// One layer of a registry model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    /// Block-circulant FC: n -> m with block size k.
+    BcDense { n: usize, m: usize, k: usize },
+    /// Uncompressed FC (classifier heads).
+    Dense { n: usize, m: usize },
+    /// Block-circulant CONV: c -> p channels, r x r kernel, block size k.
+    BcConv { c: usize, p: usize, r: usize, k: usize, same_pad: bool },
+    /// Uncompressed CONV (stem layers).
+    Conv { c: usize, p: usize, r: usize, same_pad: bool },
+    AvgPool2,
+    MaxPool2,
+    Flatten,
+    /// The paper's input-size reduction for the MNIST MLPs.
+    PriorPool { out_dim: usize },
+    ResidualBegin,
+    ResidualEnd,
+}
+
+/// A Table-1 model with its paper row.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub name: &'static str,
+    pub dataset: &'static str,
+    pub input: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+    /// serving batch (the paper's 50-100 interleaved pictures)
+    pub serve_batch: usize,
+    pub paper_accuracy: f64,
+    pub paper_kfps: f64,
+    pub paper_kfps_per_w: f64,
+}
+
+/// Per-layer accounting row (mirrors `model.accounting`).
+#[derive(Debug, Clone)]
+pub struct LayerAccount {
+    pub kind: &'static str,
+    pub k: usize,
+    pub dense_params: u64,
+    pub circ_params: u64,
+    pub dense_macs: u64,
+    pub circ_mults: u64,
+    /// FFT workload for the simulator: (q rFFTs, p*q*kh complex mults,
+    /// p IFFTs) per image under decoupling, times spatial positions for conv
+    pub fft_work: FftWork,
+}
+
+/// The decoupled FFT workload of one layer *per image* — the quantity the
+/// FPGA schedule simulates (exp T1, AB1, AB2).
+///
+/// Decoupling (the paper's pre-calculation of `FFT(x_j)` for re-use) means:
+/// * FC: q input FFTs + p output IFFTs (not p*q of each);
+/// * CONV: one FFT per input channel-block per *input pixel* — every pixel's
+///   spectrum is shared by all r^2 patch taps that touch it — plus one IFFT
+///   per output channel-block per output pixel.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FftWork {
+    pub k: usize,
+    /// input-block FFT transforms per image under decoupling
+    pub ffts_total: u64,
+    /// output-block IFFT transforms per image under decoupling
+    pub iffts_total: u64,
+    /// complex multiply-accumulate groups per image (each k/2+1 lanes under
+    /// the real-symmetry optimization, k lanes without)
+    pub mult_groups_total: u64,
+    /// transforms per image for the naive (non-decoupled) evaluation:
+    /// p*q per position for both FFT and IFFT
+    pub naive_transforms: u64,
+}
+
+fn log2(k: usize) -> u64 {
+    (usize::BITS - 1 - k.leading_zeros()) as u64
+}
+
+/// Real mults of one k-point FFT under the paper's cost model
+/// (matches `FftPlan::real_mults`).
+pub fn fft_real_mults(k: usize) -> u64 {
+    2 * k as u64 * log2(k).max(1)
+}
+
+impl Model {
+    /// Per-layer accounting (weight layers only).
+    pub fn accounting(&self) -> Vec<LayerAccount> {
+        let (mut h, mut w, _) = self.input;
+        let mut rows = Vec::new();
+        for layer in &self.layers {
+            match *layer {
+                Layer::PriorPool { out_dim } => {
+                    h = out_dim;
+                    w = 1;
+                }
+                Layer::AvgPool2 | Layer::MaxPool2 => {
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Conv { c, p, r, same_pad } => {
+                    let (oh, ow) = if same_pad { (h, w) } else { (h - r + 1, w - r + 1) };
+                    let dp = (r * r * c * p) as u64;
+                    rows.push(LayerAccount {
+                        kind: "conv",
+                        k: 0,
+                        dense_params: dp,
+                        circ_params: dp,
+                        dense_macs: (oh * ow) as u64 * dp,
+                        circ_mults: (oh * ow) as u64 * dp,
+                        fft_work: FftWork::default(),
+                    });
+                    h = oh;
+                    w = ow;
+                }
+                Layer::BcConv { c, p, r, k, same_pad } => {
+                    let (oh, ow) = if same_pad { (h, w) } else { (h - r + 1, w - r + 1) };
+                    let kh = (k / 2 + 1) as u64;
+                    let qb = ((c / k) * r * r) as u64;
+                    let pb = (p / k) as u64;
+                    let cb = (c / k) as u64;
+                    let dp = (r * r * c * p) as u64;
+                    let fm = fft_real_mults(k);
+                    // decoupled: each input pixel's channel-block spectrum is
+                    // computed once and re-used by every patch tap touching it
+                    let ffts_total = cb * (h * w) as u64;
+                    let iffts_total = pb * (oh * ow) as u64;
+                    let mult_groups_total = pb * qb * (oh * ow) as u64;
+                    rows.push(LayerAccount {
+                        kind: "bc_conv",
+                        k,
+                        dense_params: dp,
+                        circ_params: pb * qb * k as u64,
+                        dense_macs: (oh * ow) as u64 * dp,
+                        circ_mults: ffts_total * fm
+                            + mult_groups_total * kh * 4
+                            + iffts_total * fm,
+                        fft_work: FftWork {
+                            k,
+                            ffts_total,
+                            iffts_total,
+                            mult_groups_total,
+                            naive_transforms: pb * qb * (oh * ow) as u64,
+                        },
+                    });
+                    h = oh;
+                    w = ow;
+                }
+                Layer::Dense { n, m } => {
+                    let dp = (n * m) as u64;
+                    rows.push(LayerAccount {
+                        kind: "dense",
+                        k: 0,
+                        dense_params: dp,
+                        circ_params: dp,
+                        dense_macs: dp,
+                        circ_mults: dp,
+                        fft_work: FftWork::default(),
+                    });
+                }
+                Layer::BcDense { n, m, k } => {
+                    let kh = (k / 2 + 1) as u64;
+                    let (pb, qb) = ((m / k) as u64, (n / k) as u64);
+                    let dp = (n * m) as u64;
+                    let fm = fft_real_mults(k);
+                    rows.push(LayerAccount {
+                        kind: "bc_dense",
+                        k,
+                        dense_params: dp,
+                        circ_params: pb * qb * k as u64,
+                        dense_macs: dp,
+                        circ_mults: qb * fm + pb * qb * kh * 4 + pb * fm,
+                        fft_work: FftWork {
+                            k,
+                            ffts_total: qb,
+                            iffts_total: pb,
+                            mult_groups_total: pb * qb,
+                            naive_transforms: pb * qb,
+                        },
+                    });
+                }
+                Layer::Flatten | Layer::ResidualBegin | Layer::ResidualEnd => {}
+            }
+        }
+        rows
+    }
+
+    /// Fig.-3 storage reduction: dense f32 vs circulant `bits`-bit.
+    pub fn storage_report(&self, bits: u64) -> StorageReport {
+        let acc = self.accounting();
+        let dense_bytes: u64 = acc.iter().map(|r| r.dense_params).sum::<u64>() * 4;
+        let circ_bytes: u64 =
+            acc.iter().map(|r| r.circ_params).sum::<u64>() * bits / 8;
+        StorageReport {
+            dense_bytes,
+            circ_bytes,
+            reduction: dense_bytes as f64 / circ_bytes.max(1) as f64,
+        }
+    }
+
+    /// Dense-equivalent (mult+add) ops per image — the paper's
+    /// "equivalent GOPS" normalization basis.
+    pub fn equivalent_ops_per_image(&self) -> u64 {
+        2 * self.accounting().iter().map(|r| r.dense_macs).sum::<u64>()
+    }
+
+    /// Actual circulant real-mults per image (the simulated workload size).
+    pub fn circ_mults_per_image(&self) -> u64 {
+        self.accounting().iter().map(|r| r.circ_mults).sum()
+    }
+
+    /// Activation footprint per image in bytes (largest intermediate, f32) —
+    /// input to the batch-memory model.
+    pub fn peak_activation_bytes(&self) -> u64 {
+        let (mut h, mut w, mut c) = self.input;
+        let mut peak = h * w * c;
+        for layer in &self.layers {
+            match *layer {
+                Layer::PriorPool { out_dim } => {
+                    h = out_dim;
+                    w = 1;
+                    c = 1;
+                }
+                Layer::AvgPool2 | Layer::MaxPool2 => {
+                    h /= 2;
+                    w /= 2;
+                }
+                Layer::Conv { p, r, same_pad, .. } | Layer::BcConv { p, r, same_pad, .. } => {
+                    if !same_pad {
+                        h -= r - 1;
+                        w -= r - 1;
+                    }
+                    c = p;
+                }
+                Layer::Dense { m, .. } | Layer::BcDense { m, .. } => {
+                    h = m;
+                    w = 1;
+                    c = 1;
+                }
+                Layer::Flatten => {
+                    h *= w * c;
+                    w = 1;
+                    c = 1;
+                }
+                Layer::ResidualBegin | Layer::ResidualEnd => {}
+            }
+            peak = peak.max(h * w * c);
+        }
+        (peak * 4) as u64
+    }
+}
+
+/// Output of [`Model::storage_report`].
+#[derive(Debug, Clone, Copy)]
+pub struct StorageReport {
+    pub dense_bytes: u64,
+    pub circ_bytes: u64,
+    pub reduction: f64,
+}
+
+/// Build the registry (mirrors `model.REGISTRY`, same order).
+pub fn registry() -> Vec<Model> {
+    use Layer::*;
+    vec![
+        Model {
+            name: "mnist_mlp_1",
+            dataset: "mnist_s",
+            input: (28, 28, 1),
+            layers: vec![
+                PriorPool { out_dim: 256 },
+                Flatten,
+                BcDense { n: 256, m: 256, k: 128 },
+                Dense { n: 256, m: 10 },
+            ],
+            serve_batch: 64,
+            paper_accuracy: 92.9,
+            paper_kfps: 8.6e4,
+            paper_kfps_per_w: 1.57e5,
+        },
+        Model {
+            name: "mnist_mlp_2",
+            dataset: "mnist_s",
+            input: (28, 28, 1),
+            layers: vec![
+                PriorPool { out_dim: 128 },
+                Flatten,
+                BcDense { n: 128, m: 256, k: 64 },
+                BcDense { n: 256, m: 256, k: 64 },
+                Dense { n: 256, m: 10 },
+            ],
+            serve_batch: 64,
+            paper_accuracy: 95.6,
+            paper_kfps: 2.9e4,
+            paper_kfps_per_w: 5.2e4,
+        },
+        Model {
+            name: "mnist_lenet",
+            dataset: "mnist_s",
+            input: (28, 28, 1),
+            layers: vec![
+                Conv { c: 1, p: 8, r: 5, same_pad: false },
+                AvgPool2,
+                BcConv { c: 8, p: 16, r: 5, k: 4, same_pad: false },
+                AvgPool2,
+                Flatten,
+                BcDense { n: 256, m: 128, k: 64 },
+                Dense { n: 128, m: 10 },
+            ],
+            serve_batch: 64,
+            paper_accuracy: 99.0,
+            paper_kfps: 363.0,
+            paper_kfps_per_w: 659.5,
+        },
+        Model {
+            name: "svhn_cnn",
+            dataset: "svhn_s",
+            input: (32, 32, 3),
+            layers: vec![
+                Conv { c: 3, p: 16, r: 3, same_pad: true },
+                MaxPool2,
+                BcConv { c: 16, p: 32, r: 3, k: 8, same_pad: true },
+                MaxPool2,
+                BcConv { c: 32, p: 32, r: 3, k: 8, same_pad: true },
+                MaxPool2,
+                Flatten,
+                BcDense { n: 512, m: 128, k: 64 },
+                Dense { n: 128, m: 10 },
+            ],
+            serve_batch: 64,
+            paper_accuracy: 96.2,
+            paper_kfps: 384.9,
+            paper_kfps_per_w: 699.7,
+        },
+        Model {
+            name: "cifar_cnn",
+            dataset: "cifar_s",
+            input: (32, 32, 3),
+            layers: vec![
+                Conv { c: 3, p: 16, r: 3, same_pad: true },
+                MaxPool2,
+                BcConv { c: 16, p: 32, r: 3, k: 8, same_pad: true },
+                MaxPool2,
+                BcConv { c: 32, p: 32, r: 3, k: 8, same_pad: true },
+                MaxPool2,
+                Flatten,
+                BcDense { n: 512, m: 128, k: 64 },
+                Dense { n: 128, m: 10 },
+            ],
+            serve_batch: 64,
+            paper_accuracy: 80.3,
+            paper_kfps: 1383.0,
+            paper_kfps_per_w: 2514.0,
+        },
+        Model {
+            name: "cifar_wrn",
+            dataset: "cifar_s",
+            input: (32, 32, 3),
+            layers: vec![
+                Conv { c: 3, p: 32, r: 3, same_pad: true },
+                MaxPool2,
+                ResidualBegin,
+                BcConv { c: 32, p: 32, r: 3, k: 8, same_pad: true },
+                BcConv { c: 32, p: 32, r: 3, k: 8, same_pad: true },
+                ResidualEnd,
+                MaxPool2,
+                ResidualBegin,
+                BcConv { c: 32, p: 32, r: 3, k: 8, same_pad: true },
+                BcConv { c: 32, p: 32, r: 3, k: 8, same_pad: true },
+                ResidualEnd,
+                MaxPool2,
+                Flatten,
+                BcDense { n: 512, m: 256, k: 64 },
+                Dense { n: 256, m: 10 },
+            ],
+            serve_batch: 64,
+            paper_accuracy: 94.75,
+            paper_kfps: 13.95,
+            paper_kfps_per_w: 25.4,
+        },
+    ]
+}
+
+/// Look up a registry model by name.
+pub fn by_name(name: &str) -> Option<Model> {
+    registry().into_iter().find(|m| m.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_six_table1_models() {
+        let reg = registry();
+        assert_eq!(reg.len(), 6);
+        assert_eq!(reg[0].name, "mnist_mlp_1");
+        assert_eq!(reg[5].paper_accuracy, 94.75);
+    }
+
+    #[test]
+    fn storage_reduction_matches_python_values() {
+        // Pinned against the values `make artifacts` produced (manifest.json).
+        let expect = [
+            ("mnist_mlp_1", 59.07),
+            ("mnist_mlp_2", 65.72),
+            ("mnist_lenet", 35.84),
+            ("svhn_cnn", 48.38),
+            ("cifar_cnn", 48.38),
+            ("cifar_wrn", 45.28),
+        ];
+        for (name, red) in expect {
+            let got = by_name(name).unwrap().storage_report(12).reduction;
+            assert!(
+                (got - red).abs() / red < 0.01,
+                "{name}: reduction {got:.2} != {red}"
+            );
+        }
+    }
+
+    #[test]
+    fn circ_params_are_dense_over_k() {
+        for m in registry() {
+            for row in m.accounting() {
+                if row.k > 0 {
+                    assert_eq!(row.circ_params, row.dense_params / row.k as u64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn complexity_reduced_for_compressed_layers() {
+        for m in registry() {
+            for row in m.accounting() {
+                if row.k >= 8 {
+                    assert!(row.circ_mults < row.dense_macs, "{} {:?}", m.name, row);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decoupling_counts_fc() {
+        // mnist_mlp_1 bc layer: 256x256 k=128 -> p=q=2: 2 FFTs, 2 IFFTs,
+        // 4 mult groups (vs 4+4 FFT/IFFT without decoupling).
+        let m = by_name("mnist_mlp_1").unwrap();
+        let acc = m.accounting();
+        let fw = acc[0].fft_work;
+        assert_eq!(
+            (fw.ffts_total, fw.iffts_total, fw.mult_groups_total, fw.naive_transforms),
+            (2, 2, 4, 4)
+        );
+    }
+
+    #[test]
+    fn decoupling_counts_conv_reuse_input_ffts() {
+        // svhn_cnn layer "bc_conv 16->32 r3 k8 same" at 16x16: decoupled
+        // input FFTs = (C/k) * pixels = 2*256, far below the naive
+        // (P/k)*(C/k)*r^2 per output position = 72*256.
+        let m = by_name("svhn_cnn").unwrap();
+        let acc = m.accounting();
+        let fw = acc[1].fft_work; // first bc_conv (after the dense stem)
+        assert_eq!(fw.k, 8);
+        assert_eq!(fw.ffts_total, 2 * 256);
+        assert_eq!(fw.iffts_total, 4 * 256);
+        assert_eq!(fw.mult_groups_total, 72 * 256);
+        assert_eq!(fw.naive_transforms, 72 * 256);
+        assert!(fw.ffts_total < fw.naive_transforms / 10);
+    }
+
+    #[test]
+    fn whole_model_fits_on_chip() {
+        // Every Table-1 model at 12 bits fits the CyClone V's ~2MB BRAM.
+        for m in registry() {
+            let rep = m.storage_report(12);
+            assert!(rep.circ_bytes < 2 * 1024 * 1024, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn peak_activation_small_enough_for_batching() {
+        // Paper: intermediate results take several KB per picture, so a
+        // batch of 50-100 fits beside the model in BRAM.
+        for m in registry() {
+            let act = m.peak_activation_bytes();
+            assert!(act <= 128 * 1024, "{}: {act}", m.name);
+        }
+    }
+
+    #[test]
+    fn equivalent_ops_positive_and_ordered() {
+        let mlp = by_name("mnist_mlp_1").unwrap().equivalent_ops_per_image();
+        let wrn = by_name("cifar_wrn").unwrap().equivalent_ops_per_image();
+        assert!(mlp > 0 && wrn > mlp);
+    }
+}

@@ -1,0 +1,426 @@
+//! Native inference engine: the trained models executed by the pure-Rust
+//! block-circulant substrate — no PJRT, no XLA, no Python.
+//!
+//! This is the *functional twin* of the FPGA datapath the simulator
+//! (`crate::fpga`) costs: the same decoupled three-phase procedure
+//! (q rFFTs → half-spectrum multiply-accumulate → p IFFTs, spectra
+//! precomputed offline), the same 12-bit fake-quantized arithmetic, walking
+//! the same layer program. It loads the parameters the Python training
+//! pipeline wrote (`artifacts/params/*.npz` via [`crate::util::npz`]) and
+//! must agree with the AOT HLO artifacts executed through PJRT
+//! (`rust/tests/native_parity.rs`) — which pins that the simulator's cycle
+//! accounting walks a datapath that computes the right numbers.
+//!
+//! It also serves as a deployment path of its own: inference on targets
+//! where the 40 MB xla_extension runtime is unavailable (the paper's
+//! embedded setting), at O(n log n) cost and O(n) weight memory.
+
+pub mod staged;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::circulant::{dense, im2col, BlockCirculant};
+use crate::data;
+use crate::models::{Layer, Model};
+use crate::util::npz::{self, Array};
+
+/// The paper's datapath precision.
+pub const QUANT_BITS: u32 = 12;
+
+/// Activation tensor flowing through the program: `(batch, h, w, c)` when
+/// spatial, `(batch, d)` after flatten/FC (h=d, w=c=1 then).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub batch: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    fn per_image(&self) -> usize {
+        self.h * self.w * self.c
+    }
+}
+
+/// One executable layer with its (quantized) parameters baked in.
+enum Op {
+    /// spectra precomputed — the paper's offline FFT(w) step
+    BcDense { bc: BlockCirculant, bias: Vec<f32>, relu: bool },
+    Dense { w: Vec<f32>, n: usize, m: usize, bias: Vec<f32>, relu: bool },
+    BcConv { bc: BlockCirculant, bias: Vec<f32>, r: usize, k: usize, same: bool, relu: bool },
+    Conv { f: Vec<f32>, bias: Vec<f32>, c: usize, p: usize, r: usize, same: bool, relu: bool },
+    AvgPool2,
+    MaxPool2,
+    Flatten,
+    PriorPool { out_dim: usize },
+    ResidualBegin,
+    ResidualEnd,
+}
+
+/// A model compiled to the native substrate.
+pub struct NativeModel {
+    pub name: String,
+    ops: Vec<Op>,
+    quant_bits: Option<u32>,
+}
+
+/// Quantize a whole tensor in place (per-tensor max-abs symmetric grid),
+/// mirroring `layers.fake_quant` — a no-op when `bits` is `None`.
+fn maybe_quant(x: &mut [f32], bits: Option<u32>) {
+    if let Some(b) = bits {
+        crate::circulant::quant::fake_quant(x, b);
+    }
+}
+
+fn take<'a>(
+    params: &'a BTreeMap<String, Array>,
+    idx: usize,
+    field: &str,
+) -> anyhow::Result<&'a Array> {
+    let key = format!("L{idx:02}_{field}");
+    params
+        .get(&key)
+        .ok_or_else(|| anyhow!("parameter {key} missing from archive"))
+}
+
+impl NativeModel {
+    /// Compile `model` against a parameter archive (the `.npz` the Python
+    /// training pipeline wrote). `quant_bits = Some(12)` reproduces the
+    /// AOT artifacts' arithmetic; `None` runs float32.
+    pub fn load(
+        model: &Model,
+        params_path: impl AsRef<Path>,
+        quant_bits: Option<u32>,
+    ) -> anyhow::Result<Self> {
+        let params = npz::load_npz(&params_path)
+            .map_err(|e| anyhow!("{e}"))
+            .with_context(|| format!("loading {}", params_path.as_ref().display()))?;
+        Self::from_params(model, &params, quant_bits)
+    }
+
+    /// Compile from already-loaded arrays (testing hook).
+    pub fn from_params(
+        model: &Model,
+        params: &BTreeMap<String, Array>,
+        quant_bits: Option<u32>,
+    ) -> anyhow::Result<Self> {
+        let mut ops = Vec::with_capacity(model.layers.len());
+        for (i, layer) in model.layers.iter().enumerate() {
+            // activation convention of the registry (python model.py): every
+            // weight layer is relu except the classifier head (`Dense`) and
+            // a BC-conv feeding straight into a residual join.
+            let next_is_join = matches!(model.layers.get(i + 1), Some(Layer::ResidualEnd));
+            let op = match *layer {
+                Layer::BcDense { n, m, k } => {
+                    let w = take(params, i, "w")?;
+                    if w.shape != [m / k, n / k, k] {
+                        bail!("L{i:02}_w: shape {:?} != ({},{},{})", w.shape, m / k, n / k, k);
+                    }
+                    let mut wv = w.data.clone();
+                    maybe_quant(&mut wv, quant_bits);
+                    let mut bc = BlockCirculant::new(m / k, n / k, k, wv);
+                    bc.precompute();
+                    Op::BcDense { bc, bias: take(params, i, "b")?.data.clone(), relu: true }
+                }
+                Layer::Dense { n, m } => {
+                    let w = take(params, i, "w")?;
+                    if w.shape != [n, m] {
+                        bail!("L{i:02}_w: shape {:?} != ({n},{m})", w.shape);
+                    }
+                    let mut wv = w.data.clone();
+                    maybe_quant(&mut wv, quant_bits);
+                    // classifier heads carry no activation in the registry
+                    Op::Dense { w: wv, n, m, bias: take(params, i, "b")?.data.clone(), relu: false }
+                }
+                Layer::BcConv { c, p, r, k, same_pad } => {
+                    let w = take(params, i, "w")?;
+                    let (pb, qb) = (p / k, (c / k) * r * r);
+                    if w.shape != [pb, qb, k] {
+                        bail!("L{i:02}_w: shape {:?} != ({pb},{qb},{k})", w.shape);
+                    }
+                    let mut wv = w.data.clone();
+                    maybe_quant(&mut wv, quant_bits);
+                    let mut bc = BlockCirculant::new(pb, qb, k, wv);
+                    bc.precompute();
+                    Op::BcConv {
+                        bc,
+                        bias: take(params, i, "b")?.data.clone(),
+                        r,
+                        k,
+                        same: same_pad,
+                        relu: !next_is_join,
+                    }
+                }
+                Layer::Conv { c, p, r, same_pad } => {
+                    let w = take(params, i, "w")?;
+                    if w.shape != [r, r, c, p] {
+                        bail!("L{i:02}_w: shape {:?} != ({r},{r},{c},{p})", w.shape);
+                    }
+                    let mut f = w.data.clone();
+                    maybe_quant(&mut f, quant_bits);
+                    Op::Conv {
+                        f,
+                        bias: take(params, i, "b")?.data.clone(),
+                        c,
+                        p,
+                        r,
+                        same: same_pad,
+                        relu: !next_is_join,
+                    }
+                }
+                Layer::AvgPool2 => Op::AvgPool2,
+                Layer::MaxPool2 => Op::MaxPool2,
+                Layer::Flatten => Op::Flatten,
+                Layer::PriorPool { out_dim } => Op::PriorPool { out_dim },
+                Layer::ResidualBegin => Op::ResidualBegin,
+                Layer::ResidualEnd => Op::ResidualEnd,
+            };
+            ops.push(op);
+        }
+        Ok(Self { name: model.name.to_string(), ops, quant_bits })
+    }
+
+    /// Forward a batch of raw images `(batch, h, w, c)` to logits
+    /// `(batch, 10)`.
+    pub fn forward(&self, images: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
+        assert_eq!(images.len(), batch * h * w * c, "image buffer size");
+        let mut x = Tensor { batch, h, w, c, data: images.to_vec() };
+        let mut residuals: Vec<Tensor> = Vec::new();
+        for op in &self.ops {
+            x = self.step(op, x, &mut residuals);
+        }
+        debug_assert!(residuals.is_empty(), "unbalanced residual markers");
+        x.data
+    }
+
+    fn step(&self, op: &Op, mut x: Tensor, residuals: &mut Vec<Tensor>) -> Tensor {
+        match op {
+            Op::PriorPool { out_dim } => {
+                let per = x.per_image();
+                let mut out = Vec::with_capacity(x.batch * out_dim);
+                for b in 0..x.batch {
+                    out.extend(data::prior_pool(&x.data[b * per..(b + 1) * per], *out_dim));
+                }
+                Tensor { batch: x.batch, h: *out_dim, w: 1, c: 1, data: out }
+            }
+            Op::Flatten => {
+                let d = x.per_image();
+                Tensor { batch: x.batch, h: d, w: 1, c: 1, data: x.data }
+            }
+            Op::AvgPool2 | Op::MaxPool2 => {
+                let avg = matches!(op, Op::AvgPool2);
+                let (oh, ow) = (x.h / 2, x.w / 2);
+                let mut out = vec![0.0f32; x.batch * oh * ow * x.c];
+                for b in 0..x.batch {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            for ch in 0..x.c {
+                                let at = |dy: usize, dx: usize| {
+                                    x.data[((b * x.h + 2 * oy + dy) * x.w + 2 * ox + dx) * x.c + ch]
+                                };
+                                let (a, bb, cc, d) = (at(0, 0), at(0, 1), at(1, 0), at(1, 1));
+                                out[((b * oh + oy) * ow + ox) * x.c + ch] = if avg {
+                                    0.25 * (a + bb + cc + d)
+                                } else {
+                                    a.max(bb).max(cc).max(d)
+                                };
+                            }
+                        }
+                    }
+                }
+                Tensor { batch: x.batch, h: oh, w: ow, c: x.c, data: out }
+            }
+            Op::ResidualBegin => {
+                residuals.push(x.clone());
+                x
+            }
+            Op::ResidualEnd => {
+                let saved = residuals.pop().expect("residual_begin missing");
+                debug_assert_eq!(saved.data.len(), x.data.len());
+                for (v, s) in x.data.iter_mut().zip(&saved.data) {
+                    *v = (*v + s).max(0.0); // join + relu, as in model.apply
+                }
+                x
+            }
+            Op::BcDense { bc, bias, relu } => {
+                maybe_quant(&mut x.data, self.quant_bits);
+                let (n, m) = (bc.cols(), bc.rows());
+                debug_assert_eq!(x.per_image(), n);
+                let mut out = vec![0.0f32; x.batch * m];
+                bc.matmul(&x.data, x.batch, &mut out);
+                finish_rows(&mut out, bias, m, *relu);
+                Tensor { batch: x.batch, h: m, w: 1, c: 1, data: out }
+            }
+            Op::Dense { w, n, m, bias, relu } => {
+                maybe_quant(&mut x.data, self.quant_bits);
+                debug_assert_eq!(x.per_image(), *n);
+                let mut out = vec![0.0f32; x.batch * m];
+                // python convention: y = x @ W with W (n, m)
+                for b in 0..x.batch {
+                    let xi = &x.data[b * n..(b + 1) * n];
+                    let yo = &mut out[b * m..(b + 1) * m];
+                    for (i, &xv) in xi.iter().enumerate() {
+                        if xv == 0.0 {
+                            continue; // post-relu activations are sparse
+                        }
+                        let wr = &w[i * m..(i + 1) * m];
+                        for (y, &wv) in yo.iter_mut().zip(wr) {
+                            *y += xv * wv;
+                        }
+                    }
+                }
+                finish_rows(&mut out, bias, *m, *relu);
+                Tensor { batch: x.batch, h: *m, w: 1, c: 1, data: out }
+            }
+            Op::BcConv { bc, bias, r, k, same, relu } => {
+                maybe_quant(&mut x.data, self.quant_bits);
+                // The paper's CONV decoupling (§Perf: 2.3x on the CNN
+                // models): every *input pixel's* channel-block spectrum is
+                // computed once and shared by all r^2 filter taps that
+                // touch it, instead of re-FFT-ing the im2col replicas —
+                // exactly the FFT count the simulator's FftWork charges.
+                let p_out = bc.rows();
+                let per = x.per_image();
+                let plan = bc.plan().clone();
+                let kh = plan.half_bins();
+                let (kk, qc, pb) = (*k, x.c / *k, p_out / *k);
+                let mut out = Vec::new();
+                let (mut oh, mut ow) = (0, 0);
+                let mut scratch = vec![0.0f32; 2 * kk];
+                let mut xfr: Vec<f32> = Vec::new();
+                let mut xfi: Vec<f32> = Vec::new();
+                let (mut acc_r, mut acc_i) = (vec![0.0f32; kh], vec![0.0f32; kh]);
+                for b in 0..x.batch {
+                    let img = &x.data[b * per..(b + 1) * per];
+                    let padded;
+                    let (src, ih, iw): (&[f32], usize, usize) = if *same {
+                        let (p_, ph, pw) = im2col::pad_same(img, x.h, x.w, x.c, *r);
+                        padded = p_;
+                        (&padded, ph, pw)
+                    } else {
+                        (img, x.h, x.w)
+                    };
+                    (oh, ow) = (ih - r + 1, iw - r + 1);
+                    if out.is_empty() {
+                        out = vec![0.0f32; x.batch * oh * ow * p_out];
+                    }
+                    // phase 1: one rFFT per (input pixel, channel block)
+                    xfr.resize(ih * iw * qc * kh, 0.0);
+                    xfi.resize(ih * iw * qc * kh, 0.0);
+                    for pix in 0..ih * iw {
+                        for cb in 0..qc {
+                            let off = (pix * qc + cb) * kh;
+                            plan.rfft_halfspec(
+                                &src[pix * x.c + cb * kk..pix * x.c + (cb + 1) * kk],
+                                &mut xfr[off..off + kh],
+                                &mut xfi[off..off + kh],
+                                &mut scratch,
+                            );
+                        }
+                    }
+                    // phases 2+3: per-pixel spectral MAC + one IFFT per
+                    // (output pixel, output block).  (A row-major tap-outer
+                    // variant was tried and reverted: neutral on SVHN,
+                    // -19% on the WRN — §Perf iteration log.)
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let dst = ((b * oh + oy) * ow + ox) * p_out;
+                            for i in 0..pb {
+                                acc_r.fill(0.0);
+                                acc_i.fill(0.0);
+                                for cb in 0..qc {
+                                    for di in 0..*r {
+                                        for dj in 0..*r {
+                                            let j = (cb * r + di) * r + dj;
+                                            let (wr, wi) = bc.spectrum(i, j);
+                                            let pix = (oy + di) * iw + ox + dj;
+                                            let xo = (pix * qc + cb) * kh;
+                                            crate::circulant::fft::complex_mul_acc(
+                                                wr, wi,
+                                                &xfr[xo..xo + kh], &xfi[xo..xo + kh],
+                                                &mut acc_r, &mut acc_i,
+                                            );
+                                        }
+                                    }
+                                }
+                                plan.irfft_halfspec(
+                                    &acc_r, &acc_i,
+                                    &mut out[dst + i * kk..dst + (i + 1) * kk],
+                                    &mut scratch,
+                                );
+                            }
+                        }
+                    }
+                }
+                finish_rows(&mut out, bias, p_out, *relu);
+                Tensor { batch: x.batch, h: oh, w: ow, c: p_out, data: out }
+            }
+            Op::Conv { f, bias, c, p, r, same, relu } => {
+                maybe_quant(&mut x.data, self.quant_bits);
+                let per = x.per_image();
+                let mut out = Vec::new();
+                let (mut oh, mut ow) = (0, 0);
+                for b in 0..x.batch {
+                    let img = &x.data[b * per..(b + 1) * per];
+                    let (padded, ih, iw);
+                    let src: &[f32] = if *same {
+                        (padded, ih, iw) = im2col::pad_same(img, x.h, x.w, x.c, *r);
+                        &padded
+                    } else {
+                        (ih, iw) = (x.h, x.w);
+                        img
+                    };
+                    (oh, ow) = (ih - r + 1, iw - r + 1);
+                    if out.is_empty() {
+                        out = vec![0.0f32; x.batch * oh * ow * p];
+                    }
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let dst = ((b * oh + oy) * ow + ox) * p;
+                            for i in 0..*r {
+                                for j in 0..*r {
+                                    for ch in 0..*c {
+                                        let xv = src[((oy + i) * iw + ox + j) * c + ch];
+                                        if xv == 0.0 {
+                                            continue;
+                                        }
+                                        let fr = &f[((i * r + j) * c + ch) * p..][..*p];
+                                        for (y, &w) in out[dst..dst + p].iter_mut().zip(fr) {
+                                            *y += xv * w;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                finish_rows(&mut out, bias, *p, *relu);
+                Tensor { batch: x.batch, h: oh, w: ow, c: *p, data: out }
+            }
+        }
+    }
+
+    /// Classify a batch: forward + row-wise argmax.
+    pub fn classify(&self, images: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<u32> {
+        let logits = self.forward(images, batch, h, w, c);
+        let classes = logits.len() / batch;
+        crate::runtime::engine::argmax_rows(&logits, classes)
+    }
+}
+
+/// Add bias + optional relu over `(rows, m)`-shaped data.
+fn finish_rows(data: &mut [f32], bias: &[f32], m: usize, relu: bool) {
+    if !bias.is_empty() {
+        for row in data.chunks_mut(m) {
+            dense::add_bias(row, bias);
+        }
+    }
+    if relu {
+        dense::relu(data);
+    }
+}

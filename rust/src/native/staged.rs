@@ -1,0 +1,287 @@
+//! Three-phase staged execution of a block-circulant FC layer — the
+//! *functional* realization of the Fig.-4 schedule the cycle simulator
+//! (`crate::fpga::schedule`) costs.
+//!
+//! Where [`BlockCirculant::matvec`](crate::circulant::BlockCirculant::matvec)
+//! interleaves the phases per sample, this executor runs them the way the
+//! FPGA does — phase 1 (all input FFTs, whole batch), then phase 2 (all
+//! spectral multiply-accumulates), then phase 3 (all IFFTs + bias +
+//! activation) — and *counts* the transforms and multiply groups it
+//! performs.  The counters must equal the workload description the
+//! simulator charges cycles for ([`crate::models::FftWork`]): that equality
+//! (pinned in `rust/tests/native_parity.rs`) is the evidence that the
+//! regenerated Table-1 numbers cost exactly the work the datapath executes,
+//! no more, no less.
+
+use crate::circulant::fft::{complex_mul_acc, FftPlan};
+use crate::circulant::{dense, BlockCirculant};
+
+/// Work actually performed by a staged execution (per call, i.e. per batch).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCounters {
+    /// forward transforms of input blocks (phase 1)
+    pub ffts: u64,
+    /// half-spectrum complex multiply-accumulate groups (phase 2)
+    pub mult_groups: u64,
+    /// inverse transforms of output blocks (phase 3)
+    pub iffts: u64,
+}
+
+impl PhaseCounters {
+    /// Counters per image (the unit `models::FftWork` describes).
+    pub fn per_image(&self, batch: usize) -> PhaseCounters {
+        let b = batch as u64;
+        PhaseCounters {
+            ffts: self.ffts / b,
+            mult_groups: self.mult_groups / b,
+            iffts: self.iffts / b,
+        }
+    }
+}
+
+/// Staged (three-phase) batched `Y = X W^T + b` for a block-circulant
+/// layer.  Output is identical to `bc.matmul` + bias/activation; the
+/// difference is the schedule (and the returned counters).
+///
+/// `xs`: `(batch, q*k)` row-major; `out`: `(batch, p*k)`.
+pub fn bc_dense_staged(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) -> PhaseCounters {
+    let (p, q, k) = (bc.p, bc.q, bc.k);
+    let plan = FftPlan::new(k);
+    let kh = plan.half_bins();
+    assert_eq!(xs.len(), batch * q * k);
+    assert_eq!(out.len(), batch * p * k);
+    let mut counters = PhaseCounters::default();
+    let mut scratch = vec![0.0f32; 2 * k];
+
+    // ---- phase 1: FFT of every input block of every picture (q per image,
+    // the decoupled minimum — each spectrum is reused by all p block-rows)
+    let mut xr = vec![0.0f32; batch * q * kh];
+    let mut xi = vec![0.0f32; batch * q * kh];
+    for b in 0..batch {
+        for j in 0..q {
+            let src = &xs[(b * q + j) * k..(b * q + j + 1) * k];
+            let off = (b * q + j) * kh;
+            plan.rfft_halfspec(src, &mut xr[off..off + kh], &mut xi[off..off + kh], &mut scratch);
+            counters.ffts += 1;
+        }
+    }
+
+    // ---- phase 2: spectral multiply-accumulate, p*q groups per image
+    let mut acc_r = vec![0.0f32; batch * p * kh];
+    let mut acc_i = vec![0.0f32; batch * p * kh];
+    for b in 0..batch {
+        for i in 0..p {
+            let dst = (b * p + i) * kh;
+            for j in 0..q {
+                let (wr, wi) = spec_of(bc, i, j, kh);
+                let src = (b * q + j) * kh;
+                complex_mul_acc(
+                    &wr,
+                    &wi,
+                    &xr[src..src + kh],
+                    &xi[src..src + kh],
+                    &mut acc_r[dst..dst + kh],
+                    &mut acc_i[dst..dst + kh],
+                );
+                counters.mult_groups += 1;
+            }
+        }
+    }
+
+    // ---- phase 3: one IFFT per output block per image + bias + activation
+    for b in 0..batch {
+        for i in 0..p {
+            let src = (b * p + i) * kh;
+            let dst = (b * p + i) * k;
+            plan.irfft_halfspec(
+                &acc_r[src..src + kh],
+                &acc_i[src..src + kh],
+                &mut out[dst..dst + k],
+                &mut scratch,
+            );
+            counters.iffts += 1;
+        }
+        let row = &mut out[b * p * k..(b + 1) * p * k];
+        if !bias.is_empty() {
+            dense::add_bias(row, bias);
+        }
+        if relu {
+            dense::relu(row);
+        }
+    }
+    counters
+}
+
+/// The naive (non-decoupled) schedule of ablation AB1: FFT(x_j) is
+/// recomputed for every block-row and the IFFT sits inside the Σ_j loop —
+/// p·q forward and p·q inverse transforms.  Same output, more work; the
+/// counter difference *is* experiment AB1's workload claim.
+pub fn bc_dense_naive_schedule(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+) -> PhaseCounters {
+    let (p, q, k) = (bc.p, bc.q, bc.k);
+    let plan = FftPlan::new(k);
+    let kh = plan.half_bins();
+    let mut counters = PhaseCounters::default();
+    let mut scratch = vec![0.0f32; 2 * k];
+    let (mut fr, mut fi) = (vec![0.0f32; kh], vec![0.0f32; kh]);
+    let (mut mr, mut mi) = (vec![0.0f32; kh], vec![0.0f32; kh]);
+    let mut term = vec![0.0f32; k];
+    for b in 0..batch {
+        for i in 0..p {
+            let dst = (b * p + i) * k;
+            out[dst..dst + k].fill(0.0);
+            for j in 0..q {
+                // recompute FFT(x_j) — the waste decoupling removes
+                let src = &xs[(b * q + j) * k..(b * q + j + 1) * k];
+                plan.rfft_halfspec(src, &mut fr, &mut fi, &mut scratch);
+                counters.ffts += 1;
+                let (wr, wi) = spec_of(bc, i, j, kh);
+                mr.fill(0.0);
+                mi.fill(0.0);
+                complex_mul_acc(&wr, &wi, &fr, &fi, &mut mr, &mut mi);
+                counters.mult_groups += 1;
+                // IFFT inside the accumulation — q IFFTs per output block
+                plan.irfft_halfspec(&mr, &mi, &mut term, &mut scratch);
+                counters.iffts += 1;
+                for (o, t) in out[dst..dst + k].iter_mut().zip(&term) {
+                    *o += t;
+                }
+            }
+        }
+        let row = &mut out[b * p * k..(b + 1) * p * k];
+        if !bias.is_empty() {
+            dense::add_bias(row, bias);
+        }
+        if relu {
+            dense::relu(row);
+        }
+    }
+    counters
+}
+
+fn spec_of(bc: &BlockCirculant, i: usize, j: usize, kh: usize) -> (Vec<f32>, Vec<f32>) {
+    // recompute from the defining vector: the staged executor owns its own
+    // FFT plan and never borrows BlockCirculant's internal cache (which is
+    // private); cost is irrelevant here — the counters track the *datapath*
+    // work (phases 1-3), weight spectra are the paper's offline step
+    let plan = FftPlan::new(bc.k);
+    let mut scratch = vec![0.0f32; 2 * bc.k];
+    let (mut re, mut im) = (vec![0.0f32; kh], vec![0.0f32; kh]);
+    plan.rfft_halfspec(bc.block(i, j), &mut re, &mut im, &mut scratch);
+    (re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_all_close, forall};
+    use crate::util::rng::SplitMix;
+
+    fn random_case(r: &mut SplitMix) -> (BlockCirculant, usize, Vec<f32>, Vec<f32>) {
+        let p = 1 + r.below(3) as usize;
+        let q = 1 + r.below(3) as usize;
+        let k = 1usize << (1 + r.below(5));
+        let batch = 1 + r.below(4) as usize;
+        let mut bc = BlockCirculant::new(p, q, k, r.normal_vec(p * q * k));
+        bc.precompute();
+        let xs = r.normal_vec(batch * q * k);
+        let bias = r.normal_vec(p * k);
+        (bc, batch, xs, bias)
+    }
+
+    #[test]
+    fn prop_staged_matches_interleaved() {
+        forall(
+            "three-phase staged == per-sample interleaved",
+            |r| random_case(r),
+            |(bc, batch, xs, bias)| {
+                let m = bc.rows();
+                let mut staged = vec![0.0; batch * m];
+                bc_dense_staged(bc, xs, *batch, bias, true, &mut staged);
+                let mut plain = vec![0.0; batch * m];
+                bc.matmul(xs, *batch, &mut plain);
+                for row in 0..*batch {
+                    let r = &mut plain[row * m..(row + 1) * m];
+                    crate::circulant::dense::add_bias(r, bias);
+                    crate::circulant::dense::relu(r);
+                }
+                assert_all_close(&staged, &plain, 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_naive_schedule_same_numbers_more_work() {
+        forall(
+            "AB1: naive schedule computes the same layer with p*q transforms",
+            |r| random_case(r),
+            |(bc, batch, xs, bias)| {
+                let (p, q) = (bc.p as u64, bc.q as u64);
+                let m = bc.rows();
+                let mut a = vec![0.0; batch * m];
+                let ca = bc_dense_staged(bc, xs, *batch, bias, false, &mut a);
+                let mut b = vec![0.0; batch * m];
+                let cb = bc_dense_naive_schedule(bc, xs, *batch, bias, false, &mut b);
+                assert_all_close(&a, &b, 2e-3, 2e-3)?;
+                let ca1 = ca.per_image(*batch);
+                let cb1 = cb.per_image(*batch);
+                if ca1.ffts != q || ca1.iffts != p || ca1.mult_groups != p * q {
+                    return Err(format!("decoupled counters wrong: {ca1:?}"));
+                }
+                if cb1.ffts != p * q || cb1.iffts != p * q {
+                    return Err(format!("naive counters wrong: {cb1:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn counters_match_simulator_workload_for_fc_layers() {
+        // the cross-check that makes Table 1 trustworthy: the transforms
+        // the staged executor actually performs equal the per-layer FFT
+        // workload the cycle simulator charges (models::FftWork)
+        use crate::models::{self, Layer};
+        for model in models::registry() {
+            let accounting = model.accounting();
+            let mut acc_iter = accounting.iter();
+            for layer in &model.layers {
+                let Layer::BcDense { n, m, k } = *layer else { continue };
+                let row = acc_iter
+                    .by_ref()
+                    .find(|r| r.kind == "bc_dense")
+                    .expect("accounting row");
+                let mut rng = SplitMix::new(n as u64);
+                let mut bc = BlockCirculant::new(m / k, n / k, k, rng.normal_vec(m / k * (n / k) * k));
+                bc.precompute();
+                let xs = rng.normal_vec(n);
+                let mut out = vec![0.0; m];
+                let c = bc_dense_staged(&bc, &xs, 1, &[], false, &mut out);
+                assert_eq!(
+                    c.ffts, row.fft_work.ffts_total,
+                    "{}: executed FFTs != simulated FFTs",
+                    model.name
+                );
+                assert_eq!(c.iffts, row.fft_work.iffts_total, "{}: IFFTs", model.name);
+                assert_eq!(
+                    c.mult_groups, row.fft_work.mult_groups_total,
+                    "{}: multiply groups",
+                    model.name
+                );
+            }
+        }
+    }
+}

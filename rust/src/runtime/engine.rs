@@ -1,0 +1,166 @@
+//! PJRT execution engine: compile-once, execute-many.
+//!
+//! One compiled executable per model variant plays the role of one
+//! bitstream in the paper's reconfiguration story; the cache makes
+//! switching variants (the router's job) free after first use.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so an [`Engine`] is owned by a
+//! single thread; the coordinator gives it a dedicated executor thread and
+//! feeds it batches over a channel — which also mirrors the hardware: one
+//! FPGA, strictly serialized datapath.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context};
+
+/// A compiled HLO module ready to execute.
+pub struct LoadedModel {
+    pub path: PathBuf,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with literal inputs; returns the *untupled* outputs.
+    ///
+    /// All our artifacts are lowered with `return_tuple=True`, so the raw
+    /// result is a single tuple literal that we decompose.
+    pub fn run(&self, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffer"))?;
+        let lit = first.to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute and return the single (first) output, untupled.
+    pub fn run1(&self, args: &[xla::Literal]) -> anyhow::Result<xla::Literal> {
+        let mut outs = self.run(args)?;
+        if outs.is_empty() {
+            return Err(anyhow!("empty output tuple"));
+        }
+        Ok(outs.swap_remove(0))
+    }
+}
+
+/// PJRT CPU client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<PathBuf, Rc<LoadedModel>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine (the "FPGA" of the serving stack).
+    pub fn cpu() -> anyhow::Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&self, path: impl AsRef<Path>) -> anyhow::Result<Rc<LoadedModel>> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(hit) = self.cache.borrow().get(&path) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        let model = Rc::new(LoadedModel {
+            path: path.clone(),
+            exe,
+        });
+        self.cache.borrow_mut().insert(path, model.clone());
+        Ok(model)
+    }
+
+    /// Number of cached executables.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat buffer.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {shape:?} wants {n} values, got {}", data.len()));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Build an i32 literal of the given shape.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        return Err(anyhow!("shape {shape:?} wants {n} values, got {}", data.len()));
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Extract a literal's f32 payload.
+pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Row-wise argmax over a `(batch, classes)` logit buffer.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u32> {
+    logits
+        .chunks(classes)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as u32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_validation() {
+        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(literal_i32(&[7], &[]).is_ok());
+    }
+
+    #[test]
+    fn argmax_basic() {
+        let logits = [0.1, 0.9, 0.0, 1.0, 0.2, 0.3];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        assert_eq!(argmax_rows(&[0.5, 0.5], 2), vec![0]);
+    }
+
+    // Engine-level tests that need the PJRT runtime + artifacts live in
+    // rust/tests/runtime_roundtrip.rs.
+}

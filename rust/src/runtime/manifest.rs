@@ -1,0 +1,258 @@
+//! Artifact manifest: the contract between the Python AOT path and the
+//! Rust request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+
+/// One exported inference artifact (a batch-size variant of a model).
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub batch: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+}
+
+/// The exported training pipeline of a model (init + step HLO).
+#[derive(Debug, Clone)]
+pub struct TrainingEntry {
+    pub init_file: String,
+    pub step_file: String,
+    pub batch: usize,
+    pub param_names: Vec<String>,
+    /// index of the scalar loss in the train-step output tuple
+    pub loss_index: usize,
+}
+
+/// Measured accuracies for one model.
+#[derive(Debug, Clone, Copy)]
+pub struct Accuracy {
+    pub circulant_12bit: f64,
+    pub circulant_f32: f64,
+    pub dense_f32: f64,
+}
+
+/// Per-model manifest entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dataset: String,
+    pub input_shape: Vec<usize>,
+    pub serve_batch: usize,
+    pub accuracy: Accuracy,
+    pub paper_accuracy: f64,
+    pub paper_kfps: f64,
+    pub paper_kfps_per_w: f64,
+    pub storage_reduction: f64,
+    pub equivalent_ops_per_image: u64,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub artifacts_pallas: Vec<ArtifactEntry>,
+    pub training: Option<TrainingEntry>,
+}
+
+impl ModelEntry {
+    /// The artifact for a given batch size (exact match).
+    pub fn artifact_for_batch(&self, batch: usize) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.batch == batch)
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub quant_bits: u64,
+    pub models: Vec<ModelEntry>,
+    /// dataset name -> python-side checksum (bit-exactness contract)
+    pub dataset_checksums: HashMap<String, u64>,
+}
+
+fn parse_artifacts(v: &Json) -> anyhow::Result<Vec<ArtifactEntry>> {
+    let mut out = Vec::new();
+    for a in v.as_arr().ok_or_else(|| anyhow!("artifacts not an array"))? {
+        out.push(ArtifactEntry {
+            batch: a.require("batch")?.as_usize().ok_or_else(|| anyhow!("bad batch"))?,
+            file: a.require("file")?.as_str().unwrap_or_default().to_string(),
+            input_shape: a
+                .require("input_shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+            output_shape: a
+                .require("output_shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect(),
+        });
+    }
+    Ok(out)
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+
+        let mut dataset_checksums = HashMap::new();
+        if let Some(Json::Obj(fields)) = root.get("datasets").cloned() {
+            for (name, ds) in fields {
+                if let Some(cs) = ds.get("checksum").and_then(|c| c.as_str()) {
+                    dataset_checksums.insert(name, cs.parse::<u64>()?);
+                }
+            }
+        }
+
+        let mut models = Vec::new();
+        for m in root.require("models").map_err(|e| anyhow!("{e}"))?.as_arr().unwrap_or(&[]) {
+            let acc = m.require("accuracy").map_err(|e| anyhow!("{e}"))?;
+            let paper = m.require("paper").map_err(|e| anyhow!("{e}"))?;
+            let storage = m.require("storage").map_err(|e| anyhow!("{e}"))?;
+            let training = m.get("training").map(|t| -> anyhow::Result<TrainingEntry> {
+                Ok(TrainingEntry {
+                    init_file: t.require("init_file")?.as_str().unwrap_or_default().into(),
+                    step_file: t.require("step_file")?.as_str().unwrap_or_default().into(),
+                    batch: t.require("batch")?.as_usize().unwrap_or(64),
+                    param_names: t
+                        .require("param_names")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|x| x.as_str().map(String::from))
+                        .collect(),
+                    loss_index: t.require("loss_index")?.as_usize().unwrap_or(0),
+                })
+            });
+            models.push(ModelEntry {
+                name: m.require("name").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default().into(),
+                dataset: m.require("dataset").map_err(|e| anyhow!("{e}"))?.as_str().unwrap_or_default().into(),
+                input_shape: m
+                    .require("input_shape")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|x| x.as_usize())
+                    .collect(),
+                serve_batch: m.get("serve_batch").and_then(|x| x.as_usize()).unwrap_or(64),
+                accuracy: Accuracy {
+                    circulant_12bit: acc.get("circulant_12bit").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    circulant_f32: acc.get("circulant_f32").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                    dense_f32: acc.get("dense_f32").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                },
+                paper_accuracy: paper.get("accuracy").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                paper_kfps: paper.get("kfps").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                paper_kfps_per_w: paper.get("kfps_per_w").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                storage_reduction: storage.get("reduction").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                equivalent_ops_per_image: m
+                    .get("equivalent_ops_per_image")
+                    .and_then(|x| x.as_u64())
+                    .unwrap_or(0),
+                artifacts: parse_artifacts(m.require("artifacts").map_err(|e| anyhow!("{e}"))?)?,
+                artifacts_pallas: m
+                    .get("artifacts_pallas")
+                    .map(parse_artifacts)
+                    .transpose()?
+                    .unwrap_or_default(),
+                training: training.transpose()?,
+            });
+        }
+
+        Ok(Manifest {
+            dir,
+            quant_bits: root.get("quant_bits").and_then(|x| x.as_u64()).unwrap_or(12),
+            models,
+            dataset_checksums,
+        })
+    }
+
+    /// Model entry by name.
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Default artifacts directory: `$CIRCNN_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CIRCNN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    const MINIMAL: &str = r#"{
+      "version": 1, "quant_bits": 12,
+      "datasets": {"mnist_s": {"checksum": "12345"}},
+      "models": [{
+        "name": "m", "dataset": "mnist_s", "input_shape": [28, 28, 1],
+        "serve_batch": 64,
+        "accuracy": {"circulant_12bit": 0.9, "circulant_f32": 0.91, "dense_f32": 0.95},
+        "paper": {"accuracy": 92.9, "kfps": 86000.0, "kfps_per_w": 157000.0},
+        "storage": {"dense_bytes": 100, "circ_bytes": 2, "reduction": 50.0},
+        "equivalent_ops_per_image": 1000,
+        "artifacts": [{"batch": 1, "file": "m_b1.hlo.txt",
+                       "input_shape": [1,28,28,1], "output_shape": [1,10]}]
+      }]
+    }"#;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join(format!("circnn_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, MINIMAL);
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.quant_bits, 12);
+        assert_eq!(man.dataset_checksums["mnist_s"], 12345);
+        let m = man.model("m").unwrap();
+        assert_eq!(m.serve_batch, 64);
+        assert_eq!(m.artifact_for_batch(1).unwrap().file, "m_b1.hlo.txt");
+        assert!(m.artifact_for_batch(2).is_none());
+        assert!(m.training.is_none());
+        assert!((m.accuracy.dense_f32 - 0.95).abs() < 1e-12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_contextual_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn unknown_model_lookup_fails() {
+        let dir = std::env::temp_dir().join(format!("circnn_man2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_manifest(&dir, MINIMAL);
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.model("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,19 @@
+//! The PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! Rust request path.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (model metadata,
+//!   accuracies, accounting, artifact index, dataset checksums).
+//! * [`engine`] — the `xla` crate wrapper: `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → compile → execute, with an
+//!   executable cache (one compiled executable per model variant ≈ one
+//!   bitstream in the paper's reconfiguration story).
+//!
+//! HLO *text* is the interchange format: the image's xla_extension 0.5.1
+//! rejects jax≥0.5's 64-bit-id serialized protos, while the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::Manifest;

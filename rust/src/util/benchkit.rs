@@ -1,0 +1,182 @@
+//! Tiny benchmark harness for the `harness = false` bench targets.
+//!
+//! criterion is not in the offline dependency closure, so this provides the
+//! minimum viable equivalent: warmup, repeated timed runs, and a stats line
+//! (median / mean / p95 / std-dev) in a stable parseable format.  All
+//! `rust/benches/*.rs` targets use it.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    /// work items per iteration, for derived throughput (0 = no throughput)
+    pub items_per_iter: u64,
+}
+
+impl Measurement {
+    pub fn median_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 95.0)
+    }
+
+    pub fn stddev_ns(&self) -> f64 {
+        let mean = self.mean_ns();
+        let var = self
+            .samples_ns
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / self.samples_ns.len() as f64;
+        var.sqrt()
+    }
+
+    /// Items per second at the median sample.
+    pub fn throughput(&self) -> f64 {
+        if self.items_per_iter == 0 {
+            return 0.0;
+        }
+        self.items_per_iter as f64 / (self.median_ns() / 1e9)
+    }
+
+    /// Render the standard one-line report.
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "bench {:44} median {:>12}  mean {:>12}  p95 {:>12}  sd {:>10}",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p95_ns()),
+            fmt_ns(self.stddev_ns()),
+        );
+        if self.items_per_iter > 0 {
+            line.push_str(&format!("  thrpt {:>12.1}/s", self.throughput()));
+        }
+        line
+    }
+}
+
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner with warmup + fixed sample count.
+pub struct Bench {
+    warmup: Duration,
+    samples: usize,
+    min_iters_per_sample: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            samples: 20,
+            min_iters_per_sample: 1,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            samples: 10,
+            min_iters_per_sample: 1,
+        }
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.samples = n;
+        self
+    }
+
+    /// Time `f`, printing and returning the measurement.  `items` scales the
+    /// derived throughput (e.g. images per iteration).
+    pub fn run<R>(&self, name: &str, items: u64, mut f: impl FnMut() -> R) -> Measurement {
+        // warmup & calibration: find iters/sample so each sample >= ~1ms
+        let warm_start = Instant::now();
+        let mut calib_iters = 0u64;
+        while warm_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / calib_iters.max(1) as f64;
+        let iters = ((1_000_000.0 / per_iter).ceil() as u64)
+            .clamp(self.min_iters_per_sample, 1_000_000);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples_ns,
+            items_per_iter: items,
+        };
+        println!("{}", m.report());
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_and_stats() {
+        let m = Measurement {
+            name: "t".into(),
+            samples_ns: vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            items_per_iter: 2,
+        };
+        assert_eq!(m.median_ns(), 30.0);
+        assert_eq!(m.mean_ns(), 30.0);
+        assert!(m.stddev_ns() > 0.0);
+        assert!((m.throughput() - 2.0 / 30e-9).abs() / m.throughput() < 1e-9);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let b = Bench::quick().with_samples(3);
+        let m = b.run("noop-sum", 1, || (0..100u64).sum::<u64>());
+        assert!(m.median_ns() > 0.0);
+        assert_eq!(m.samples_ns.len(), 3);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2_000_000_000.0).ends_with('s'));
+    }
+}

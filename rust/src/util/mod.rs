@@ -1,0 +1,13 @@
+//! Utility substrates: JSON parsing, the shared PRNG, property-test and
+//! benchmark harness kits.
+//!
+//! These exist because the offline environment pins the dependency set to
+//! the `xla` crate's closure — no `serde_json`, `proptest` or `criterion` —
+//! so the substrates the rest of the crate needs are built from scratch
+//! here (per the reproduction brief: build every substrate you depend on).
+
+pub mod benchkit;
+pub mod json;
+pub mod npz;
+pub mod prop;
+pub mod rng;

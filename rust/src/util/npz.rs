@@ -1,0 +1,275 @@
+//! Minimal NPY/NPZ reader — just enough to load the trained parameter
+//! archives (`artifacts/params/*.npz`) into the native inference engine.
+//!
+//! Scope (matching what `numpy.savez` of f32 arrays produces): ZIP archives
+//! with *stored* (method 0) entries, each an NPY v1.x file of
+//! little-endian `<f4` data in C order.  Built from scratch because the
+//! offline dependency closure has no zip/ndarray crates (same rationale as
+//! `util::json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One loaded array: shape + row-major f32 data.
+#[derive(Debug, Clone)]
+pub struct Array {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Array {
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+/// Error type for archive parsing.
+#[derive(Debug, thiserror::Error)]
+#[error("npz: {0}")]
+pub struct NpzError(pub String);
+
+fn err(msg: impl Into<String>) -> NpzError {
+    NpzError(msg.into())
+}
+
+fn rd_u16(b: &[u8], off: usize) -> u64 {
+    u16::from_le_bytes([b[off], b[off + 1]]) as u64
+}
+
+fn rd_u32(b: &[u8], off: usize) -> u64 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]]) as u64
+}
+
+/// Parse a ZIP archive (stored entries only) into `name -> bytes`.
+pub fn unzip_stored(bytes: &[u8]) -> Result<BTreeMap<String, Vec<u8>>, NpzError> {
+    // find End Of Central Directory (EOCD): signature 0x06054b50, scanned
+    // backwards over the trailing comment space
+    if bytes.len() < 22 {
+        return Err(err("file too small for a zip archive"));
+    }
+    let mut eocd = None;
+    let lo = bytes.len().saturating_sub(22 + 65536);
+    for off in (lo..=bytes.len() - 22).rev() {
+        if bytes[off..off + 4] == [0x50, 0x4b, 0x05, 0x06] {
+            eocd = Some(off);
+            break;
+        }
+    }
+    let eocd = eocd.ok_or_else(|| err("no end-of-central-directory record"))?;
+    let entries = rd_u16(bytes, eocd + 10) as usize;
+    let mut cd = rd_u32(bytes, eocd + 16) as usize;
+
+    let mut out = BTreeMap::new();
+    for _ in 0..entries {
+        if bytes.len() < cd + 46 || bytes[cd..cd + 4] != [0x50, 0x4b, 0x01, 0x02] {
+            return Err(err("bad central-directory entry"));
+        }
+        let method = rd_u16(bytes, cd + 10);
+        let csize = rd_u32(bytes, cd + 20) as usize;
+        let usize_ = rd_u32(bytes, cd + 24) as usize;
+        let nlen = rd_u16(bytes, cd + 28) as usize;
+        let xlen = rd_u16(bytes, cd + 30) as usize;
+        let clen = rd_u16(bytes, cd + 32) as usize;
+        let lho = rd_u32(bytes, cd + 42) as usize;
+        let name = String::from_utf8_lossy(&bytes[cd + 46..cd + 46 + nlen]).into_owned();
+        if method != 0 {
+            return Err(err(format!(
+                "entry {name:?} uses compression method {method}; only stored (0) is supported \
+                 (numpy.savez writes stored entries)"
+            )));
+        }
+        if csize != usize_ {
+            return Err(err(format!("entry {name:?}: stored sizes disagree")));
+        }
+        // local header: skip its (possibly different) name/extra lengths
+        if bytes.len() < lho + 30 || bytes[lho..lho + 4] != [0x50, 0x4b, 0x03, 0x04] {
+            return Err(err(format!("entry {name:?}: bad local header")));
+        }
+        let lnlen = rd_u16(bytes, lho + 26) as usize;
+        let lxlen = rd_u16(bytes, lho + 28) as usize;
+        let start = lho + 30 + lnlen + lxlen;
+        if bytes.len() < start + csize {
+            return Err(err(format!("entry {name:?}: truncated data")));
+        }
+        out.insert(name, bytes[start..start + csize].to_vec());
+        cd += 46 + nlen + xlen + clen;
+    }
+    Ok(out)
+}
+
+/// Parse one NPY v1.x/2.x buffer of little-endian f32, C order.
+pub fn parse_npy(bytes: &[u8]) -> Result<Array, NpzError> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        return Err(err("bad npy magic"));
+    }
+    let major = bytes[6];
+    let (hlen, hstart) = match major {
+        1 => (rd_u16(bytes, 8) as usize, 10),
+        2 | 3 => (rd_u32(bytes, 8) as usize, 12),
+        v => return Err(err(format!("unsupported npy version {v}"))),
+    };
+    let header = std::str::from_utf8(&bytes[hstart..hstart + hlen])
+        .map_err(|_| err("non-utf8 npy header"))?;
+    if !header.contains("'descr': '<f4'") && !header.contains("'descr': \"<f4\"") {
+        return Err(err(format!("only <f4 supported, header: {}", header.trim())));
+    }
+    if header.contains("'fortran_order': True") {
+        return Err(err("fortran order not supported"));
+    }
+    // shape tuple: "'shape': (a, b, c)," — also handles "()" (scalar) and
+    // trailing comma in 1-tuples
+    let shape_src = header
+        .split("'shape':")
+        .nth(1)
+        .and_then(|s| s.split('(').nth(1))
+        .and_then(|s| s.split(')').next())
+        .ok_or_else(|| err("no shape in npy header"))?;
+    let shape: Vec<usize> = shape_src
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse().map_err(|_| err(format!("bad dim {t:?}"))))
+        .collect::<Result<_, _>>()?;
+    let count: usize = shape.iter().product();
+    let dstart = hstart + hlen;
+    if bytes.len() < dstart + 4 * count {
+        return Err(err(format!(
+            "npy payload truncated: want {} f32, have {} bytes",
+            count,
+            bytes.len() - dstart
+        )));
+    }
+    let data = bytes[dstart..dstart + 4 * count]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Array { shape, data })
+}
+
+/// Load a full `.npz` parameter archive: `entry name (sans .npy) -> Array`.
+pub fn load_npz(path: impl AsRef<Path>) -> Result<BTreeMap<String, Array>, NpzError> {
+    let bytes = std::fs::read(path.as_ref())
+        .map_err(|e| err(format!("reading {}: {e}", path.as_ref().display())))?;
+    let entries = unzip_stored(&bytes)?;
+    let mut out = BTreeMap::new();
+    for (name, data) in entries {
+        let key = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+        out.insert(key, parse_npy(&data)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a stored zip with one npy member.
+    fn tiny_npz(name: &str, npy: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let crc = 0u32; // we never verify crc
+        // local header
+        out.extend_from_slice(&[0x50, 0x4b, 0x03, 0x04]);
+        out.extend_from_slice(&[20, 0, 0, 0, 0, 0, 0, 0, 0, 0]); // ver,flags,method,time,date
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.extend_from_slice(npy);
+        let cd_start = out.len();
+        // central directory
+        out.extend_from_slice(&[0x50, 0x4b, 0x01, 0x02]);
+        out.extend_from_slice(&[20, 0, 20, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(&[0u8; 8]); // extra,comment,disk,int attrs
+        out.extend_from_slice(&0u32.to_le_bytes()); // ext attrs
+        out.extend_from_slice(&0u32.to_le_bytes()); // local header offset
+        out.extend_from_slice(name.as_bytes());
+        let cd_len = out.len() - cd_start;
+        // EOCD
+        out.extend_from_slice(&[0x50, 0x4b, 0x05, 0x06]);
+        out.extend_from_slice(&[0u8; 4]);
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.extend_from_slice(&(cd_len as u32).to_le_bytes());
+        out.extend_from_slice(&(cd_start as u32).to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes());
+        out
+    }
+
+    fn tiny_npy(shape: &str, vals: &[f32]) -> Vec<u8> {
+        let header = format!(
+            "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape}, }}"
+        );
+        let mut h = header.into_bytes();
+        while (10 + h.len()) % 64 != 0 {
+            h.push(b' ');
+        }
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend_from_slice(&(h.len() as u16).to_le_bytes());
+        out.extend_from_slice(&h);
+        for v in vals {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_tiny_archive() {
+        let npy = tiny_npy("(2, 3)", &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let zip = tiny_npz("w.npy", &npy);
+        let arrs = {
+            let entries = unzip_stored(&zip).unwrap();
+            let mut m = BTreeMap::new();
+            for (n, d) in entries {
+                m.insert(n, parse_npy(&d).unwrap());
+            }
+            m
+        };
+        let a = &arrs["w.npy"];
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn scalar_and_1d_shapes() {
+        let a = parse_npy(&tiny_npy("()", &[7.5])).unwrap();
+        assert!(a.shape.is_empty());
+        assert_eq!(a.data, vec![7.5]);
+        let b = parse_npy(&tiny_npy("(3,)", &[1.0, 2.0, 3.0])).unwrap();
+        assert_eq!(b.shape, vec![3]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_npy(b"not an npy").is_err());
+        assert!(unzip_stored(b"definitely not a zip archive, far too short to have an EOCD record anywhere inside it").is_err());
+        // truncated payload
+        let mut npy = tiny_npy("(4,)", &[1.0, 2.0]);
+        npy.truncate(npy.len());
+        assert!(parse_npy(&npy).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_load_if_present() {
+        let path = crate::runtime::Manifest::default_dir().join("params/mnist_mlp_1.npz");
+        if !path.exists() {
+            eprintln!("SKIP: {} missing", path.display());
+            return;
+        }
+        let arrs = load_npz(&path).unwrap();
+        // L02 = bc_dense 256->256 k=128: w (2, 2, 128), b (256,)
+        let w = &arrs["L02_w"];
+        assert_eq!(w.shape, vec![2, 2, 128]);
+        assert_eq!(arrs["L02_b"].shape, vec![256]);
+        assert!(w.data.iter().all(|v| v.is_finite()));
+    }
+}

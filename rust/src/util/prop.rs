@@ -1,0 +1,104 @@
+//! Mini property-testing harness (the offline environment has no proptest).
+//!
+//! Deterministic, seed-reported, shrinking-free: each property runs `cases`
+//! random inputs drawn through a [`SplitMix`](super::rng::SplitMix) PRNG; on
+//! failure the panic message carries the case index and seed so the exact
+//! input can be replayed by construction.
+
+use super::rng::SplitMix;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // CIRCNN_PROP_CASES / CIRCNN_PROP_SEED override for deeper sweeps
+        let cases = std::env::var("CIRCNN_PROP_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("CIRCNN_PROP_SEED")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0xC1CC_0DE5);
+        Self { cases, seed }
+    }
+}
+
+/// Run `prop` on `cases` inputs drawn by `gen`.  Panics (test failure) with
+/// the case number, seed and the property's message on the first violation.
+pub fn forall<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut SplitMix) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let cfg = Config::default();
+    for case in 0..cfg.cases {
+        let mut rng = SplitMix::new(cfg.seed.wrapping_add(case as u64));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name} failed on case {case}/{} (seed {}): {msg}\ninput: {input:?}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// Convenience: approximate float comparison for property bodies.
+pub fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs().max(a.abs())
+}
+
+/// Compare slices with tolerance; returns a useful message on mismatch.
+pub fn assert_all_close(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        if !close(x, y, rtol, atol) {
+            return Err(format!("index {i}: {x} vs {y} (|d|={})", (x - y).abs()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("u01 in range", |r| r.next_f32(), |&x| {
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-fails failed")]
+    fn forall_reports_failures() {
+        forall("always-fails", |r| r.next_u64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-7, 1e-5, 0.0));
+        assert!(!close(1.0, 1.1, 1e-5, 1e-5));
+        assert!(close(0.0, 1e-9, 0.0, 1e-8));
+    }
+
+    #[test]
+    fn assert_all_close_messages() {
+        assert!(assert_all_close(&[1.0], &[1.0, 2.0], 0.0, 0.0).is_err());
+        let e = assert_all_close(&[1.0, 2.0], &[1.0, 3.0], 1e-5, 1e-5).unwrap_err();
+        assert!(e.contains("index 1"));
+    }
+}

@@ -1,0 +1,165 @@
+//! splitmix64 PRNG — the *same* generator as `python/compile/data.py`.
+//!
+//! The Python side generates all synthetic data with closed-form per-element
+//! splitmix64 states; this module reproduces every value bit-for-bit (same
+//! u64 arithmetic, same top-24-bit→f32 mapping, same element order).  The
+//! cross-language contract is pinned by checksums in the artifact manifest
+//! and checked by `rust/tests/integration.rs`.
+
+/// The splitmix64 additive constant (golden-ratio increment).
+pub const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// splitmix64 finalizer.
+#[inline]
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Hash a tuple of small integers into a stream seed (order-sensitive);
+/// mirrors `data.combine`.
+pub fn combine(vals: &[u64]) -> u64 {
+    let mut h: u64 = 0x243F_6A88_85A3_08D3;
+    for &v in vals {
+        h = mix(h ^ v.wrapping_add(GAMMA));
+    }
+    h
+}
+
+/// Element `i` (0-based) of the u01 stream for `seed`; mirrors
+/// `data.u01_stream`.  The 24-bit mantissa path is exact in f32, so the
+/// Python and Rust values are identical bits.
+#[inline]
+pub fn u01_at(seed: u64, i: u64) -> f32 {
+    let state = seed.wrapping_add(GAMMA.wrapping_mul(i + 1));
+    ((mix(state) >> 40) as f32) / 16_777_216.0
+}
+
+/// Generate `n` u01 values for `seed` (the whole stream).
+pub fn u01_stream(seed: u64, n: usize) -> Vec<f32> {
+    (0..n as u64).map(|i| u01_at(seed, i)).collect()
+}
+
+/// A convenient sequential PRNG over the same core, for property tests and
+/// workload generators (NOT used for dataset generation, which must stay
+/// closed-form to match Python).
+#[derive(Debug, Clone)]
+pub struct SplitMix {
+    state: u64,
+}
+
+impl SplitMix {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(GAMMA);
+        mix(self.state)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) / 16_777_216.0
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        // multiply-shift bounded sampling; bias is negligible for test use
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Vector of standard-normal f32s.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mix_reference_values() {
+        // Cross-checked against the Python implementation (test_data.py uses
+        // the same hand-rolled big-int reference).
+        let z = mix(1234567u64.wrapping_add(GAMMA));
+        let py = {
+            let m = (1u128 << 64) - 1;
+            let mut zz: u128 = (1234567u128 + 0x9E37_79B9_7F4A_7C15u128) & m;
+            zz = ((zz ^ (zz >> 30)) * 0xBF58_476D_1CE4_E5B9) & m;
+            zz = ((zz ^ (zz >> 27)) * 0x94D0_49BB_1331_11EB) & m;
+            ((zz ^ (zz >> 31)) & m) as u64
+        };
+        assert_eq!(z, py);
+    }
+
+    #[test]
+    fn u01_in_range_and_deterministic() {
+        let v1 = u01_stream(42, 1000);
+        let v2 = u01_stream(42, 1000);
+        assert_eq!(v1, v2);
+        assert!(v1.iter().all(|&x| (0.0..1.0).contains(&x)));
+        let mean: f32 = v1.iter().sum::<f32>() / 1000.0;
+        assert!((mean - 0.5).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn stream_prefix_consistency() {
+        let a = u01_stream(7, 10);
+        let b = u01_stream(7, 100);
+        assert_eq!(a[..], b[..10]);
+    }
+
+    #[test]
+    fn combine_is_order_sensitive() {
+        assert_ne!(combine(&[1, 2]), combine(&[2, 1]));
+        assert_ne!(combine(&[1]), combine(&[1, 0]));
+    }
+
+    #[test]
+    fn sequential_distinct_from_closed_form_contract() {
+        // sequential SplitMix must agree with the closed form (same core)
+        let mut r = SplitMix::new(99);
+        for i in 0..5u64 {
+            let direct = mix(99u64.wrapping_add(GAMMA.wrapping_mul(i + 1)));
+            assert_eq!(r.next_u64(), direct);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix::new(1);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = SplitMix::new(3);
+        for _ in 0..1000 {
+            assert!(r.below(17) < 17);
+        }
+    }
+}

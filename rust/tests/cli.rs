@@ -1,0 +1,124 @@
+//! Launcher tests: drive the `circnn` binary as a subprocess the way a
+//! user would — every experiment subcommand, the simulator flags, and the
+//! error paths (unknown command/model, missing flags).
+
+use std::process::{Command, Output};
+
+fn circnn(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_circnn"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("spawn circnn")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn table1_prints_all_rows_and_headline() {
+    let out = circnn(&["table1"]);
+    assert!(out.status.success());
+    let text = stdout(&out);
+    for needle in [
+        "proposed_mnist_mlp_1",
+        "proposed_cifar_wrn",
+        "truenorth_mnist_99",
+        "finn_mnist",
+        "alemdar_mnist",
+        "headline ratios",
+    ] {
+        assert!(text.contains(needle), "table1 output missing {needle:?}");
+    }
+}
+
+#[test]
+fn fig3_fig6_analog_ablations_precision_render() {
+    for (cmd, needle) in [
+        ("fig3", "Dense(B)"),
+        ("fig6", "eq GOPS/W"),
+        ("analog", "isaac_isca16"),
+        ("ablations", "AB1_decoupling"),
+        ("precision", "matvec SNR"),
+    ] {
+        let out = circnn(&[cmd]);
+        assert!(out.status.success(), "{cmd} failed: {}", String::from_utf8_lossy(&out.stderr));
+        assert!(stdout(&out).contains(needle), "{cmd} output missing {needle:?}");
+    }
+}
+
+#[test]
+fn simulate_flags_change_the_design_point() {
+    let base = stdout(&circnn(&["simulate", "--model", "mnist_mlp_1"]));
+    assert!(base.contains("kFPS"));
+    let no_dec = stdout(&circnn(&["simulate", "--model", "mnist_mlp_1", "--no-decouple"]));
+    let kfps = |s: &str| -> f64 {
+        s.lines()
+            .find(|l| l.starts_with("kFPS "))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .expect("kFPS line")
+    };
+    assert!(kfps(&base) > kfps(&no_dec), "AB1 must cost throughput via the CLI too");
+}
+
+#[test]
+fn simulate_timeline_renders_fig4() {
+    let out = circnn(&["simulate", "--model", "mnist_lenet", "--timeline"]);
+    assert!(out.status.success());
+    let text = stdout(&out);
+    assert!(text.contains("cycles/batch"));
+    assert!(text.contains("M"), "multiply phase missing from timeline");
+}
+
+#[test]
+fn codesign_selects_a_feasible_point() {
+    let out = circnn(&["codesign", "--model", "mnist_mlp_1", "--min-accuracy", "0.95"]);
+    assert!(out.status.success());
+    let text = stdout(&out);
+    assert!(text.contains("<- selected"));
+    assert!(text.contains("accuracy >= 95.0%"));
+}
+
+#[test]
+fn models_lists_registry() {
+    let text = stdout(&circnn(&["models"]));
+    for name in ["mnist_mlp_1", "mnist_mlp_2", "mnist_lenet", "svhn_cnn", "cifar_cnn", "cifar_wrn"]
+    {
+        assert!(text.contains(name), "models output missing {name}");
+    }
+}
+
+#[test]
+fn error_paths_exit_nonzero_with_messages() {
+    let out = circnn(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+
+    let out = circnn(&["simulate", "--model", "resnet_9000"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown model"));
+
+    let out = circnn(&["help"]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("circnn"));
+}
+
+#[test]
+fn infer_native_runs_without_pjrt_server_path() {
+    // needs artifacts; skip quietly when absent
+    if !std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
+        .exists()
+    {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let out = circnn(&[
+        "infer", "--model", "mnist_mlp_1", "--engine", "native", "--count", "64",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = stdout(&out);
+    assert!(text.contains("native block-circulant engine"));
+    assert!(text.contains("accuracy"));
+}

@@ -1,0 +1,274 @@
+//! Coordinator-under-load tests: the full serving path (router → dynamic
+//! batcher → PJRT executor thread) driven by concurrent clients, plus the
+//! failure-injection cases (unknown model, bad shapes, backpressure,
+//! shutdown drain).
+//!
+//! Each test starts its own [`Server`] (its own PJRT client on a dedicated
+//! executor thread); a mutex serializes them so the process never compiles
+//! the same artifacts concurrently.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use circnn::coordinator::{BatchPolicy, InferError, Server, ServerConfig};
+use circnn::data;
+use circnn::runtime::Manifest;
+
+static SERVER_LOCK: Mutex<()> = Mutex::new(());
+
+fn have_artifacts() -> bool {
+    if Manifest::load(Manifest::default_dir()).is_ok() {
+        true
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        false
+    }
+}
+
+fn start(policy: BatchPolicy) -> Server {
+    Server::start(ServerConfig { policy, ..ServerConfig::default() })
+        .expect("server start")
+}
+
+const MODEL: &str = "mnist_mlp_1";
+
+#[test]
+fn single_request_roundtrip() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    let server = start(BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_millis(1),
+        max_queue: 1024,
+    });
+    let (img, _label) = data::sample(&data::MNIST_S, 0);
+    let resp = server.infer(MODEL, &img).expect("infer");
+    assert_eq!(resp.logits.len(), 10);
+    assert!(resp.logits.iter().all(|v| v.is_finite()));
+    assert_eq!(resp.label as usize, argmax(&resp.logits));
+    assert!(resp.batch_occupancy >= 1);
+    server.shutdown();
+}
+
+fn argmax(v: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[test]
+fn concurrent_clients_all_get_consistent_answers() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    let server = start(BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_millis(2),
+        max_queue: 8192,
+    });
+    const CLIENTS: usize = 8;
+    const PER: usize = 64;
+
+    // reference labels: one warmup pass through the same server
+    let mut want = Vec::new();
+    for i in 0..PER as u64 {
+        let (img, _) = data::sample(&data::MNIST_S, i);
+        want.push(server.infer(MODEL, &img).unwrap().label);
+    }
+
+    let mut got_all = vec![Vec::new(); CLIENTS];
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..CLIENTS {
+            let server = &server;
+            handles.push(scope.spawn(move || {
+                let mut got = Vec::with_capacity(PER);
+                for i in 0..PER as u64 {
+                    let (img, _) = data::sample(&data::MNIST_S, i);
+                    got.push(server.infer(MODEL, &img).expect("infer").label);
+                }
+                got
+            }));
+        }
+        for (c, h) in handles.into_iter().enumerate() {
+            got_all[c] = h.join().unwrap();
+        }
+    });
+    for (c, got) in got_all.iter().enumerate() {
+        assert_eq!(got, &want, "client {c} saw different labels — batching must not mix rows");
+    }
+
+    // metrics bookkeeping: every request accounted for
+    let m = server.metrics();
+    let responses = m.responses.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(responses as usize, PER + CLIENTS * PER);
+    let batches = m.batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(batches > 0);
+    assert!(m.mean_batch_size() >= 1.0);
+    assert!(m.mean_latency_us() > 0.0);
+    assert!(m.latency_percentile_us(99.0) >= m.latency_percentile_us(50.0));
+    server.shutdown();
+}
+
+#[test]
+fn full_batches_form_under_concurrency() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    let server = start(BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_millis(50),
+        max_queue: 8192,
+    });
+    // fire 256 async requests, then collect — the long deadline forces
+    // size-triggered batches
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    let mut pending = Vec::new();
+    for _ in 0..256 {
+        pending.push(server.infer_async(MODEL, &img).unwrap());
+    }
+    let mut max_occ = 0;
+    for rx in pending {
+        let resp = rx.recv().unwrap().unwrap();
+        max_occ = max_occ.max(resp.batch_occupancy);
+    }
+    assert_eq!(max_occ, 64, "paper's batch regime: full 64-image batches must form");
+    assert!(server.metrics().padding_fraction() < 0.5);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_model_and_bad_shape_are_rejected_at_the_router() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    let server = start(BatchPolicy::default());
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    match server.infer("resnet_152", &img) {
+        Err(InferError::Route(_)) => {}
+        other => panic!("unknown model must fail at routing, got {other:?}"),
+    }
+    match server.infer(MODEL, &img[..100]) {
+        Err(InferError::Route(_)) => {}
+        other => panic!("wrong image size must fail at routing, got {other:?}"),
+    }
+    // routing failures must not poison the server
+    assert!(server.infer(MODEL, &img).is_ok());
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_queue_is_full() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    // tiny admission queue + long deadline: flood with async pushes faster
+    // than one executor can drain
+    let server = start(BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_millis(200),
+        max_queue: 4,
+    });
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    let mut rejected = 0;
+    let mut accepted = Vec::new();
+    for _ in 0..512 {
+        match server.infer_async(MODEL, &img) {
+            Ok(rx) => accepted.push(rx),
+            Err(InferError::Rejected) => rejected += 1,
+            Err(e) => panic!("unexpected error {e}"),
+        }
+    }
+    assert!(rejected > 0, "flooding a max_queue=4 server must shed load");
+    // every accepted request still completes (bounded, not dropped)
+    for rx in accepted {
+        match rx.recv().unwrap() {
+            Ok(_) | Err(InferError::Rejected) => {}
+            Err(e) => panic!("accepted request failed: {e}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_inflight_requests() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    let server = start(BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_secs(5), // deadline won't fire; drain must
+        max_queue: 1024,
+    });
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    let pending: Vec<_> = (0..10)
+        .map(|_| server.infer_async(MODEL, &img).unwrap())
+        .collect();
+    server.shutdown(); // closes the channel; executor drains queued work
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("response channel must not be dropped");
+        assert!(resp.is_ok(), "queued request {i} lost during shutdown");
+    }
+}
+
+#[test]
+fn pallas_backed_serving_agrees_with_plain() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    let plain = start(BatchPolicy::default());
+    let mut labels_plain = Vec::new();
+    for i in 0..32u64 {
+        let (img, _) = data::sample(&data::MNIST_S, i);
+        labels_plain.push(plain.infer(MODEL, &img).unwrap().label);
+    }
+    plain.shutdown();
+
+    let pallas = Server::start(ServerConfig {
+        use_pallas: true,
+        ..ServerConfig::default()
+    })
+    .unwrap();
+    for (i, &want) in labels_plain.iter().enumerate() {
+        let (img, _) = data::sample(&data::MNIST_S, i as u64);
+        let got = pallas.infer(MODEL, &img).unwrap().label;
+        assert_eq!(got, want, "image {i}: pallas-served label diverged");
+    }
+    pallas.shutdown();
+}
+
+#[test]
+fn deadline_releases_partial_batch_under_light_load() {
+    let _g = SERVER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    if !have_artifacts() {
+        return;
+    }
+    let server = start(BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_millis(5),
+        max_queue: 1024,
+    });
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    let t0 = std::time::Instant::now();
+    let resp = server.infer(MODEL, &img).expect("single request");
+    assert!(resp.batch_occupancy < 64, "lone request must ride a partial batch");
+    assert!(
+        t0.elapsed() < Duration::from_secs(2),
+        "deadline-triggered release took {:?}",
+        t0.elapsed()
+    );
+    assert!(server.metrics().padding_fraction() > 0.9, "63/64 slots were padding");
+    server.shutdown();
+}

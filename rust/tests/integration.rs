@@ -1,0 +1,482 @@
+//! Cross-module integration tests: the experiment generators (T1, F3, F6,
+//! A1, S1, AB1-3) must reproduce the paper's *shape* — who wins, by roughly
+//! what factor — and the Python↔Rust contracts (manifest accounting, dataset
+//! checksums) must hold bit-for-bit.
+//!
+//! Tests that need `artifacts/manifest.json` skip with a notice when it is
+//! absent (run `make artifacts`); everything else runs standalone.
+
+use circnn::baselines::{analog as analog_corpus, dense_fpga, reference_fpga, truenorth};
+use circnn::data;
+use circnn::experiments::{ablations, analog, complexity, fig3, fig6, table1};
+use circnn::fpga::device::{self, CYCLONE_V, KINTEX_7};
+use circnn::fpga::memory::memory_report;
+use circnn::fpga::report::DesignReport;
+use circnn::fpga::schedule::{simulate, ScheduleConfig};
+use circnn::models;
+use circnn::runtime::Manifest;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// T1 — Table 1
+// ---------------------------------------------------------------------------
+
+#[test]
+fn table1_has_all_rows_of_the_paper() {
+    let rows = table1::rows(None);
+    assert_eq!(rows.iter().filter(|r| r.proposed).count(), 6, "6 proposed designs");
+    assert_eq!(
+        rows.iter().filter(|r| r.platform.contains("truenorth")).count(),
+        4,
+        "4 TrueNorth baseline rows"
+    );
+    assert_eq!(
+        rows.iter().filter(|r| r.platform.contains("ref fpga")).count(),
+        4,
+        "3 FINN rows + Alemdar"
+    );
+    for r in &rows {
+        assert!(r.kfps > 0.0 && r.kfps_per_w > 0.0, "{}: non-positive metric", r.name);
+        assert!((0.0..=1.0).contains(&r.accuracy), "{}: accuracy {}", r.name, r.accuracy);
+    }
+}
+
+#[test]
+fn table1_headline_ratios_hold() {
+    // the paper's abstract: >=152x speedup and >=71x energy efficiency vs
+    // TrueNorth, >=31x energy efficiency vs the best reference FPGA — all
+    // at matched accuracy.  The regenerated table must preserve the shape.
+    let rows = table1::rows(manifest().as_ref());
+    let h = table1::headline(&rows);
+    assert!(
+        h.speedup_vs_truenorth >= 152.0,
+        "speedup vs TrueNorth {:.0}x < paper's 152x",
+        h.speedup_vs_truenorth
+    );
+    assert!(
+        h.energy_gain_vs_truenorth >= 71.0,
+        "energy gain vs TrueNorth {:.0}x < paper's 71x",
+        h.energy_gain_vs_truenorth
+    );
+    assert!(
+        h.energy_gain_vs_reference_fpga >= 31.0,
+        "energy gain vs reference FPGA {:.0}x < paper's 31x",
+        h.energy_gain_vs_reference_fpga
+    );
+}
+
+#[test]
+fn truenorth_model_reproduces_published_rows() {
+    // Table 1's baseline rows are regenerated from the tick/core model, not
+    // transcribed; they must land on the published numbers.
+    let rows = truenorth::table1_rows();
+    let mnist_high = rows.iter().find(|r| r.dataset == "mnist_s" && r.accuracy > 0.98).unwrap();
+    assert!((mnist_high.kfps() - 1.0).abs() < 0.1, "MNIST 99% row is ~1.0 kFPS");
+    let svhn = rows.iter().find(|r| r.dataset == "svhn_s").unwrap();
+    assert!((svhn.kfps() - 2.53).abs() < 0.6, "SVHN row is ~2.53 kFPS, got {}", svhn.kfps());
+    let cifar = rows.iter().find(|r| r.dataset == "cifar_s").unwrap();
+    assert!((cifar.kfps() - 1.25).abs() < 0.3, "CIFAR row is ~1.25 kFPS");
+    // efficiency comes out of the first-principles power model; within 2x
+    // of the published 6.11 kFPS/W (same tolerance as the module's tests)
+    let eff = cifar.kfps_per_w();
+    assert!(
+        eff > 6.11 / 2.0 && eff < 6.11 * 2.0,
+        "CIFAR efficiency ~6.11 kFPS/W, got {eff:.2}"
+    );
+}
+
+#[test]
+fn reference_fpga_model_reproduces_finn_rows() {
+    let rows = reference_fpga::table1_rows();
+    let finn_mnist = rows.iter().find(|r| r.name.contains("finn") && r.dataset == "mnist_s");
+    let finn_mnist = finn_mnist.expect("FINN MNIST row present");
+    assert!(
+        (finn_mnist.kfps() - 12_300.0).abs() / 12_300.0 < 0.3,
+        "FINN MNIST ~1.23e4 kFPS, got {:.0}",
+        finn_mnist.kfps()
+    );
+    assert!(
+        (finn_mnist.kfps_per_w() - 1693.0).abs() / 1693.0 < 0.3,
+        "FINN MNIST ~1693 kFPS/W, got {:.0}",
+        finn_mnist.kfps_per_w()
+    );
+}
+
+#[test]
+fn table1_proposed_beats_dense_fpga_baseline() {
+    // the compression is the point: the same model without block-circulant
+    // structure must be slower and less efficient on the same device
+    for m in models::registry() {
+        let cfg = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+        let circ = DesignReport::build(&m, &CYCLONE_V, &cfg);
+        let dense = dense_fpga::dense_design(&m, &CYCLONE_V, &cfg);
+        assert!(
+            circ.kfps > dense.kfps,
+            "{}: circulant {:.1} kFPS not faster than dense {:.1}",
+            m.name,
+            circ.kfps,
+            dense.kfps
+        );
+        assert!(
+            circ.kfps_per_w > dense.kfps_per_w,
+            "{}: circulant must be more energy-efficient than dense",
+            m.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// F3 — Fig. 3 storage reduction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig3_reductions_are_significant_and_consistent() {
+    let bars = fig3::bars();
+    assert_eq!(bars.len(), 6);
+    for b in &bars {
+        assert!(b.circ_bytes < b.dense_bytes, "{}: no compression", b.model);
+        assert!(
+            b.reduction > 10.0,
+            "{}: total reduction {:.1}x too small for Fig. 3's shape",
+            b.model,
+            b.reduction
+        );
+        // total = params x quantization; quantization is 32/12
+        let quant_factor = b.reduction / b.param_reduction;
+        assert!(
+            (quant_factor - 32.0 / 12.0).abs() < 0.01,
+            "{}: quantization factor {:.3} != 32/12",
+            b.model,
+            quant_factor
+        );
+    }
+}
+
+#[test]
+fn fig3_matches_manifest_storage_accounting() {
+    let Some(man) = manifest() else { return };
+    for b in fig3::bars() {
+        let e = man.model(&b.model).expect("manifest entry");
+        assert!(
+            (e.storage_reduction - b.reduction).abs() / b.reduction < 1e-6,
+            "{}: Rust reduction {:.3} != Python manifest {:.3}",
+            b.model,
+            b.reduction,
+            e.storage_reduction
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// F6 — Fig. 6 GOPS vs GOPS/W
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fig6_proposed_dominates_reference_corpus() {
+    let pts = fig6::points();
+    assert!(pts.iter().filter(|p| p.proposed).count() >= 12, "6 models x 2 devices");
+    assert!(pts.iter().filter(|p| !p.proposed).count() >= 6, "reference corpus");
+    // every low-power (CyClone V) proposed point must sit above every
+    // reference point in efficiency — Fig. 6's visual shape
+    let best_ref = pts
+        .iter()
+        .filter(|p| !p.proposed)
+        .map(|p| p.gops_per_w)
+        .fold(0.0f64, f64::max);
+    for p in pts.iter().filter(|p| p.proposed && p.name.contains("cyclone")) {
+        assert!(
+            p.gops_per_w > best_ref,
+            "{}: {:.0} GOPS/W <= best reference {:.0}",
+            p.name,
+            p.gops_per_w,
+            best_ref
+        );
+    }
+    let gain = fig6::min_efficiency_gain();
+    assert!(
+        gain >= 5.0,
+        "minimum efficiency gain over the reference corpus collapsed: {gain:.1}x \
+         (the paper's >=31x-vs-FINN headline is asserted at matched accuracy in \
+         table1_headline_ratios_hold)"
+    );
+    // the flagship MLP design must reach the paper's TOPS/W class
+    let flagship = pts
+        .iter()
+        .find(|p| p.name == "proposed_mnist_mlp_1_cyclone_v_5cea9")
+        .unwrap();
+    assert!(
+        flagship.gops_per_w > 5140.0,
+        "flagship efficiency {:.0} GOPS/W below the paper's 5.14 TOPS/W claim",
+        flagship.gops_per_w
+    );
+}
+
+#[test]
+fn fig6_reference_corpus_in_published_envelope() {
+    // "typical (equivalent) energy efficiency range is from 7 GOPS/W to
+    // less than 1 TOPS/W" (related-work section; the corpus also carries
+    // the early CNP'09 point well below that band)
+    for p in fig6::points().iter().filter(|p| !p.proposed) {
+        assert!(
+            p.gops_per_w > 0.0 && p.gops_per_w < 1000.0,
+            "{}: {} GOPS/W outside the published <1 TOPS/W envelope",
+            p.name,
+            p.gops_per_w
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A1 — analog / emerging-device comparison
+// ---------------------------------------------------------------------------
+
+#[test]
+fn analog_comparison_shape_holds() {
+    let c = analog::compare();
+    // paper: ~5.14 TOPS/W; beats ISAAC (380.7), PipeLayer (142.9),
+    // Lu et al. (1040 GOPS/W)
+    assert!(
+        c.proposed_gops_per_w_cyclone > 1040.0,
+        "proposed {:.0} GOPS/W must beat the best analog point (1.04 TOPS/W)",
+        c.proposed_gops_per_w_cyclone
+    );
+    assert!(c.min_efficiency_gain > 1.0);
+    // paper: 11.6 ns/image CyClone V vs ~1 us analog -> ~2 orders
+    assert!(
+        c.min_latency_gain > 10.0,
+        "latency gain vs ~1us analog inference should be >10x, got {:.1}",
+        c.min_latency_gain
+    );
+    assert!(
+        c.proposed_ns_per_image_kintex < c.proposed_ns_per_image_cyclone,
+        "Kintex-7 must be faster than CyClone V"
+    );
+}
+
+#[test]
+fn analog_corpus_latency_model() {
+    for p in analog_corpus::ANALOG_CORPUS {
+        let lat = p.inference_latency_s();
+        assert!(
+            (1e-8..=1e-4).contains(&lat),
+            "{}: latency {lat}s outside the paper's ~100ns..1us ballpark",
+            p.name
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// S1 — O(n log n) vs O(n^2)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn complexity_sweep_crossover() {
+    // the measured speedup must grow with n and exceed 1 at large n — the
+    // asymptotic claim of the paper, measured, not assumed
+    let points = complexity::sweep(&[256, 1024, 4096], 64, 9);
+    assert_eq!(points.len(), 3);
+    let last = points.last().unwrap();
+    assert!(
+        last.speedup > 1.0,
+        "n=4096 k=64: circulant should beat dense, got {:.2}x",
+        last.speedup
+    );
+    assert!(
+        last.speedup > points[0].speedup,
+        "speedup must grow with n ({:.2} -> {:.2})",
+        points[0].speedup,
+        last.speedup
+    );
+    // op-count accounting: circ mults grow ~n log n, dense ~n^2
+    for p in &points {
+        assert!(p.circ_mults < p.dense_macs, "n={}: op accounting inverted", p.n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AB1-3 — ablations point the right way
+// ---------------------------------------------------------------------------
+
+#[test]
+fn ablations_all_optimizations_help() {
+    for m in models::registry() {
+        for row in ablations::ablate(&m) {
+            assert!(
+                row.retained <= 1.0 + 1e-9,
+                "{} / {}: disabling the optimization must not help (retained {:.3})",
+                row.model,
+                row.ablation,
+                row.retained
+            );
+        }
+    }
+    // decoupling is the big lever on FC-heavy models: MLP-1 must lose
+    // meaningful throughput without it
+    let mlp = models::by_name("mnist_mlp_1").unwrap();
+    let dec = ablations::ablate(&mlp)
+        .into_iter()
+        .find(|r| r.ablation.contains("decoupling"))
+        .unwrap();
+    assert!(
+        dec.retained < 0.9,
+        "AB1 on mnist_mlp_1: decoupling should matter, retained {:.3}",
+        dec.retained
+    );
+}
+
+// ---------------------------------------------------------------------------
+// FPGA memory / device claims
+// ---------------------------------------------------------------------------
+
+#[test]
+fn whole_model_fits_on_chip_at_design_point() {
+    // "the proposed FPGA-based implementation can accommodate the whole DNN
+    // model using on-chip block memory"
+    for m in models::registry() {
+        let cfg = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+        let rep = memory_report(&m, CYCLONE_V.bram_bytes, cfg.bits, cfg.batch, true, true);
+        assert!(
+            rep.fits,
+            "{}: {}B > {}B BRAM at batch {}",
+            m.name,
+            rep.total_bytes,
+            CYCLONE_V.bram_bytes,
+            cfg.batch
+        );
+        assert!(cfg.batch >= 1, "auto batch must be positive");
+    }
+}
+
+#[test]
+fn ab2_full_spectrum_costs_memory() {
+    for m in models::registry() {
+        let half = memory_report(&m, CYCLONE_V.bram_bytes, 12, 64, true, true);
+        let full = memory_report(&m, CYCLONE_V.bram_bytes, 12, 64, false, true);
+        assert!(
+            full.weight_bytes > half.weight_bytes,
+            "{}: full spectra must cost more weight memory",
+            m.name
+        );
+    }
+}
+
+#[test]
+fn device_registry() {
+    assert_eq!(device::by_name("cyclone_v").unwrap().name, CYCLONE_V.name);
+    assert_eq!(device::by_name("kintex7").unwrap().name, KINTEX_7.name);
+    assert!(device::by_name("virtex_9000").is_none());
+    assert!(KINTEX_7.peak_mults_per_s() > CYCLONE_V.peak_mults_per_s());
+    // 5CEA9 M10K ≈ 0.5 MiB, Kintex-7 16 Mb = 2 MiB (the paper's "more than
+    // 2MB" refers to the class; the devices' datasheet numbers are modeled)
+    assert!(CYCLONE_V.bram_bytes > 400 * 1024);
+    assert!(KINTEX_7.bram_bytes >= 2 * 1024 * 1024);
+}
+
+// ---------------------------------------------------------------------------
+// Python <-> Rust contracts (manifest-backed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn manifest_covers_registry_and_files_exist() {
+    let Some(man) = manifest() else { return };
+    assert_eq!(man.quant_bits, 12);
+    for m in models::registry() {
+        let e = man.model(m.name).expect("registry model present in manifest");
+        assert_eq!(e.dataset, m.dataset, "{}: dataset mismatch", m.name);
+        assert_eq!(e.serve_batch, m.serve_batch, "{}: serve batch", m.name);
+        assert!(!e.artifacts.is_empty(), "{}: no artifacts", m.name);
+        for a in &e.artifacts {
+            let path = man.path_of(&a.file);
+            assert!(path.exists(), "{}: missing artifact {}", m.name, path.display());
+            assert_eq!(a.input_shape[0], a.batch, "{}: batch dim mismatch", m.name);
+        }
+        // accounting agreement across the language boundary
+        assert_eq!(
+            e.equivalent_ops_per_image,
+            m.equivalent_ops_per_image(),
+            "{}: equivalent-ops accounting drifted between Python and Rust",
+            m.name
+        );
+        let rep = m.storage_report(man.quant_bits);
+        assert!(
+            (e.storage_reduction - rep.reduction).abs() / rep.reduction < 1e-6,
+            "{}: storage reduction {:.4} (py) vs {:.4} (rs)",
+            m.name,
+            e.storage_reduction,
+            rep.reduction
+        );
+    }
+}
+
+#[test]
+fn dataset_checksums_match_python() {
+    let Some(man) = manifest() else { return };
+    for (name, &py_sum) in &man.dataset_checksums {
+        let ds = data::dataset(name).expect("known dataset");
+        let rs_sum = data::checksum(&ds, 16);
+        assert_eq!(
+            rs_sum, py_sum,
+            "{name}: Rust generator diverged from Python (bit-exactness contract)"
+        );
+    }
+}
+
+#[test]
+fn manifest_accuracies_are_sane() {
+    let Some(man) = manifest() else { return };
+    for e in &man.models {
+        assert!(
+            e.accuracy.circulant_f32 > 0.5,
+            "{}: circulant f32 accuracy {:.3} — model did not train",
+            e.name,
+            e.accuracy.circulant_f32
+        );
+        assert!(
+            e.accuracy.circulant_12bit > e.accuracy.circulant_f32 - 0.05,
+            "{}: 12-bit quantization cost more than 5% accuracy",
+            e.name
+        );
+        // the paper's constraint: degradation vs dense within ~1-2%
+        assert!(
+            e.accuracy.dense_f32 - e.accuracy.circulant_f32 < 0.06,
+            "{}: circulant degradation vs dense too large ({:.3} vs {:.3})",
+            e.name,
+            e.accuracy.circulant_f32,
+            e.accuracy.dense_f32
+        );
+    }
+}
+
+#[test]
+fn simulate_reports_are_internally_consistent() {
+    for m in models::registry() {
+        for dev in [&CYCLONE_V, &KINTEX_7] {
+            let cfg = ScheduleConfig::auto_for(&m, dev);
+            let r = simulate(&m, dev, &cfg);
+            assert_eq!(
+                r.cycles_per_batch,
+                r.phase.total(),
+                "{}: phase breakdown must sum to total",
+                m.name
+            );
+            let rep = DesignReport::build(&m, dev, &cfg);
+            assert!((rep.kfps - r.kfps()).abs() / r.kfps() < 1e-9);
+            // equivalent GOPS uses the dense-op normalization
+            let expect_gops = m.equivalent_ops_per_image() as f64 * r.fps() / 1e9;
+            assert!(
+                (rep.equivalent_gops - expect_gops).abs() / expect_gops < 1e-9,
+                "{}: equivalent GOPS normalization drifted",
+                m.name
+            );
+        }
+    }
+}

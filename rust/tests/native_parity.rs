@@ -1,0 +1,150 @@
+//! Native-engine parity: the pure-Rust block-circulant substrate
+//! (`circnn::native`, no PJRT/XLA/Python) must compute the same function as
+//! the AOT HLO artifacts for every registry model — the claim that the
+//! FPGA simulator's cycle accounting walks a datapath that produces the
+//! right numbers.
+
+use std::sync::Mutex;
+
+use circnn::data;
+use circnn::models;
+use circnn::native::NativeModel;
+use circnn::runtime::engine::{argmax_rows, literal_f32, Engine};
+use circnn::runtime::Manifest;
+
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn params_path(man: &Manifest, name: &str) -> std::path::PathBuf {
+    man.dir.join("params").join(format!("{name}.npz"))
+}
+
+#[test]
+fn native_matches_pjrt_on_every_model() {
+    let _g = PJRT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(man) = manifest() else { return };
+    let engine = Engine::cpu().expect("PJRT");
+    for m in models::registry() {
+        let e = man.model(m.name).unwrap();
+        let a = e.artifact_for_batch(1).expect("b1 artifact");
+        let ds = data::dataset(&e.dataset).unwrap();
+        let native = NativeModel::load(&m, params_path(&man, m.name), Some(12))
+            .unwrap_or_else(|err| panic!("{}: native load failed: {err:#}", m.name));
+        let exe = engine.load(man.path_of(&a.file)).unwrap();
+        let (h, w, c) = m.input;
+        let mut label_matches = 0;
+        const N: u64 = 16;
+        for i in 0..N {
+            let (img, _) = data::sample(&ds, i);
+            let pjrt = exe
+                .run1(&[literal_f32(&img, &a.input_shape).unwrap()])
+                .unwrap()
+                .to_vec::<f32>()
+                .unwrap();
+            let nat = native.forward(&img, 1, h, w, c);
+            assert_eq!(nat.len(), pjrt.len(), "{}: logit arity", m.name);
+            for (t, (x, y)) in nat.iter().zip(&pjrt).enumerate() {
+                assert!(
+                    (x - y).abs() <= 2e-2 + 2e-2 * y.abs().max(x.abs()),
+                    "{}: image {i} logit {t}: native {x} vs pjrt {y}",
+                    m.name
+                );
+            }
+            if argmax_rows(&nat, nat.len())[0] == argmax_rows(&pjrt, pjrt.len())[0] {
+                label_matches += 1;
+            }
+        }
+        assert_eq!(label_matches, N, "{}: native/pjrt labels must agree", m.name);
+        println!("{}: native == pjrt on {N} images", m.name);
+    }
+}
+
+#[test]
+fn native_batch_equals_per_image() {
+    let Some(man) = manifest() else { return };
+    let m = models::by_name("mnist_mlp_1").unwrap();
+    let native = NativeModel::load(&m, params_path(&man, m.name), Some(12)).unwrap();
+    let ds = data::dataset(m.dataset).unwrap();
+    let (h, w, c) = m.input;
+    let (xs, _) = data::batch(&ds, 0, 8, true);
+    let batched = native.forward(&xs, 8, h, w, c);
+    let classes = batched.len() / 8;
+    for i in 0..8usize {
+        let (img, _) = data::sample(&ds, (data::TEST_INDEX_OFFSET as usize + i) as u64);
+        let single = native.forward(&img, 1, h, w, c);
+        // per-tensor activation quantization sees a different max over a
+        // batch than over one image, so allow grid-step noise but demand
+        // identical labels
+        for (t, (x, y)) in single.iter().zip(&batched[i * classes..]).enumerate() {
+            assert!(
+                (x - y).abs() <= 3e-2 + 3e-2 * y.abs().max(x.abs()),
+                "image {i} logit {t}: single {x} vs batched {y}"
+            );
+        }
+        assert_eq!(
+            argmax_rows(&single, classes)[0],
+            argmax_rows(&batched[i * classes..(i + 1) * classes], classes)[0]
+        );
+    }
+}
+
+#[test]
+fn native_accuracy_matches_manifest() {
+    let Some(man) = manifest() else { return };
+    for name in ["mnist_mlp_1", "svhn_cnn"] {
+        let m = models::by_name(name).unwrap();
+        let e = man.model(name).unwrap();
+        let native = NativeModel::load(&m, params_path(&man, name), Some(12)).unwrap();
+        let ds = data::dataset(m.dataset).unwrap();
+        let (h, w, c) = m.input;
+        let (xs, ys) = data::batch(&ds, 0, 256, true);
+        let labels = native.classify(&xs, 256, h, w, c);
+        let acc = labels.iter().zip(&ys).filter(|(a, b)| a == b).count() as f64 / 256.0;
+        let recorded = e.accuracy.circulant_12bit;
+        assert!(
+            (acc - recorded).abs() < 0.08,
+            "{name}: native accuracy {acc:.3} vs manifest 12-bit {recorded:.3}"
+        );
+        println!("{name}: native accuracy {acc:.3} (manifest {recorded:.3})");
+    }
+}
+
+#[test]
+fn native_f32_vs_quantized_degradation_is_small() {
+    let Some(man) = manifest() else { return };
+    let m = models::by_name("mnist_mlp_1").unwrap();
+    let path = params_path(&man, m.name);
+    let q12 = NativeModel::load(&m, &path, Some(12)).unwrap();
+    let f32_ = NativeModel::load(&m, &path, None).unwrap();
+    let ds = data::dataset(m.dataset).unwrap();
+    let (h, w, c) = m.input;
+    let (xs, ys) = data::batch(&ds, 0, 256, true);
+    let acc = |labels: Vec<u32>| labels.iter().zip(&ys).filter(|(a, b)| a == b).count();
+    let a12 = acc(q12.classify(&xs, 256, h, w, c));
+    let af = acc(f32_.classify(&xs, 256, h, w, c));
+    assert!(
+        (af as i64 - a12 as i64).abs() <= 256 * 5 / 100,
+        "12-bit quantization cost more than 5% accuracy ({af} vs {a12} / 256)"
+    );
+}
+
+#[test]
+fn native_load_failure_modes() {
+    let Some(man) = manifest() else { return };
+    let m = models::by_name("mnist_mlp_1").unwrap();
+    // missing archive
+    assert!(NativeModel::load(&m, man.dir.join("params/nope.npz"), Some(12)).is_err());
+    // wrong model's parameters (shape mismatch caught at load, not at run)
+    let lenet = models::by_name("mnist_lenet").unwrap();
+    let err = NativeModel::load(&lenet, params_path(&man, "mnist_mlp_1"), Some(12));
+    assert!(err.is_err(), "mismatched archive must be rejected at load time");
+}

@@ -1,0 +1,651 @@
+//! Property-based tests on the paper's core invariants (DESIGN.md §6 S1 +
+//! coordinator invariants), run through the from-scratch harness in
+//! `circnn::util::prop` (the offline closure has no proptest).
+//!
+//! Everything here is pure logic — no PJRT, no artifacts — so this target
+//! runs in milliseconds and catches algebra regressions before the heavier
+//! integration targets even compile their HLO.
+
+use std::time::{Duration, Instant};
+
+use circnn::circulant::fft::{complex_mul_acc, FftPlan};
+use circnn::circulant::{dense, im2col, quant, BlockCirculant};
+use circnn::coordinator::batcher::{BatchPolicy, BatchQueue, PushOutcome};
+use circnn::data;
+use circnn::fpga::device::CYCLONE_V;
+use circnn::fpga::schedule::{simulate, ScheduleConfig};
+use circnn::models;
+use circnn::util::json::Json;
+use circnn::util::prop::{assert_all_close, close, forall};
+use circnn::util::rng::SplitMix;
+
+// ---------------------------------------------------------------------------
+// block-circulant algebra (Eqn. 1)
+// ---------------------------------------------------------------------------
+
+fn random_bc(rng: &mut SplitMix) -> BlockCirculant {
+    let p = 1 + rng.below(4) as usize;
+    let q = 1 + rng.below(4) as usize;
+    let k = 1usize << (1 + rng.below(6)); // 2..64
+    let w = rng.normal_vec(p * q * k);
+    let mut bc = BlockCirculant::new(p, q, k, w);
+    bc.precompute();
+    bc
+}
+
+#[test]
+fn prop_fft_matvec_matches_naive() {
+    forall(
+        "decoupled FFT matvec == explicit circulant matvec",
+        |r| {
+            let bc = random_bc(r);
+            let x = r.normal_vec(bc.cols());
+            (bc, x)
+        },
+        |(bc, x)| {
+            let mut fast = vec![0.0; bc.rows()];
+            let mut slow = vec![0.0; bc.rows()];
+            bc.matvec(x, &mut fast);
+            bc.matvec_naive(x, &mut slow);
+            assert_all_close(&fast, &slow, 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_matvec_matches_dense_reconstruction() {
+    forall(
+        "W x through to_dense() == FFT path",
+        |r| {
+            let bc = random_bc(r);
+            let x = r.normal_vec(bc.cols());
+            (bc, x)
+        },
+        |(bc, x)| {
+            let w = bc.to_dense();
+            let (m, n) = (bc.rows(), bc.cols());
+            let mut via_dense = vec![0.0; m];
+            dense::matvec(&w, m, n, x, &mut via_dense);
+            let mut fast = vec![0.0; m];
+            bc.matvec(x, &mut fast);
+            assert_all_close(&fast, &via_dense, 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_matvec_linearity() {
+    forall(
+        "W(ax + by) == a Wx + b Wy",
+        |r| {
+            let bc = random_bc(r);
+            let x = r.normal_vec(bc.cols());
+            let y = r.normal_vec(bc.cols());
+            let (a, b) = (r.next_f32() * 4.0 - 2.0, r.next_f32() * 4.0 - 2.0);
+            (bc, x, y, a, b)
+        },
+        |(bc, x, y, a, b)| {
+            let m = bc.rows();
+            let mixed: Vec<f32> = x.iter().zip(y).map(|(u, v)| a * u + b * v).collect();
+            let mut lhs = vec![0.0; m];
+            bc.matvec(&mixed, &mut lhs);
+            let (mut wx, mut wy) = (vec![0.0; m], vec![0.0; m]);
+            bc.matvec(x, &mut wx);
+            bc.matvec(y, &mut wy);
+            let rhs: Vec<f32> = wx.iter().zip(&wy).map(|(u, v)| a * u + b * v).collect();
+            assert_all_close(&lhs, &rhs, 2e-3, 2e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_single_block_is_cyclic_convolution() {
+    // the circulant convolution theorem the whole paper rests on:
+    // C(w) x == cyclic_conv(w, x) for first-COLUMN-generated C
+    forall(
+        "1x1 block == cyclic convolution",
+        |r| {
+            let k = 1usize << (1 + r.below(7));
+            (k, r.normal_vec(k), r.normal_vec(k))
+        },
+        |(k, w, x)| {
+            let k = *k;
+            let mut bc = BlockCirculant::new(1, 1, k, w.clone());
+            bc.precompute();
+            let mut got = vec![0.0; k];
+            bc.matvec(x, &mut got);
+            // direct cyclic convolution sum_c w[(r - c) mod k] * x[c]
+            let mut want = vec![0.0f32; k];
+            for (r_i, slot) in want.iter_mut().enumerate() {
+                for c in 0..k {
+                    *slot += w[(r_i + k - c) % k] * x[c];
+                }
+            }
+            assert_all_close(&got, &want, 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_param_count_is_o_n() {
+    forall(
+        "storage O(n): pqk floats vs pk*qk dense",
+        |r| random_bc(r),
+        |bc| {
+            if bc.param_count() != bc.p * bc.q * bc.k {
+                return Err(format!("param_count {} != pqk", bc.param_count()));
+            }
+            if bc.param_count() * bc.k != bc.rows() * bc.cols() {
+                return Err("dense/circ ratio must be exactly k".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batched_matmul_matches_per_row_matvec() {
+    forall(
+        "matmul == stacked matvec",
+        |r| {
+            let bc = random_bc(r);
+            let batch = 1 + r.below(5) as usize;
+            let xs = r.normal_vec(batch * bc.cols());
+            (bc, batch, xs)
+        },
+        |(bc, batch, xs)| {
+            let (n, m) = (bc.cols(), bc.rows());
+            let mut all = vec![0.0; batch * m];
+            bc.matmul(xs, *batch, &mut all);
+            for b in 0..*batch {
+                let mut one = vec![0.0; m];
+                bc.matvec(&xs[b * n..(b + 1) * n], &mut one);
+                assert_all_close(&all[b * m..(b + 1) * m], &one, 1e-6, 1e-6)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// FFT plan details used by the decoupling argument
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_rfft_equals_full_fft_prefix() {
+    forall(
+        "rfft half-spectrum == full FFT bins 0..k/2",
+        |r| {
+            let k = 1usize << (1 + r.below(7));
+            (k, r.normal_vec(k))
+        },
+        |(k, x)| {
+            let plan = FftPlan::new(*k);
+            let kh = plan.half_bins();
+            let mut scratch = vec![0.0; 2 * k];
+            let (mut hr, mut hi) = (vec![0.0; kh], vec![0.0; kh]);
+            plan.rfft_halfspec(x, &mut hr, &mut hi, &mut scratch);
+            let (mut fr, mut fi) = (x.clone(), vec![0.0; *k]);
+            plan.fft(&mut fr, &mut fi);
+            assert_all_close(&hr, &fr[..kh], 1e-4, 1e-4)?;
+            assert_all_close(&hi, &fi[..kh], 1e-4, 1e-4)
+        },
+    );
+}
+
+#[test]
+fn prop_real_spectrum_hermitian_symmetry() {
+    // the paper's §hardware-optimization: FFT of a real vector is conjugate
+    // symmetric, so bins k/2+1.. are redundant
+    forall(
+        "FFT(real x) conjugate-symmetric",
+        |r| {
+            let k = 1usize << (2 + r.below(6));
+            (k, r.normal_vec(k))
+        },
+        |(k, x)| {
+            let plan = FftPlan::new(*k);
+            let (mut re, mut im) = (x.clone(), vec![0.0; *k]);
+            plan.fft(&mut re, &mut im);
+            for t in 1..*k / 2 {
+                if !close(re[t], re[k - t], 1e-3, 1e-3) || !close(im[t], -im[k - t], 1e-3, 1e-3) {
+                    return Err(format!("bin {t} not conjugate of bin {}", k - t));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_complex_mul_acc_is_complex_product() {
+    forall(
+        "complex_mul_acc == (a+bi)(c+di) accumulation",
+        |r| {
+            let n = 1 + r.below(32) as usize;
+            (
+                r.normal_vec(n),
+                r.normal_vec(n),
+                r.normal_vec(n),
+                r.normal_vec(n),
+                r.normal_vec(n),
+                r.normal_vec(n),
+            )
+        },
+        |(ar, ai, br, bi, r0, i0)| {
+            let (mut acc_r, mut acc_i) = (r0.clone(), i0.clone());
+            complex_mul_acc(ar, ai, br, bi, &mut acc_r, &mut acc_i);
+            for t in 0..ar.len() {
+                let er = r0[t] + ar[t] * br[t] - ai[t] * bi[t];
+                let ei = i0[t] + ar[t] * bi[t] + ai[t] * br[t];
+                if !close(acc_r[t], er, 1e-4, 1e-4) || !close(acc_i[t], ei, 1e-4, 1e-4) {
+                    return Err(format!("lane {t} wrong"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// quantization (the 12-bit precision column of Table 1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_quant_roundtrip_error_bounded() {
+    forall(
+        "12-bit quant error <= half step",
+        |r| {
+            let n = 1 + r.below(256) as usize;
+            let bits = 4 + r.below(12) as u32;
+            (r.normal_vec(n), bits)
+        },
+        |(x, bits)| {
+            let q = quant::Quantized::encode(x, *bits);
+            let back = q.decode();
+            // symmetric signed grid: step = max|x| / (2^(bits-1) - 1)
+            let amax = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let step = amax / ((1u64 << (*bits - 1)) - 1) as f32;
+            for (i, (&a, &b)) in x.iter().zip(&back).enumerate() {
+                if (a - b).abs() > 0.5001 * step {
+                    return Err(format!("index {i}: |{a}-{b}| > step/2 {}", step / 2.0));
+                }
+            }
+            if q.max_error() > 0.5001 * step {
+                return Err("max_error() exceeds half step".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fake_quant_idempotent() {
+    forall(
+        "fake_quant(fake_quant(x)) == fake_quant(x)",
+        |r| {
+            let n = 1 + r.below(128) as usize;
+            let bits = 4 + r.below(12) as u32;
+            (r.normal_vec(n), bits)
+        },
+        |(x, bits)| {
+            let mut once = x.clone();
+            quant::fake_quant(&mut once, *bits);
+            let mut twice = once.clone();
+            quant::fake_quant(&mut twice, *bits);
+            assert_all_close(&once, &twice, 0.0, 1e-6)
+        },
+    );
+}
+
+#[test]
+fn quant_packed_bytes_accounting() {
+    let q = quant::Quantized::encode(&[0.5; 100], 12);
+    assert_eq!(q.packed_bytes(), (100usize * 12).div_ceil(8));
+}
+
+// ---------------------------------------------------------------------------
+// im2col (the CONV reformulation of Fig. 2)
+// ---------------------------------------------------------------------------
+
+/// Direct valid-convolution oracle in HWC layout.
+fn direct_conv(x: &[f32], h: usize, w: usize, c: usize, f: &[f32], r: usize, p: usize) -> Vec<f32> {
+    let (oh, ow) = (h - r + 1, w - r + 1);
+    let mut y = vec![0.0f32; oh * ow * p];
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for op in 0..p {
+                let mut acc = 0.0f32;
+                for i in 0..r {
+                    for j in 0..r {
+                        for ch in 0..c {
+                            let xi = x[((oy + i) * w + (ox + j)) * c + ch];
+                            // F layout (i, j, c, p) to match Fig. 2
+                            let fi = f[((i * r + j) * c + ch) * p + op];
+                            acc += xi * fi;
+                        }
+                    }
+                }
+                y[(oy * ow + ox) * p + op] = acc;
+            }
+        }
+    }
+    y
+}
+
+#[test]
+fn prop_im2col_matmul_equals_direct_conv() {
+    forall(
+        "Y = im2col(X) F == direct convolution (Eqn. 4)",
+        |rng| {
+            let h = 4 + rng.below(6) as usize;
+            let w = 4 + rng.below(6) as usize;
+            let c = 1 + rng.below(3) as usize;
+            let r = 1 + rng.below(3.min(h as u64 - 1)) as usize;
+            let p = 1 + rng.below(4) as usize;
+            let x = rng.normal_vec(h * w * c);
+            let f = rng.normal_vec(r * r * c * p);
+            (h, w, c, r, p, x, f)
+        },
+        |(h, w, c, r, p, x, f)| {
+            let (h, w, c, r, p) = (*h, *w, *c, *r, *p);
+            // k=1: column ordering is (c_block=c, di, dj, 1)
+            let cols = im2col::im2col(x, h, w, c, r, 1);
+            let (oh, ow) = (h - r + 1, w - r + 1);
+            let mut y = vec![0.0f32; oh * ow * p];
+            for pos in 0..oh * ow {
+                for op in 0..p {
+                    let mut acc = 0.0;
+                    for ch in 0..c {
+                        for i in 0..r {
+                            for j in 0..r {
+                                let col = (ch * r + i) * r + j; // im2col order
+                                let fi = ((i * r + j) * c + ch) * p + op; // F (i,j,c,p)
+                                acc += cols[pos * r * r * c + col] * f[fi];
+                            }
+                        }
+                    }
+                    y[pos * p + op] = acc;
+                }
+            }
+            let want = direct_conv(x, h, w, c, f, r, p);
+            assert_all_close(&y, &want, 1e-3, 1e-3)
+        },
+    );
+}
+
+#[test]
+fn pad_same_preserves_interior() {
+    let mut rng = SplitMix::new(7);
+    let (h, w, c, r) = (5, 6, 2, 3);
+    let x = rng.normal_vec(h * w * c);
+    let (px, ph, pw) = im2col::pad_same(&x, h, w, c, r);
+    assert_eq!((ph, pw), (h + r - 1, w + r - 1));
+    let off = (r - 1) / 2;
+    for y in 0..h {
+        for xx in 0..w {
+            for ch in 0..c {
+                let a = x[(y * w + xx) * c + ch];
+                let b = px[((y + off) * pw + (xx + off)) * c + ch];
+                assert_eq!(a, b, "interior moved at ({y},{xx},{ch})");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dynamic batcher invariants (coordinator, DESIGN.md §5)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_never_exceeds_max_batch_and_preserves_fifo() {
+    forall(
+        "batches <= max_batch, FIFO order, nothing lost",
+        |r| {
+            let max_batch = 1 + r.below(16) as usize;
+            let pushes = 1 + r.below(200) as usize;
+            (max_batch, pushes)
+        },
+        |&(max_batch, pushes)| {
+            let policy = BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_secs(3600), // never trigger by time
+                max_queue: usize::MAX,
+            };
+            let mut q = BatchQueue::new(policy);
+            let now = Instant::now();
+            let mut drained: Vec<u32> = Vec::new();
+            for i in 0..pushes as u32 {
+                match q.push(i, now) {
+                    PushOutcome::BatchReady => {
+                        let batch = q.drain_batch();
+                        if batch.len() != max_batch {
+                            return Err(format!("ready batch len {} != {max_batch}", batch.len()));
+                        }
+                        drained.extend(batch.iter().map(|p| p.item));
+                    }
+                    PushOutcome::Queued => {}
+                    PushOutcome::Rejected(_) => return Err("unexpected rejection".into()),
+                }
+            }
+            // tail flush
+            while !q.is_empty() {
+                let batch = q.drain_batch();
+                if batch.len() > max_batch {
+                    return Err("tail batch exceeds max_batch".into());
+                }
+                drained.extend(batch.iter().map(|p| p.item));
+            }
+            let want: Vec<u32> = (0..pushes as u32).collect();
+            if drained != want {
+                return Err(format!("order/loss violation: got {} items", drained.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_batcher_backpressure_rejects_exactly_past_max_queue() {
+    forall(
+        "push rejected iff queue full",
+        |r| (1 + r.below(8) as usize, 1 + r.below(64) as usize),
+        |&(max_queue, pushes)| {
+            let policy = BatchPolicy {
+                max_batch: usize::MAX, // never release
+                max_delay: Duration::from_secs(3600),
+                max_queue,
+            };
+            let mut q = BatchQueue::new(policy);
+            let now = Instant::now();
+            for i in 0..pushes {
+                let outcome = q.push(i, now);
+                let expect_reject = i >= max_queue;
+                match (outcome, expect_reject) {
+                    (PushOutcome::Rejected(v), true) if v == i => {}
+                    (PushOutcome::Queued, false) => {}
+                    (o, _) => return Err(format!("push {i}: wrong outcome {o:?}")),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batcher_deadline_releases_partial_batch() {
+    let policy = BatchPolicy {
+        max_batch: 100,
+        max_delay: Duration::from_millis(1),
+        max_queue: 100,
+    };
+    let mut q = BatchQueue::new(policy);
+    let t0 = Instant::now();
+    assert!(matches!(q.push(1u32, t0), PushOutcome::Queued));
+    assert!(!q.ready(t0));
+    assert!(q.ready(t0 + Duration::from_millis(2)), "deadline must trigger");
+    assert_eq!(q.drain_batch().len(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// FPGA schedule monotonicity (the ablations must point the right way for
+// every registry model, not just the ones the bench prints)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn schedule_every_optimization_helps_every_model() {
+    for m in models::registry() {
+        let base = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+        let on = simulate(&m, &CYCLONE_V, &base).kfps();
+        for (name, cfg) in [
+            ("decouple", ScheduleConfig { decouple: false, ..base }),
+            ("half_spectrum", ScheduleConfig { half_spectrum: false, ..base }),
+            ("interleave", ScheduleConfig { interleave: false, ..base }),
+        ] {
+            let off = simulate(&m, &CYCLONE_V, &cfg).kfps();
+            assert!(
+                on >= off,
+                "{}: disabling {name} should not speed things up ({on} < {off})",
+                m.name
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_schedule_batch_amortizes_fills() {
+    forall(
+        "per-image ns is non-increasing in batch size",
+        |r| {
+            let reg = models::registry();
+            let m = reg[r.below(reg.len() as u64) as usize].clone();
+            let b = 1u64 << r.below(6);
+            (m, b)
+        },
+        |(m, b)| {
+            let small = simulate(m, &CYCLONE_V, &ScheduleConfig { batch: *b, ..Default::default() });
+            let large =
+                simulate(m, &CYCLONE_V, &ScheduleConfig { batch: b * 2, ..Default::default() });
+            if large.ns_per_image() <= small.ns_per_image() * 1.0001 {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{}: batch {} -> {} raised ns/img {} -> {}",
+                    m.name,
+                    b,
+                    b * 2,
+                    small.ns_per_image(),
+                    large.ns_per_image()
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn schedule_utilization_is_a_fraction() {
+    for m in models::registry() {
+        let cfg = ScheduleConfig::auto_for(&m, &CYCLONE_V);
+        let r = simulate(&m, &CYCLONE_V, &cfg);
+        assert!(
+            r.utilization > 0.0 && r.utilization <= 1.0,
+            "{}: utilization {} out of (0,1]",
+            m.name,
+            r.utilization
+        );
+        assert!(r.power_w() > CYCLONE_V.static_w, "dynamic power must add");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// synthetic data contract
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_data_deterministic_and_in_range() {
+    forall(
+        "samples are deterministic, clamped, label == index mod 10",
+        |r| (r.below(3), r.below(100_000)),
+        |&(ds_i, idx)| {
+            let ds = [data::MNIST_S, data::SVHN_S, data::CIFAR_S][ds_i as usize];
+            let (img1, y1) = data::sample(&ds, idx);
+            let (img2, y2) = data::sample(&ds, idx);
+            if img1 != img2 || y1 != y2 {
+                return Err("non-deterministic sample".into());
+            }
+            if y1 as u64 != idx % 10 {
+                return Err(format!("label {y1} != {} mod 10", idx));
+            }
+            if img1.iter().any(|&v| !(0.0..=1.0).contains(&v)) {
+                return Err("pixel out of [0,1]".into());
+            }
+            if img1.len() != ds.pixels() {
+                return Err("pixel count mismatch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn data_test_split_disjoint_from_train() {
+    let (train, _) = data::batch(&data::MNIST_S, 0, 8, false);
+    let (test, _) = data::batch(&data::MNIST_S, 0, 8, true);
+    assert_ne!(train, test, "test split must differ from train split");
+}
+
+#[test]
+fn prop_prior_pool_averages() {
+    forall(
+        "prior_pool output bounded by input range",
+        |r| {
+            let n = 16 + r.below(768) as usize;
+            let out = 1 + r.below(64) as usize;
+            (r.normal_vec(n).iter().map(|v| v.abs().min(1.0)).collect::<Vec<_>>(), out)
+        },
+        |(img, out_dim)| {
+            let pooled = data::prior_pool(img, *out_dim);
+            if pooled.len() != *out_dim {
+                return Err("wrong output dim".into());
+            }
+            let max = img.iter().cloned().fold(0.0f32, f32::max);
+            if pooled.iter().any(|&v| v < -1e-6 || v > max + 1e-6) {
+                return Err("pooled value outside input range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// json substrate (manifest parser)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_json_number_roundtrip() {
+    forall(
+        "parse(to_string(n)) == n",
+        |r| (r.next_f64() * 2e6 - 1e6, r.next_u64() % 1_000_000),
+        |&(f, u)| {
+            let text = format!("{{\"f\": {f}, \"u\": {u}, \"s\": \"x\\\"y\", \"a\": [1, 2.5], \"b\": true, \"n\": null}}");
+            let parsed = Json::parse(&text).map_err(|e| e.0)?;
+            let f2 = parsed.require("f").map_err(|e| e.0)?.as_f64().unwrap();
+            let u2 = parsed.require("u").map_err(|e| e.0)?.as_u64().unwrap();
+            if !close(f as f32, f2 as f32, 1e-5, 1e-5) {
+                return Err(format!("f {f} != {f2}"));
+            }
+            if u != u2 {
+                return Err(format!("u {u} != {u2}"));
+            }
+            if parsed.get("s").and_then(|s| s.as_str()) != Some("x\"y") {
+                return Err("escaped string mangled".into());
+            }
+            // reserialize -> reparse stability
+            let again = Json::parse(&parsed.to_string()).map_err(|e| e.0)?;
+            if again.require("u").map_err(|e| e.0)?.as_u64() != Some(u) {
+                return Err("to_string not reparseable".into());
+            }
+            Ok(())
+        },
+    );
+}
