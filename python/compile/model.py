@@ -244,6 +244,14 @@ def _conv_out_hw(h, w, r, padding):
     return h - r + 1, w - r + 1
 
 
+def _fft_real_mults(k: int) -> int:
+    """Real mults of one k-point real transform under the packed-rfft cost
+    model (k/2-point complex FFT + untangle), kept in lockstep with the
+    Rust side (``models::fft_real_mults`` / ``FftPlan::real_mults``)."""
+    log2k = k.bit_length() - 1
+    return k * max(0, log2k - 1) + 4 * (k // 2 + 1)
+
+
 def accounting(model: ModelSpec):
     """Per-layer parameter / storage / op accounting.
 
@@ -253,8 +261,10 @@ def accounting(model: ModelSpec):
     Fig. 6.  Circulant op model (decoupled, half-spectrum):
       FC:   q rFFTs + p*q*kh complex mults + p IFFTs
       CONV: per output pixel, same with q' = (C/k) r^2.
-    An n-point real FFT costs ~ (n/2) log2(n) complex mults = 2 n log2(n)
-    real mults (4 real mult / complex mult); a complex mult = 4 real mults.
+    An n-point real transform takes the packed fast path (the Rust
+    substrate's rfft_halfspec): an n/2-point complex FFT plus one complex
+    twiddle multiply per half-spectrum bin — n*(log2(n)-1) + 4*(n/2+1)
+    real mults (matches rust models::fft_real_mults / FftPlan::real_mults).
     """
     h, w, _ = model.input_shape
     rows = []
@@ -273,7 +283,7 @@ def accounting(model: ModelSpec):
                 qb = (spec.c // k) * spec.r * spec.r
                 pb = spec.p // k
                 circ_params = pb * qb * k
-                fft_mults = 2 * k * max(1, k.bit_length() - 1)
+                fft_mults = _fft_real_mults(k)
                 circ_mults = oh * ow * (qb * fft_mults + pb * qb * kh * 4 + pb * fft_mults)
             else:
                 circ_params, circ_mults = dense_params, dense_macs
@@ -289,7 +299,7 @@ def accounting(model: ModelSpec):
                 kh = k // 2 + 1
                 pb, qb = spec.m // k, spec.n // k
                 circ_params = pb * qb * k
-                fft_mults = 2 * k * max(1, k.bit_length() - 1)
+                fft_mults = _fft_real_mults(k)
                 circ_mults = qb * fft_mults + pb * qb * kh * 4 + pb * fft_mults
             else:
                 circ_params, circ_mults = dense_params, dense_macs

@@ -1,31 +1,53 @@
 //! Bench S1: the O(n log n) vs O(n^2) crossover (the paper's core
-//! algorithmic claim), measured on the pure-Rust substrate.
+//! algorithmic claim), measured on the pure-Rust substrate — plus the
+//! before/after comparisons for the packed real-FFT fast path and the
+//! batch-major parallel `matmul`.
 //!
 //! Prints dense vs block-circulant matvec times over a grid of matrix
-//! sizes and block sizes, plus the FFT-plan primitives the simulator's
-//! cycle model is built from.  `harness = false`: uses `util::benchkit`.
+//! sizes and block sizes, the FFT-plan primitives the simulator's cycle
+//! model is built from, and writes the whole suite as machine-readable
+//! JSON to `BENCH_circulant.json` at the repo root (perf trajectory
+//! tracking across PRs).  `harness = false`: uses `util::benchkit`.
 
 use circnn::circulant::{dense, BlockCirculant, FftPlan};
-use circnn::util::benchkit::Bench;
+use circnn::util::benchkit::{self, Bench, Measurement};
 use circnn::util::rng::SplitMix;
 
 fn main() {
     let bench = Bench::default();
     let mut rng = SplitMix::new(0xBEEF);
+    let mut results: Vec<Measurement> = Vec::new();
+    let mut derived: Vec<(String, f64)> = Vec::new();
 
-    println!("== FFT plan primitives ==");
+    println!("== FFT plan primitives (packed real path vs full-complex pre-PR path) ==");
     for k in [64usize, 128, 256, 512] {
-        let plan = FftPlan::new(k);
+        let plan = FftPlan::shared(k);
         let mut re = rng.normal_vec(k);
         let mut im = rng.normal_vec(k);
-        bench.run(&format!("fft/k{k}"), 1, || plan.fft(&mut re, &mut im));
+        results.push(bench.run(&format!("fft/k{k}"), 1, || plan.fft(&mut re, &mut im)));
         let kh = plan.half_bins();
         let x = rng.normal_vec(k);
         let (mut hr, mut hi) = (vec![0.0; kh], vec![0.0; kh]);
         let mut scratch = vec![0.0; 2 * k];
-        bench.run(&format!("rfft_halfspec/k{k}"), 1, || {
+        let new = bench.run(&format!("rfft_halfspec/k{k}"), 1, || {
             plan.rfft_halfspec(&x, &mut hr, &mut hi, &mut scratch)
         });
+        let old = bench.run(&format!("rfft_fullcomplex/k{k}"), 1, || {
+            plan.rfft_halfspec_via_full(&x, &mut hr, &mut hi, &mut scratch)
+        });
+        let mut out = vec![0.0; k];
+        let inew = bench.run(&format!("irfft_halfspec/k{k}"), 1, || {
+            plan.irfft_halfspec(&hr, &hi, &mut out, &mut scratch)
+        });
+        let iold = bench.run(&format!("irfft_fullcomplex/k{k}"), 1, || {
+            plan.irfft_halfspec_via_full(&hr, &hi, &mut out, &mut scratch)
+        });
+        let fwd = old.median_ns() / new.median_ns();
+        let inv = iold.median_ns() / inew.median_ns();
+        println!("   k={k:<4} rfft speedup {fwd:.2}x  irfft speedup {inv:.2}x");
+        derived.push((format!("rfft_speedup_k{k}"), fwd));
+        derived.push((format!("irfft_speedup_k{k}"), inv));
+        results.extend([new, old, inew, iold]);
     }
 
     println!("\n== dense vs block-circulant matvec (k = 64) ==");
@@ -55,6 +77,28 @@ fn main() {
             c.median_ns() / 1e3,
             d.median_ns() / c.median_ns()
         );
+        results.extend([d, c]);
+    }
+
+    println!("\n== batched matmul: serial per-row (pre-PR) vs batch-major parallel ==");
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("   (available parallelism: {threads}; override with CIRCNN_THREADS)");
+    for (n, k, batch) in [(1024usize, 64usize, 64usize), (2048, 64, 64), (1024, 128, 64)] {
+        let pq = n / k;
+        let mut bc = BlockCirculant::new(pq, pq, k, rng.normal_vec(pq * pq * k));
+        bc.precompute();
+        let xs = rng.normal_vec(batch * n);
+        let mut ys = vec![0.0f32; batch * n];
+        let ser = bench.run(&format!("matmul_serial/b{batch}_n{n}_k{k}"), batch as u64, || {
+            bc.matmul_serial(&xs, batch, &mut ys)
+        });
+        let par = bench.run(&format!("matmul/b{batch}_n{n}_k{k}"), batch as u64, || {
+            bc.matmul(&xs, batch, &mut ys)
+        });
+        let speedup = ser.median_ns() / par.median_ns();
+        println!("   n={n:<5} k={k:<4} batch={batch:<3} parallel speedup {speedup:.2}x");
+        derived.push((format!("matmul_speedup_b{batch}_n{n}_k{k}"), speedup));
+        results.extend([ser, par]);
     }
 
     println!("\n== block-size sweep at n = 2048 (compression/speed frontier) ==");
@@ -65,7 +109,7 @@ fn main() {
         bc.precompute();
         let x = rng.normal_vec(n);
         let mut y = vec![0.0f32; n];
-        let m = bench.run(&format!("circ_matvec/n{n}_k{k}"), 1, || {
+        let m = bench.run(&format!("circ_matvec_sweep/n{n}_k{k}"), 1, || {
             bc.matvec(&x, &mut y)
         });
         println!(
@@ -74,6 +118,7 @@ fn main() {
             (n * n) as f64 / bc.param_count() as f64,
             m.median_ns() / 1e3
         );
+        results.push(m);
     }
 
     println!("\n== precompute (offline FFT(w) step) ==");
@@ -81,10 +126,16 @@ fn main() {
         let n = 1024;
         let pq = n / k;
         let w = rng.normal_vec(pq * pq * k);
-        bench.run(&format!("precompute/n{n}_k{k}"), 1, || {
+        results.push(bench.run(&format!("precompute/n{n}_k{k}"), 1, || {
             let mut bc = BlockCirculant::new(pq, pq, k, w.clone());
             bc.precompute();
             bc
-        });
+        }));
+    }
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_circulant.json");
+    match benchkit::write_json(path, "circulant", &results, &derived) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
 }

@@ -3,12 +3,15 @@
 //! plus the pure-logic hot paths (batcher push/drain, router lookup) that
 //! must stay allocation-light (DESIGN.md §9: coordinator adds <10%
 //! overhead over raw execute at batch 64).
+//!
+//! Without the `pjrt` feature the serving section still runs: the server
+//! falls back to the native block-circulant backend (parallel batch-major
+//! matmul), and the roofline comparison is skipped.
 
 use std::time::{Duration, Instant};
 
 use circnn::coordinator::{BatchPolicy, BatchQueue, Router, Server, ServerConfig};
 use circnn::data;
-use circnn::runtime::engine::{literal_f32, Engine};
 use circnn::runtime::Manifest;
 use circnn::util::benchkit::Bench;
 
@@ -42,6 +45,29 @@ fn serve_throughput(policy: BatchPolicy, clients: usize, requests: usize) -> any
     Ok(rps)
 }
 
+/// Raw PJRT execute throughput (img/s) for the overhead comparison.
+#[cfg(feature = "pjrt")]
+fn raw_roofline(man: &Manifest, bench: &Bench) -> anyhow::Result<f64> {
+    use circnn::runtime::engine::{literal_f32, Engine};
+    let engine = Engine::cpu()?;
+    let e = man.model("mnist_mlp_1")?;
+    let a = e.artifacts.iter().max_by_key(|a| a.batch).unwrap();
+    let exe = engine.load(man.path_of(&a.file))?;
+    let ds = data::dataset(&e.dataset).unwrap();
+    let (xs, _) = data::batch(&ds, 0, a.batch, true);
+    let lit = literal_f32(&xs, &a.input_shape)?;
+    let raw = bench.run("raw_execute/b64", a.batch as u64, || {
+        exe.run1(std::slice::from_ref(&lit)).unwrap()
+    });
+    Ok(raw.throughput())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn raw_roofline(_man: &Manifest, _bench: &Bench) -> anyhow::Result<f64> {
+    println!("(no pjrt feature: native backend, roofline comparison skipped)");
+    Ok(f64::NAN)
+}
+
 fn main() -> anyhow::Result<()> {
     let bench = Bench::default();
 
@@ -63,20 +89,9 @@ fn main() -> anyhow::Result<()> {
             router.validate("mnist_mlp_1", &img).unwrap()
         });
 
-        // raw-engine roofline for the overhead comparison
-        let engine = Engine::cpu()?;
-        let e = man.model("mnist_mlp_1")?;
-        let a = e.artifacts.iter().max_by_key(|a| a.batch).unwrap();
-        let exe = engine.load(man.path_of(&a.file))?;
-        let ds = data::dataset(&e.dataset).unwrap();
-        let (xs, _) = data::batch(&ds, 0, a.batch, true);
-        let lit = literal_f32(&xs, &a.input_shape)?;
-        let raw = bench.run("raw_execute/b64", a.batch as u64, || {
-            exe.run1(std::slice::from_ref(&lit)).unwrap()
-        });
-        let roofline = raw.throughput();
+        let roofline = raw_roofline(&man, &bench)?;
 
-        println!("\n== end-to-end serving (coordinator) vs raw roofline {roofline:.0} img/s ==");
+        println!("\n== end-to-end serving (coordinator) ==");
         let mut best = 0.0f64;
         for (max_batch, delay_us, clients) in
             [(1usize, 200u64, 8usize), (8, 500, 8), (64, 2000, 32), (64, 2000, 64)]
@@ -92,10 +107,12 @@ fn main() -> anyhow::Result<()> {
             )?;
             best = best.max(rps);
         }
-        println!(
-            "\nbest coordinator throughput = {:.1}% of raw roofline",
-            100.0 * best / roofline
-        );
+        if roofline.is_finite() {
+            println!(
+                "\nbest coordinator throughput = {:.1}% of raw roofline {roofline:.0} img/s",
+                100.0 * best / roofline
+            );
+        }
     } else {
         eprintln!("artifacts missing: serving benches skipped (run `make artifacts`)");
     }

@@ -1,22 +1,19 @@
-//! Bench: the PJRT runtime hot path — compile cost (paid once per model
-//! variant, the "bitstream load"), per-batch execute latency, and the
-//! derived images/s for batch-1 vs batch-64 and plain vs Pallas-kernel
-//! artifacts.  This is the L3 perf baseline the coordinator overhead is
-//! measured against (DESIGN.md §9).
+//! Bench: the runtime hot paths.  With the `pjrt` feature: compile cost
+//! (paid once per model variant, the "bitstream load"), per-batch execute
+//! latency, and the derived images/s for batch-1 vs batch-64 and plain vs
+//! Pallas-kernel artifacts — the L3 perf baseline the coordinator overhead
+//! is measured against (DESIGN.md §9).  Always: the native pure-Rust engine
+//! (whose FC layers ride the batch-major parallel `matmul`), so the two
+//! execution substrates of the same trained models stay comparable.
 
 use circnn::data;
-use circnn::runtime::engine::{literal_f32, Engine};
 use circnn::runtime::Manifest;
 use circnn::util::benchkit::Bench;
 
-fn main() -> anyhow::Result<()> {
-    let man = match Manifest::load(Manifest::default_dir()) {
-        Ok(m) => m,
-        Err(_) => {
-            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
-            return Ok(());
-        }
-    };
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(man: &Manifest, bench: &Bench) -> anyhow::Result<()> {
+    use circnn::runtime::engine::{literal_f32, Engine};
+
     let engine = Engine::cpu()?;
     println!("PJRT platform: {}\n", engine.platform());
 
@@ -32,7 +29,6 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let bench = Bench::default();
     println!("\n== execute (steady-state, cached executable) ==");
     for e in &man.models {
         let ds = data::dataset(&e.dataset).unwrap();
@@ -50,9 +46,37 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // literal construction (hot-path allocation cost the batcher pays)
+    println!("\n== literal construction ==");
+    let e = man.model("mnist_mlp_1")?;
+    let a = e.artifacts.iter().max_by_key(|a| a.batch).unwrap();
+    let ds = data::dataset(&e.dataset).unwrap();
+    let (xs, _) = data::batch(&ds, 0, a.batch, true);
+    bench.run("literal_f32/b64_mnist", a.batch as u64, || {
+        literal_f32(&xs, &a.input_shape).unwrap()
+    });
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let man = match Manifest::load(Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    let bench = Bench::default();
+
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&man, &bench)?;
+    #[cfg(not(feature = "pjrt"))]
+    println!("(built without the pjrt feature: compile/execute benches skipped)\n");
+
     // native pure-Rust engine vs PJRT — the two execution substrates of the
-    // same trained models (parity pinned in rust/tests/native_parity.rs)
-    println!("\n== native engine (pure Rust, no PJRT) ==");
+    // same trained models (parity pinned in rust/tests/native_parity.rs).
+    // FC layers execute through the batch-major parallel matmul.
+    println!("== native engine (pure Rust, no PJRT) ==");
     for e in &man.models {
         let Some(m) = circnn::models::by_name(&e.name) else { continue };
         let path = man.dir.join("params").join(format!("{}.npz", e.name));
@@ -68,16 +92,6 @@ fn main() -> anyhow::Result<()> {
             });
         }
     }
-
-    // literal construction (hot-path allocation cost the batcher pays)
-    println!("\n== literal construction ==");
-    let e = man.model("mnist_mlp_1")?;
-    let a = e.artifacts.iter().max_by_key(|a| a.batch).unwrap();
-    let ds = data::dataset(&e.dataset).unwrap();
-    let (xs, _) = data::batch(&ds, 0, a.batch, true);
-    bench.run("literal_f32/b64_mnist", a.batch as u64, || {
-        literal_f32(&xs, &a.input_shape).unwrap()
-    });
 
     Ok(())
 }

@@ -1,10 +1,31 @@
-//! Iterative radix-2 FFT on separated real/imag planes.
+//! Iterative radix-2 FFT on separated real/imag planes, with a true
+//! real-input fast path.
 //!
 //! The same dataflow the paper pipelines in FPGA fabric: bit-reversal
 //! reorder followed by `log2(k)` butterfly stages; IFFT runs on the same
 //! structure with conjugated twiddles and a final 1/k scale.  Twiddles and
 //! the reversal permutation are precomputed per block size in [`FftPlan`]
 //! (the FPGA's per-stage ROMs).
+//!
+//! The hot-path entry points are [`FftPlan::rfft_halfspec`] and
+//! [`FftPlan::irfft_halfspec`]: a k-point *real* transform is computed as a
+//! k/2-point **complex** FFT of the packed signal `z[n] = x[2n] + i x[2n+1]`
+//! followed by an O(k) untangle sweep (and the Hermitian dual for the
+//! inverse).  That halves the butterfly work of phases 1 and 3 of every
+//! block-circulant matvec relative to running the full k-point FFT on a
+//! zeroed imaginary plane — the arithmetic the paper's conjugate-symmetry
+//! storage optimization implies but the seed implementation left on the
+//! table.  The old full-complex path is kept as
+//! [`FftPlan::rfft_halfspec_via_full`] so tests and benches can pin the new
+//! path against it.
+//!
+//! Plans are cheap but not free (permutation + per-stage twiddle tables);
+//! [`FftPlan::shared`] memoizes one plan per block size crate-wide so every
+//! consumer (native engine, staged executor, fixed-point SNR harness,
+//! benches) reuses the same ROMs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Precomputed plan for a k-point radix-2 FFT (k a power of two).
 #[derive(Debug, Clone)]
@@ -13,35 +34,73 @@ pub struct FftPlan {
     perm: Vec<u32>,
     /// per stage: (cos, sin) twiddles of length 2^stage (forward sign)
     stages: Vec<(Vec<f32>, Vec<f32>)>,
+    /// bit-reversal permutation of the k/2-point sub-transform (empty at k=1)
+    half_perm: Vec<u32>,
+    /// butterfly stages of the k/2-point sub-transform
+    half_stages: Vec<(Vec<f32>, Vec<f32>)>,
+    /// untangle twiddles `W_k^m = e^{-2 pi i m / k}` for m in 0..=k/2,
+    /// stored as (cos, -sin) pairs matching the forward butterfly sign
+    tw_c: Vec<f32>,
+    tw_s: Vec<f32>,
 }
+
+/// Build (bit-reversal permutation, butterfly stage twiddles) for one size.
+fn build_tables(k: usize) -> (Vec<u32>, Vec<(Vec<f32>, Vec<f32>)>) {
+    let bits = k.trailing_zeros() as usize;
+    let mut perm = vec![0u32; k];
+    for (i, slot) in perm.iter_mut().enumerate() {
+        let mut rev = 0usize;
+        for b in 0..bits {
+            rev |= ((i >> b) & 1) << (bits - 1 - b);
+        }
+        *slot = rev as u32;
+    }
+    let mut stages = Vec::with_capacity(bits);
+    for s in 0..bits {
+        let half = 1usize << s;
+        let mut cos = Vec::with_capacity(half);
+        let mut sin = Vec::with_capacity(half);
+        for t in 0..half {
+            let ang = -2.0 * std::f64::consts::PI * t as f64 / (2.0 * half as f64);
+            cos.push(ang.cos() as f32);
+            sin.push(ang.sin() as f32);
+        }
+        stages.push((cos, sin));
+    }
+    (perm, stages)
+}
+
+static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
 
 impl FftPlan {
     /// Build a plan for `k`-point transforms.  Panics if `k` is not a
     /// nonzero power of two (a configuration error, not a runtime input).
     pub fn new(k: usize) -> Self {
         assert!(k.is_power_of_two() && k > 0, "k must be a power of 2, got {k}");
-        let bits = k.trailing_zeros() as usize;
-        let mut perm = vec![0u32; k];
-        for (i, slot) in perm.iter_mut().enumerate() {
-            let mut rev = 0usize;
-            for b in 0..bits {
-                rev |= ((i >> b) & 1) << (bits - 1 - b);
-            }
-            *slot = rev as u32;
+        let (perm, stages) = build_tables(k);
+        let (half_perm, half_stages) = if k >= 2 {
+            build_tables(k / 2)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let kh = k / 2 + 1;
+        let mut tw_c = Vec::with_capacity(kh);
+        let mut tw_s = Vec::with_capacity(kh);
+        for m in 0..kh {
+            let ang = -2.0 * std::f64::consts::PI * m as f64 / k as f64;
+            tw_c.push(ang.cos() as f32);
+            tw_s.push(ang.sin() as f32);
         }
-        let mut stages = Vec::with_capacity(bits);
-        for s in 0..bits {
-            let half = 1usize << s;
-            let mut cos = Vec::with_capacity(half);
-            let mut sin = Vec::with_capacity(half);
-            for t in 0..half {
-                let ang = -2.0 * std::f64::consts::PI * t as f64 / (2.0 * half as f64);
-                cos.push(ang.cos() as f32);
-                sin.push(ang.sin() as f32);
-            }
-            stages.push((cos, sin));
-        }
-        Self { k, perm, stages }
+        Self { k, perm, stages, half_perm, half_stages, tw_c, tw_s }
+    }
+
+    /// Crate-wide memoized plan: one shared instance per block size, so the
+    /// native engine, staged executor and benches all reuse the same tables
+    /// instead of rebuilding twiddle ROMs per layer / per call.
+    pub fn shared(k: usize) -> Arc<FftPlan> {
+        let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+        let mut map = cache.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(k).or_insert_with(|| Arc::new(FftPlan::new(k))).clone()
     }
 
     /// Number of bins in the packed half-spectrum (k/2 + 1).
@@ -52,12 +111,12 @@ impl FftPlan {
 
     /// In-place unscaled forward FFT of one k-point signal.
     pub fn fft(&self, re: &mut [f32], im: &mut [f32]) {
-        self.transform(re, im, false);
+        transform(&self.perm, &self.stages, re, im, false);
     }
 
     /// In-place inverse FFT (including the 1/k scale).
     pub fn ifft(&self, re: &mut [f32], im: &mut [f32]) {
-        self.transform(re, im, true);
+        transform(&self.perm, &self.stages, re, im, true);
         let scale = 1.0 / self.k as f32;
         for v in re.iter_mut() {
             *v *= scale;
@@ -67,44 +126,109 @@ impl FftPlan {
         }
     }
 
-    fn transform(&self, re: &mut [f32], im: &mut [f32], inverse: bool) {
-        let k = self.k;
-        debug_assert_eq!(re.len(), k);
-        debug_assert_eq!(im.len(), k);
-        // bit-reversal permutation (swap once per pair)
-        for i in 0..k {
-            let j = self.perm[i] as usize;
-            if j > i {
-                re.swap(i, j);
-                im.swap(i, j);
-            }
-        }
-        for (s, (cos, sin)) in self.stages.iter().enumerate() {
-            let half = 1usize << s;
-            let m = half * 2;
-            let mut base = 0;
-            while base < k {
-                for t in 0..half {
-                    let (c, s_) = (cos[t], if inverse { -sin[t] } else { sin[t] });
-                    let (i0, i1) = (base + t, base + t + half);
-                    let (vr, vi) = (re[i1], im[i1]);
-                    let tr = vr * c - vi * s_;
-                    let ti = vr * s_ + vi * c;
-                    let (ur, ui) = (re[i0], im[i0]);
-                    re[i0] = ur + tr;
-                    im[i0] = ui + ti;
-                    re[i1] = ur - tr;
-                    im[i1] = ui - ti;
-                }
-                base += m;
-            }
-        }
-    }
-
     /// Real-input FFT packed to the half spectrum (k/2+1 bins) — the paper's
     /// conjugate-symmetry storage optimization.  `out_re`/`out_im` must have
     /// `half_bins()` elements; `scratch` holds 2k f32 of workspace.
+    ///
+    /// Computed as a k/2-point complex FFT of `z[n] = x[2n] + i x[2n+1]`
+    /// plus an O(k) untangle, i.e. half the butterfly work of the
+    /// full-complex path ([`rfft_halfspec_via_full`](Self::rfft_halfspec_via_full)).
     pub fn rfft_halfspec(
+        &self,
+        x: &[f32],
+        out_re: &mut [f32],
+        out_im: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let k = self.k;
+        debug_assert_eq!(x.len(), k);
+        debug_assert_eq!(out_re.len(), self.half_bins());
+        debug_assert_eq!(out_im.len(), self.half_bins());
+        debug_assert!(scratch.len() >= 2 * k);
+        if k == 1 {
+            out_re[0] = x[0];
+            out_im[0] = 0.0;
+            return;
+        }
+        let k2 = k / 2;
+        let (zr, rest) = scratch.split_at_mut(k2);
+        let zi = &mut rest[..k2];
+        for (pair, (zr_n, zi_n)) in x.chunks_exact(2).zip(zr.iter_mut().zip(zi.iter_mut())) {
+            *zr_n = pair[0];
+            *zi_n = pair[1];
+        }
+        transform(&self.half_perm, &self.half_stages, zr, zi, false);
+        // untangle: split Z into the even-sample spectrum A and odd-sample
+        // spectrum B (both Hermitian since the samples are real), then
+        // X[m] = A[m] + W_k^m B[m] over the half spectrum m = 0..=k/2
+        for m in 0..=k2 {
+            let mm = if m == k2 { 0 } else { m };
+            let j = (k2 - m) % k2;
+            let (zr_m, zi_m) = (zr[mm], zi[mm]);
+            let (zr_j, zi_j) = (zr[j], zi[j]);
+            let ar = 0.5 * (zr_m + zr_j);
+            let ai = 0.5 * (zi_m - zi_j);
+            let br = 0.5 * (zi_m + zi_j);
+            let bi = 0.5 * (zr_j - zr_m);
+            let (c, s) = (self.tw_c[m], self.tw_s[m]);
+            out_re[m] = ar + br * c - bi * s;
+            out_im[m] = ai + br * s + bi * c;
+        }
+    }
+
+    /// Hermitian-symmetric inverse: half spectrum -> real k-point signal.
+    ///
+    /// The dual of [`rfft_halfspec`](Self::rfft_halfspec): retangle the half
+    /// spectrum into the k/2-point spectrum of `z[n] = x[2n] + i x[2n+1]`,
+    /// run one k/2-point inverse FFT, and deinterleave.
+    pub fn irfft_halfspec(
+        &self,
+        in_re: &[f32],
+        in_im: &[f32],
+        out: &mut [f32],
+        scratch: &mut [f32],
+    ) {
+        let k = self.k;
+        let kh = self.half_bins();
+        debug_assert_eq!(in_re.len(), kh);
+        debug_assert_eq!(in_im.len(), kh);
+        debug_assert_eq!(out.len(), k);
+        debug_assert!(scratch.len() >= 2 * k);
+        if k == 1 {
+            out[0] = in_re[0];
+            return;
+        }
+        let k2 = k / 2;
+        let (zr, rest) = scratch.split_at_mut(k2);
+        let zi = &mut rest[..k2];
+        for m in 0..k2 {
+            let jm = k2 - m;
+            let (xr_m, xi_m) = (in_re[m], in_im[m]);
+            let (xr_j, xi_j) = (in_re[jm], in_im[jm]);
+            // A[m] = (X[m] + conj(X[k/2-m])) / 2, the even-sample spectrum;
+            // B[m] = W_k^{-m} (X[m] - conj(X[k/2-m])) / 2, the odd-sample one
+            let ar = 0.5 * (xr_m + xr_j);
+            let ai = 0.5 * (xi_m - xi_j);
+            let cr = 0.5 * (xr_m - xr_j);
+            let ci = 0.5 * (xi_m + xi_j);
+            let (c, s) = (self.tw_c[m], self.tw_s[m]);
+            let br = cr * c + ci * s;
+            let bi = ci * c - cr * s;
+            zr[m] = ar - bi;
+            zi[m] = ai + br;
+        }
+        transform(&self.half_perm, &self.half_stages, zr, zi, true);
+        let scale = 1.0 / k2 as f32;
+        for (pair, (&zr_n, &zi_n)) in out.chunks_exact_mut(2).zip(zr.iter().zip(zi.iter())) {
+            pair[0] = zr_n * scale;
+            pair[1] = zi_n * scale;
+        }
+    }
+
+    /// The seed implementation's real transform: full k-point complex FFT on
+    /// a zeroed imaginary plane.  Kept as the reference the packed fast path
+    /// is pinned against (tests) and measured against (benches).
+    pub fn rfft_halfspec_via_full(
         &self,
         x: &[f32],
         out_re: &mut [f32],
@@ -123,8 +247,10 @@ impl FftPlan {
         out_im.copy_from_slice(&im[..self.half_bins()]);
     }
 
-    /// Hermitian-symmetric inverse: half spectrum -> real k-point signal.
-    pub fn irfft_halfspec(
+    /// The seed implementation's Hermitian inverse: mirror the half spectrum
+    /// and run the full k-point IFFT.  Reference twin of
+    /// [`rfft_halfspec_via_full`](Self::rfft_halfspec_via_full).
+    pub fn irfft_halfspec_via_full(
         &self,
         in_re: &[f32],
         in_im: &[f32],
@@ -148,16 +274,64 @@ impl FftPlan {
         out.copy_from_slice(&re[..k]);
     }
 
-    /// Real multiplications in one k-point FFT under the paper's cost model
-    /// (4 real mults per complex butterfly mult, k/2 butterflies per stage).
+    /// Real multiplications in one k-point *real* transform under the
+    /// paper's cost model, reflecting the packed fast path: a k/2-point
+    /// complex FFT (4 real mults per butterfly, k/4 butterflies per stage,
+    /// `log2(k) - 1` stages) plus one complex twiddle multiply per
+    /// half-spectrum bin in the untangle sweep.
     pub fn real_mults(&self) -> u64 {
+        let k = self.k as u64;
         let stages = self.k.trailing_zeros() as u64;
-        2 * self.k as u64 * stages
+        k * stages.saturating_sub(1) + 4 * (k / 2 + 1)
+    }
+}
+
+fn transform(
+    perm: &[u32],
+    stages: &[(Vec<f32>, Vec<f32>)],
+    re: &mut [f32],
+    im: &mut [f32],
+    inverse: bool,
+) {
+    let k = perm.len();
+    debug_assert_eq!(re.len(), k);
+    debug_assert_eq!(im.len(), k);
+    // bit-reversal permutation (swap once per pair)
+    for i in 0..k {
+        let j = perm[i] as usize;
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    for (s, (cos, sin)) in stages.iter().enumerate() {
+        let half = 1usize << s;
+        let m = half * 2;
+        let mut base = 0;
+        while base < k {
+            for t in 0..half {
+                let (c, s_) = (cos[t], if inverse { -sin[t] } else { sin[t] });
+                let (i0, i1) = (base + t, base + t + half);
+                let (vr, vi) = (re[i1], im[i1]);
+                let tr = vr * c - vi * s_;
+                let ti = vr * s_ + vi * c;
+                let (ur, ui) = (re[i0], im[i0]);
+                re[i0] = ur + tr;
+                im[i0] = ui + ti;
+                re[i1] = ur - tr;
+                im[i1] = ui - ti;
+            }
+            base += m;
+        }
     }
 }
 
 /// Element-wise complex multiply-accumulate on separated planes:
 /// `acc += a o b` over `len` lanes.  This is phase 2 of the datapath.
+///
+/// The loop is written as fixed-width chunks so the autovectorizer can map
+/// each chunk onto SIMD lanes; the per-lane arithmetic (and therefore the
+/// result, bitwise) is identical to the plain scalar loop.
 #[inline]
 pub fn complex_mul_acc(
     ar: &[f32],
@@ -167,9 +341,28 @@ pub fn complex_mul_acc(
     acc_r: &mut [f32],
     acc_i: &mut [f32],
 ) {
-    for t in 0..ar.len() {
-        acc_r[t] += ar[t] * br[t] - ai[t] * bi[t];
-        acc_i[t] += ar[t] * bi[t] + ai[t] * br[t];
+    const LANES: usize = 8;
+    let n = ar.len();
+    // reslice everything to exactly n lanes so the loop bounds prove every
+    // index in-bounds — without this the 5 unproven slices keep per-element
+    // panic branches in release and the chunks never vectorize
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let mut t = 0;
+    while t + LANES <= n {
+        for l in 0..LANES {
+            let i = t + l;
+            let (x_r, x_i, y_r, y_i) = (ar[i], ai[i], br[i], bi[i]);
+            acc_r[i] += x_r * y_r - x_i * y_i;
+            acc_i[i] += x_r * y_i + x_i * y_r;
+        }
+        t += LANES;
+    }
+    while t < n {
+        let (x_r, x_i, y_r, y_i) = (ar[t], ai[t], br[t], bi[t]);
+        acc_r[t] += x_r * y_r - x_i * y_i;
+        acc_i[t] += x_r * y_i + x_i * y_r;
+        t += 1;
     }
 }
 
@@ -214,6 +407,50 @@ mod tests {
     }
 
     #[test]
+    fn packed_rfft_matches_naive_dft_all_k() {
+        // the new fast path pinned against the O(k^2) oracle for every
+        // block size the substrate serves
+        for k in [2usize, 4, 8, 16, 32, 64, 128, 256, 512] {
+            let mut rng = SplitMix::new(0xFF17 ^ k as u64);
+            let x = rng.normal_vec(k);
+            let plan = FftPlan::new(k);
+            let kh = plan.half_bins();
+            let mut scratch = vec![0.0; 2 * k];
+            let (mut hr, mut hi) = (vec![0.0; kh], vec![0.0; kh]);
+            plan.rfft_halfspec(&x, &mut hr, &mut hi, &mut scratch);
+            let (er, ei) = naive_dft(&x, &vec![0.0; k], false);
+            assert_all_close(&hr, &er[..kh], 2e-3, 2e-3).unwrap();
+            assert_all_close(&hi, &ei[..kh], 2e-3, 2e-3).unwrap();
+        }
+    }
+
+    #[test]
+    fn packed_rfft_matches_full_complex_path_all_k() {
+        // old (zeroed-imag full FFT) and new (packed k/2 FFT + untangle)
+        // implementations must agree bin-for-bin, and the inverses must both
+        // take the half spectrum back to the signal
+        for k in [2usize, 4, 8, 16, 32, 64, 128, 256, 512] {
+            let mut rng = SplitMix::new(0xACDC ^ k as u64);
+            let x = rng.normal_vec(k);
+            let plan = FftPlan::new(k);
+            let kh = plan.half_bins();
+            let mut scratch = vec![0.0; 2 * k];
+            let (mut hr, mut hi) = (vec![0.0; kh], vec![0.0; kh]);
+            plan.rfft_halfspec(&x, &mut hr, &mut hi, &mut scratch);
+            let (mut fr, mut fi) = (vec![0.0; kh], vec![0.0; kh]);
+            plan.rfft_halfspec_via_full(&x, &mut fr, &mut fi, &mut scratch);
+            assert_all_close(&hr, &fr, 2e-3, 2e-3).unwrap();
+            assert_all_close(&hi, &fi, 2e-3, 2e-3).unwrap();
+            let mut back_new = vec![0.0; k];
+            plan.irfft_halfspec(&hr, &hi, &mut back_new, &mut scratch);
+            let mut back_old = vec![0.0; k];
+            plan.irfft_halfspec_via_full(&fr, &fi, &mut back_old, &mut scratch);
+            assert_all_close(&back_new, &x, 2e-3, 2e-3).unwrap();
+            assert_all_close(&back_old, &x, 2e-3, 2e-3).unwrap();
+        }
+    }
+
+    #[test]
     fn prop_fft_ifft_roundtrip() {
         forall(
             "fft→ifft identity",
@@ -237,7 +474,7 @@ mod tests {
         forall(
             "rfft→irfft identity",
             |r| {
-                let k = 1usize << (1 + r.below(8)) as usize;
+                let k = 1usize << (1 + r.below(9)) as usize;
                 (k, r.normal_vec(k))
             },
             |(k, x)| {
@@ -308,8 +545,22 @@ mod tests {
     }
 
     #[test]
+    fn shared_plans_are_memoized() {
+        let a = FftPlan::shared(64);
+        let b = FftPlan::shared(64);
+        assert!(Arc::ptr_eq(&a, &b), "same k must return the same plan");
+        assert_eq!(FftPlan::shared(32).k, 32);
+    }
+
+    #[test]
     fn real_mults_formula() {
-        assert_eq!(FftPlan::new(8).real_mults(), 2 * 8 * 3);
-        assert_eq!(FftPlan::new(128).real_mults(), 2 * 128 * 7);
+        // k/2-point complex FFT + one complex mult per half-spectrum bin
+        assert_eq!(FftPlan::new(8).real_mults(), 8 * 2 + 4 * 5);
+        assert_eq!(FftPlan::new(128).real_mults(), 128 * 6 + 4 * 65);
+        // and it must undercut the old full-complex model 2k log2(k)
+        for k in [8usize, 64, 256, 512] {
+            let stages = k.trailing_zeros() as u64;
+            assert!(FftPlan::new(k).real_mults() < 2 * k as u64 * stages);
+        }
     }
 }

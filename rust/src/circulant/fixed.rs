@@ -161,7 +161,7 @@ pub fn snr_db(want: &[f32], got: &[f32]) -> f64 {
 /// Float-reference circulant matvec for SNR baselines.
 pub fn float_circulant_matvec(w: &[f32], x: &[f32]) -> Vec<f32> {
     let k = w.len();
-    let plan = FftPlan::new(k);
+    let plan = FftPlan::shared(k);
     let (mut wr, mut wi) = (w.to_vec(), vec![0.0f32; k]);
     plan.fft(&mut wr, &mut wi);
     let (mut xr, mut xi) = (x.to_vec(), vec![0.0f32; k]);

@@ -1,12 +1,14 @@
 //! The algorithmic substrate: from-scratch FFT and block-circulant numerics.
 //!
-//! This mirrors `python/compile/kernels/fft_core.py` exactly (same radix-2
-//! DIT butterfly cascade, same unscaled-forward / 1/k-inverse convention,
-//! same half-spectrum packing) so that the Pallas kernels, the HLO
-//! artifacts, the simulator's cycle accounting and this pure-Rust fallback
-//! inference path all share one numeric structure.  The simulator's cycle
-//! model (`crate::fpga`) is literally the butterfly schedule implemented
-//! here.
+//! This mirrors `python/compile/kernels/fft_core.py` (same radix-2 DIT
+//! butterfly cascade, same unscaled-forward / 1/k-inverse convention, same
+//! half-spectrum packing) so that the Pallas kernels, the HLO artifacts,
+//! the simulator's cycle accounting and this pure-Rust inference path all
+//! share one numeric structure.  The Rust real-input transforms take the
+//! packed fast path (k/2-point complex FFT + untangle — see
+//! [`fft::FftPlan::rfft_halfspec`]), which computes the same half spectrum
+//! as the full-complex cascade to floating-point tolerance; the simulator's
+//! cycle model (`crate::fpga`) charges exactly that packed schedule.
 
 pub mod block;
 pub mod dense;

@@ -13,7 +13,10 @@
 //! constraint, with throughput as the tie-breaker.  The search is exact
 //! enumeration: the design space is small (tens of points) and the cycle
 //! simulator evaluates a point in ~100 ns (bench `fig6`), exactly why the
-//! paper can afford the loop of Fig. 5.
+//! paper can afford the loop of Fig. 5.  Transform costs inside the
+//! simulator follow the packed real-FFT model
+//! (`models::fft_real_mults`, matching `FftPlan::real_mults`), so the
+//! frontier reflects the same arithmetic the Rust substrate executes.
 //!
 //! Accuracy along the frontier comes from a *measured* model: the
 //! block-size sweep the Python pipeline trains (`make sweep` →

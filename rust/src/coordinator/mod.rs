@@ -16,6 +16,11 @@
 //! precisely as in Fig. 4.  The batcher implements the paper's
 //! batch-processing design point (default max batch 64, bounded queueing
 //! with explicit backpressure).
+//!
+//! The executor drives one of two backends (see [`server::EngineKind`]):
+//! PJRT artifacts (`pjrt` feature) or the always-available pure-Rust
+//! substrate, whose batch-major parallel `matmul` shards each released
+//! batch across cores.
 
 pub mod batcher;
 pub mod metrics;
@@ -25,4 +30,4 @@ pub mod server;
 pub use batcher::{BatchPolicy, BatchQueue};
 pub use metrics::Metrics;
 pub use router::Router;
-pub use server::{InferError, Response, Server, ServerConfig};
+pub use server::{EngineKind, InferError, Response, Server, ServerConfig};

@@ -1,10 +1,20 @@
 //! The serving front-end: threads + channels around router, batcher, engine.
 //!
-//! One executor thread owns the (non-`Send`) PJRT engine and all batch
-//! queues; any number of client threads call [`Server::infer`].  The
-//! bounded request channel plus the per-queue `max_queue` give two layers
-//! of backpressure, and all hot-path buffers (the padded batch input) are
-//! reused across batches.
+//! One executor thread owns the execution backend and all batch queues; any
+//! number of client threads call [`Server::infer`].  The bounded request
+//! channel plus the per-queue `max_queue` give two layers of backpressure,
+//! and all hot-path buffers (the padded batch input) are reused across
+//! batches.
+//!
+//! Two backends implement the datapath behind the same batching policy:
+//!
+//! * **PJRT** (`pjrt` feature): compiled HLO artifacts through the `xla`
+//!   crate — `PjRtClient` is not `Send`, so the single executor thread is
+//!   structural, exactly the paper's one-FPGA story.
+//! * **Native** (always available): the pure-Rust block-circulant substrate
+//!   ([`crate::native`]).  Batches execute through the batch-major parallel
+//!   [`BlockCirculant::matmul`](crate::circulant::BlockCirculant::matmul),
+//!   so the datapath itself shards each released batch across cores.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -16,8 +26,12 @@ use std::time::{Duration, Instant};
 use crate::coordinator::batcher::{BatchPolicy, BatchQueue, PushOutcome};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{RouteError, Router};
-use crate::runtime::engine::{argmax_rows, literal_f32, Engine};
+use crate::models;
+use crate::native::NativeModel;
+#[cfg(feature = "pjrt")]
+use crate::runtime::engine::{literal_f32, Engine};
 use crate::runtime::manifest::Manifest;
+use crate::util::argmax_rows;
 
 /// Inference result for one image.
 #[derive(Debug, Clone)]
@@ -43,13 +57,27 @@ pub enum InferError {
     Engine(String),
 }
 
+/// Which execution substrate the executor thread drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// PJRT when the crate is built with the `pjrt` feature, else native.
+    Auto,
+    /// The pure-Rust block-circulant substrate (`crate::native`).
+    Native,
+    /// Compiled HLO artifacts through PJRT.
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
 /// Server construction knobs.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub artifacts_dir: PathBuf,
     pub policy: BatchPolicy,
     /// serve the Pallas-kernel-backed artifact variant where available
+    /// (PJRT backend only)
     pub use_pallas: bool,
+    pub engine: EngineKind,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +86,7 @@ impl Default for ServerConfig {
             artifacts_dir: Manifest::default_dir(),
             policy: BatchPolicy::default(),
             use_pallas: false,
+            engine: EngineKind::Auto,
         }
     }
 }
@@ -160,15 +189,31 @@ impl Drop for Server {
     }
 }
 
+/// Backend-specific execution state for one model.
+enum ModelExec {
+    #[cfg(feature = "pjrt")]
+    Pjrt {
+        artifact_path: PathBuf,
+        input_shape: Vec<usize>,
+        exec_batch: usize,
+        /// classes per row of the artifact's declared output shape (the
+        /// native path reads its head width off the logits instead)
+        classes: usize,
+    },
+    Native {
+        model: Box<NativeModel>,
+        h: usize,
+        w: usize,
+        c: usize,
+    },
+}
+
 /// State the executor keeps per model.
 struct ModelState {
     queue: BatchQueue<Request>,
-    artifact_path: PathBuf,
-    input_shape: Vec<usize>,
-    exec_batch: usize,
+    exec: ModelExec,
     image_elems: usize,
-    classes: usize,
-    /// reused padded input buffer (hot-path allocation avoidance)
+    /// reused batch input buffer (hot-path allocation avoidance)
     scratch: Vec<f32>,
 }
 
@@ -178,13 +223,23 @@ fn executor_loop(
     rx: mpsc::Receiver<Request>,
     metrics: Arc<Metrics>,
 ) {
-    let engine = match Engine::cpu() {
-        Ok(e) => e,
-        Err(err) => {
-            // fail every request with a clear message
-            drain_with_error(rx, &format!("PJRT init failed: {err}"));
-            return;
+    #[cfg(feature = "pjrt")]
+    let use_pjrt = !matches!(config.engine, EngineKind::Native);
+    #[cfg(not(feature = "pjrt"))]
+    let use_pjrt = false;
+
+    #[cfg(feature = "pjrt")]
+    let engine = if use_pjrt {
+        match Engine::cpu() {
+            Ok(e) => Some(e),
+            Err(err) => {
+                // fail every request with a clear message
+                drain_with_error(rx, &format!("PJRT init failed: {err}"));
+                return;
+            }
         }
+    } else {
+        None
     };
 
     let mut states: HashMap<String, ModelState> = HashMap::new();
@@ -194,23 +249,53 @@ fn executor_loop(
         } else {
             &m.artifacts
         };
-        let Some(art) = arts.iter().max_by_key(|a| a.batch) else {
-            continue;
-        };
+        let art = arts.iter().max_by_key(|a| a.batch);
         let image_elems: usize = m.input_shape.iter().product();
+        let exec = if use_pjrt {
+            let Some(art) = art else { continue };
+            pjrt_exec(&manifest, art)
+        } else {
+            // native substrate: registry program + trained params archive
+            let Some(model) = models::by_name(&m.name) else {
+                eprintln!("serve: {} not in the native registry, skipped", m.name);
+                continue;
+            };
+            let path = manifest.dir.join("params").join(format!("{}.npz", m.name));
+            let native = match NativeModel::load(&model, &path, Some(manifest.quant_bits as u32)) {
+                Ok(n) => n,
+                Err(err) => {
+                    eprintln!("serve: {}: {err:#}; model skipped", m.name);
+                    continue;
+                }
+            };
+            let (h, w, c) = model.input;
+            ModelExec::Native { model: Box::new(native), h, w, c }
+        };
+        let exec_batch = match &exec {
+            #[cfg(feature = "pjrt")]
+            ModelExec::Pjrt { exec_batch, .. } => *exec_batch,
+            ModelExec::Native { .. } => config.policy.max_batch.max(1),
+        };
+        // a PJRT artifact executes a fixed batch size: cap this model's
+        // release size at it so a larger policy.max_batch can neither
+        // overflow the scratch buffer nor exceed the compiled batch
+        let mut policy = config.policy;
+        policy.max_batch = policy.max_batch.min(exec_batch).max(1);
         states.insert(
             m.name.clone(),
             ModelState {
-                queue: BatchQueue::new(config.policy),
-                artifact_path: manifest.path_of(&art.file),
-                input_shape: art.input_shape.clone(),
-                exec_batch: art.batch,
+                queue: BatchQueue::new(policy),
+                exec,
                 image_elems,
-                classes: *art.output_shape.last().unwrap_or(&10),
-                scratch: vec![0.0; art.batch * image_elems],
+                scratch: vec![0.0; exec_batch * image_elems],
             },
         );
     }
+
+    #[cfg(feature = "pjrt")]
+    let engine = engine.as_ref();
+    #[cfg(not(feature = "pjrt"))]
+    let engine = NoEngine;
 
     loop {
         // poll timeout: earliest queue deadline, else a coarse tick
@@ -237,7 +322,7 @@ fn executor_loop(
                         let _ = req.resp.send(Err(InferError::Rejected));
                     }
                     PushOutcome::BatchReady => {
-                        execute_batch(&engine, state, &metrics);
+                        execute_batch(engine, state, &metrics);
                     }
                     PushOutcome::Queued => {}
                 }
@@ -247,7 +332,7 @@ fn executor_loop(
                 // drain remaining queued work, then exit
                 for state in states.values_mut() {
                     while !state.queue.is_empty() {
-                        execute_batch(&engine, state, &metrics);
+                        execute_batch(engine, state, &metrics);
                     }
                 }
                 return;
@@ -258,25 +343,86 @@ fn executor_loop(
         let now = Instant::now();
         for state in states.values_mut() {
             if state.queue.ready(now) {
-                execute_batch(&engine, state, &metrics);
+                execute_batch(engine, state, &metrics);
             }
         }
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn drain_with_error(rx: mpsc::Receiver<Request>, msg: &str) {
     while let Ok(req) = rx.recv() {
         let _ = req.resp.send(Err(InferError::Engine(msg.to_string())));
     }
 }
 
-fn execute_batch(engine: &Engine, state: &mut ModelState, metrics: &Metrics) {
+/// Build the PJRT execution state for one artifact.
+#[cfg(feature = "pjrt")]
+fn pjrt_exec(manifest: &Manifest, art: &crate::runtime::manifest::ArtifactEntry) -> ModelExec {
+    ModelExec::Pjrt {
+        artifact_path: manifest.path_of(&art.file),
+        input_shape: art.input_shape.clone(),
+        exec_batch: art.batch,
+        classes: art.output_shape.last().copied().unwrap_or(10),
+    }
+}
+
+/// Stub: without the `pjrt` feature `use_pjrt` is statically false, so this
+/// is never reached — it exists only to keep the call site well-typed.
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_exec(_manifest: &Manifest, _art: &crate::runtime::manifest::ArtifactEntry) -> ModelExec {
+    unreachable!("pjrt backend requested without the pjrt feature")
+}
+
+#[cfg(feature = "pjrt")]
+type EngineRef<'a> = Option<&'a Engine>;
+
+/// Zero-sized stand-in for the engine handle when PJRT is compiled out.
+#[cfg(not(feature = "pjrt"))]
+#[derive(Clone, Copy)]
+struct NoEngine;
+#[cfg(not(feature = "pjrt"))]
+type EngineRef<'a> = NoEngine;
+
+fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metrics) {
+    #[cfg(not(feature = "pjrt"))]
+    let _ = engine;
     let pending = state.queue.drain_batch();
     if pending.is_empty() {
         return;
     }
     let occupied = pending.len();
-    let padded = state.exec_batch - occupied;
+
+    // assemble the batch into the reused scratch buffer (the occupied
+    // prefix is fully overwritten, so only the PJRT pad tail needs zeroing)
+    for (slot, p) in pending.iter().enumerate() {
+        let dst = slot * state.image_elems;
+        state.scratch[dst..dst + state.image_elems].copy_from_slice(&p.item.image);
+    }
+
+    let (result, padded) = match &state.exec {
+        #[cfg(feature = "pjrt")]
+        ModelExec::Pjrt { artifact_path, input_shape, exec_batch, .. } => {
+            let engine = engine.expect("pjrt state without engine");
+            state.scratch[occupied * state.image_elems..].fill(0.0);
+            let r = engine
+                .load(artifact_path)
+                .and_then(|model| {
+                    let lit = literal_f32(&state.scratch, input_shape)?;
+                    model.run1(&[lit])
+                })
+                .and_then(|out| Ok(out.to_vec::<f32>()?))
+                .map_err(|e| e.to_string());
+            (r, exec_batch - occupied)
+        }
+        ModelExec::Native { model, h, w, c } => {
+            // the native substrate takes the occupied batch as-is (no
+            // padding); matmul shards it across cores internally
+            let imgs = &state.scratch[..occupied * state.image_elems];
+            (Ok(model.forward(imgs, occupied, *h, *w, *c)), 0)
+        }
+    };
+
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics
         .batched_items
@@ -285,29 +431,21 @@ fn execute_batch(engine: &Engine, state: &mut ModelState, metrics: &Metrics) {
         .padded_slots
         .fetch_add(padded as u64, Ordering::Relaxed);
 
-    // assemble the padded batch into the reused scratch buffer
-    state.scratch.fill(0.0);
-    for (slot, p) in pending.iter().enumerate() {
-        let dst = slot * state.image_elems;
-        state.scratch[dst..dst + state.image_elems].copy_from_slice(&p.item.image);
-    }
-
-    let result = engine
-        .load(&state.artifact_path)
-        .and_then(|model| {
-            let lit = literal_f32(&state.scratch, &state.input_shape)?;
-            model.run1(&[lit])
-        })
-        .and_then(|out| Ok(out.to_vec::<f32>()?));
-
     match result {
         Ok(logits) => {
-            let labels = argmax_rows(&logits, state.classes);
+            // the native head defines its own class count; the artifact's
+            // declared output shape only binds the PJRT path
+            let classes = match &state.exec {
+                ModelExec::Native { .. } => logits.len() / occupied,
+                #[cfg(feature = "pjrt")]
+                ModelExec::Pjrt { classes, .. } => *classes,
+            };
+            let labels = argmax_rows(&logits, classes);
             for (slot, p) in pending.into_iter().enumerate() {
                 let latency = p.item.submitted.elapsed();
                 metrics.responses.fetch_add(1, Ordering::Relaxed);
                 metrics.record_latency(latency);
-                let row = &logits[slot * state.classes..(slot + 1) * state.classes];
+                let row = &logits[slot * classes..(slot + 1) * classes];
                 let _ = p.item.resp.send(Ok(Response {
                     label: labels[slot],
                     logits: row.to_vec(),
@@ -317,9 +455,8 @@ fn execute_batch(engine: &Engine, state: &mut ModelState, metrics: &Metrics) {
             }
         }
         Err(err) => {
-            let msg = err.to_string();
             for p in pending {
-                let _ = p.item.resp.send(Err(InferError::Engine(msg.clone())));
+                let _ = p.item.resp.send(Err(InferError::Engine(err.clone())));
             }
         }
     }
@@ -327,7 +464,7 @@ fn execute_batch(engine: &Engine, state: &mut ModelState, metrics: &Metrics) {
 
 #[cfg(test)]
 mod tests {
-    // Server tests require compiled artifacts + the PJRT runtime; they live
-    // in rust/tests/coordinator_load.rs.  The pure logic (batcher, router,
-    // metrics) is tested in its own modules.
+    // Server tests require compiled artifacts (and, for the PJRT backend,
+    // the xla runtime); they live in rust/tests/coordinator_load.rs.  The
+    // pure logic (batcher, router, metrics) is tested in its own modules.
 }

@@ -10,11 +10,13 @@
 //!   FFT→∘→IFFT datapath (build-time only).
 //! * **Layer 2** (`python/compile`): JAX block-circulant models, trained and
 //!   AOT-lowered to HLO text artifacts.
-//! * **Layer 3** (this crate): a pure-Rust coordinator that loads the
-//!   artifacts through PJRT ([`runtime`]), serves batched inference
-//!   ([`coordinator`]), and regenerates every table and figure of the
-//!   paper's evaluation through a cycle-level FPGA datapath simulator
-//!   ([`fpga`]) and analytical baseline models ([`baselines`]).
+//! * **Layer 3** (this crate): a pure-Rust coordinator that serves batched
+//!   inference ([`coordinator`]) on either execution substrate — the
+//!   native block-circulant engine ([`native`]) or, behind the
+//!   off-by-default `pjrt` cargo feature, AOT HLO artifacts through PJRT
+//!   ([`runtime`]) — and regenerates every table and figure of the paper's
+//!   evaluation through a cycle-level FPGA datapath simulator ([`fpga`])
+//!   and analytical baseline models ([`baselines`]).
 //!
 //! Python never runs on the request path: after `make artifacts` the binary
 //! is self-contained.
@@ -23,17 +25,17 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`circulant`] | from-scratch FFT / block-circulant numerics (the algorithmic substrate, shared with the simulator) |
+//! | [`circulant`] | from-scratch FFT / block-circulant numerics: packed real-input FFT fast path (k/2-point complex FFT + untangle), crate-wide [`circulant::FftPlan::shared`] plan cache, batch-major parallel `matmul` sharded over scoped threads |
 //! | [`codesign`] | the Fig.-5 algorithm-hardware co-optimization search |
 //! | [`data`] | bit-exact Rust mirror of the Python synthetic datasets |
-//! | [`models`] | registry of the six Table-1 networks + accounting |
+//! | [`models`] | registry of the six Table-1 networks + accounting; `fft_real_mults` is the packed-rfft cost model the simulator charges |
 //! | [`fpga`] | cycle-level simulator of the paper's FPGA datapath |
 //! | [`baselines`] | TrueNorth / reference-FPGA / analog analytical models |
 //! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT) |
-//! | [`runtime`] | PJRT engine: load + execute HLO artifacts |
-//! | [`coordinator`] | router, dynamic batcher, three-phase scheduler |
+//! | [`runtime`] | artifact manifest (always) + PJRT engine (`pjrt` feature): load + execute HLO artifacts |
+//! | [`coordinator`] | router, dynamic batcher, executor over the native or PJRT backend |
 //! | [`experiments`] | Table-1 / Fig-3 / Fig-6 / analog report generators |
-//! | [`util`] | JSON, PRNG, property-test and bench harness kits |
+//! | [`util`] | JSON, PRNG, property-test and bench harness kits (incl. machine-readable bench JSON) |
 
 pub mod baselines;
 pub mod circulant;

@@ -24,13 +24,14 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use circnn::baselines::dense_fpga;
-use circnn::coordinator::{BatchPolicy, Server, ServerConfig};
+use circnn::coordinator::{BatchPolicy, EngineKind, Server, ServerConfig};
 use circnn::data;
 use circnn::experiments::{ablations, analog, complexity, fig3, fig6, table1, try_manifest};
 use circnn::fpga::device;
 use circnn::fpga::report::DesignReport;
 use circnn::fpga::schedule::ScheduleConfig;
 use circnn::models;
+#[cfg(feature = "pjrt")]
 use circnn::runtime::engine::{argmax_rows, literal_f32, literal_i32, Engine};
 use circnn::runtime::manifest::Manifest;
 
@@ -84,10 +85,11 @@ simulator:
            [--no-decouple] [--full-spectrum] [--no-interleave] [--dense]
            [--timeline]   (hierarchical-controller event trace, Fig. 4)
 
-runtime (needs `make artifacts`):
+runtime (needs `make artifacts`; PJRT paths need `--features pjrt`):
   infer      --model NAME [--count N] [--batch 1|64] [--pallas]
              [--engine native]   (pure-Rust, no PJRT)
   serve      [--model NAME] [--requests N] [--clients N] [--max-batch N]
+             [--engine native]   (serve on the pure-Rust substrate)
   train-demo [--steps N]
 
 misc:
@@ -273,6 +275,28 @@ fn cmd_infer(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if flags.get("engine").map(String::as_str) == Some("native") {
         return cmd_infer_native(model_name, count, batch);
     }
+    cmd_infer_pjrt(flags, model_name, count, batch)
+}
+
+/// Binary built without PJRT: only the native substrate can execute.
+#[cfg(not(feature = "pjrt"))]
+fn cmd_infer_pjrt(
+    _flags: &HashMap<String, String>,
+    model_name: &str,
+    count: usize,
+    batch: usize,
+) -> anyhow::Result<()> {
+    eprintln!("note: built without the `pjrt` feature; using --engine native");
+    cmd_infer_native(model_name, count, batch)
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_infer_pjrt(
+    flags: &HashMap<String, String>,
+    model_name: &str,
+    count: usize,
+    batch: usize,
+) -> anyhow::Result<()> {
     let man = Manifest::load(Manifest::default_dir())?;
     let entry = man.model(model_name)?;
     let arts = if flag_bool(flags, "pallas") {
@@ -367,9 +391,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         max_batch: flag_usize(flags, "max-batch", 64),
         ..BatchPolicy::default()
     };
+    let engine = match flags.get("engine").map(String::as_str) {
+        Some("native") => EngineKind::Native,
+        _ => EngineKind::Auto,
+    };
     let server = Server::start(ServerConfig {
         policy,
         use_pallas: flag_bool(flags, "pallas"),
+        engine,
         ..ServerConfig::default()
     })?;
     let man = Manifest::load(Manifest::default_dir())?;
@@ -400,6 +429,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train_demo(_flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "train-demo drives PJRT train-step artifacts; rebuild with \
+         `--features pjrt` (inference works without it: `infer --engine native`)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let steps = flag_usize(flags, "steps", 50);
     let man = Manifest::load(Manifest::default_dir())?;

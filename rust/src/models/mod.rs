@@ -82,10 +82,14 @@ fn log2(k: usize) -> u64 {
     (usize::BITS - 1 - k.leading_zeros()) as u64
 }
 
-/// Real mults of one k-point FFT under the paper's cost model
-/// (matches `FftPlan::real_mults`).
+/// Real mults of one k-point *real* transform under the paper's cost model
+/// (matches `FftPlan::real_mults`): the packed real-input fast path runs a
+/// k/2-point complex FFT (4 real mults per butterfly, k/4 butterflies per
+/// stage, `log2(k) - 1` stages) plus one complex twiddle multiply per
+/// half-spectrum bin in the untangle sweep.
 pub fn fft_real_mults(k: usize) -> u64 {
-    2 * k as u64 * log2(k).max(1)
+    let k64 = k as u64;
+    k64 * log2(k).saturating_sub(1) + 4 * (k64 / 2 + 1)
 }
 
 impl Model {
@@ -418,6 +422,19 @@ mod tests {
             assert!(
                 (got - red).abs() / red < 0.01,
                 "{name}: reduction {got:.2} != {red}"
+            );
+        }
+    }
+
+    #[test]
+    fn fft_cost_model_matches_the_substrate() {
+        // the cycles the simulator charges and the arithmetic the Rust
+        // substrate performs must be the same model
+        for k in [2usize, 8, 64, 128, 256, 512] {
+            assert_eq!(
+                fft_real_mults(k),
+                crate::circulant::FftPlan::shared(k).real_mults(),
+                "k={k}"
             );
         }
     }

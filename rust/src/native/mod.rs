@@ -286,7 +286,7 @@ impl NativeModel {
                 // exactly the FFT count the simulator's FftWork charges.
                 let p_out = bc.rows();
                 let per = x.per_image();
-                let plan = bc.plan().clone();
+                let plan = bc.plan_arc();
                 let kh = plan.half_bins();
                 let (kk, qc, pb) = (*k, x.c / *k, p_out / *k);
                 let mut out = Vec::new();
@@ -409,7 +409,7 @@ impl NativeModel {
     pub fn classify(&self, images: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<u32> {
         let logits = self.forward(images, batch, h, w, c);
         let classes = logits.len() / batch;
-        crate::runtime::engine::argmax_rows(&logits, classes)
+        crate::util::argmax_rows(&logits, classes)
     }
 }
 

@@ -53,7 +53,7 @@ pub fn bc_dense_staged(
     out: &mut [f32],
 ) -> PhaseCounters {
     let (p, q, k) = (bc.p, bc.q, bc.k);
-    let plan = FftPlan::new(k);
+    let plan = FftPlan::shared(k);
     let kh = plan.half_bins();
     assert_eq!(xs.len(), batch * q * k);
     assert_eq!(out.len(), batch * p * k);
@@ -132,7 +132,7 @@ pub fn bc_dense_naive_schedule(
     out: &mut [f32],
 ) -> PhaseCounters {
     let (p, q, k) = (bc.p, bc.q, bc.k);
-    let plan = FftPlan::new(k);
+    let plan = FftPlan::shared(k);
     let kh = plan.half_bins();
     let mut counters = PhaseCounters::default();
     let mut scratch = vec![0.0f32; 2 * k];
@@ -177,7 +177,7 @@ fn spec_of(bc: &BlockCirculant, i: usize, j: usize, kh: usize) -> (Vec<f32>, Vec
     // FFT plan and never borrows BlockCirculant's internal cache (which is
     // private); cost is irrelevant here — the counters track the *datapath*
     // work (phases 1-3), weight spectra are the paper's offline step
-    let plan = FftPlan::new(bc.k);
+    let plan = FftPlan::shared(bc.k);
     let mut scratch = vec![0.0f32; 2 * bc.k];
     let (mut re, mut im) = (vec![0.0f32; kh], vec![0.0f32; kh]);
     plan.rfft_halfspec(bc.block(i, j), &mut re, &mut im, &mut scratch);

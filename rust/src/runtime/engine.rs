@@ -123,21 +123,9 @@ pub fn to_vec_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
-/// Row-wise argmax over a `(batch, classes)` logit buffer.
-pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u32> {
-    logits
-        .chunks(classes)
-        .map(|row| {
-            let mut best = 0usize;
-            for (i, &v) in row.iter().enumerate() {
-                if v > row[best] {
-                    best = i;
-                }
-            }
-            best as u32
-        })
-        .collect()
-}
+/// Row-wise argmax — re-exported from [`crate::util`] (its home since the
+/// native engine needs it without the `pjrt` feature).
+pub use crate::util::argmax_rows;
 
 #[cfg(test)]
 mod tests {
@@ -150,17 +138,7 @@ mod tests {
         assert!(literal_i32(&[7], &[]).is_ok());
     }
 
-    #[test]
-    fn argmax_basic() {
-        let logits = [0.1, 0.9, 0.0, 1.0, 0.2, 0.3];
-        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
-    }
-
-    #[test]
-    fn argmax_ties_take_first() {
-        assert_eq!(argmax_rows(&[0.5, 0.5], 2), vec![0]);
-    }
-
+    // argmax_rows tests live with the function in crate::util.
     // Engine-level tests that need the PJRT runtime + artifacts live in
     // rust/tests/runtime_roundtrip.rs.
 }

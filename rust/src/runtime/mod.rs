@@ -2,18 +2,23 @@
 //! Rust request path.
 //!
 //! * [`manifest`] — parse `artifacts/manifest.json` (model metadata,
-//!   accuracies, accounting, artifact index, dataset checksums).
+//!   accuracies, accounting, artifact index, dataset checksums).  Always
+//!   available: it is pure JSON over the std filesystem.
 //! * [`engine`] — the `xla` crate wrapper: `PjRtClient::cpu()` →
 //!   `HloModuleProto::from_text_file` → compile → execute, with an
 //!   executable cache (one compiled executable per model variant ≈ one
-//!   bitstream in the paper's reconfiguration story).
+//!   bitstream in the paper's reconfiguration story).  Gated behind the
+//!   off-by-default `pjrt` cargo feature so the crate builds and serves
+//!   (through [`crate::native`]) on machines without the XLA runtime.
 //!
 //! HLO *text* is the interchange format: the image's xla_extension 0.5.1
 //! rejects jax≥0.5's 64-bit-id serialized protos, while the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use manifest::Manifest;

@@ -4,8 +4,16 @@
 //! minimum viable equivalent: warmup, repeated timed runs, and a stats line
 //! (median / mean / p95 / std-dev) in a stable parseable format.  All
 //! `rust/benches/*.rs` targets use it.
+//!
+//! Besides the human report, [`write_json`] emits the same measurements as
+//! a machine-readable JSON document (via the from-scratch `util::json`
+//! writer) so the perf trajectory is trackable across PRs — `benches/
+//! circulant.rs` writes `BENCH_circulant.json` at the repo root.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 /// One benchmark measurement.
 #[derive(Debug, Clone)]
@@ -63,6 +71,61 @@ impl Measurement {
         }
         line
     }
+}
+
+impl Measurement {
+    /// The measurement as a JSON object (stats only, not raw samples).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("median_ns".into(), Json::Num(self.median_ns())),
+            ("mean_ns".into(), Json::Num(self.mean_ns())),
+            ("p95_ns".into(), Json::Num(self.p95_ns())),
+            ("stddev_ns".into(), Json::Num(self.stddev_ns())),
+            ("samples".into(), Json::Num(self.samples_ns.len() as f64)),
+            ("items_per_iter".into(), Json::Num(self.items_per_iter as f64)),
+            ("throughput_per_s".into(), Json::Num(self.throughput())),
+        ])
+    }
+}
+
+/// Write a bench suite as machine-readable JSON: the per-measurement stats
+/// plus a `derived` map of named summary ratios (speedups etc.).  The
+/// format is stable so cross-PR tooling can diff perf trajectories.
+pub fn write_json(
+    path: impl AsRef<Path>,
+    suite: &str,
+    results: &[Measurement],
+    derived: &[(String, f64)],
+) -> std::io::Result<()> {
+    let epoch_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let doc = Json::Obj(vec![
+        ("suite".into(), Json::Str(suite.to_string())),
+        ("unix_time_s".into(), Json::Num(epoch_s as f64)),
+        (
+            "parallelism".into(),
+            Json::Num(
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64,
+            ),
+        ),
+        (
+            "results".into(),
+            Json::Arr(results.iter().map(Measurement::to_json).collect()),
+        ),
+        (
+            "derived".into(),
+            Json::Obj(
+                derived
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, doc.to_string() + "\n")
 }
 
 fn percentile(samples: &[f64], p: f64) -> f64 {
@@ -170,6 +233,26 @@ mod tests {
         let m = b.run("noop-sum", 1, || (0..100u64).sum::<u64>());
         assert!(m.median_ns() > 0.0);
         assert_eq!(m.samples_ns.len(), 3);
+    }
+
+    #[test]
+    fn write_json_roundtrips_through_the_parser() {
+        let m = Measurement {
+            name: "rfft_halfspec/k256".into(),
+            samples_ns: vec![100.0, 110.0, 120.0],
+            items_per_iter: 1,
+        };
+        let path = std::env::temp_dir().join(format!("circnn_bench_{}.json", std::process::id()));
+        write_json(&path, "circulant", &[m], &[("rfft_speedup_k256".into(), 1.7)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("suite").and_then(|s| s.as_str()), Some("circulant"));
+        let results = doc.get("results").and_then(|r| r.as_arr()).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("median_ns").and_then(|v| v.as_f64()), Some(110.0));
+        let derived = doc.get("derived").unwrap();
+        assert_eq!(derived.get("rfft_speedup_k256").and_then(|v| v.as_f64()), Some(1.7));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

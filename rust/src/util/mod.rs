@@ -11,3 +11,37 @@ pub mod json;
 pub mod npz;
 pub mod prop;
 pub mod rng;
+
+/// Row-wise argmax over a `(batch, classes)` logit buffer.  Lives here (not
+/// in the PJRT engine) because every execution substrate — native, PJRT,
+/// coordinator — shares it, and only the PJRT one is feature-gated.
+pub fn argmax_rows(logits: &[f32], classes: usize) -> Vec<u32> {
+    logits
+        .chunks(classes)
+        .map(|row| {
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            best as u32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        let logits = [0.1, 0.9, 0.0, 1.0, 0.2, 0.3];
+        assert_eq!(argmax_rows(&logits, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        assert_eq!(argmax_rows(&[0.5, 0.5], 2), vec![0]);
+    }
+}

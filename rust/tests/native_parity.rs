@@ -3,6 +3,11 @@
 //! the AOT HLO artifacts for every registry model — the claim that the
 //! FPGA simulator's cycle accounting walks a datapath that produces the
 //! right numbers.
+//!
+//! Comparing the two substrates requires both, so this target only exists
+//! under the `pjrt` feature (`cargo test --features pjrt`).
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Mutex;
 

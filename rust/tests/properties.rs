@@ -167,6 +167,10 @@ fn prop_batched_matmul_matches_per_row_matvec() {
     );
 }
 
+// (the bitwise matmul == matvec_ws property and the packed-vs-full rfft
+// parity checks live with the code in circulant::block / circulant::fft —
+// one copy per property, not re-run here)
+
 // ---------------------------------------------------------------------------
 // FFT plan details used by the decoupling argument
 // ---------------------------------------------------------------------------

@@ -7,6 +7,11 @@
 //! Tests share one engine behind a mutex — PJRT CPU clients are heavy and
 //! the default test parallelism would otherwise compile the same HLO
 //! modules several times over.
+//!
+//! The whole target needs the PJRT runtime, so it only exists under the
+//! `pjrt` feature (`cargo test --features pjrt`).
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Mutex;
 
