@@ -10,6 +10,7 @@
 //! tracking across PRs).  `harness = false`: uses `util::benchkit`.
 
 use circnn::circulant::{dense, BlockCirculant, FftPlan};
+use circnn::native::conv::{self, ConvShape};
 use circnn::util::benchkit::{self, Bench, Measurement};
 use circnn::util::rng::SplitMix;
 
@@ -98,6 +99,33 @@ fn main() {
         let speedup = ser.median_ns() / par.median_ns();
         println!("   n={n:<5} k={k:<4} batch={batch:<3} parallel speedup {speedup:.2}x");
         derived.push((format!("matmul_speedup_b{batch}_n{n}_k{k}"), speedup));
+        results.extend([ser, par]);
+    }
+
+    println!("\n== BcConv pixel pipeline: serial per-image (pre-PR) vs parallel ==");
+    // the registry's CNN hot path: svhn/cifar-shaped SAME conv layers
+    let conv_cases =
+        [(16usize, 32usize, 3usize, 8usize, 16usize, 32usize), (32, 32, 3, 8, 16, 32)];
+    for (c, p, r, k, hw, batch) in conv_cases {
+        let (pb, qb) = (p / k, (c / k) * r * r);
+        let mut bc = BlockCirculant::new(pb, qb, k, rng.normal_vec(pb * qb * k));
+        bc.precompute();
+        let shape = ConvShape { h: hw, w: hw, c, r, same: true };
+        let xs = rng.normal_vec(batch * hw * hw * c);
+        let bias = rng.normal_vec(p);
+        let ser_name = format!("bc_conv_serial/c{c}_p{p}_{hw}x{hw}_b{batch}");
+        let ser = bench.run(&ser_name, batch as u64, || {
+            conv::forward_serial(&bc, &xs, batch, shape, &bias, true)
+        });
+        let par_name = format!("bc_conv/c{c}_p{p}_{hw}x{hw}_b{batch}");
+        let par = bench.run(&par_name, batch as u64, || {
+            conv::forward(&bc, &xs, batch, shape, &bias, true)
+        });
+        let speedup = ser.median_ns() / par.median_ns();
+        println!(
+            "   c={c:<3} p={p:<3} r={r} k={k} {hw}x{hw} batch={batch:<3} parallel speedup {speedup:.2}x"
+        );
+        derived.push((format!("bc_conv_speedup_c{c}_p{p}_{hw}x{hw}_b{batch}"), speedup));
         results.extend([ser, par]);
     }
 

@@ -37,9 +37,12 @@ pub fn im2col(x: &[f32], h: usize, w: usize, c: usize, r: usize, k: usize) -> Ve
 
 /// SAME (zero) padding helper: pads `x (h, w, c)` so a VALID r-conv keeps
 /// the spatial size; returns `(padded, new_h, new_w)`.
+///
+/// The r-1 pad rows/columns split asymmetrically for even `r`: the smaller
+/// half `lo = (r-1)/2` goes before the content, the remainder after (the
+/// TF SAME convention mirrored from `layers.pad_same`).
 pub fn pad_same(x: &[f32], h: usize, w: usize, c: usize, r: usize) -> (Vec<f32>, usize, usize) {
     let lo = (r - 1) / 2;
-    let hi = r - 1 - lo;
     let (nh, nw) = (h + r - 1, w + r - 1);
     let mut out = vec![0.0f32; nh * nw * c];
     for y in 0..h {
@@ -47,7 +50,6 @@ pub fn pad_same(x: &[f32], h: usize, w: usize, c: usize, r: usize) -> (Vec<f32>,
         let src = y * w * c;
         out[dst..dst + w * c].copy_from_slice(&x[src..src + w * c]);
     }
-    let _ = hi;
     (out, nh, nw)
 }
 
@@ -130,5 +132,18 @@ mod tests {
         assert_eq!((nh, nw), (4, 4));
         assert_eq!(p.iter().filter(|&&v| v != 0.0).count(), 4);
         assert_eq!(p[(1 * 4 + 1) * 1], 1.0); // (1,1) holds original (0,0)
+    }
+
+    #[test]
+    fn pad_same_even_r_puts_the_remainder_on_the_high_side() {
+        // r = 2: lo = (r-1)/2 = 0, so the content stays at the origin and
+        // the single extra row/column of zeros lands after it
+        let x = vec![1.0, 2.0, 3.0, 4.0]; // 2x2x1
+        let (p, nh, nw) = pad_same(&x, 2, 2, 1, 2);
+        assert_eq!((nh, nw), (3, 3));
+        assert_eq!(&p[0..2], &[1.0, 2.0]); // row 0 starts with the content
+        assert_eq!(&p[3..5], &[3.0, 4.0]);
+        assert!((0..3).all(|x_| p[2 * 3 + x_] == 0.0), "high-side row is zero pad");
+        assert!((0..3).all(|y| p[y * 3 + 2] == 0.0), "high-side column is zero pad");
     }
 }

@@ -16,6 +16,7 @@ pub mod fft;
 pub mod fixed;
 pub mod im2col;
 pub mod quant;
+pub mod sched;
 
 pub use block::BlockCirculant;
 pub use fft::FftPlan;

@@ -1,0 +1,104 @@
+//! Shard scheduling for the batch-major three-phase schedules — shared by
+//! the FC path ([`BlockCirculant::matmul`](super::BlockCirculant::matmul))
+//! and the CONV pixel pipeline (`crate::native::conv`).
+//!
+//! Both consumers split an array of independent work units (samples for FC,
+//! pixels for CONV) into contiguous shards executed on scoped threads, each
+//! shard owning its own workspace.  The policy lives here so every parallel
+//! loop in the substrate answers to the same knobs: an explicit
+//! `CIRCNN_THREADS` override, else the available parallelism capped by a
+//! minimum amount of work per shard so tiny problems stay on one core.
+
+use std::sync::OnceLock;
+
+/// Minimum phase-2 lanes per shard before a spawn pays for itself (~64k).
+const MIN_LANES_PER_SHARD_LOG2: u32 = 16;
+
+fn thread_override() -> Option<usize> {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        std::env::var("CIRCNN_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+    })
+}
+
+/// Shards for `items` independent work units of `lanes_per_item` lanes
+/// each.  An explicit `CIRCNN_THREADS` (read once per process) is honored
+/// as-is, capped only by the unit count; otherwise the available
+/// parallelism is further capped so each shard keeps enough lanes to pay
+/// for its spawn.
+pub fn shard_count(items: usize, lanes_per_item: usize) -> usize {
+    if items == 0 {
+        return 1;
+    }
+    if let Some(t) = thread_override() {
+        return t.min(items);
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let max_useful = (items * lanes_per_item) >> MIN_LANES_PER_SHARD_LOG2;
+    hw.min(items).min(max_useful.max(1))
+}
+
+/// Per-thread buffers for one shard of a three-phase schedule: FFT scratch
+/// (2k floats), optional phase-1 spectra planes, optional phase-2
+/// accumulator planes.  Consumers size the planes for their shard shape
+/// (`batch*q*kh` spectra + `batch*kh` accumulators for the FC batch-major
+/// schedule; no spectra + `kh` accumulators for the CONV per-pixel loop)
+/// and reuse one workspace across the whole shard, so the hot loops run
+/// allocation-free.
+pub struct ShardWorkspace {
+    pub scratch: Vec<f32>,
+    /// phase-1 spectra, real/imag planes
+    pub xr: Vec<f32>,
+    pub xi: Vec<f32>,
+    /// phase-2 accumulators, real/imag planes
+    pub acc_r: Vec<f32>,
+    pub acc_i: Vec<f32>,
+}
+
+impl ShardWorkspace {
+    /// `k`: block size; `spectra` / `acc`: total lanes in the xr/xi and
+    /// acc_r/acc_i planes (0 when the consumer keeps those elsewhere).
+    pub fn new(k: usize, spectra: usize, acc: usize) -> Self {
+        Self {
+            scratch: vec![0.0; 2 * k],
+            xr: vec![0.0; spectra],
+            xi: vec![0.0; spectra],
+            acc_r: vec![0.0; acc],
+            acc_i: vec![0.0; acc],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_count_is_bounded_by_items() {
+        // the override (when set) and the hardware cap are both limited by
+        // the unit count; zero items degenerate to one (empty) shard
+        assert_eq!(shard_count(0, 1 << 20), 1);
+        assert!(shard_count(1, 1 << 20) <= 1);
+        assert!(shard_count(7, 1 << 20) <= 7);
+    }
+
+    #[test]
+    fn tiny_problems_stay_serial_without_override() {
+        if thread_override().is_some() {
+            return; // CIRCNN_THREADS set: the override wins by design
+        }
+        // far below the min-lanes threshold => one shard
+        assert_eq!(shard_count(4, 8), 1);
+    }
+
+    #[test]
+    fn workspace_sizes() {
+        let ws = ShardWorkspace::new(8, 40, 5);
+        assert_eq!(ws.scratch.len(), 16);
+        assert_eq!((ws.xr.len(), ws.xi.len()), (40, 40));
+        assert_eq!((ws.acc_r.len(), ws.acc_i.len()), (5, 5));
+    }
+}

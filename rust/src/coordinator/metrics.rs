@@ -8,6 +8,10 @@ const BUCKETS_US: [u64; 12] = [
     10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, u64::MAX,
 ];
 
+/// Largest finite bucket bound — percentiles landing in the open-ended
+/// overflow bucket saturate here instead of reporting `u64::MAX`.
+const MAX_FINITE_US: u64 = BUCKETS_US[BUCKETS_US.len() - 2];
+
 /// Shared serving metrics (all atomic; cheap to clone via Arc).
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -43,26 +47,37 @@ impl Metrics {
         self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
-    /// Approximate latency percentile from the histogram (returns the
-    /// bucket's upper bound).
-    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+    /// Index into `BUCKETS_US` of the bucket holding percentile `p`
+    /// (`None` with no samples).
+    fn percentile_bucket(&self, p: f64) -> Option<usize> {
         let total: u64 = self
             .latency_buckets
             .iter()
             .map(|b| b.load(Ordering::Relaxed))
             .sum();
         if total == 0 {
-            return 0;
+            return None;
         }
         let target = (total as f64 * p / 100.0).ceil() as u64;
         let mut seen = 0;
         for (i, b) in self.latency_buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
             if seen >= target {
-                return BUCKETS_US[i];
+                return Some(i);
             }
         }
-        BUCKETS_US[11]
+        Some(BUCKETS_US.len() - 1)
+    }
+
+    /// Approximate latency percentile from the histogram (the bucket's
+    /// upper bound).  A percentile landing in the open-ended last bucket
+    /// saturates to [`MAX_FINITE_US`] — a *lower* bound in that case, never
+    /// `u64::MAX`; `summary()` reports it as `>1000000us`.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        match self.percentile_bucket(p) {
+            None => 0,
+            Some(i) => BUCKETS_US[i].min(MAX_FINITE_US),
+        }
     }
 
     /// Mean occupied batch size.
@@ -86,9 +101,15 @@ impl Metrics {
 
     /// One-line summary for logs / examples.
     pub fn summary(&self) -> String {
+        let p95 = match self.percentile_bucket(95.0) {
+            // overflow bucket: the bound is a floor, not a ceiling
+            Some(i) if BUCKETS_US[i] == u64::MAX => format!("p95>{MAX_FINITE_US}us"),
+            Some(i) => format!("p95<={}us", BUCKETS_US[i]),
+            None => "p95<=0us".to_string(),
+        };
         format!(
             "requests={} responses={} rejected={} batches={} mean_batch={:.1} \
-             padding={:.1}% mean_latency={:.0}us p95<={}us",
+             padding={:.1}% mean_latency={:.0}us {p95}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -96,7 +117,6 @@ impl Metrics {
             self.mean_batch_size(),
             self.padding_fraction() * 100.0,
             self.mean_latency_us(),
-            self.latency_percentile_us(95.0),
         )
     }
 }
@@ -114,6 +134,22 @@ mod tests {
         m.record_latency(Duration::from_millis(50));
         assert_eq!(m.latency_percentile_us(50.0), 100);
         assert_eq!(m.latency_percentile_us(99.9), 100_000);
+    }
+
+    #[test]
+    fn overflow_bucket_saturates_to_finite_bound() {
+        // a >1s latency lands in the open-ended last bucket; the reported
+        // percentile must saturate (it printed u64::MAX before) and the
+        // summary must flag it as a floor
+        let m = Metrics::new();
+        m.record_latency(Duration::from_secs(2));
+        assert_eq!(m.latency_percentile_us(50.0), 1_000_000);
+        assert_eq!(m.latency_percentile_us(99.9), 1_000_000);
+        assert!(
+            m.summary().contains("p95>1000000us"),
+            "summary must report the overflow bucket as a lower bound: {}",
+            m.summary()
+        );
     }
 
     #[test]

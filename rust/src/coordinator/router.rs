@@ -34,16 +34,31 @@ pub struct RouteTarget {
     pub dataset: String,
     /// per-image element count (H*W*C)
     pub image_elems: usize,
-    /// artifact batch the executor pads to
+    /// batch the executor runs: the artifact batch it pads to on the PJRT
+    /// path, the policy's release size on the native path
+    /// ([`Router::from_manifest_sized`])
     pub exec_batch: usize,
 }
 
 impl Router {
-    /// Build the routing table from the manifest.
+    /// Build the routing table from the manifest (artifact-sized exec
+    /// batches — the PJRT story).
     pub fn from_manifest(man: &Manifest) -> Self {
+        Self::from_manifest_sized(man, None)
+    }
+
+    /// Build the routing table with an explicit exec batch.  The native
+    /// substrate executes whatever the batching policy releases rather
+    /// than a compiled artifact's fixed batch, so the server passes its
+    /// `policy.max_batch` here; `None` keeps the artifact-derived sizes.
+    pub fn from_manifest_sized(man: &Manifest, exec_batch: Option<usize>) -> Self {
         let mut table = HashMap::new();
         for m in &man.models {
-            table.insert(m.name.clone(), RouteTarget::from_entry(m));
+            let mut target = RouteTarget::from_entry(m);
+            if let Some(b) = exec_batch {
+                target.exec_batch = b;
+            }
+            table.insert(m.name.clone(), target);
         }
         Self { table }
     }
@@ -145,6 +160,22 @@ mod tests {
         let t = r.validate("m", &vec![0.0; 784]).unwrap();
         assert_eq!(t.exec_batch, 64);
         assert_eq!(t.image_elems, 784);
+    }
+
+    #[test]
+    fn sized_table_advertises_the_native_batch() {
+        // the native substrate executes the policy's release size, not the
+        // compiled artifact's batch — the sized constructor reflects that
+        let man = Manifest {
+            dir: std::path::PathBuf::new(),
+            quant_bits: 12,
+            models: vec![entry("m")],
+            dataset_checksums: std::collections::HashMap::new(),
+        };
+        let artifact_sized = Router::from_manifest(&man);
+        assert_eq!(artifact_sized.target("m").unwrap().exec_batch, 64);
+        let native_sized = Router::from_manifest_sized(&man, Some(16));
+        assert_eq!(native_sized.target("m").unwrap().exec_batch, 16);
     }
 
     #[test]

@@ -112,7 +112,14 @@ impl Server {
     /// Load the manifest, spawn the executor thread, return the handle.
     pub fn start(config: ServerConfig) -> anyhow::Result<Self> {
         let manifest = Manifest::load(&config.artifacts_dir)?;
-        let router = Arc::new(Router::from_manifest(&manifest));
+        // the native substrate executes the policy's release size; only the
+        // PJRT path is bound to a compiled artifact's batch
+        #[cfg(feature = "pjrt")]
+        let native_batch = matches!(config.engine, EngineKind::Native)
+            .then_some(config.policy.max_batch.max(1));
+        #[cfg(not(feature = "pjrt"))]
+        let native_batch = Some(config.policy.max_batch.max(1));
+        let router = Arc::new(Router::from_manifest_sized(&manifest, native_batch));
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::sync_channel::<Request>(config.policy.max_queue);
         let exec_metrics = metrics.clone();
@@ -206,6 +213,11 @@ enum ModelExec {
         w: usize,
         c: usize,
     },
+    /// The model's execution state failed to initialize (params missing or
+    /// malformed).  The router still admits its requests — they reach the
+    /// executor and fail with the load error, instead of the misleading
+    /// `UnknownModel` a silently-skipped model used to produce.
+    Failed { reason: String },
 }
 
 /// State the executor keeps per model.
@@ -252,43 +264,83 @@ fn executor_loop(
         let art = arts.iter().max_by_key(|a| a.batch);
         let image_elems: usize = m.input_shape.iter().product();
         let exec = if use_pjrt {
-            let Some(art) = art else { continue };
-            pjrt_exec(&manifest, art)
-        } else {
-            // native substrate: registry program + trained params archive
-            let Some(model) = models::by_name(&m.name) else {
-                eprintln!("serve: {} not in the native registry, skipped", m.name);
-                continue;
-            };
-            let path = manifest.dir.join("params").join(format!("{}.npz", m.name));
-            let native = match NativeModel::load(&model, &path, Some(manifest.quant_bits as u32)) {
-                Ok(n) => n,
-                Err(err) => {
-                    eprintln!("serve: {}: {err:#}; model skipped", m.name);
-                    continue;
+            match art {
+                Some(art) => pjrt_exec(&manifest, art),
+                // same contract as the native arm below: the router admits
+                // this model, so don't vanish behind UnknownModel
+                None => {
+                    eprintln!(
+                        "serve: {} has no compiled artifact; its requests will \
+                         fail with an engine error",
+                        m.name
+                    );
+                    ModelExec::Failed {
+                        reason: format!("no compiled artifact for {}", m.name),
+                    }
                 }
-            };
-            let (h, w, c) = model.input;
-            ModelExec::Native { model: Box::new(native), h, w, c }
+            }
+        } else {
+            // native substrate: registry program + trained params archive.
+            // A load failure must not silently drop the model — the router
+            // already admits its requests, so keep a Failed state that
+            // answers them with the real error.
+            match models::by_name(&m.name) {
+                None => {
+                    eprintln!(
+                        "serve: {} not in the native registry; its requests will \
+                         fail with an engine error",
+                        m.name
+                    );
+                    ModelExec::Failed {
+                        reason: format!("model {} is not in the native registry", m.name),
+                    }
+                }
+                Some(model) => {
+                    let path =
+                        manifest.dir.join("params").join(format!("{}.npz", m.name));
+                    match NativeModel::load(&model, &path, Some(manifest.quant_bits as u32))
+                    {
+                        Ok(native) => {
+                            let (h, w, c) = model.input;
+                            ModelExec::Native { model: Box::new(native), h, w, c }
+                        }
+                        Err(err) => {
+                            eprintln!(
+                                "serve: {}: {err:#}; its requests will fail with an \
+                                 engine error",
+                                m.name
+                            );
+                            ModelExec::Failed {
+                                reason: format!(
+                                    "native params for {} failed to load: {err:#}",
+                                    m.name
+                                ),
+                            }
+                        }
+                    }
+                }
+            }
         };
         let exec_batch = match &exec {
             #[cfg(feature = "pjrt")]
             ModelExec::Pjrt { exec_batch, .. } => *exec_batch,
-            ModelExec::Native { .. } => config.policy.max_batch.max(1),
+            ModelExec::Native { .. } | ModelExec::Failed { .. } => {
+                config.policy.max_batch.max(1)
+            }
         };
         // a PJRT artifact executes a fixed batch size: cap this model's
         // release size at it so a larger policy.max_batch can neither
         // overflow the scratch buffer nor exceed the compiled batch
         let mut policy = config.policy;
         policy.max_batch = policy.max_batch.min(exec_batch).max(1);
+        // a Failed model never assembles a batch — don't hold its buffer
+        let scratch = match &exec {
+            ModelExec::Failed { .. } => Vec::new(),
+            _ => vec![0.0; exec_batch * image_elems],
+        };
         states.insert(
             m.name.clone(),
-            ModelState {
-                queue: BatchQueue::new(policy),
-                exec,
-                image_elems,
-                scratch: vec![0.0; exec_batch * image_elems],
-            },
+            ModelState { queue: BatchQueue::new(policy), exec, image_elems, scratch },
         );
     }
 
@@ -316,6 +368,13 @@ fn executor_loop(
                         ))));
                     continue;
                 };
+                // a Failed model's outcome is known now: answer immediately
+                // instead of letting the request ride out the batch deadline
+                if let ModelExec::Failed { reason } = &state.exec {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = req.resp.send(Err(InferError::Engine(reason.clone())));
+                    continue;
+                }
                 match state.queue.push(req, Instant::now()) {
                     PushOutcome::Rejected(req) => {
                         metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -391,6 +450,15 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
     if pending.is_empty() {
         return;
     }
+    if let ModelExec::Failed { reason } = &state.exec {
+        // count these as shed load so the books stay balanced
+        // (requests == responses + rejected) — no batch ever executes
+        metrics.rejected.fetch_add(pending.len() as u64, Ordering::Relaxed);
+        for p in pending {
+            let _ = p.item.resp.send(Err(InferError::Engine(reason.clone())));
+        }
+        return;
+    }
     let occupied = pending.len();
 
     // assemble the batch into the reused scratch buffer (the occupied
@@ -417,10 +485,11 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
         }
         ModelExec::Native { model, h, w, c } => {
             // the native substrate takes the occupied batch as-is (no
-            // padding); matmul shards it across cores internally
+            // padding); the conv/matmul phases shard it across cores
             let imgs = &state.scratch[..occupied * state.image_elems];
             (Ok(model.forward(imgs, occupied, *h, *w, *c)), 0)
         }
+        ModelExec::Failed { .. } => unreachable!("handled before batch assembly"),
     };
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -439,6 +508,7 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
                 ModelExec::Native { .. } => logits.len() / occupied,
                 #[cfg(feature = "pjrt")]
                 ModelExec::Pjrt { classes, .. } => *classes,
+                ModelExec::Failed { .. } => unreachable!("handled before batch assembly"),
             };
             let labels = argmax_rows(&logits, classes);
             for (slot, p) in pending.into_iter().enumerate() {
@@ -455,6 +525,9 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
             }
         }
         Err(err) => {
+            // engine-failed requests are shed load, same bookkeeping as the
+            // Failed-model path: requests == responses + rejected
+            metrics.rejected.fetch_add(pending.len() as u64, Ordering::Relaxed);
             for p in pending {
                 let _ = p.item.resp.send(Err(InferError::Engine(err.clone())));
             }

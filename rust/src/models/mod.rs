@@ -62,7 +62,12 @@ pub struct LayerAccount {
 /// * FC: q input FFTs + p output IFFTs (not p*q of each);
 /// * CONV: one FFT per input channel-block per *input pixel* — every pixel's
 ///   spectrum is shared by all r^2 patch taps that touch it — plus one IFFT
-///   per output channel-block per output pixel.
+///   per output channel-block per output pixel.  For `same_pad` layers the
+///   substrate walks the padded `(h+r-1) x (w+r-1)` grid but *skips* the
+///   all-zero border spectra (they are identically zero, so the skip is
+///   bitwise invisible): only the `h*w` interior pixels are charged here,
+///   and `native::staged`'s conv parity test pins these counts against the
+///   transforms `native::conv` actually executes.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FftWork {
     pub k: usize,
@@ -131,7 +136,11 @@ impl Model {
                     let dp = (r * r * c * p) as u64;
                     let fm = fft_real_mults(k);
                     // decoupled: each input pixel's channel-block spectrum is
-                    // computed once and re-used by every patch tap touching it
+                    // computed once and re-used by every patch tap touching
+                    // it.  h*w is the count for both pad modes: under
+                    // same_pad the substrate skips the padded grid's
+                    // all-zero border spectra, leaving exactly the h*w
+                    // interior pixels it transforms (conv parity test).
                     let ffts_total = cb * (h * w) as u64;
                     let iffts_total = pb * (oh * ow) as u64;
                     let mult_groups_total = pb * qb * (oh * ow) as u64;

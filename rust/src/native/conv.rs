@@ -1,0 +1,487 @@
+//! Parallel three-phase executor for block-circulant CONV layers — the
+//! paper's CONV reformulation (Fig. 2 / Eqn. 1) on the native substrate,
+//! sharded across cores the way [`BlockCirculant::matmul`] shards the FC
+//! path.
+//!
+//! The decoupled schedule (§Perf: 2.3x on the CNN models): every *input
+//! pixel's* channel-block spectrum is computed once and shared by all r^2
+//! filter taps that touch it, instead of re-FFT-ing the im2col replicas —
+//! exactly the FFT count the simulator's `models::FftWork` charges.
+//! [`forward`] runs it in two parallel sweeps over `crate::circulant::sched`
+//! shards with per-thread workspaces:
+//!
+//! * **phase 1**: one rFFT per (image, input pixel, channel block), the
+//!   whole batch's spectra sharded by pixel.  For `same`-padded layers the
+//!   all-zero border pixels of the padded grid are *skipped*: their spectrum
+//!   is identically zero — already the buffer's state — so every
+//!   `complex_mul_acc` against them contributes exact `±0.0` terms that
+//!   leave the accumulators bitwise unchanged.  The skip is therefore
+//!   invisible in the output and makes the executed transform count equal
+//!   the `ffts_total` the cost model charges (pinned by the conv parity
+//!   test in [`super::staged`]).
+//! * **phases 2+3**: per output pixel, `p/k` spectral multiply-accumulate
+//!   sweeps over the `(c/k)·r·r` taps followed by one IFFT per output
+//!   block; output pixels sharded across the batch.  (A row-major tap-outer
+//!   variant was tried and reverted: neutral on SVHN, -19% on the WRN —
+//!   §Perf iteration log.)
+//!
+//! Both sweeps only reorder *independent* per-pixel work, so the result is
+//! bit-identical to the pre-PR serial walk (kept as [`forward_serial`],
+//! pinned by `prop_parallel_conv_bit_identical_to_serial`).
+
+use crate::circulant::fft::complex_mul_acc;
+use crate::circulant::sched::{self, ShardWorkspace};
+use crate::circulant::{im2col, BlockCirculant};
+
+use super::staged::PhaseCounters;
+
+/// Result of one BC-conv layer over a batch.
+pub struct ConvOutput {
+    /// `(batch, oh, ow, p)` row-major activations (bias/relu applied)
+    pub data: Vec<f32>,
+    pub oh: usize,
+    pub ow: usize,
+    /// transforms / multiply groups actually executed, whole batch
+    pub counters: PhaseCounters,
+}
+
+/// Shape of one BC-conv application: `(h, w, c)` input, `r x r` kernel,
+/// SAME or VALID padding.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvShape {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub r: usize,
+    pub same: bool,
+}
+
+/// Derived layer geometry shared by the phases.
+struct Geom {
+    h: usize,
+    w: usize,
+    c: usize,
+    r: usize,
+    /// padded input grid (equal to `h`/`w` for VALID)
+    ih: usize,
+    iw: usize,
+    oh: usize,
+    ow: usize,
+    /// low-side SAME pad — `(r-1)/2`, the asymmetric-split convention of
+    /// `im2col::pad_same` (0 for VALID)
+    lo: usize,
+}
+
+impl Geom {
+    fn new(s: ConvShape) -> Self {
+        let ConvShape { h, w, c, r, same } = s;
+        let (ih, iw, lo) = if same { (h + r - 1, w + r - 1, (r - 1) / 2) } else { (h, w, 0) };
+        assert!(ih >= r && iw >= r, "kernel {r} larger than {ih}x{iw} input");
+        Self { h, w, c, r, ih, iw, oh: ih - r + 1, ow: iw - r + 1, lo }
+    }
+}
+
+/// Batch- and pixel-parallel BC-conv: `xs` is `(batch, h, w, c)` row-major,
+/// `bc` holds the `(p/k) x ((c/k)·r·r)` weight-spectrum grid (precomputed).
+/// Returns activations plus the executed phase counters.
+pub fn forward(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    bias: &[f32],
+    relu: bool,
+) -> ConvOutput {
+    let k = bc.k;
+    assert_eq!(xs.len(), batch * shape.h * shape.w * shape.c, "input buffer size");
+    assert_eq!(shape.c % k, 0, "k must divide the channel count");
+    let qc = shape.c / k;
+    assert_eq!(bc.q, qc * shape.r * shape.r, "weight grid != (c/k)*r*r input blocks");
+    let p_out = bc.rows();
+    let pb = bc.p;
+    let plan = bc.plan_arc();
+    let kh = plan.half_bins();
+    let g = Geom::new(shape);
+    let (ihw, ohw) = (g.ih * g.iw, g.oh * g.ow);
+
+    let mut counters = PhaseCounters::default();
+    let mut out = vec![0.0f32; batch * ohw * p_out];
+    if batch == 0 {
+        return ConvOutput { data: out, oh: g.oh, ow: g.ow, counters };
+    }
+
+    // ---- phase 1: the whole batch's input-pixel spectra, sharded by pixel.
+    // Layout `[(b*ihw + pix) * qc + cb][kh]`; border pixels stay zero.
+    let spec_stride = qc * kh;
+    let mut xfr = vec![0.0f32; batch * ihw * spec_stride];
+    let mut xfi = vec![0.0f32; batch * ihw * spec_stride];
+    let fft_shard = |unit0: usize, xr: &mut [f32], xi: &mut [f32]| -> u64 {
+        let mut ws = ShardWorkspace::new(k, 0, 0);
+        let mut ffts = 0u64;
+        for u in 0..xr.len() / spec_stride {
+            let pix = (unit0 + u) % ihw;
+            let (y, x) = (pix / g.iw, pix % g.iw);
+            if y < g.lo || y >= g.lo + g.h || x < g.lo || x >= g.lo + g.w {
+                continue; // all-zero padded border: spectrum is already zero
+            }
+            let b = (unit0 + u) / ihw;
+            let src = ((b * g.h + (y - g.lo)) * g.w + (x - g.lo)) * g.c;
+            for cb in 0..qc {
+                let off = u * spec_stride + cb * kh;
+                plan.rfft_halfspec(
+                    &xs[src + cb * k..src + (cb + 1) * k],
+                    &mut xr[off..off + kh],
+                    &mut xi[off..off + kh],
+                    &mut ws.scratch,
+                );
+                ffts += 1;
+            }
+        }
+        ffts
+    };
+    let units1 = batch * ihw;
+    let shards1 = sched::shard_count(units1, qc * plan.real_mults() as usize);
+    if shards1 <= 1 {
+        counters.ffts = fft_shard(0, &mut xfr, &mut xfi);
+    } else {
+        let chunk = units1.div_ceil(shards1) * spec_stride;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards1);
+            let mut unit0 = 0;
+            for (xr, xi) in xfr.chunks_mut(chunk).zip(xfi.chunks_mut(chunk)) {
+                let units_here = xr.len() / spec_stride;
+                let (u0, f) = (unit0, &fft_shard);
+                handles.push(scope.spawn(move || f(u0, xr, xi)));
+                unit0 += units_here;
+            }
+            for hdl in handles {
+                counters.ffts += hdl.join().expect("phase-1 shard panicked");
+            }
+        });
+    }
+
+    // ---- phases 2+3: spectral MAC + one IFFT per (output pixel, output
+    // block), output pixels sharded across the batch
+    let mac_shard = |unit0: usize, out: &mut [f32]| -> (u64, u64) {
+        let mut ws = ShardWorkspace::new(k, 0, kh);
+        let (mut mult_groups, mut iffts) = (0u64, 0u64);
+        for u in 0..out.len() / p_out {
+            let (b, opix) = ((unit0 + u) / ohw, (unit0 + u) % ohw);
+            let (oy, ox) = (opix / g.ow, opix % g.ow);
+            let dst = u * p_out;
+            for i in 0..pb {
+                ws.acc_r.fill(0.0);
+                ws.acc_i.fill(0.0);
+                for cb in 0..qc {
+                    for di in 0..g.r {
+                        for dj in 0..g.r {
+                            let j = (cb * g.r + di) * g.r + dj;
+                            let (wr, wi) = bc.spectrum(i, j);
+                            let pix = (oy + di) * g.iw + ox + dj;
+                            let xo = (b * ihw + pix) * spec_stride + cb * kh;
+                            complex_mul_acc(
+                                wr,
+                                wi,
+                                &xfr[xo..xo + kh],
+                                &xfi[xo..xo + kh],
+                                &mut ws.acc_r,
+                                &mut ws.acc_i,
+                            );
+                            mult_groups += 1;
+                        }
+                    }
+                }
+                plan.irfft_halfspec(
+                    &ws.acc_r,
+                    &ws.acc_i,
+                    &mut out[dst + i * k..dst + (i + 1) * k],
+                    &mut ws.scratch,
+                );
+                iffts += 1;
+            }
+        }
+        (mult_groups, iffts)
+    };
+    let units2 = batch * ohw;
+    let shards2 = sched::shard_count(units2, pb * bc.q * kh);
+    if shards2 <= 1 {
+        (counters.mult_groups, counters.iffts) = mac_shard(0, &mut out);
+    } else {
+        let chunk = units2.div_ceil(shards2) * p_out;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards2);
+            let mut unit0 = 0;
+            for out_chunk in out.chunks_mut(chunk) {
+                let units_here = out_chunk.len() / p_out;
+                let (u0, f) = (unit0, &mac_shard);
+                handles.push(scope.spawn(move || f(u0, out_chunk)));
+                unit0 += units_here;
+            }
+            for hdl in handles {
+                let (mg, iff) = hdl.join().expect("phase-2/3 shard panicked");
+                counters.mult_groups += mg;
+                counters.iffts += iff;
+            }
+        });
+    }
+
+    super::finish_rows(&mut out, bias, p_out, relu);
+    ConvOutput { data: out, oh: g.oh, ow: g.ow, counters }
+}
+
+/// The pre-PR serial walk: one core, one image at a time, padded grid
+/// materialized and FFT'd border included.  Kept verbatim as the baseline
+/// [`forward`] must match bit-for-bit (property-tested) and the benches
+/// measure it against; its counters show the border FFTs the parallel path
+/// skips.
+pub fn forward_serial(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    bias: &[f32],
+    relu: bool,
+) -> ConvOutput {
+    let ConvShape { h, w, c, r, same } = shape;
+    let k = bc.k;
+    assert_eq!(xs.len(), batch * h * w * c, "input buffer size");
+    let p_out = bc.rows();
+    let per = h * w * c;
+    let plan = bc.plan_arc();
+    let kh = plan.half_bins();
+    let (qc, pb) = (c / k, p_out / k);
+    let mut counters = PhaseCounters::default();
+    let mut out = Vec::new();
+    let (mut oh, mut ow) = (0, 0);
+    let mut scratch = vec![0.0f32; 2 * k];
+    let mut xfr: Vec<f32> = Vec::new();
+    let mut xfi: Vec<f32> = Vec::new();
+    let (mut acc_r, mut acc_i) = (vec![0.0f32; kh], vec![0.0f32; kh]);
+    for b in 0..batch {
+        let img = &xs[b * per..(b + 1) * per];
+        let padded;
+        let (src, ih, iw): (&[f32], usize, usize) = if same {
+            let (p_, ph, pw) = im2col::pad_same(img, h, w, c, r);
+            padded = p_;
+            (&padded, ph, pw)
+        } else {
+            (img, h, w)
+        };
+        (oh, ow) = (ih - r + 1, iw - r + 1);
+        if out.is_empty() {
+            out = vec![0.0f32; batch * oh * ow * p_out];
+        }
+        // phase 1: one rFFT per (input pixel, channel block)
+        xfr.resize(ih * iw * qc * kh, 0.0);
+        xfi.resize(ih * iw * qc * kh, 0.0);
+        for pix in 0..ih * iw {
+            for cb in 0..qc {
+                let off = (pix * qc + cb) * kh;
+                plan.rfft_halfspec(
+                    &src[pix * c + cb * k..pix * c + (cb + 1) * k],
+                    &mut xfr[off..off + kh],
+                    &mut xfi[off..off + kh],
+                    &mut scratch,
+                );
+                counters.ffts += 1;
+            }
+        }
+        // phases 2+3: per-pixel spectral MAC + one IFFT per
+        // (output pixel, output block)
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((b * oh + oy) * ow + ox) * p_out;
+                for i in 0..pb {
+                    acc_r.fill(0.0);
+                    acc_i.fill(0.0);
+                    for cb in 0..qc {
+                        for di in 0..r {
+                            for dj in 0..r {
+                                let j = (cb * r + di) * r + dj;
+                                let (wr, wi) = bc.spectrum(i, j);
+                                let pix = (oy + di) * iw + ox + dj;
+                                let xo = (pix * qc + cb) * kh;
+                                complex_mul_acc(
+                                    wr,
+                                    wi,
+                                    &xfr[xo..xo + kh],
+                                    &xfi[xo..xo + kh],
+                                    &mut acc_r,
+                                    &mut acc_i,
+                                );
+                                counters.mult_groups += 1;
+                            }
+                        }
+                    }
+                    plan.irfft_halfspec(
+                        &acc_r,
+                        &acc_i,
+                        &mut out[dst + i * k..dst + (i + 1) * k],
+                        &mut scratch,
+                    );
+                    counters.iffts += 1;
+                }
+            }
+        }
+    }
+    super::finish_rows(&mut out, bias, p_out, relu);
+    ConvOutput { data: out, oh, ow, counters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_all_close, forall};
+    use crate::util::rng::SplitMix;
+
+    fn random_conv_bc(
+        rng: &mut SplitMix,
+        pb: usize,
+        qc: usize,
+        r: usize,
+        k: usize,
+    ) -> BlockCirculant {
+        let qb = qc * r * r;
+        let mut bc = BlockCirculant::new(pb, qb, k, rng.normal_vec(pb * qb * k));
+        bc.precompute();
+        bc
+    }
+
+    #[test]
+    fn prop_parallel_conv_bit_identical_to_serial() {
+        // the parallel pipeline only reorders independent per-pixel work,
+        // and the skipped border spectra are identically zero, so it must
+        // agree with the pre-PR serial walk bit for bit — no tolerance
+        forall(
+            "parallel bc-conv == serial pre-PR path, bitwise",
+            |rng| {
+                let k = 1usize << (1 + rng.below(4)); // 2..16
+                let qc = 1 + rng.below(3) as usize;
+                let pb = 1 + rng.below(3) as usize;
+                let r = 1 + rng.below(3) as usize;
+                let same = rng.below(2) == 1;
+                let (h, w) = (r + rng.below(5) as usize, r + rng.below(5) as usize);
+                let batch = 1 + rng.below(6) as usize;
+                let c = qc * k;
+                let bc = random_conv_bc(rng, pb, qc, r, k);
+                let xs = rng.normal_vec(batch * h * w * c);
+                let bias = rng.normal_vec(pb * k);
+                (bc, xs, batch, ConvShape { h, w, c, r, same }, bias)
+            },
+            |(bc, xs, batch, shape, bias)| {
+                let par = forward(bc, xs, *batch, *shape, bias, true);
+                let ser = forward_serial(bc, xs, *batch, *shape, bias, true);
+                if (par.oh, par.ow) != (ser.oh, ser.ow) {
+                    return Err(format!(
+                        "output dims ({}, {}) != serial ({}, {})",
+                        par.oh, par.ow, ser.oh, ser.ow
+                    ));
+                }
+                if par.data != ser.data {
+                    let i = par
+                        .data
+                        .iter()
+                        .zip(&ser.data)
+                        .position(|(a, b)| a.to_bits() != b.to_bits())
+                        .unwrap();
+                    return Err(format!(
+                        "output differs at {i}: {} vs {}",
+                        par.data[i], ser.data[i]
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_conv_matches_per_patch_matvec_oracle() {
+        // Eqn. 1 ground truth: each output pixel is the block-circulant
+        // matvec of its (c_block, di, dj, c_in_block)-ordered patch
+        forall(
+            "bc-conv == per-patch naive matvec",
+            |rng| {
+                let k = 1usize << (1 + rng.below(3)); // 2..8
+                let qc = 1 + rng.below(2) as usize;
+                let pb = 1 + rng.below(2) as usize;
+                let r = 1 + rng.below(2) as usize;
+                let same = rng.below(2) == 1;
+                let (h, w) = (r + rng.below(3) as usize, r + rng.below(3) as usize);
+                let c = qc * k;
+                let bc = random_conv_bc(rng, pb, qc, r, k);
+                let xs = rng.normal_vec(h * w * c);
+                (bc, xs, ConvShape { h, w, c, r, same })
+            },
+            |(bc, xs, shape)| {
+                let got = forward(bc, xs, 1, *shape, &[], false);
+                let (src, ih, iw) = if shape.same {
+                    im2col::pad_same(xs, shape.h, shape.w, shape.c, shape.r)
+                } else {
+                    (xs.clone(), shape.h, shape.w)
+                };
+                let cols = im2col::im2col(&src, ih, iw, shape.c, shape.r, bc.k);
+                let patch = bc.cols();
+                let p_out = bc.rows();
+                let mut want = vec![0.0f32; got.oh * got.ow * p_out];
+                for (pix, col) in cols.chunks(patch).enumerate() {
+                    bc.matvec_naive(col, &mut want[pix * p_out..(pix + 1) * p_out]);
+                }
+                assert_all_close(&got.data, &want, 2e-3, 2e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn conv_multi_shard_case_bit_identical_and_skips_border_ffts() {
+        // big enough that shard_count() actually splits both sweeps on any
+        // multi-core host (the property tests' small cases stay serial
+        // under the min-work heuristic)
+        let mut rng = SplitMix::new(0xC0DE);
+        let (k, qc, pb, r, h, w, batch) = (8, 4, 4, 3, 16, 16, 8);
+        let c = qc * k;
+        let shape = ConvShape { h, w, c, r, same: true };
+        let bc = random_conv_bc(&mut rng, pb, qc, r, k);
+        let xs = rng.normal_vec(batch * h * w * c);
+        let bias = rng.normal_vec(pb * k);
+        let par = forward(&bc, &xs, batch, shape, &bias, true);
+        let ser = forward_serial(&bc, &xs, batch, shape, &bias, true);
+        assert!(par.data == ser.data, "sharded conv must be bitwise equal to serial");
+        // same numbers, fewer transforms: the serial walk FFTs the padded
+        // border, the parallel path charges only the h*w interior pixels
+        assert_eq!(par.counters.ffts, (batch * qc * h * w) as u64);
+        assert_eq!(
+            ser.counters.ffts,
+            (batch * qc * (h + r - 1) * (w + r - 1)) as u64
+        );
+        assert!(par.counters.ffts < ser.counters.ffts);
+        // phases 2+3 execute identical work on both paths
+        assert_eq!(par.counters.mult_groups, ser.counters.mult_groups);
+        assert_eq!(par.counters.iffts, ser.counters.iffts);
+    }
+
+    #[test]
+    fn valid_conv_counters_match_decoupled_minimum() {
+        let mut rng = SplitMix::new(42);
+        let (k, qc, pb, r, h, w) = (4, 2, 2, 3, 6, 5);
+        let c = qc * k;
+        let bc = random_conv_bc(&mut rng, pb, qc, r, k);
+        let xs = rng.normal_vec(h * w * c);
+        let o = forward(&bc, &xs, 1, ConvShape { h, w, c, r, same: false }, &[], false);
+        let (oh, ow) = (h - r + 1, w - r + 1);
+        assert_eq!((o.oh, o.ow), (oh, ow));
+        assert_eq!(o.counters.ffts, (qc * h * w) as u64);
+        assert_eq!(o.counters.iffts, (pb * oh * ow) as u64);
+        assert_eq!(o.counters.mult_groups, (pb * qc * r * r * oh * ow) as u64);
+    }
+
+    #[test]
+    fn empty_batch_returns_geometry_and_zero_counters() {
+        let mut rng = SplitMix::new(7);
+        let bc = random_conv_bc(&mut rng, 1, 1, 3, 4);
+        let shape = ConvShape { h: 5, w: 5, c: 4, r: 3, same: true };
+        let o = forward(&bc, &[], 0, shape, &[], true);
+        assert_eq!((o.oh, o.ow), (5, 5));
+        assert!(o.data.is_empty());
+        assert_eq!(o.counters, PhaseCounters::default());
+    }
+}

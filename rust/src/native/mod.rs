@@ -15,6 +15,7 @@
 //! where the 40 MB xla_extension runtime is unavailable (the paper's
 //! embedded setting), at O(n log n) cost and O(n) weight memory.
 
+pub mod conv;
 pub mod staged;
 
 use std::collections::BTreeMap;
@@ -52,7 +53,7 @@ enum Op {
     /// spectra precomputed — the paper's offline FFT(w) step
     BcDense { bc: BlockCirculant, bias: Vec<f32>, relu: bool },
     Dense { w: Vec<f32>, n: usize, m: usize, bias: Vec<f32>, relu: bool },
-    BcConv { bc: BlockCirculant, bias: Vec<f32>, r: usize, k: usize, same: bool, relu: bool },
+    BcConv { bc: BlockCirculant, bias: Vec<f32>, r: usize, same: bool, relu: bool },
     Conv { f: Vec<f32>, bias: Vec<f32>, c: usize, p: usize, r: usize, same: bool, relu: bool },
     AvgPool2,
     MaxPool2,
@@ -151,7 +152,6 @@ impl NativeModel {
                         bc,
                         bias: take(params, i, "b")?.data.clone(),
                         r,
-                        k,
                         same: same_pad,
                         relu: !next_is_join,
                     }
@@ -277,88 +277,14 @@ impl NativeModel {
                 finish_rows(&mut out, bias, *m, *relu);
                 Tensor { batch: x.batch, h: *m, w: 1, c: 1, data: out }
             }
-            Op::BcConv { bc, bias, r, k, same, relu } => {
+            Op::BcConv { bc, bias, r, same, relu } => {
                 maybe_quant(&mut x.data, self.quant_bits);
-                // The paper's CONV decoupling (§Perf: 2.3x on the CNN
-                // models): every *input pixel's* channel-block spectrum is
-                // computed once and shared by all r^2 filter taps that
-                // touch it, instead of re-FFT-ing the im2col replicas —
-                // exactly the FFT count the simulator's FftWork charges.
-                let p_out = bc.rows();
-                let per = x.per_image();
-                let plan = bc.plan_arc();
-                let kh = plan.half_bins();
-                let (kk, qc, pb) = (*k, x.c / *k, p_out / *k);
-                let mut out = Vec::new();
-                let (mut oh, mut ow) = (0, 0);
-                let mut scratch = vec![0.0f32; 2 * kk];
-                let mut xfr: Vec<f32> = Vec::new();
-                let mut xfi: Vec<f32> = Vec::new();
-                let (mut acc_r, mut acc_i) = (vec![0.0f32; kh], vec![0.0f32; kh]);
-                for b in 0..x.batch {
-                    let img = &x.data[b * per..(b + 1) * per];
-                    let padded;
-                    let (src, ih, iw): (&[f32], usize, usize) = if *same {
-                        let (p_, ph, pw) = im2col::pad_same(img, x.h, x.w, x.c, *r);
-                        padded = p_;
-                        (&padded, ph, pw)
-                    } else {
-                        (img, x.h, x.w)
-                    };
-                    (oh, ow) = (ih - r + 1, iw - r + 1);
-                    if out.is_empty() {
-                        out = vec![0.0f32; x.batch * oh * ow * p_out];
-                    }
-                    // phase 1: one rFFT per (input pixel, channel block)
-                    xfr.resize(ih * iw * qc * kh, 0.0);
-                    xfi.resize(ih * iw * qc * kh, 0.0);
-                    for pix in 0..ih * iw {
-                        for cb in 0..qc {
-                            let off = (pix * qc + cb) * kh;
-                            plan.rfft_halfspec(
-                                &src[pix * x.c + cb * kk..pix * x.c + (cb + 1) * kk],
-                                &mut xfr[off..off + kh],
-                                &mut xfi[off..off + kh],
-                                &mut scratch,
-                            );
-                        }
-                    }
-                    // phases 2+3: per-pixel spectral MAC + one IFFT per
-                    // (output pixel, output block).  (A row-major tap-outer
-                    // variant was tried and reverted: neutral on SVHN,
-                    // -19% on the WRN — §Perf iteration log.)
-                    for oy in 0..oh {
-                        for ox in 0..ow {
-                            let dst = ((b * oh + oy) * ow + ox) * p_out;
-                            for i in 0..pb {
-                                acc_r.fill(0.0);
-                                acc_i.fill(0.0);
-                                for cb in 0..qc {
-                                    for di in 0..*r {
-                                        for dj in 0..*r {
-                                            let j = (cb * r + di) * r + dj;
-                                            let (wr, wi) = bc.spectrum(i, j);
-                                            let pix = (oy + di) * iw + ox + dj;
-                                            let xo = (pix * qc + cb) * kh;
-                                            crate::circulant::fft::complex_mul_acc(
-                                                wr, wi,
-                                                &xfr[xo..xo + kh], &xfi[xo..xo + kh],
-                                                &mut acc_r, &mut acc_i,
-                                            );
-                                        }
-                                    }
-                                }
-                                plan.irfft_halfspec(
-                                    &acc_r, &acc_i,
-                                    &mut out[dst + i * kk..dst + (i + 1) * kk],
-                                    &mut scratch,
-                                );
-                            }
-                        }
-                    }
-                }
-                finish_rows(&mut out, bias, p_out, *relu);
-                Tensor { batch: x.batch, h: oh, w: ow, c: p_out, data: out }
+                // the decoupled three-phase CONV schedule, batch- and
+                // pixel-parallel — see native::conv for the full story
+                let shape =
+                    conv::ConvShape { h: x.h, w: x.w, c: x.c, r: *r, same: *same };
+                let o = conv::forward(bc, &x.data, x.batch, shape, bias, *relu);
+                Tensor { batch: x.batch, h: o.oh, w: o.ow, c: bc.rows(), data: o.data }
             }
             Op::Conv { f, bias, c, p, r, same, relu } => {
                 maybe_quant(&mut x.data, self.quant_bits);

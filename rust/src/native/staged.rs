@@ -28,8 +28,13 @@ pub struct PhaseCounters {
 }
 
 impl PhaseCounters {
-    /// Counters per image (the unit `models::FftWork` describes).
+    /// Counters per image (the unit `models::FftWork` describes).  An
+    /// empty batch performed no per-image work: zeroed counters, not a
+    /// divide-by-zero.
     pub fn per_image(&self, batch: usize) -> PhaseCounters {
+        if batch == 0 {
+            return PhaseCounters::default();
+        }
         let b = batch as u64;
         PhaseCounters {
             ffts: self.ffts / b,
@@ -250,6 +255,14 @@ mod tests {
     }
 
     #[test]
+    fn per_image_of_an_empty_batch_is_zero() {
+        // batch == 0 used to divide by zero; an empty batch did no work
+        let c = PhaseCounters { ffts: 7, mult_groups: 9, iffts: 3 };
+        assert_eq!(c.per_image(0), PhaseCounters::default());
+        assert_eq!(c.per_image(1), c);
+    }
+
+    #[test]
     fn counters_match_simulator_workload_for_fc_layers() {
         // the cross-check that makes Table 1 trustworthy: the transforms
         // the staged executor actually performs equal the per-layer FFT
@@ -281,6 +294,74 @@ mod tests {
                     "{}: multiply groups",
                     model.name
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn counters_match_simulator_workload_for_conv_layers() {
+        // the CONV half of the Table-1 cross-check: the transforms the
+        // parallel pixel pipeline actually executes (including the padded
+        // layers, whose all-zero border spectra it skips) equal the
+        // per-image FFT workload the cycle simulator charges
+        use crate::models::{self, Layer};
+        use crate::native::conv::{self, ConvShape};
+        for model in models::registry() {
+            let accounting = model.accounting();
+            let mut acc_iter = accounting.iter();
+            let (mut h, mut w, mut c) = model.input;
+            for layer in &model.layers {
+                match *layer {
+                    Layer::PriorPool { out_dim } => (h, w, c) = (out_dim, 1, 1),
+                    Layer::AvgPool2 | Layer::MaxPool2 => (h, w) = (h / 2, w / 2),
+                    Layer::Conv { p, r, same_pad, .. } => {
+                        if !same_pad {
+                            (h, w) = (h - r + 1, w - r + 1);
+                        }
+                        c = p;
+                    }
+                    Layer::BcConv { c: ci, p, r, k, same_pad } => {
+                        assert_eq!(ci, c, "{}: registry shape walk diverged", model.name);
+                        let row = acc_iter
+                            .by_ref()
+                            .find(|a| a.kind == "bc_conv")
+                            .expect("accounting row");
+                        let (pb, qb) = (p / k, (c / k) * r * r);
+                        let mut rng = SplitMix::new((h * w * c) as u64);
+                        let mut bc =
+                            BlockCirculant::new(pb, qb, k, rng.normal_vec(pb * qb * k));
+                        bc.precompute();
+                        let batch = 2;
+                        let xs = rng.normal_vec(batch * h * w * c);
+                        let shape = ConvShape { h, w, c, r, same: same_pad };
+                        let o = conv::forward(&bc, &xs, batch, shape, &[], false);
+                        let per = o.counters.per_image(batch);
+                        assert_eq!(
+                            per.ffts, row.fft_work.ffts_total,
+                            "{}: executed conv FFTs != simulated FFTs",
+                            model.name
+                        );
+                        assert_eq!(
+                            per.iffts, row.fft_work.iffts_total,
+                            "{}: conv IFFTs",
+                            model.name
+                        );
+                        assert_eq!(
+                            per.mult_groups, row.fft_work.mult_groups_total,
+                            "{}: conv multiply groups",
+                            model.name
+                        );
+                        if !same_pad {
+                            (h, w) = (h - r + 1, w - r + 1);
+                        }
+                        c = p;
+                    }
+                    Layer::Dense { .. }
+                    | Layer::BcDense { .. }
+                    | Layer::Flatten
+                    | Layer::ResidualBegin
+                    | Layer::ResidualEnd => {}
+                }
             }
         }
     }
