@@ -11,8 +11,10 @@
 
 use circnn::circulant::{dense, BlockCirculant, FftPlan};
 use circnn::native::conv::{self, ConvShape};
+use circnn::train::Trainer;
 use circnn::util::benchkit::{self, Bench, Measurement};
 use circnn::util::rng::SplitMix;
+use circnn::{data, models};
 
 fn main() {
     let bench = Bench::default();
@@ -126,6 +128,30 @@ fn main() {
             "   c={c:<3} p={p:<3} r={r} k={k} {hw}x{hw} batch={batch:<3} parallel speedup {speedup:.2}x"
         );
         derived.push((format!("bc_conv_speedup_c{c}_p{p}_{hw}x{hw}_b{batch}"), speedup));
+        results.extend([ser, par]);
+    }
+
+    println!("\n== native train step: serial vs parallel (spectral backprop) ==");
+    // the new training workload: forward + conjugate-spectrum backward +
+    // frequency-accumulated weight grads + SGD, one full step per iteration
+    // (an MLP, so the serial flag covers every FFT stage of the step)
+    {
+        let model = models::by_name("mnist_mlp_2").unwrap();
+        let ds = data::dataset(model.dataset).unwrap();
+        let batch = 64;
+        let (xs, ys) = data::batch(&ds, 0, batch, false);
+        let mut ser_tr = Trainer::new(&model, 1).expect("trainer");
+        ser_tr.set_serial(true);
+        let mut par_tr = Trainer::new(&model, 1).expect("trainer");
+        let ser = bench.run(&format!("train_step_serial/mnist_mlp_2_b{batch}"), batch as u64, || {
+            ser_tr.step(&xs, &ys)
+        });
+        let par = bench.run(&format!("train_step/mnist_mlp_2_b{batch}"), batch as u64, || {
+            par_tr.step(&xs, &ys)
+        });
+        let speedup = ser.median_ns() / par.median_ns();
+        println!("   mnist_mlp_2 batch={batch} train_step parallel speedup {speedup:.2}x");
+        derived.push((format!("train_step_speedup_mnist_mlp_2_b{batch}"), speedup));
         results.extend([ser, par]);
     }
 

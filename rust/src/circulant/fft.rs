@@ -366,6 +366,46 @@ pub fn complex_mul_acc(
     }
 }
 
+/// Element-wise *conjugate* complex multiply-accumulate on separated
+/// planes: `acc += conj(a) o b` over `len` lanes — the training-side twin
+/// of [`complex_mul_acc`].
+///
+/// For circulant blocks the transposed matvec and the weight gradient are
+/// both conjugate-spectrum products (CirCNN Eqns. 2/3): `C^T g =
+/// IFFT(conj(FFT(w)) o FFT(g))` and `dL/dw = IFFT(conj(FFT(x)) o FFT(g))`,
+/// so one kernel serves both.  Same fixed-width chunking as the forward
+/// kernel so the autovectorizer maps it onto SIMD lanes.
+#[inline]
+pub fn complex_conj_mul_acc(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    const LANES: usize = 8;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let mut t = 0;
+    while t + LANES <= n {
+        for l in 0..LANES {
+            let i = t + l;
+            let (x_r, x_i, y_r, y_i) = (ar[i], ai[i], br[i], bi[i]);
+            acc_r[i] += x_r * y_r + x_i * y_i;
+            acc_i[i] += x_r * y_i - x_i * y_r;
+        }
+        t += LANES;
+    }
+    while t < n {
+        let (x_r, x_i, y_r, y_i) = (ar[t], ai[t], br[t], bi[t]);
+        acc_r[t] += x_r * y_r + x_i * y_i;
+        acc_i[t] += x_r * y_i - x_i * y_r;
+        t += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -550,6 +590,52 @@ mod tests {
         let b = FftPlan::shared(64);
         assert!(Arc::ptr_eq(&a, &b), "same k must return the same plan");
         assert_eq!(FftPlan::shared(32).k, 32);
+    }
+
+    #[test]
+    fn prop_conj_mul_acc_matches_scalar_conjugate_product() {
+        forall(
+            "complex_conj_mul_acc == conj(a)*b + acc, per lane",
+            |r| {
+                let n = 1 + r.below(40) as usize;
+                (
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                )
+            },
+            |(ar, ai, br, bi, acc0_r, acc0_i)| {
+                let (mut acc_r, mut acc_i) = (acc0_r.clone(), acc0_i.clone());
+                complex_conj_mul_acc(ar, ai, br, bi, &mut acc_r, &mut acc_i);
+                for t in 0..ar.len() {
+                    // conj(a) * b = (ar - i ai)(br + i bi)
+                    let er = acc0_r[t] + ar[t] * br[t] + ai[t] * bi[t];
+                    let ei = acc0_i[t] + ar[t] * bi[t] - ai[t] * br[t];
+                    if (acc_r[t] - er).abs() > 1e-5 || (acc_i[t] - ei).abs() > 1e-5 {
+                        return Err(format!("lane {t}: ({}, {}) != ({er}, {ei})", acc_r[t], acc_i[t]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn conj_mul_acc_of_conjugate_pair_is_real() {
+        // conj(A) o A accumulates |A|^2: imaginary parts must vanish exactly
+        // (the same products cancel term for term)
+        let mut rng = SplitMix::new(0x51CA);
+        let n = 17;
+        let (ar, ai) = (rng.normal_vec(n), rng.normal_vec(n));
+        let (mut acc_r, mut acc_i) = (vec![0.0f32; n], vec![0.0f32; n]);
+        complex_conj_mul_acc(&ar, &ai, &ar, &ai, &mut acc_r, &mut acc_i);
+        for t in 0..n {
+            assert!((acc_r[t] - (ar[t] * ar[t] + ai[t] * ai[t])).abs() < 1e-6);
+            assert_eq!(acc_i[t], 0.0, "lane {t}");
+        }
     }
 
     #[test]

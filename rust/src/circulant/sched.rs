@@ -14,6 +14,48 @@ use std::sync::OnceLock;
 /// Minimum phase-2 lanes per shard before a spawn pays for itself (~64k).
 const MIN_LANES_PER_SHARD_LOG2: u32 = 16;
 
+/// Work actually performed by a three-phase execution (per call, i.e. per
+/// batch): the executed-transform evidence every counted schedule returns.
+///
+/// Lives here (not in `native`) because the substrate's own counted paths —
+/// the staged FC executor, the CONV pixel pipeline, and the training
+/// backward kernels in [`super::block`] — all produce it, and the model
+/// accounting (`crate::models::FftWork`) states its per-image and per-step
+/// charges in the same three quantities.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PhaseCounters {
+    /// forward transforms of input blocks (phase 1)
+    pub ffts: u64,
+    /// half-spectrum complex multiply-accumulate groups (phase 2)
+    pub mult_groups: u64,
+    /// inverse transforms of output blocks (phase 3)
+    pub iffts: u64,
+}
+
+impl PhaseCounters {
+    /// Counters per image (the unit `models::FftWork` describes).  An
+    /// empty batch performed no per-image work: zeroed counters, not a
+    /// divide-by-zero.
+    pub fn per_image(&self, batch: usize) -> PhaseCounters {
+        if batch == 0 {
+            return PhaseCounters::default();
+        }
+        let b = batch as u64;
+        PhaseCounters {
+            ffts: self.ffts / b,
+            mult_groups: self.mult_groups / b,
+            iffts: self.iffts / b,
+        }
+    }
+
+    /// Element-wise sum (accumulating a step's forward + backward work).
+    pub fn add(&mut self, other: PhaseCounters) {
+        self.ffts += other.ffts;
+        self.mult_groups += other.mult_groups;
+        self.iffts += other.iffts;
+    }
+}
+
 fn thread_override() -> Option<usize> {
     static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
     *OVERRIDE.get_or_init(|| {

@@ -13,7 +13,9 @@
 //! circnn simulate [flags]       one FPGA-sim design point
 //! circnn infer [flags]          run images through a compiled artifact
 //! circnn serve [flags]          serving demo: batched requests + metrics
-//! circnn train-demo [flags]     train-step artifact driver (loss curve)
+//! circnn train-demo [flags]     train natively in the spectral domain
+//!                               (loss curve; PJRT artifact driver with
+//!                               --features pjrt)
 //! circnn models                 list registry models + accounting
 //! ```
 //!
@@ -85,12 +87,16 @@ simulator:
            [--no-decouple] [--full-spectrum] [--no-interleave] [--dense]
            [--timeline]   (hierarchical-controller event trace, Fig. 4)
 
-runtime (needs `make artifacts`; PJRT paths need `--features pjrt`):
+runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
   infer      --model NAME [--count N] [--batch 1|64] [--pallas]
              [--engine native]   (pure-Rust, no PJRT)
   serve      [--model NAME] [--requests N] [--clients N] [--max-batch N]
              [--engine native]   (serve on the pure-Rust substrate)
-  train-demo [--steps N]
+  train-demo [--model NAME] [--steps N] [--batch N] [--lr F] [--seed N]
+             default build: native spectral-domain trainer (O(n log n)
+             backprop, no artifacts needed); with `--features pjrt` it
+             drives the AOT train-step artifacts instead, unless
+             --engine native is passed
 
 misc:
   models     list the registry with accounting
@@ -429,16 +435,50 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     Ok(())
 }
 
-#[cfg(not(feature = "pjrt"))]
-fn cmd_train_demo(_flags: &HashMap<String, String>) -> anyhow::Result<()> {
-    anyhow::bail!(
-        "train-demo drives PJRT train-step artifacts; rebuild with \
-         `--features pjrt` (inference works without it: `infer --engine native`)"
-    )
+fn cmd_train_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    #[cfg(feature = "pjrt")]
+    if flags.get("engine").map(String::as_str) != Some("native") {
+        return cmd_train_demo_pjrt(flags);
+    }
+    cmd_train_demo_native(flags)
+}
+
+/// Native FFT-domain training: O(n log n) spectral backprop on the
+/// pure-Rust substrate — no artifacts, no XLA (`circnn::train`).
+fn cmd_train_demo_native(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model_name = flags.get("model").map(String::as_str).unwrap_or("mnist_mlp_1");
+    let model = models::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name:?}"))?;
+    let cfg = circnn::train::TrainConfig {
+        steps: flag_usize(flags, "steps", 50),
+        batch: flag_usize(flags, "batch", 64),
+        lr: flags
+            .get("lr")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(circnn::train::TrainConfig::default().lr),
+        ..Default::default()
+    };
+    if cfg.batch == 0 {
+        anyhow::bail!("--batch must be >= 1");
+    }
+    let ds = data::dataset(model.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", model.dataset))?;
+    let mut trainer =
+        circnn::train::Trainer::new(&model, flag_usize(flags, "seed", 0) as u64)?;
+    println!(
+        "training {} for {} steps (batch {})",
+        model.name, cfg.steps, cfg.batch
+    );
+    let t0 = Instant::now();
+    trainer.train(&ds, &cfg);
+    println!("done in {:.2}s", t0.elapsed().as_secs_f64());
+    let acc = trainer.eval_accuracy(&ds, 512, 128);
+    println!("test accuracy {:.1}% (512 held-out samples, float32 native)", 100.0 * acc);
+    Ok(())
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_train_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+fn cmd_train_demo_pjrt(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let steps = flag_usize(flags, "steps", 50);
     let man = Manifest::load(Manifest::default_dir())?;
     let entry = man.model("mnist_mlp_1")?;

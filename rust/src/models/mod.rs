@@ -81,6 +81,42 @@ pub struct FftWork {
     /// transforms per image for the naive (non-decoupled) evaluation:
     /// p*q per position for both FFT and IFFT
     pub naive_transforms: u64,
+    /// circulant blocks in the weight grid (`p·q` for FC,
+    /// `(p/k)·(c/k)·r·r` for CONV) — the unit of the per-*step* training
+    /// transforms (weight-grad IFFTs, weight-spectrum refresh FFTs)
+    pub weight_blocks: u64,
+}
+
+impl FftWork {
+    /// The per-**step** training transform charge for a minibatch of
+    /// `batch` images (zero for non-FFT layers), stated in the same three
+    /// executed-work quantities the substrate counts.
+    ///
+    /// Convention (pinned against the trainer's executed counters by the
+    /// train parity test):
+    ///
+    /// * **FFTs** — per image, the forward transforms the input blocks
+    ///   (`ffts_total`) and the backward transforms the upstream-gradient
+    ///   blocks once (`iffts_total`, shared by both Eqn.-2/3 products);
+    ///   per step, the weight spectra are re-transformed once after the
+    ///   update (`weight_blocks`, the paper's "offline" FFT(w) step gone
+    ///   per-step).  Input spectra are *not* charged twice: the forward's
+    ///   planes stay resident and the weight gradient reuses them.
+    /// * **IFFTs** — per image, the forward output blocks (`iffts_total`)
+    ///   and the input-gradient blocks (`ffts_total`); per step, one IFFT
+    ///   per weight block for `dL/dw` — the weight gradient accumulates in
+    ///   the frequency domain across the whole batch, so its transforms
+    ///   amortize over the batch instead of scaling with it.
+    /// * **multiply groups** — 3x the forward count: forward `W∘X`,
+    ///   input-gradient `conj(W)∘G`, weight-gradient `conj(X)∘G`.
+    pub fn train_charge(&self, batch: u64) -> crate::circulant::sched::PhaseCounters {
+        let per_image = self.ffts_total + self.iffts_total;
+        crate::circulant::sched::PhaseCounters {
+            ffts: batch * per_image + self.weight_blocks,
+            iffts: batch * per_image + self.weight_blocks,
+            mult_groups: 3 * batch * self.mult_groups_total,
+        }
+    }
 }
 
 fn log2(k: usize) -> u64 {
@@ -159,6 +195,7 @@ impl Model {
                             iffts_total,
                             mult_groups_total,
                             naive_transforms: pb * qb * (oh * ow) as u64,
+                            weight_blocks: pb * qb,
                         },
                     });
                     h = oh;
@@ -194,6 +231,7 @@ impl Model {
                             iffts_total: pb,
                             mult_groups_total: pb * qb,
                             naive_transforms: pb * qb,
+                            weight_blocks: pb * qb,
                         },
                     });
                 }
@@ -497,6 +535,24 @@ mod tests {
         assert_eq!(fw.mult_groups_total, 72 * 256);
         assert_eq!(fw.naive_transforms, 72 * 256);
         assert!(fw.ffts_total < fw.naive_transforms / 10);
+    }
+
+    #[test]
+    fn train_charge_convention() {
+        // mnist_mlp_1 bc layer (p=q=2, 4 weight blocks), batch 8:
+        // ffts = 8*(2+2) + 4 (weight-spectrum refresh), iffts = 8*(2+2) + 4
+        // (amortized weight-grad irffts), mults = 3 * 8 * 4
+        let m = by_name("mnist_mlp_1").unwrap();
+        let fw = m.accounting()[0].fft_work;
+        assert_eq!(fw.weight_blocks, 4);
+        let c = fw.train_charge(8);
+        assert_eq!((c.ffts, c.iffts, c.mult_groups), (36, 36, 96));
+        // non-FFT layers (dense heads, conv stems) charge nothing
+        let head = m.accounting()[1].fft_work;
+        assert_eq!(head.train_charge(8), crate::circulant::sched::PhaseCounters::default());
+        // weight-grad transforms amortize: the per-step charge at batch B
+        // grows by exactly (ffts+iffts) per extra image, not by weight_blocks
+        assert_eq!(fw.train_charge(9).iffts - c.iffts, fw.ffts_total + fw.iffts_total);
     }
 
     #[test]

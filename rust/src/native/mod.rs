@@ -43,13 +43,16 @@ pub struct Tensor {
 }
 
 impl Tensor {
-    fn per_image(&self) -> usize {
+    /// Elements per image (`h * w * c`).
+    pub fn per_image(&self) -> usize {
         self.h * self.w * self.c
     }
 }
 
 /// One executable layer with its (quantized) parameters baked in.
-enum Op {
+/// `pub(crate)` so the training subsystem (`crate::train`) can walk and
+/// update the same program the inference path executes.
+pub(crate) enum Op {
     /// spectra precomputed — the paper's offline FFT(w) step
     BcDense { bc: BlockCirculant, bias: Vec<f32>, relu: bool },
     Dense { w: Vec<f32>, n: usize, m: usize, bias: Vec<f32>, relu: bool },
@@ -66,8 +69,8 @@ enum Op {
 /// A model compiled to the native substrate.
 pub struct NativeModel {
     pub name: String,
-    ops: Vec<Op>,
-    quant_bits: Option<u32>,
+    pub(crate) ops: Vec<Op>,
+    pub(crate) quant_bits: Option<u32>,
 }
 
 /// Quantize a whole tensor in place (per-tensor max-abs symmetric grid),
@@ -185,6 +188,69 @@ impl NativeModel {
         Ok(Self { name: model.name.to_string(), ops, quant_bits })
     }
 
+    /// Initialize a model with He-init random parameters, float32 (no
+    /// quantization) — the native trainer's from-scratch starting point.
+    /// Mirrors `python/compile/layers.init_*`: defining vectors and dense
+    /// weights at `std = sqrt(2 / fan_in)`, zero biases (same scales, not
+    /// bit-identical to the JAX PRNG).
+    pub fn init_random(model: &Model, seed: u64) -> Self {
+        use crate::util::rng::{combine, SplitMix};
+        let he = |rng: &mut SplitMix, len: usize, fan_in: usize| -> Vec<f32> {
+            let scale = (2.0 / fan_in as f64).sqrt() as f32;
+            let mut v = rng.normal_vec(len);
+            for w in &mut v {
+                *w *= scale;
+            }
+            v
+        };
+        let mut ops = Vec::with_capacity(model.layers.len());
+        for (i, layer) in model.layers.iter().enumerate() {
+            let next_is_join = matches!(model.layers.get(i + 1), Some(Layer::ResidualEnd));
+            let mut rng = SplitMix::new(combine(&[seed, i as u64]));
+            let op = match *layer {
+                Layer::BcDense { n, m, k } => {
+                    let mut bc =
+                        BlockCirculant::new(m / k, n / k, k, he(&mut rng, m / k * (n / k) * k, n));
+                    bc.precompute();
+                    Op::BcDense { bc, bias: vec![0.0; m], relu: true }
+                }
+                Layer::Dense { n, m } => {
+                    Op::Dense { w: he(&mut rng, n * m, n), n, m, bias: vec![0.0; m], relu: false }
+                }
+                Layer::BcConv { c, p, r, k, same_pad } => {
+                    let (pb, qb) = (p / k, (c / k) * r * r);
+                    let mut bc =
+                        BlockCirculant::new(pb, qb, k, he(&mut rng, pb * qb * k, c * r * r));
+                    bc.precompute();
+                    Op::BcConv {
+                        bc,
+                        bias: vec![0.0; p],
+                        r,
+                        same: same_pad,
+                        relu: !next_is_join,
+                    }
+                }
+                Layer::Conv { c, p, r, same_pad } => Op::Conv {
+                    f: he(&mut rng, r * r * c * p, c * r * r),
+                    bias: vec![0.0; p],
+                    c,
+                    p,
+                    r,
+                    same: same_pad,
+                    relu: !next_is_join,
+                },
+                Layer::AvgPool2 => Op::AvgPool2,
+                Layer::MaxPool2 => Op::MaxPool2,
+                Layer::Flatten => Op::Flatten,
+                Layer::PriorPool { out_dim } => Op::PriorPool { out_dim },
+                Layer::ResidualBegin => Op::ResidualBegin,
+                Layer::ResidualEnd => Op::ResidualEnd,
+            };
+            ops.push(op);
+        }
+        Self { name: model.name.to_string(), ops, quant_bits: None }
+    }
+
     /// Forward a batch of raw images `(batch, h, w, c)` to logits
     /// `(batch, 10)`.
     pub fn forward(&self, images: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
@@ -198,8 +264,108 @@ impl NativeModel {
         x.data
     }
 
+    /// Forward keeping every intermediate activation: returns the chain
+    /// `acts[0] = input, acts[i+1] = output of op i` (the last entry is the
+    /// logits).  Each activation is *moved* into the chain and the next op
+    /// borrows it through [`step_ref`](Self::step_ref) — the weight layers
+    /// and pools read their input in place instead of consuming a copy
+    /// (only ops that inherently rewrite the buffer, like the flatten
+    /// reshape and the residual join, still allocate).
+    ///
+    /// This is the reference walk over the borrowed-step plumbing and the
+    /// surface the bit-identity property test pins.  The trainer drives
+    /// [`step_ref`](Self::step_ref) through its own copy of this loop so
+    /// it can additionally cache BC input spectra on the two spectral
+    /// arms (`train::Trainer::step`); a semantic change here must be
+    /// mirrored there — the shared per-op compute itself lives in
+    /// `step_ref`/`weight_op`, so only the loop shell is duplicated.
+    /// Bit-identical to [`forward`](Self::forward) (property-pinned): the
+    /// owned path only adds in-place shortcuts.
+    pub fn forward_traced(
+        &self,
+        images: &[f32],
+        batch: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+    ) -> Vec<Tensor> {
+        assert_eq!(images.len(), batch * h * w * c, "image buffer size");
+        let mut acts = Vec::with_capacity(self.ops.len() + 1);
+        acts.push(Tensor { batch, h, w, c, data: images.to_vec() });
+        let mut residuals: Vec<Tensor> = Vec::new();
+        for op in &self.ops {
+            let next = self.step_ref(op, acts.last().unwrap(), &mut residuals);
+            acts.push(next);
+        }
+        debug_assert!(residuals.is_empty(), "unbalanced residual markers");
+        acts
+    }
+
+    /// Owned-input step: keeps the inference path's zero-copy moves
+    /// (`Flatten` reuses the buffer, `ResidualEnd` joins in place, the
+    /// 12-bit path quantizes in place) and delegates every read-only op to
+    /// [`step_ref`](Self::step_ref).
     fn step(&self, op: &Op, mut x: Tensor, residuals: &mut Vec<Tensor>) -> Tensor {
         match op {
+            Op::Flatten => {
+                let d = x.per_image();
+                Tensor { batch: x.batch, h: d, w: 1, c: 1, data: x.data }
+            }
+            Op::ResidualBegin => {
+                residuals.push(x.clone());
+                x
+            }
+            Op::ResidualEnd => {
+                let saved = residuals.pop().expect("residual_begin missing");
+                debug_assert_eq!(saved.data.len(), x.data.len());
+                for (v, s) in x.data.iter_mut().zip(&saved.data) {
+                    *v = (*v + s).max(0.0); // join + relu, as in model.apply
+                }
+                x
+            }
+            Op::BcDense { .. } | Op::Dense { .. } | Op::BcConv { .. } | Op::Conv { .. }
+                if self.quant_bits.is_some() =>
+            {
+                maybe_quant(&mut x.data, self.quant_bits);
+                self.weight_op(op, &x, &x.data)
+            }
+            _ => self.step_ref(op, &x, residuals),
+        }
+    }
+
+    /// Borrowed-input step: computes op `op` from `&x` without consuming
+    /// it, so a caller can keep the activation chain alive (the trainer,
+    /// [`forward_traced`](Self::forward_traced)).  In float mode nothing is
+    /// copied; the 12-bit path quantizes a copy of the one input tensor
+    /// (same values as the in-place fast path).
+    pub(crate) fn step_ref(&self, op: &Op, x: &Tensor, residuals: &mut Vec<Tensor>) -> Tensor {
+        match op {
+            Op::BcDense { .. } | Op::Dense { .. } | Op::BcConv { .. } | Op::Conv { .. } => {
+                if self.quant_bits.is_some() {
+                    let mut xq = x.data.clone();
+                    maybe_quant(&mut xq, self.quant_bits);
+                    self.weight_op(op, x, &xq)
+                } else {
+                    self.weight_op(op, x, &x.data)
+                }
+            }
+            Op::Flatten => {
+                let d = x.per_image();
+                Tensor { batch: x.batch, h: d, w: 1, c: 1, data: x.data.clone() }
+            }
+            Op::ResidualBegin => {
+                residuals.push(x.clone());
+                x.clone()
+            }
+            Op::ResidualEnd => {
+                let saved = residuals.pop().expect("residual_begin missing");
+                debug_assert_eq!(saved.data.len(), x.data.len());
+                let mut data = x.data.clone();
+                for (v, s) in data.iter_mut().zip(&saved.data) {
+                    *v = (*v + s).max(0.0); // join + relu, as in model.apply
+                }
+                Tensor { batch: x.batch, h: x.h, w: x.w, c: x.c, data }
+            }
             Op::PriorPool { out_dim } => {
                 let per = x.per_image();
                 let mut out = Vec::with_capacity(x.batch * out_dim);
@@ -207,10 +373,6 @@ impl NativeModel {
                     out.extend(data::prior_pool(&x.data[b * per..(b + 1) * per], *out_dim));
                 }
                 Tensor { batch: x.batch, h: *out_dim, w: 1, c: 1, data: out }
-            }
-            Op::Flatten => {
-                let d = x.per_image();
-                Tensor { batch: x.batch, h: d, w: 1, c: 1, data: x.data }
             }
             Op::AvgPool2 | Op::MaxPool2 => {
                 let avg = matches!(op, Op::AvgPool2);
@@ -235,34 +397,28 @@ impl NativeModel {
                 }
                 Tensor { batch: x.batch, h: oh, w: ow, c: x.c, data: out }
             }
-            Op::ResidualBegin => {
-                residuals.push(x.clone());
-                x
-            }
-            Op::ResidualEnd => {
-                let saved = residuals.pop().expect("residual_begin missing");
-                debug_assert_eq!(saved.data.len(), x.data.len());
-                for (v, s) in x.data.iter_mut().zip(&saved.data) {
-                    *v = (*v + s).max(0.0); // join + relu, as in model.apply
-                }
-                x
-            }
+        }
+    }
+
+    /// Weight-layer compute on already-quantized input data `xd` (the
+    /// tensor `x` supplies geometry only) — shared by the owned and
+    /// borrowed step paths.  Calling it with a non-weight op is a bug.
+    fn weight_op(&self, op: &Op, x: &Tensor, xd: &[f32]) -> Tensor {
+        match op {
             Op::BcDense { bc, bias, relu } => {
-                maybe_quant(&mut x.data, self.quant_bits);
                 let (n, m) = (bc.cols(), bc.rows());
                 debug_assert_eq!(x.per_image(), n);
                 let mut out = vec![0.0f32; x.batch * m];
-                bc.matmul(&x.data, x.batch, &mut out);
+                bc.matmul(xd, x.batch, &mut out);
                 finish_rows(&mut out, bias, m, *relu);
                 Tensor { batch: x.batch, h: m, w: 1, c: 1, data: out }
             }
             Op::Dense { w, n, m, bias, relu } => {
-                maybe_quant(&mut x.data, self.quant_bits);
                 debug_assert_eq!(x.per_image(), *n);
                 let mut out = vec![0.0f32; x.batch * m];
                 // python convention: y = x @ W with W (n, m)
                 for b in 0..x.batch {
-                    let xi = &x.data[b * n..(b + 1) * n];
+                    let xi = &xd[b * n..(b + 1) * n];
                     let yo = &mut out[b * m..(b + 1) * m];
                     for (i, &xv) in xi.iter().enumerate() {
                         if xv == 0.0 {
@@ -278,21 +434,19 @@ impl NativeModel {
                 Tensor { batch: x.batch, h: *m, w: 1, c: 1, data: out }
             }
             Op::BcConv { bc, bias, r, same, relu } => {
-                maybe_quant(&mut x.data, self.quant_bits);
                 // the decoupled three-phase CONV schedule, batch- and
                 // pixel-parallel — see native::conv for the full story
                 let shape =
                     conv::ConvShape { h: x.h, w: x.w, c: x.c, r: *r, same: *same };
-                let o = conv::forward(bc, &x.data, x.batch, shape, bias, *relu);
+                let o = conv::forward(bc, xd, x.batch, shape, bias, *relu);
                 Tensor { batch: x.batch, h: o.oh, w: o.ow, c: bc.rows(), data: o.data }
             }
             Op::Conv { f, bias, c, p, r, same, relu } => {
-                maybe_quant(&mut x.data, self.quant_bits);
                 let per = x.per_image();
                 let mut out = Vec::new();
                 let (mut oh, mut ow) = (0, 0);
                 for b in 0..x.batch {
-                    let img = &x.data[b * per..(b + 1) * per];
+                    let img = &xd[b * per..(b + 1) * per];
                     let (padded, ih, iw);
                     let src: &[f32] = if *same {
                         (padded, ih, iw) = im2col::pad_same(img, x.h, x.w, x.c, *r);
@@ -328,6 +482,7 @@ impl NativeModel {
                 finish_rows(&mut out, bias, *p, *relu);
                 Tensor { batch: x.batch, h: oh, w: ow, c: *p, data: out }
             }
+            _ => unreachable!("weight_op called on a non-weight op"),
         }
     }
 
@@ -340,7 +495,7 @@ impl NativeModel {
 }
 
 /// Add bias + optional relu over `(rows, m)`-shaped data.
-fn finish_rows(data: &mut [f32], bias: &[f32], m: usize, relu: bool) {
+pub(crate) fn finish_rows(data: &mut [f32], bias: &[f32], m: usize, relu: bool) {
     if !bias.is_empty() {
         for row in data.chunks_mut(m) {
             dense::add_bias(row, bias);
@@ -348,5 +503,55 @@ fn finish_rows(data: &mut [f32], bias: &[f32], m: usize, relu: bool) {
     }
     if relu {
         dense::relu(data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn forward_traced_bit_identical_to_forward() {
+        // the satellite pin for the borrowed-activation plumbing: tracing
+        // must not change the inference path, quantized or float, across
+        // every op kind in the registry (conv stems, pools, residual pairs,
+        // prior-pool, BC layers, dense heads)
+        for name in ["mnist_mlp_1", "mnist_lenet", "svhn_cnn", "cifar_wrn"] {
+            let model = models::by_name(name).unwrap();
+            let mut native = NativeModel::init_random(&model, 7);
+            let (h, w, c) = model.input;
+            let ds = data::dataset(model.dataset).unwrap();
+            let batch = 2;
+            let (xs, _) = data::batch(&ds, 0, batch, false);
+            for quant in [None, Some(QUANT_BITS)] {
+                native.quant_bits = quant;
+                let plain = native.forward(&xs, batch, h, w, c);
+                let acts = native.forward_traced(&xs, batch, h, w, c);
+                assert_eq!(acts.len(), model.layers.len() + 1);
+                let logits = &acts.last().unwrap().data;
+                assert!(
+                    &plain == logits,
+                    "{name} quant={quant:?}: traced forward diverged from forward"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn init_random_scales_follow_he_init() {
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let native = NativeModel::init_random(&model, 3);
+        let Op::BcDense { bc, bias, .. } = &native.ops[2] else {
+            panic!("op 2 of mnist_mlp_1 should be the BC dense layer");
+        };
+        assert!(bias.iter().all(|&b| b == 0.0));
+        let n = bc.w.len() as f32;
+        let var = bc.w.iter().map(|v| v * v).sum::<f32>() / n;
+        let expect = 2.0 / bc.cols() as f32;
+        assert!(
+            (var - expect).abs() < 0.5 * expect,
+            "defining-vector variance {var} far from He target {expect}"
+        );
     }
 }

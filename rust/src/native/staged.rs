@@ -16,33 +16,10 @@
 use crate::circulant::fft::{complex_mul_acc, FftPlan};
 use crate::circulant::{dense, BlockCirculant};
 
-/// Work actually performed by a staged execution (per call, i.e. per batch).
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct PhaseCounters {
-    /// forward transforms of input blocks (phase 1)
-    pub ffts: u64,
-    /// half-spectrum complex multiply-accumulate groups (phase 2)
-    pub mult_groups: u64,
-    /// inverse transforms of output blocks (phase 3)
-    pub iffts: u64,
-}
-
-impl PhaseCounters {
-    /// Counters per image (the unit `models::FftWork` describes).  An
-    /// empty batch performed no per-image work: zeroed counters, not a
-    /// divide-by-zero.
-    pub fn per_image(&self, batch: usize) -> PhaseCounters {
-        if batch == 0 {
-            return PhaseCounters::default();
-        }
-        let b = batch as u64;
-        PhaseCounters {
-            ffts: self.ffts / b,
-            mult_groups: self.mult_groups / b,
-            iffts: self.iffts / b,
-        }
-    }
-}
+/// Re-exported from the substrate's shared scheduler: the counters are now
+/// produced by every counted schedule (staged FC, CONV pipeline, training
+/// backward), so the type lives in [`crate::circulant::sched`].
+pub use crate::circulant::sched::PhaseCounters;
 
 /// Staged (three-phase) batched `Y = X W^T + b` for a block-circulant
 /// layer.  Output is identical to `bc.matmul` + bias/activation; the

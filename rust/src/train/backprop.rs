@@ -1,0 +1,238 @@
+//! Backward rules for the non-spectral ops of the layer program: the dense
+//! classifier head, 2x2 pooling, and the relu mask.  The spectral layers'
+//! backwards live with their forwards (`circulant::block::backward`,
+//! `native::conv::backward`); everything here is plain O(n) / O(n^2) CPU
+//! work on the small head/pool tensors.
+
+/// Relu mask: zero the gradient wherever the recorded *output* activation
+/// is not positive.  (Post-relu outputs are >= 0; a zero output means the
+/// pre-activation was clipped — or sat exactly at zero, where the
+/// subgradient 0 is the standard choice.)
+pub fn mask_relu(grad: &mut [f32], out: &[f32]) {
+    debug_assert_eq!(grad.len(), out.len());
+    for (g, &o) in grad.iter_mut().zip(out) {
+        if o <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Bias gradient: column sums of a `(rows, m)` gradient buffer into `gb`.
+pub fn bias_grad(gys: &[f32], m: usize, gb: &mut [f32]) {
+    debug_assert_eq!(gb.len(), m);
+    gb.fill(0.0);
+    for row in gys.chunks(m) {
+        for (b, &g) in gb.iter_mut().zip(row) {
+            *b += g;
+        }
+    }
+}
+
+/// Backward of the uncompressed dense head `y = x W + b` (python
+/// convention, `W` is `(n, m)` row-major): `gx = gy W^T`,
+/// `gw = Σ_batch x^T gy`, `gb = Σ_batch gy`.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_backward(
+    w: &[f32],
+    n: usize,
+    m: usize,
+    xs: &[f32],
+    gys: &[f32],
+    batch: usize,
+    gx: &mut [f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+) {
+    debug_assert_eq!(w.len(), n * m);
+    debug_assert_eq!(xs.len(), batch * n);
+    debug_assert_eq!(gys.len(), batch * m);
+    debug_assert_eq!(gx.len(), batch * n);
+    debug_assert_eq!(gw.len(), n * m);
+    gw.fill(0.0);
+    bias_grad(gys, m, gb);
+    for b in 0..batch {
+        let gy = &gys[b * m..(b + 1) * m];
+        let x = &xs[b * n..(b + 1) * n];
+        let gxr = &mut gx[b * n..(b + 1) * n];
+        for i in 0..n {
+            let wr = &w[i * m..(i + 1) * m];
+            let mut acc = 0.0f32;
+            for (&wv, &gv) in wr.iter().zip(gy) {
+                acc += wv * gv;
+            }
+            gxr[i] = acc;
+            let xv = x[i];
+            if xv != 0.0 {
+                // post-relu inputs are sparse, same skip as the forward
+                for (gwv, &gv) in gw[i * m..(i + 1) * m].iter_mut().zip(gy) {
+                    *gwv += xv * gv;
+                }
+            }
+        }
+    }
+}
+
+/// Backward of 2x2 average pooling: each output gradient spreads 1/4 to
+/// its window (rows/columns beyond `2*oh`/`2*ow` were never read by the
+/// forward and get zero gradient).
+#[allow(clippy::too_many_arguments)]
+pub fn avg_pool2_backward(
+    gys: &[f32],
+    batch: usize,
+    oh: usize,
+    ow: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    gx: &mut [f32],
+) {
+    debug_assert_eq!(gys.len(), batch * oh * ow * c);
+    debug_assert_eq!(gx.len(), batch * h * w * c);
+    gx.fill(0.0);
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let g = 0.25 * gys[((b * oh + oy) * ow + ox) * c + ch];
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            gx[((b * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ch] += g;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Backward of 2x2 max pooling: the whole gradient routes to the first
+/// window element attaining the maximum (scan order (0,0), (0,1), (1,0),
+/// (1,1) — the forward's `a.max(b).max(c).max(d)` ties resolve to any of
+/// the equal values, so first-match is a valid subgradient).
+#[allow(clippy::too_many_arguments)]
+pub fn max_pool2_backward(
+    gys: &[f32],
+    xs: &[f32],
+    batch: usize,
+    oh: usize,
+    ow: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    gx: &mut [f32],
+) {
+    debug_assert_eq!(gys.len(), batch * oh * ow * c);
+    debug_assert_eq!(xs.len(), batch * h * w * c);
+    debug_assert_eq!(gx.len(), batch * h * w * c);
+    gx.fill(0.0);
+    for b in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ch in 0..c {
+                    let at = |dy: usize, dx: usize| {
+                        ((b * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ch
+                    };
+                    let mut best = at(0, 0);
+                    for (dy, dx) in [(0, 1), (1, 0), (1, 1)] {
+                        if xs[at(dy, dx)] > xs[best] {
+                            best = at(dy, dx);
+                        }
+                    }
+                    gx[best] += gys[((b * oh + oy) * ow + ox) * c + ch];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix;
+
+    #[test]
+    fn mask_relu_zeroes_clipped_lanes() {
+        let mut g = [1.0f32, 2.0, 3.0, 4.0];
+        mask_relu(&mut g, &[0.5, 0.0, 2.0, 0.0]);
+        assert_eq!(g, [1.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_backward_matches_finite_differences() {
+        let mut rng = SplitMix::new(11);
+        let (n, m, batch) = (5, 4, 3);
+        let w = rng.normal_vec(n * m);
+        let xs = rng.normal_vec(batch * n);
+        let us = rng.normal_vec(batch * m); // cotangent: L = Σ u · y
+        let mut gx = vec![0.0; batch * n];
+        let mut gw = vec![0.0; n * m];
+        let mut gb = vec![0.0; m];
+        dense_backward(&w, n, m, &xs, &us, batch, &mut gx, &mut gw, &mut gb);
+        let loss = |w: &[f32], xs: &[f32]| -> f64 {
+            let mut total = 0.0f64;
+            for b in 0..batch {
+                for j in 0..m {
+                    let mut y = 0.0f64;
+                    for i in 0..n {
+                        y += xs[b * n + i] as f64 * w[i * m + j] as f64;
+                    }
+                    total += y * us[b * m + j] as f64;
+                }
+            }
+            total
+        };
+        let eps = 1e-2f32;
+        for t in 0..n * m {
+            let mut wp = w.clone();
+            let (hi_w, lo_w) = (w[t] + eps, w[t] - eps);
+            wp[t] = hi_w;
+            let hi = loss(&wp, &xs);
+            wp[t] = lo_w;
+            let lo = loss(&wp, &xs);
+            let want = (hi - lo) / (hi_w - lo_w) as f64;
+            assert!((gw[t] as f64 - want).abs() < 1e-3 + 1e-3 * want.abs(), "gw[{t}]");
+        }
+        for t in 0..batch * n {
+            let mut xp = xs.clone();
+            let (hi_x, lo_x) = (xs[t] + eps, xs[t] - eps);
+            xp[t] = hi_x;
+            let hi = loss(&w, &xp);
+            xp[t] = lo_x;
+            let lo = loss(&w, &xp);
+            let want = (hi - lo) / (hi_x - lo_x) as f64;
+            assert!((gx[t] as f64 - want).abs() < 1e-3 + 1e-3 * want.abs(), "gx[{t}]");
+        }
+        for (j, gbv) in gb.iter().enumerate() {
+            let want: f32 = (0..batch).map(|b| us[b * m + j]).sum();
+            assert!((gbv - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn avg_pool_backward_spreads_quarters() {
+        // one 2x2 image, one channel: g_out = 1 -> each input gets 0.25
+        let mut gx = vec![0.0; 4];
+        avg_pool2_backward(&[1.0], 1, 1, 1, 1, 2, 2, &mut gx);
+        assert_eq!(gx, vec![0.25; 4]);
+    }
+
+    #[test]
+    fn avg_pool_backward_zeroes_odd_tail() {
+        // 3x3 input pools to 1x1: the third row/column never contributed
+        let mut gx = vec![9.0; 9];
+        avg_pool2_backward(&[4.0], 1, 1, 1, 1, 3, 3, &mut gx);
+        assert_eq!(&gx[..2], &[1.0, 1.0]);
+        assert_eq!(gx[2], 0.0);
+        assert_eq!(&gx[3..5], &[1.0, 1.0]);
+        assert!(gx[5..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn max_pool_backward_routes_to_first_argmax() {
+        // window [1, 3 / 3, 0]: max 3 first reached at (0,1)
+        let xs = [1.0f32, 3.0, 3.0, 0.0];
+        let mut gx = vec![0.0; 4];
+        max_pool2_backward(&[2.0], &xs, 1, 1, 1, 1, 2, 2, &mut gx);
+        assert_eq!(gx, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,84 @@
+//! Softmax–cross-entropy head: the loss the native trainer minimizes and
+//! its gradient, fused in one pass (the softmax never materializes the
+//! normalized probabilities twice).
+//!
+//! Mirrors `python/compile/train.cross_entropy` (mean over the batch,
+//! log-softmax with max-subtraction for stability); the gradient is the
+//! classic `(softmax(logits) - onehot(label)) / batch`.
+
+/// Mean cross-entropy over `(batch, classes)` logits plus the logit
+/// gradient of the *mean* loss (so downstream weight gradients are already
+/// batch-averaged).
+pub fn softmax_xent(logits: &[f32], labels: &[u32], classes: usize) -> (f32, Vec<f32>) {
+    let batch = labels.len();
+    assert!(batch > 0, "empty batch has no loss");
+    assert_eq!(logits.len(), batch * classes, "logit buffer size");
+    let mut grad = vec![0.0f32; logits.len()];
+    let inv_b = 1.0 / batch as f32;
+    let mut loss = 0.0f64;
+    for b in 0..batch {
+        let row = &logits[b * classes..(b + 1) * classes];
+        let y = labels[b] as usize;
+        assert!(y < classes, "label {y} out of range");
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut denom = 0.0f32;
+        for &v in row {
+            denom += (v - max).exp();
+        }
+        loss += (denom.ln() + max - row[y]) as f64;
+        let g = &mut grad[b * classes..(b + 1) * classes];
+        for (gv, &v) in g.iter_mut().zip(row) {
+            *gv = (v - max).exp() / denom * inv_b;
+        }
+        g[y] -= inv_b;
+    }
+    ((loss / batch as f64) as f32, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix;
+
+    #[test]
+    fn uniform_logits_lose_ln_classes() {
+        let (loss, grad) = softmax_xent(&[0.0; 20], &[3, 7], 10);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+        // gradient rows sum to zero (softmax sums to 1, onehot to 1)
+        for row in grad.chunks(10) {
+            assert!(row.iter().sum::<f32>().abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn confident_correct_prediction_has_small_loss() {
+        let mut logits = vec![0.0f32; 10];
+        logits[4] = 20.0;
+        let (loss, _) = softmax_xent(&logits, &[4], 10);
+        assert!(loss < 1e-3, "loss {loss}");
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut rng = SplitMix::new(5);
+        let (batch, classes) = (3, 10);
+        let logits = rng.normal_vec(batch * classes);
+        let labels = [1u32, 9, 0];
+        let (_, grad) = softmax_xent(&logits, &labels, classes);
+        let eps = 1e-2f32;
+        for t in 0..logits.len() {
+            let mut lp = logits.clone();
+            let (hi_l, lo_l) = (logits[t] + eps, logits[t] - eps);
+            lp[t] = hi_l;
+            let (hi, _) = softmax_xent(&lp, &labels, classes);
+            lp[t] = lo_l;
+            let (lo, _) = softmax_xent(&lp, &labels, classes);
+            let want = (hi - lo) / (hi_l - lo_l);
+            assert!(
+                (grad[t] - want).abs() < 1e-3 + 1e-2 * want.abs(),
+                "logit {t}: analytic {} vs numeric {want}",
+                grad[t]
+            );
+        }
+    }
+}

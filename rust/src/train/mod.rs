@@ -1,0 +1,534 @@
+//! Native FFT-domain training subsystem: O(n log n) backpropagation for
+//! block-circulant layers on the pure-Rust substrate — no PJRT, no XLA.
+//!
+//! CirCNN's training derivation (Ding et al., 2017, Eqns. 2/3) shows both
+//! gradients of a circulant block are themselves FFT→elementwise→IFFT
+//! computations: `dL/dx = IFFT(conj(FFT(w)) o FFT(g))` (the transposed
+//! matvec as a conjugate-spectrum product) and `dL/dw = IFFT(conj(FFT(x))
+//! o FFT(g))` (a circular cross-correlation).  This module wires those
+//! kernels (`circulant::block::{backward, input_spectra}`,
+//! `native::conv::backward`) into a full trainer: forward walks the same
+//! `native` op program the inference engine executes — every activation
+//! moved (not cloned) into a trace, BC input spectra kept hot in
+//! caller-owned scratch — backward masks through the recorded activations
+//! and updates in place with SGD+momentum, and a softmax–cross-entropy
+//! head closes the loop over the bit-exact `data` synthetic datasets.
+//!
+//! ## What trains
+//!
+//! Block-circulant FC and CONV layers and the uncompressed dense
+//! classifier heads.  Uncompressed conv *stems* stay frozen (they are the
+//! registry's first layer everywhere; validated at construction so no
+//! gradient ever needs to flow through a dense convolution).  Pooling,
+//! flatten, prior-pool and residual joins backpropagate as pure gradient
+//! transforms ([`backprop`]).
+//!
+//! ## FFT accounting convention (pinned by the train parity test)
+//!
+//! A train step on a batch of B images charges, per BC layer
+//! ([`crate::models::FftWork::train_charge`]):
+//!
+//! * **FFTs** — `B·(ffts_total + iffts_total) + weight_blocks`: forward
+//!   input spectra, backward gradient spectra (computed once per sample
+//!   and shared by both Eqn.-2/3 products), plus one per-step re-FFT of
+//!   each updated weight block (the paper's "offline" FFT(w) step becomes
+//!   per-step under training).  Input spectra are charged once — the
+//!   forward's planes stay resident and the weight gradient reuses them.
+//! * **IFFTs** — `B·(iffts_total + ffts_total) + weight_blocks`: forward
+//!   outputs, input gradients, and one irfft per weight block for `dL/dw`
+//!   — the weight gradient accumulates in the *frequency domain* across
+//!   the whole batch, so its transforms amortize over B instead of
+//!   scaling with it (the training-side reuse the Structured Weight
+//!   Matrices accelerator work builds on).
+//! * **multiply groups** — `3·B·mult_groups_total`: forward `W∘X`,
+//!   input-grad `conj(W)∘G`, weight-grad `conj(X)∘G`.  The input-gradient
+//!   product is executed for every BC layer, including the lowest one
+//!   (whose `dL/dx` is discarded): the charge stays uniform per layer.
+//!
+//! Per-layer executed counters are accumulated every step
+//! ([`Trainer::layer_counters`]) and must equal this charge exactly.
+//!
+//! Gradient scratch (spectra planes, weight/bias gradient buffers, the
+//! rotating input-gradient buffer) is `Workspace`-style: owned by the
+//! trainer and resized in place, so steady-state steps allocate only the
+//! activation tensors themselves (plus one skip-gradient clone per
+//! residual join, mirroring the forward's residual-stack clone).
+
+pub mod backprop;
+pub mod loss;
+pub mod optim;
+
+use anyhow::bail;
+
+use crate::circulant::sched::PhaseCounters;
+use crate::data;
+use crate::models::Model;
+use crate::native::conv::{self, ConvFwdCache, ConvShape};
+use crate::native::{self, NativeModel, Op, Tensor};
+
+use optim::Sgd;
+
+/// Hyperparameters and loop shape of a training run.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// training-set prefix the minibatch loop cycles over
+    pub train_size: usize,
+    /// print a loss line every N steps (0 = silent)
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 50, batch: 64, lr: 0.02, momentum: 0.9, train_size: 4096, log_every: 10 }
+    }
+}
+
+/// Per-op reusable training scratch: BC input-spectra planes (FC), the
+/// conv forward cache, and weight/bias gradient buffers.
+struct LayerScratch {
+    xr: Vec<f32>,
+    xi: Vec<f32>,
+    conv: ConvFwdCache,
+    gw: Vec<f32>,
+    gb: Vec<f32>,
+}
+
+impl LayerScratch {
+    fn new() -> Self {
+        Self {
+            xr: Vec::new(),
+            xi: Vec::new(),
+            conv: ConvFwdCache::new(),
+            gw: Vec::new(),
+            gb: Vec::new(),
+        }
+    }
+}
+
+/// The native trainer: owns a float32 [`NativeModel`] and updates it in
+/// place, step by step, entirely in the spectral domain.
+pub struct Trainer {
+    model: NativeModel,
+    input: (usize, usize, usize),
+    opt: Sgd,
+    /// optimizer slots per op: (weight slot, bias slot)
+    slots: Vec<Option<(usize, usize)>>,
+    /// lowest op index with trainable parameters — backward stops there
+    first_trainable: usize,
+    /// executed transforms per op during the last step
+    layer_counters: Vec<PhaseCounters>,
+    scratch: Vec<LayerScratch>,
+    /// rotating input-gradient buffer (reused across ops and steps)
+    gbuf: Vec<f32>,
+    serial: bool,
+}
+
+impl Trainer {
+    /// Fresh trainer over He-init random parameters for a registry model.
+    pub fn new(model: &Model, seed: u64) -> anyhow::Result<Self> {
+        Self::from_native(NativeModel::init_random(model, seed), model.input)
+    }
+
+    /// Wrap an existing float32 native model (e.g. loaded parameters for
+    /// fine-tuning).  `input` is the `(h, w, c)` image geometry.
+    pub fn from_native(model: NativeModel, input: (usize, usize, usize)) -> anyhow::Result<Self> {
+        if model.quant_bits.is_some() {
+            bail!("the native trainer is float32; compile the model with quant_bits = None");
+        }
+        let mut opt = Sgd::new(0.02, 0.9);
+        let mut slots = Vec::with_capacity(model.ops.len());
+        for op in &model.ops {
+            slots.push(match op {
+                Op::BcDense { bc, bias, .. } | Op::BcConv { bc, bias, .. } => {
+                    Some((opt.slot(bc.w.len()), opt.slot(bias.len())))
+                }
+                Op::Dense { w, bias, .. } => Some((opt.slot(w.len()), opt.slot(bias.len()))),
+                // uncompressed conv stems train frozen (no slot); validated
+                // below so no gradient ever needs a dense-conv backward
+                _ => None,
+            });
+        }
+        let Some(first_trainable) = slots.iter().position(Option::is_some) else {
+            bail!("model has no trainable layers");
+        };
+        for (i, op) in model.ops.iter().enumerate().skip(first_trainable) {
+            if matches!(op, Op::Conv { .. } | Op::PriorPool { .. }) {
+                bail!("op {i}: frozen stem ops (conv / prior-pool) must precede every trainable layer");
+            }
+        }
+        let n_ops = model.ops.len();
+        Ok(Self {
+            model,
+            input,
+            opt,
+            slots,
+            first_trainable,
+            layer_counters: vec![PhaseCounters::default(); n_ops],
+            scratch: (0..n_ops).map(|_| LayerScratch::new()).collect(),
+            gbuf: Vec::new(),
+            serial: false,
+        })
+    }
+
+    /// Route the FC forward/backward and the conv backward through the
+    /// single-shard kernels (the bench baseline).  The conv forward keeps
+    /// the shared pixel pipeline either way (`CIRCNN_THREADS=1` pins that
+    /// one serial too).
+    pub fn set_serial(&mut self, serial: bool) {
+        self.serial = serial;
+    }
+
+    /// Override the optimizer hyperparameters (velocities are kept).
+    pub fn set_hyperparams(&mut self, lr: f32, momentum: f32) {
+        self.opt.lr = lr;
+        self.opt.momentum = momentum;
+    }
+
+    /// The trained model (inference-ready: spectra are refreshed after
+    /// every update).
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    /// Consume the trainer, keeping the trained model.
+    pub fn into_model(self) -> NativeModel {
+        self.model
+    }
+
+    /// Executed transforms per op during the last [`step`](Self::step) —
+    /// the evidence the train parity test pins against
+    /// [`crate::models::FftWork::train_charge`].
+    pub fn layer_counters(&self) -> &[PhaseCounters] {
+        &self.layer_counters
+    }
+
+    /// One SGD+momentum step on a minibatch `(xs, ys)`; returns the mean
+    /// loss at the pre-update parameters.
+    pub fn step(&mut self, xs: &[f32], ys: &[u32]) -> f32 {
+        let (h, w, c) = self.input;
+        let batch = ys.len();
+        assert!(batch > 0, "empty batch");
+        assert_eq!(xs.len(), batch * h * w * c, "image buffer size");
+        for ctr in &mut self.layer_counters {
+            *ctr = PhaseCounters::default();
+        }
+
+        // ---- forward: every activation moved into the trace, BC input
+        // spectra cached in the per-layer scratch for backward reuse
+        let mut acts: Vec<Tensor> = Vec::with_capacity(self.model.ops.len() + 1);
+        acts.push(Tensor { batch, h, w, c, data: xs.to_vec() });
+        let mut residuals: Vec<Tensor> = Vec::new();
+        for i in 0..self.model.ops.len() {
+            let x = acts.last().unwrap();
+            let next = match &self.model.ops[i] {
+                Op::BcDense { bc, bias, relu } => {
+                    let kh = bc.k / 2 + 1;
+                    let sc = &mut self.scratch[i];
+                    sc.xr.resize(batch * bc.q * kh, 0.0);
+                    sc.xi.resize(batch * bc.q * kh, 0.0);
+                    let c1 = if self.serial {
+                        bc.input_spectra_serial(&x.data, batch, &mut sc.xr, &mut sc.xi)
+                    } else {
+                        bc.input_spectra(&x.data, batch, &mut sc.xr, &mut sc.xi)
+                    };
+                    let m = bc.rows();
+                    let mut out = vec![0.0f32; batch * m];
+                    let c2 = if self.serial {
+                        bc.matmul_from_spectra_serial(&sc.xr, &sc.xi, batch, &mut out)
+                    } else {
+                        bc.matmul_from_spectra(&sc.xr, &sc.xi, batch, &mut out)
+                    };
+                    native::finish_rows(&mut out, bias, m, *relu);
+                    self.layer_counters[i].add(c1);
+                    self.layer_counters[i].add(c2);
+                    Tensor { batch, h: m, w: 1, c: 1, data: out }
+                }
+                Op::BcConv { bc, bias, r, same, relu } => {
+                    let shape = ConvShape { h: x.h, w: x.w, c: x.c, r: *r, same: *same };
+                    let o = conv::forward_cached(
+                        bc,
+                        &x.data,
+                        batch,
+                        shape,
+                        bias,
+                        *relu,
+                        &mut self.scratch[i].conv,
+                    );
+                    self.layer_counters[i].add(o.counters);
+                    Tensor { batch, h: o.oh, w: o.ow, c: bc.rows(), data: o.data }
+                }
+                op => self.model.step_ref(op, x, &mut residuals),
+            };
+            acts.push(next);
+        }
+
+        // ---- loss head
+        let logits = acts.last().unwrap();
+        let classes = logits.data.len() / batch;
+        let (loss_val, mut g) = loss::softmax_xent(&logits.data, ys, classes);
+
+        // ---- backward + in-place updates, stopping at the lowest
+        // trainable op (gradients below it have no consumer)
+        let mut spare = std::mem::take(&mut self.gbuf);
+        let mut res_grads: Vec<Vec<f32>> = Vec::new();
+        for i in (self.first_trainable..self.model.ops.len()).rev() {
+            let xin = &acts[i];
+            let out = &acts[i + 1];
+            match &mut self.model.ops[i] {
+                Op::BcDense { bc, bias, relu } => {
+                    if *relu {
+                        backprop::mask_relu(&mut g, &out.data);
+                    }
+                    let sc = &mut self.scratch[i];
+                    sc.gb.resize(bias.len(), 0.0);
+                    backprop::bias_grad(&g, bias.len(), &mut sc.gb);
+                    sc.gw.resize(bc.w.len(), 0.0);
+                    spare.clear();
+                    spare.resize(batch * bc.cols(), 0.0);
+                    let cb = if self.serial {
+                        bc.backward_serial(&sc.xr, &sc.xi, &g, batch, &mut spare, &mut sc.gw)
+                    } else {
+                        bc.backward(&sc.xr, &sc.xi, &g, batch, &mut spare, &mut sc.gw)
+                    };
+                    self.layer_counters[i].add(cb);
+                    let (ws, bs) = self.slots[i].expect("BC dense layers always train");
+                    self.opt.update(ws, &mut bc.w, &sc.gw);
+                    self.opt.update(bs, bias, &sc.gb);
+                    // refresh the resident weight spectra for the next step
+                    // — the charged per-step FFT(w) transforms
+                    bc.precompute();
+                    self.layer_counters[i].ffts += (bc.p * bc.q) as u64;
+                    std::mem::swap(&mut g, &mut spare);
+                }
+                Op::BcConv { bc, bias, r, same, relu } => {
+                    if *relu {
+                        backprop::mask_relu(&mut g, &out.data);
+                    }
+                    let sc = &mut self.scratch[i];
+                    sc.gb.resize(bias.len(), 0.0);
+                    backprop::bias_grad(&g, bias.len(), &mut sc.gb);
+                    sc.gw.resize(bc.w.len(), 0.0);
+                    spare.clear();
+                    spare.resize(batch * xin.per_image(), 0.0);
+                    let shape = ConvShape { h: xin.h, w: xin.w, c: xin.c, r: *r, same: *same };
+                    let cb = if self.serial {
+                        conv::backward_serial(bc, &sc.conv, &g, batch, shape, &mut spare, &mut sc.gw)
+                    } else {
+                        conv::backward(bc, &sc.conv, &g, batch, shape, &mut spare, &mut sc.gw)
+                    };
+                    self.layer_counters[i].add(cb);
+                    let (ws, bs) = self.slots[i].expect("BC conv layers always train");
+                    self.opt.update(ws, &mut bc.w, &sc.gw);
+                    self.opt.update(bs, bias, &sc.gb);
+                    bc.precompute();
+                    self.layer_counters[i].ffts += (bc.p * bc.q) as u64;
+                    std::mem::swap(&mut g, &mut spare);
+                }
+                Op::Dense { w, n, m, bias, relu } => {
+                    if *relu {
+                        backprop::mask_relu(&mut g, &out.data);
+                    }
+                    let sc = &mut self.scratch[i];
+                    sc.gw.resize(w.len(), 0.0);
+                    sc.gb.resize(bias.len(), 0.0);
+                    spare.clear();
+                    spare.resize(batch * *n, 0.0);
+                    backprop::dense_backward(
+                        w,
+                        *n,
+                        *m,
+                        &xin.data,
+                        &g,
+                        batch,
+                        &mut spare,
+                        &mut sc.gw,
+                        &mut sc.gb,
+                    );
+                    let (ws, bs) = self.slots[i].expect("dense layers always train");
+                    self.opt.update(ws, w, &sc.gw);
+                    self.opt.update(bs, bias, &sc.gb);
+                    std::mem::swap(&mut g, &mut spare);
+                }
+                Op::Flatten => {} // pure reshape: the gradient data is unchanged
+                Op::AvgPool2 => {
+                    spare.clear();
+                    spare.resize(batch * xin.per_image(), 0.0);
+                    backprop::avg_pool2_backward(
+                        &g, batch, out.h, out.w, out.c, xin.h, xin.w, &mut spare,
+                    );
+                    std::mem::swap(&mut g, &mut spare);
+                }
+                Op::MaxPool2 => {
+                    spare.clear();
+                    spare.resize(batch * xin.per_image(), 0.0);
+                    backprop::max_pool2_backward(
+                        &g, &xin.data, batch, out.h, out.w, out.c, xin.h, xin.w, &mut spare,
+                    );
+                    std::mem::swap(&mut g, &mut spare);
+                }
+                Op::ResidualEnd => {
+                    // out = relu(branch + skip): mask once, then the same
+                    // gradient flows down the branch and (via the stack)
+                    // joins back at the matching ResidualBegin
+                    backprop::mask_relu(&mut g, &out.data);
+                    res_grads.push(g.clone());
+                }
+                Op::ResidualBegin => {
+                    let skip = res_grads.pop().expect("unmatched residual end in backward");
+                    for (gv, s) in g.iter_mut().zip(&skip) {
+                        *gv += s;
+                    }
+                }
+                Op::Conv { .. } | Op::PriorPool { .. } => {
+                    unreachable!("validated at construction: frozen stem ops precede trainable layers")
+                }
+            }
+        }
+        self.gbuf = spare;
+        loss_val
+    }
+
+    /// Minibatch loop over a dataset's training split, cycling the first
+    /// `max(cfg.train_size, cfg.batch)` samples (at least one full batch);
+    /// returns the loss history (loss-curve lines match the PJRT artifact
+    /// driver's format).
+    pub fn train(&mut self, ds: &data::DatasetSpec, cfg: &TrainConfig) -> Vec<f32> {
+        assert!(cfg.batch > 0, "cfg.batch must be >= 1");
+        self.set_hyperparams(cfg.lr, cfg.momentum);
+        let n_batches = (cfg.train_size / cfg.batch).max(1);
+        let mut losses = Vec::with_capacity(cfg.steps);
+        for s in 0..cfg.steps {
+            let lo = ((s % n_batches) * cfg.batch) as u64;
+            let (xs, ys) = data::batch(ds, lo, cfg.batch, false);
+            let loss = self.step(&xs, &ys);
+            losses.push(loss);
+            if cfg.log_every > 0 && (s % cfg.log_every == 0 || s + 1 == cfg.steps) {
+                println!("  step {s:4}  loss {loss:.4}");
+            }
+        }
+        losses
+    }
+
+    /// Accuracy on the disjoint test split.
+    pub fn eval_accuracy(&self, ds: &data::DatasetSpec, count: usize, batch: usize) -> f64 {
+        assert!(count > 0 && batch > 0, "count and batch must be >= 1");
+        let (h, w, c) = self.input;
+        let mut correct = 0usize;
+        let mut done = 0usize;
+        while done < count {
+            let n = batch.min(count - done);
+            let (xs, ys) = data::batch(ds, done as u64, n, true);
+            let preds = self.model.classify(&xs, n, h, w, c);
+            correct += preds.iter().zip(&ys).filter(|(p, y)| p == y).count();
+            done += n;
+        }
+        correct as f64 / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{self, Layer};
+
+    #[test]
+    fn smoke_fixed_seed_20_steps_loss_decreases_on_mnist_s() {
+        // the acceptance smoke: overfit one fixed mnist_s minibatch for 20
+        // steps; the loss must trend monotonically down
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let mut tr = Trainer::new(&model, 42).unwrap();
+        tr.set_hyperparams(0.1, 0.9);
+        let (xs, ys) = data::batch(&data::MNIST_S, 0, 64, false);
+        let losses: Vec<f32> = (0..20).map(|_| tr.step(&xs, &ys)).collect();
+        assert!(
+            losses[19] < losses[0],
+            "no loss decrease over 20 steps: {losses:?}"
+        );
+        let first: f32 = losses[..5].iter().sum();
+        let last: f32 = losses[15..].iter().sum();
+        assert!(
+            last < 0.95 * first,
+            "loss not trending down: first5 {first}, last5 {last} ({losses:?})"
+        );
+    }
+
+    #[test]
+    fn executed_counters_equal_the_training_charge() {
+        // the acceptance parity: per BC layer, the transforms one train
+        // step actually executes equal models::FftWork::train_charge —
+        // across FC-only, conv (SAME + pools + frozen stem), and residual
+        // topologies
+        for name in ["mnist_mlp_2", "mnist_lenet", "svhn_cnn", "cifar_wrn"] {
+            let model = models::by_name(name).unwrap();
+            let mut tr = Trainer::new(&model, 7).unwrap();
+            let ds = data::dataset(model.dataset).unwrap();
+            let batch = 2;
+            let (xs, ys) = data::batch(&ds, 0, batch, false);
+            tr.step(&xs, &ys);
+            let accounting = model.accounting();
+            let mut rows = accounting.iter();
+            for (i, layer) in model.layers.iter().enumerate() {
+                let row = match layer {
+                    Layer::BcDense { .. }
+                    | Layer::BcConv { .. }
+                    | Layer::Dense { .. }
+                    | Layer::Conv { .. } => rows.next().expect("accounting row"),
+                    _ => continue,
+                };
+                if matches!(layer, Layer::BcDense { .. } | Layer::BcConv { .. }) {
+                    assert_eq!(
+                        tr.layer_counters()[i],
+                        row.fft_work.train_charge(batch as u64),
+                        "{name} op {i}: executed training transforms != charge"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serial_step_matches_parallel_loss_and_counters() {
+        let model = models::by_name("mnist_mlp_2").unwrap();
+        let mut par = Trainer::new(&model, 3).unwrap();
+        let mut ser = Trainer::new(&model, 3).unwrap();
+        ser.set_serial(true);
+        let (xs, ys) = data::batch(&data::MNIST_S, 0, 16, false);
+        // forward work is bitwise shard-invariant, so the first-step loss
+        // must agree exactly; executed counters never depend on sharding
+        let lp = par.step(&xs, &ys);
+        let ls = ser.step(&xs, &ys);
+        assert_eq!(lp.to_bits(), ls.to_bits(), "losses diverged: {lp} vs {ls}");
+        assert_eq!(par.layer_counters(), ser.layer_counters());
+    }
+
+    #[test]
+    fn trained_model_beats_chance_on_held_out_data() {
+        // a short real run (cycling fresh minibatches) must land well above
+        // the 10% chance floor on the disjoint test split
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let mut tr = Trainer::new(&model, 1).unwrap();
+        let cfg = TrainConfig {
+            steps: 40,
+            batch: 32,
+            lr: 0.05,
+            train_size: 960,
+            log_every: 0,
+            ..TrainConfig::default()
+        };
+        tr.train(&data::MNIST_S, &cfg);
+        let acc = tr.eval_accuracy(&data::MNIST_S, 256, 64);
+        assert!(acc > 0.2, "test accuracy {acc} not above chance");
+    }
+
+    #[test]
+    fn quantized_models_are_rejected() {
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let mut native = NativeModel::init_random(&model, 0);
+        native.quant_bits = Some(12);
+        assert!(Trainer::from_native(native, model.input).is_err());
+    }
+}

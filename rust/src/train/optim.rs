@@ -1,0 +1,72 @@
+//! SGD with classical momentum — the native trainer's update rule.
+//!
+//! `v ← μ v + g`, `w ← w − lr · v`, per parameter tensor.  Velocity
+//! buffers are registered once per tensor ([`Sgd::slot`]) and reused every
+//! step, so the optimizer allocates nothing on the training path.  (The
+//! Python pipeline uses Adam; SGD+momentum keeps the native subsystem
+//! dependency-free and is what the paper's FPGA training sketch assumes.)
+
+/// SGD + momentum over named parameter slots.
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    vel: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Self { lr, momentum, vel: Vec::new() }
+    }
+
+    /// Register a parameter tensor of `len` values; returns its slot id.
+    pub fn slot(&mut self, len: usize) -> usize {
+        self.vel.push(vec![0.0; len]);
+        self.vel.len() - 1
+    }
+
+    /// One update of `params` from `grads` through slot `slot`'s velocity.
+    pub fn update(&mut self, slot: usize, params: &mut [f32], grads: &[f32]) {
+        let vel = &mut self.vel[slot];
+        assert_eq!(vel.len(), params.len(), "slot/tensor size mismatch");
+        assert_eq!(grads.len(), params.len(), "grad/tensor size mismatch");
+        for ((v, p), &g) in vel.iter_mut().zip(params.iter_mut()).zip(grads) {
+            *v = self.momentum * *v + g;
+            *p -= self.lr * *v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_momentum_is_plain_sgd() {
+        let mut opt = Sgd::new(0.1, 0.0);
+        let s = opt.slot(2);
+        let mut w = [1.0f32, -1.0];
+        opt.update(s, &mut w, &[2.0, -4.0]);
+        assert_eq!(w, [0.8, -0.6]);
+    }
+
+    #[test]
+    fn momentum_accumulates_velocity() {
+        let mut opt = Sgd::new(1.0, 0.5);
+        let s = opt.slot(1);
+        let mut w = [0.0f32];
+        opt.update(s, &mut w, &[1.0]); // v = 1,   w = -1
+        opt.update(s, &mut w, &[1.0]); // v = 1.5, w = -2.5
+        assert!((w[0] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slots_are_independent() {
+        let mut opt = Sgd::new(1.0, 0.9);
+        let a = opt.slot(1);
+        let b = opt.slot(1);
+        let (mut wa, mut wb) = ([0.0f32], [0.0f32]);
+        opt.update(a, &mut wa, &[1.0]);
+        opt.update(b, &mut wb, &[1.0]);
+        assert_eq!(wa, wb, "fresh slots must behave identically");
+    }
+}

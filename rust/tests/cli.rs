@@ -106,6 +106,21 @@ fn error_paths_exit_nonzero_with_messages() {
 }
 
 #[test]
+fn train_demo_native_runs_on_default_features() {
+    // the native spectral-domain trainer needs no artifacts and no PJRT;
+    // --engine native also pins the path when built with --features pjrt
+    let out = circnn(&[
+        "train-demo", "--engine", "native", "--model", "mnist_mlp_1", "--steps", "3", "--batch",
+        "8",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = stdout(&out);
+    assert!(text.contains("training mnist_mlp_1 for 3 steps (batch 8)"), "{text}");
+    assert!(text.contains("loss"), "loss curve missing: {text}");
+    assert!(text.contains("test accuracy"), "eval line missing: {text}");
+}
+
+#[test]
 fn infer_native_runs_without_pjrt_server_path() {
     // needs artifacts; skip quietly when absent
     if !std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json"))
