@@ -23,6 +23,13 @@
 //! [`FftPlan::shared`] memoizes one plan per block size crate-wide so every
 //! consumer (native engine, staged executor, fixed-point SNR harness,
 //! benches) reuses the same ROMs.
+//!
+//! The phase-2 kernels ([`complex_mul_acc`] / [`complex_conj_mul_acc`])
+//! are an explicit SIMD engine: NEON/AVX2 implementations runtime-dispatched
+//! over the split-plane spectra, bitwise identical to the scalar oracles
+//! they are property-pinned against, with `CIRCNN_NO_SIMD=1` forcing the
+//! oracle — see the dispatch-convention comment above
+//! [`complex_mul_acc_scalar`].
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -326,14 +333,140 @@ fn transform(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Spectral multiply-accumulate engine (phase 2 of the datapath)
+// ---------------------------------------------------------------------------
+//
+// The innermost kernels of every block-circulant matvec, matmul, conv sweep
+// and training backward: `acc += a o b` and `acc += conj(a) o b` over the
+// split-format half-spectrum planes.  The split (separate re/im planes,
+// unit stride) is itself the SIMD layout: one vector load per plane fills
+// every lane with consecutive bins, no shuffles, no deinterleave — the
+// reason the spectra are stored as planes rather than interleaved pairs.
+//
+// Dispatch convention (the crate-wide one): a scalar oracle
+// ([`complex_mul_acc_scalar`] / [`complex_conj_mul_acc_scalar`]) defines
+// the semantics; explicit NEON/AVX2 engines are selected once per process
+// by runtime feature detection and must be **bitwise identical** to the
+// oracle — they issue exactly the scalar op sequence per lane (two mults,
+// one add/sub, one accumulate add; never an FMA contraction, which would
+// change the rounding).  `CIRCNN_NO_SIMD=1` forces the oracle, the knob CI
+// uses to exercise both sides of the dispatch (property-pinned in tests).
+
+/// `CIRCNN_NO_SIMD` read once per process (the `CIRCNN_THREADS` pattern):
+/// any nonempty value other than `0` forces the scalar oracle kernels.
+fn simd_disabled() -> bool {
+    static OFF: OnceLock<bool> = OnceLock::new();
+    *OFF.get_or_init(|| super::sched::env_flag("CIRCNN_NO_SIMD"))
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| !simd_disabled() && std::arch::is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_enabled() -> bool {
+    static ON: OnceLock<bool> = OnceLock::new();
+    *ON.get_or_init(|| !simd_disabled() && std::arch::is_aarch64_feature_detected!("neon"))
+}
+
+/// The multiply-accumulate backend the dispatcher selected for this
+/// process: `"avx2"`, `"neon"` or `"scalar"`.  Diagnostic surface for the
+/// benches and the dispatch tests.
+pub fn mac_backend() -> &'static str {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            return "avx2";
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_enabled() {
+            return "neon";
+        }
+    }
+    "scalar"
+}
+
 /// Element-wise complex multiply-accumulate on separated planes:
-/// `acc += a o b` over `len` lanes.  This is phase 2 of the datapath.
+/// `acc += a o b` over `ar.len()` lanes.  This is phase 2 of the datapath.
 ///
-/// The loop is written as fixed-width chunks so the autovectorizer can map
-/// each chunk onto SIMD lanes; the per-lane arithmetic (and therefore the
-/// result, bitwise) is identical to the plain scalar loop.
+/// Runtime-dispatched to the AVX2/NEON engine when available (bitwise
+/// identical to the scalar oracle — see the module-section comment for the
+/// dispatch convention); `CIRCNN_NO_SIMD=1` pins the oracle.
 #[inline]
 pub fn complex_mul_acc(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: dispatch is guarded by runtime AVX2 detection
+            unsafe { complex_mul_acc_avx2(ar, ai, br, bi, acc_r, acc_i) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_enabled() {
+            // SAFETY: dispatch is guarded by runtime NEON detection
+            unsafe { complex_mul_acc_neon(ar, ai, br, bi, acc_r, acc_i) };
+            return;
+        }
+    }
+    complex_mul_acc_scalar(ar, ai, br, bi, acc_r, acc_i)
+}
+
+/// Element-wise *conjugate* complex multiply-accumulate on separated
+/// planes: `acc += conj(a) o b` over `ar.len()` lanes — the training-side
+/// twin of [`complex_mul_acc`], same dispatch.
+///
+/// For circulant blocks the transposed matvec and the weight gradient are
+/// both conjugate-spectrum products (CirCNN Eqns. 2/3): `C^T g =
+/// IFFT(conj(FFT(w)) o FFT(g))` and `dL/dw = IFFT(conj(FFT(x)) o FFT(g))`,
+/// so one kernel serves both.
+#[inline]
+pub fn complex_conj_mul_acc(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: dispatch is guarded by runtime AVX2 detection
+            unsafe { complex_conj_mul_acc_avx2(ar, ai, br, bi, acc_r, acc_i) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_enabled() {
+            // SAFETY: dispatch is guarded by runtime NEON detection
+            unsafe { complex_conj_mul_acc_neon(ar, ai, br, bi, acc_r, acc_i) };
+            return;
+        }
+    }
+    complex_conj_mul_acc_scalar(ar, ai, br, bi, acc_r, acc_i)
+}
+
+/// The scalar oracle for [`complex_mul_acc`]: fixed-width chunks the
+/// autovectorizer can map onto SIMD lanes; the per-lane arithmetic (and
+/// therefore the result, bitwise) is identical to a plain scalar loop —
+/// and the explicit SIMD engines are pinned against it.
+#[inline]
+pub fn complex_mul_acc_scalar(
     ar: &[f32],
     ai: &[f32],
     br: &[f32],
@@ -366,17 +499,10 @@ pub fn complex_mul_acc(
     }
 }
 
-/// Element-wise *conjugate* complex multiply-accumulate on separated
-/// planes: `acc += conj(a) o b` over `len` lanes — the training-side twin
-/// of [`complex_mul_acc`].
-///
-/// For circulant blocks the transposed matvec and the weight gradient are
-/// both conjugate-spectrum products (CirCNN Eqns. 2/3): `C^T g =
-/// IFFT(conj(FFT(w)) o FFT(g))` and `dL/dw = IFFT(conj(FFT(x)) o FFT(g))`,
-/// so one kernel serves both.  Same fixed-width chunking as the forward
-/// kernel so the autovectorizer maps it onto SIMD lanes.
+/// The scalar oracle for [`complex_conj_mul_acc`] — same chunking as
+/// [`complex_mul_acc_scalar`].
 #[inline]
-pub fn complex_conj_mul_acc(
+pub fn complex_conj_mul_acc_scalar(
     ar: &[f32],
     ai: &[f32],
     br: &[f32],
@@ -397,6 +523,174 @@ pub fn complex_conj_mul_acc(
             acc_i[i] += x_r * y_i - x_i * y_r;
         }
         t += LANES;
+    }
+    while t < n {
+        let (x_r, x_i, y_r, y_i) = (ar[t], ai[t], br[t], bi[t]);
+        acc_r[t] += x_r * y_r + x_i * y_i;
+        acc_i[t] += x_r * y_i - x_i * y_r;
+        t += 1;
+    }
+}
+
+/// AVX2 engine for [`complex_mul_acc`]: 8-lane unaligned loads straight off
+/// the split planes, mul/sub/add vector ops (no FMA — contraction would
+/// change the rounding vs the oracle), scalar tail for the odd half-spectrum
+/// lengths (`k/2+1` is never a multiple of 8).
+///
+/// # Safety
+/// Requires AVX2 (dispatch checks `is_x86_feature_detected!`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn complex_mul_acc_avx2(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let mut t = 0;
+    while t + 8 <= n {
+        let x_r = _mm256_loadu_ps(ar.as_ptr().add(t));
+        let x_i = _mm256_loadu_ps(ai.as_ptr().add(t));
+        let y_r = _mm256_loadu_ps(br.as_ptr().add(t));
+        let y_i = _mm256_loadu_ps(bi.as_ptr().add(t));
+        let rr = _mm256_sub_ps(_mm256_mul_ps(x_r, y_r), _mm256_mul_ps(x_i, y_i));
+        let ri = _mm256_add_ps(_mm256_mul_ps(x_r, y_i), _mm256_mul_ps(x_i, y_r));
+        let pr = acc_r.as_mut_ptr().add(t);
+        _mm256_storeu_ps(pr, _mm256_add_ps(_mm256_loadu_ps(pr), rr));
+        let pi = acc_i.as_mut_ptr().add(t);
+        _mm256_storeu_ps(pi, _mm256_add_ps(_mm256_loadu_ps(pi), ri));
+        t += 8;
+    }
+    while t < n {
+        let (x_r, x_i, y_r, y_i) = (ar[t], ai[t], br[t], bi[t]);
+        acc_r[t] += x_r * y_r - x_i * y_i;
+        acc_i[t] += x_r * y_i + x_i * y_r;
+        t += 1;
+    }
+}
+
+/// AVX2 engine for [`complex_conj_mul_acc`] — sign-flipped twin of
+/// [`complex_mul_acc_avx2`].
+///
+/// # Safety
+/// Requires AVX2 (dispatch checks `is_x86_feature_detected!`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn complex_conj_mul_acc_avx2(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let mut t = 0;
+    while t + 8 <= n {
+        let x_r = _mm256_loadu_ps(ar.as_ptr().add(t));
+        let x_i = _mm256_loadu_ps(ai.as_ptr().add(t));
+        let y_r = _mm256_loadu_ps(br.as_ptr().add(t));
+        let y_i = _mm256_loadu_ps(bi.as_ptr().add(t));
+        let rr = _mm256_add_ps(_mm256_mul_ps(x_r, y_r), _mm256_mul_ps(x_i, y_i));
+        let ri = _mm256_sub_ps(_mm256_mul_ps(x_r, y_i), _mm256_mul_ps(x_i, y_r));
+        let pr = acc_r.as_mut_ptr().add(t);
+        _mm256_storeu_ps(pr, _mm256_add_ps(_mm256_loadu_ps(pr), rr));
+        let pi = acc_i.as_mut_ptr().add(t);
+        _mm256_storeu_ps(pi, _mm256_add_ps(_mm256_loadu_ps(pi), ri));
+        t += 8;
+    }
+    while t < n {
+        let (x_r, x_i, y_r, y_i) = (ar[t], ai[t], br[t], bi[t]);
+        acc_r[t] += x_r * y_r + x_i * y_i;
+        acc_i[t] += x_r * y_i - x_i * y_r;
+        t += 1;
+    }
+}
+
+/// NEON engine for [`complex_mul_acc`]: 4-lane vector ops, same
+/// no-contraction discipline as the AVX2 engine.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64; dispatch checks
+/// `is_aarch64_feature_detected!`).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn complex_mul_acc_neon(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    use std::arch::aarch64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let mut t = 0;
+    while t + 4 <= n {
+        let x_r = vld1q_f32(ar.as_ptr().add(t));
+        let x_i = vld1q_f32(ai.as_ptr().add(t));
+        let y_r = vld1q_f32(br.as_ptr().add(t));
+        let y_i = vld1q_f32(bi.as_ptr().add(t));
+        let rr = vsubq_f32(vmulq_f32(x_r, y_r), vmulq_f32(x_i, y_i));
+        let ri = vaddq_f32(vmulq_f32(x_r, y_i), vmulq_f32(x_i, y_r));
+        let pr = acc_r.as_mut_ptr().add(t);
+        vst1q_f32(pr, vaddq_f32(vld1q_f32(pr), rr));
+        let pi = acc_i.as_mut_ptr().add(t);
+        vst1q_f32(pi, vaddq_f32(vld1q_f32(pi), ri));
+        t += 4;
+    }
+    while t < n {
+        let (x_r, x_i, y_r, y_i) = (ar[t], ai[t], br[t], bi[t]);
+        acc_r[t] += x_r * y_r - x_i * y_i;
+        acc_i[t] += x_r * y_i + x_i * y_r;
+        t += 1;
+    }
+}
+
+/// NEON engine for [`complex_conj_mul_acc`] — sign-flipped twin of
+/// [`complex_mul_acc_neon`].
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64; dispatch checks
+/// `is_aarch64_feature_detected!`).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn complex_conj_mul_acc_neon(
+    ar: &[f32],
+    ai: &[f32],
+    br: &[f32],
+    bi: &[f32],
+    acc_r: &mut [f32],
+    acc_i: &mut [f32],
+) {
+    use std::arch::aarch64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let mut t = 0;
+    while t + 4 <= n {
+        let x_r = vld1q_f32(ar.as_ptr().add(t));
+        let x_i = vld1q_f32(ai.as_ptr().add(t));
+        let y_r = vld1q_f32(br.as_ptr().add(t));
+        let y_i = vld1q_f32(bi.as_ptr().add(t));
+        let rr = vaddq_f32(vmulq_f32(x_r, y_r), vmulq_f32(x_i, y_i));
+        let ri = vsubq_f32(vmulq_f32(x_r, y_i), vmulq_f32(x_i, y_r));
+        let pr = acc_r.as_mut_ptr().add(t);
+        vst1q_f32(pr, vaddq_f32(vld1q_f32(pr), rr));
+        let pi = acc_i.as_mut_ptr().add(t);
+        vst1q_f32(pi, vaddq_f32(vld1q_f32(pi), ri));
+        t += 4;
     }
     while t < n {
         let (x_r, x_i, y_r, y_i) = (ar[t], ai[t], br[t], bi[t]);
@@ -635,6 +929,89 @@ mod tests {
         for t in 0..n {
             assert!((acc_r[t] - (ar[t] * ar[t] + ai[t] * ai[t])).abs() < 1e-6);
             assert_eq!(acc_i[t], 0.0, "lane {t}");
+        }
+    }
+
+    #[test]
+    fn dispatched_mac_kernels_bitwise_equal_scalar_oracle_all_halfspec_lengths() {
+        // the SIMD engines must be indistinguishable from the scalar oracle
+        // bit for bit, across every unaligned length the substrate produces
+        // (k/2+1 half-spectrum bins for k in {2..64}) plus a sweep of odd
+        // lengths exercising every tail size of the 8- and 4-lane engines.
+        // When dispatch resolves to "scalar" (no SIMD hardware, or
+        // CIRCNN_NO_SIMD=1) this degenerates to oracle == oracle — the CI
+        // matrix runs both sides.
+        let lengths: Vec<usize> =
+            (1usize..=40).chain([2, 3, 5, 9, 17, 33]).collect();
+        for (case, &n) in lengths.iter().enumerate() {
+            let mut rng = SplitMix::new(0x51D0 + case as u64);
+            let (ar, ai) = (rng.normal_vec(n), rng.normal_vec(n));
+            let (br, bi) = (rng.normal_vec(n), rng.normal_vec(n));
+            let (acc0_r, acc0_i) = (rng.normal_vec(n), rng.normal_vec(n));
+            for conj in [false, true] {
+                let (mut dr, mut di) = (acc0_r.clone(), acc0_i.clone());
+                let (mut sr, mut si) = (acc0_r.clone(), acc0_i.clone());
+                if conj {
+                    complex_conj_mul_acc(&ar, &ai, &br, &bi, &mut dr, &mut di);
+                    complex_conj_mul_acc_scalar(&ar, &ai, &br, &bi, &mut sr, &mut si);
+                } else {
+                    complex_mul_acc(&ar, &ai, &br, &bi, &mut dr, &mut di);
+                    complex_mul_acc_scalar(&ar, &ai, &br, &bi, &mut sr, &mut si);
+                }
+                for t in 0..n {
+                    assert!(
+                        dr[t].to_bits() == sr[t].to_bits()
+                            && di[t].to_bits() == si[t].to_bits(),
+                        "backend {} conj={conj} n={n} lane {t}: ({}, {}) != scalar ({}, {})",
+                        mac_backend(),
+                        dr[t],
+                        di[t],
+                        sr[t],
+                        si[t],
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_dispatched_mac_bitwise_equal_scalar() {
+        forall(
+            "complex_mul_acc dispatch == scalar oracle, bitwise",
+            |r| {
+                let n = 1 + r.below(64) as usize;
+                (
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                    r.normal_vec(n),
+                )
+            },
+            |(ar, ai, br, bi, acc0_r, acc0_i)| {
+                let (mut dr, mut di) = (acc0_r.clone(), acc0_i.clone());
+                complex_mul_acc(ar, ai, br, bi, &mut dr, &mut di);
+                let (mut sr, mut si) = (acc0_r.clone(), acc0_i.clone());
+                complex_mul_acc_scalar(ar, ai, br, bi, &mut sr, &mut si);
+                for t in 0..ar.len() {
+                    if dr[t].to_bits() != sr[t].to_bits() || di[t].to_bits() != si[t].to_bits() {
+                        return Err(format!(
+                            "lane {t}: dispatch ({}, {}) != scalar ({}, {})",
+                            dr[t], di[t], sr[t], si[t]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn mac_backend_reports_a_known_name() {
+        assert!(["avx2", "neon", "scalar"].contains(&mac_backend()));
+        if std::env::var("CIRCNN_NO_SIMD").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
+            assert_eq!(mac_backend(), "scalar", "CIRCNN_NO_SIMD must force the oracle");
         }
     }
 

@@ -9,6 +9,14 @@
 //! [`fft::FftPlan::rfft_halfspec`]), which computes the same half spectrum
 //! as the full-complex cascade to floating-point tolerance; the simulator's
 //! cycle model (`crate::fpga`) charges exactly that packed schedule.
+//!
+//! The phase-2 multiply-accumulate kernels are an explicit SIMD engine
+//! (NEON/AVX2, runtime-dispatched, bitwise-pinned to a scalar oracle —
+//! see [`fft::complex_mul_acc`]), and every counted schedule built on them
+//! (FC matmul, CONV pipeline, training backwards) streams **resident**
+//! weight spectra: load one `FFT(w_ij)` — the FPGA's BRAM-resident block —
+//! and sweep it across all dependent samples/pixels before fetching the
+//! next.
 
 pub mod block;
 pub mod dense;

@@ -66,6 +66,15 @@ fn thread_override() -> Option<usize> {
     })
 }
 
+/// Parse a boolean substrate knob: set, nonempty and not `"0"` means on.
+/// Lives here with the `CIRCNN_THREADS` override so every substrate knob
+/// (`CIRCNN_NO_SIMD` in `super::fft`, future ones) parses the same way;
+/// callers memoize the result per process (`OnceLock`), matching the
+/// thread override's read-once semantics.
+pub(crate) fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
 /// Shards for `items` independent work units of `lanes_per_item` lanes
 /// each.  An explicit `CIRCNN_THREADS` (read once per process) is honored
 /// as-is, capped only by the unit count; otherwise the available

@@ -25,13 +25,13 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`circulant`] | from-scratch FFT / block-circulant numerics: packed real-input FFT fast path (k/2-point complex FFT + untangle), crate-wide [`circulant::FftPlan::shared`] plan cache, batch-major parallel `matmul` + conjugate-spectrum training backward sharded over scoped threads ([`circulant::sched`] holds the shared shard policy/workspaces/counters) |
+//! | [`circulant`] | from-scratch FFT / block-circulant numerics: packed real-input FFT fast path (k/2-point complex FFT + untangle), crate-wide [`circulant::FftPlan::shared`] plan cache, NEON/AVX2 SIMD MAC engine (`circulant::fft::{complex_mul_acc, complex_conj_mul_acc}`, runtime-dispatched, bitwise-pinned to the scalar oracle, `CIRCNN_NO_SIMD=1` forces scalar), batch-major parallel `matmul` + weight-spectrum-resident training backward sharded over scoped threads ([`circulant::sched`] holds the shared shard policy/workspaces/counters) |
 //! | [`codesign`] | the Fig.-5 algorithm-hardware co-optimization search |
 //! | [`data`] | bit-exact Rust mirror of the Python synthetic datasets |
 //! | [`models`] | registry of the six Table-1 networks + accounting; `fft_real_mults` is the packed-rfft cost model the simulator charges |
 //! | [`fpga`] | cycle-level simulator of the paper's FPGA datapath |
 //! | [`baselines`] | TrueNorth / reference-FPGA / analog analytical models |
-//! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT); [`native::conv`] runs the BcConv pixel pipeline batch- and pixel-parallel, forward and backward |
+//! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT); [`native::conv`] runs the BcConv pipeline batch-parallel with the weight-block-outer *spectrum-resident* MAC sweep (each weight spectrum loaded once per shard — the BRAM-reuse ordering), forward and backward |
 //! | [`train`] | native FFT-domain training subsystem: O(n log n) spectral backprop (conjugate-spectrum `dL/dx`, frequency-accumulated `dL/dw`), SGD+momentum, softmax-CE head — `circnn train-demo` on default features |
 //! | [`runtime`] | artifact manifest (always) + PJRT engine (`pjrt` feature): load + execute HLO artifacts |
 //! | [`coordinator`] | router, dynamic batcher, executor over the native or PJRT backend |

@@ -19,15 +19,23 @@
 //!   invisible in the output and makes the executed transform count equal
 //!   the `ffts_total` the cost model charges (pinned by the conv parity
 //!   test in [`super::staged`]).
-//! * **phases 2+3**: per output pixel, `p/k` spectral multiply-accumulate
-//!   sweeps over the `(c/k)·r·r` taps followed by one IFFT per output
-//!   block; output pixels sharded across the batch.  (A row-major tap-outer
-//!   variant was tried and reverted: neutral on SVHN, -19% on the WRN —
-//!   §Perf iteration log.)
+//! * **phases 2+3**: **weight-block-outer, spectrum-resident** — each
+//!   `(output block, tap)` weight spectrum is loaded once per shard and
+//!   swept across every output pixel of the shard before the next spectrum
+//!   is touched (the BRAM-reuse ordering the paper's FPGA streams its MACs
+//!   through, and the FC matmul already uses), then one IFFT per (output
+//!   pixel, output block); output pixels sharded across the batch.  The
+//!   pre-resident pixel-outer walk — every weight spectrum re-fetched per
+//!   output pixel — is kept as [`forward_pixel_outer`], the ordering twin
+//!   the benches measure the resident sweep against.  (An earlier row-major
+//!   tap-outer variant without the resident accumulator planes was tried
+//!   and reverted: neutral on SVHN, -19% on the WRN — §Perf iteration log.)
 //!
-//! Both sweeps only reorder *independent* per-pixel work, so the result is
-//! bit-identical to the pre-PR serial walk (kept as [`forward_serial`],
-//! pinned by `prop_parallel_conv_bit_identical_to_serial`).
+//! All sweeps only reorder *independent* per-pixel work — per (pixel,
+//! output block) accumulator the taps still arrive in `(cb, di, dj)` order
+//! — so the result is bit-identical to both the pixel-outer walk and the
+//! pre-PR serial walk (kept as [`forward_serial`], pinned by
+//! `prop_parallel_conv_bit_identical_to_serial`).
 
 use crate::circulant::fft::{complex_conj_mul_acc, complex_mul_acc};
 use crate::circulant::sched::{self, PhaseCounters, ShardWorkspace};
@@ -127,6 +135,36 @@ pub fn forward_cached(
     relu: bool,
     cache: &mut ConvFwdCache,
 ) -> ConvOutput {
+    forward_impl(bc, xs, batch, shape, bias, relu, cache, true)
+}
+
+/// The pre-resident parallel pipeline: identical phase-1 sweep, pixel-outer
+/// phases 2+3 (every weight-block spectrum re-fetched per output pixel).
+/// Kept as the ordering twin the resident sweep is pinned against bitwise
+/// (tests) and measured against (`bc_conv_resident_*` in the benches).
+pub fn forward_pixel_outer(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    bias: &[f32],
+    relu: bool,
+) -> ConvOutput {
+    let mut cache = ConvFwdCache::new();
+    forward_impl(bc, xs, batch, shape, bias, relu, &mut cache, false)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_impl(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    bias: &[f32],
+    relu: bool,
+    cache: &mut ConvFwdCache,
+    resident: bool,
+) -> ConvOutput {
     let k = bc.k;
     assert_eq!(xs.len(), batch * shape.h * shape.w * shape.c, "input buffer size");
     assert_eq!(shape.c % k, 0, "k must divide the channel count");
@@ -203,14 +241,28 @@ pub fn forward_cached(
     }
 
     // ---- phases 2+3: spectral MAC + one IFFT per (output pixel, output
-    // block), output pixels sharded across the batch
+    // block), output pixels sharded across the batch.  Resident ordering
+    // (the default): weight-block-outer — spectrum (i, j) is loaded once
+    // per shard and swept across every output pixel through per-pixel
+    // accumulator planes, so one BRAM-resident spectrum serves all its
+    // dependent MACs before the next is fetched.  Per (pixel, i)
+    // accumulator the taps still arrive in (cb, di, dj) order, so the
+    // result is bitwise identical to the pixel-outer walk.
     let mac_shard = |unit0: usize, out: &mut [f32]| -> (u64, u64) {
-        let mut ws = ShardWorkspace::new(k, 0, kh);
+        let units_here = out.len() / p_out;
         let (mut mult_groups, mut iffts) = (0u64, 0u64);
-        for u in 0..out.len() / p_out {
-            let (b, opix) = ((unit0 + u) / ohw, (unit0 + u) % ohw);
-            let (oy, ox) = (opix / g.ow, opix % g.ow);
-            let dst = u * p_out;
+        if resident {
+            let mut ws = ShardWorkspace::new(k, 0, units_here * kh);
+            // per-unit spectral offset of the pixel under tap (0, 0) —
+            // hoists the div/mod unit decode out of the resident sweep so
+            // the inner loop is adds + the MAC kernel only
+            let base: Vec<usize> = (0..units_here)
+                .map(|u| {
+                    let (b, opix) = ((unit0 + u) / ohw, (unit0 + u) % ohw);
+                    let (oy, ox) = (opix / g.ow, opix % g.ow);
+                    (b * ihw + oy * g.iw + ox) * spec_stride
+                })
+                .collect();
             for i in 0..pb {
                 ws.acc_r.fill(0.0);
                 ws.acc_i.fill(0.0);
@@ -219,27 +271,70 @@ pub fn forward_cached(
                         for dj in 0..g.r {
                             let j = (cb * g.r + di) * g.r + dj;
                             let (wr, wi) = bc.spectrum(i, j);
-                            let pix = (oy + di) * g.iw + ox + dj;
-                            let xo = (b * ihw + pix) * spec_stride + cb * kh;
-                            complex_mul_acc(
-                                wr,
-                                wi,
-                                &xfr[xo..xo + kh],
-                                &xfi[xo..xo + kh],
-                                &mut ws.acc_r,
-                                &mut ws.acc_i,
-                            );
-                            mult_groups += 1;
+                            let tap = (di * g.iw + dj) * spec_stride + cb * kh;
+                            for (u, &b0) in base.iter().enumerate() {
+                                let xo = b0 + tap;
+                                complex_mul_acc(
+                                    wr,
+                                    wi,
+                                    &xfr[xo..xo + kh],
+                                    &xfi[xo..xo + kh],
+                                    &mut ws.acc_r[u * kh..(u + 1) * kh],
+                                    &mut ws.acc_i[u * kh..(u + 1) * kh],
+                                );
+                                mult_groups += 1;
+                            }
                         }
                     }
                 }
-                plan.irfft_halfspec(
-                    &ws.acc_r,
-                    &ws.acc_i,
-                    &mut out[dst + i * k..dst + (i + 1) * k],
-                    &mut ws.scratch,
-                );
-                iffts += 1;
+                for u in 0..units_here {
+                    let dst = u * p_out;
+                    plan.irfft_halfspec(
+                        &ws.acc_r[u * kh..(u + 1) * kh],
+                        &ws.acc_i[u * kh..(u + 1) * kh],
+                        &mut out[dst + i * k..dst + (i + 1) * k],
+                        &mut ws.scratch,
+                    );
+                    iffts += 1;
+                }
+            }
+        } else {
+            // pixel-outer: the pre-resident walk, kept verbatim
+            let mut ws = ShardWorkspace::new(k, 0, kh);
+            for u in 0..units_here {
+                let (b, opix) = ((unit0 + u) / ohw, (unit0 + u) % ohw);
+                let (oy, ox) = (opix / g.ow, opix % g.ow);
+                let dst = u * p_out;
+                for i in 0..pb {
+                    ws.acc_r.fill(0.0);
+                    ws.acc_i.fill(0.0);
+                    for cb in 0..qc {
+                        for di in 0..g.r {
+                            for dj in 0..g.r {
+                                let j = (cb * g.r + di) * g.r + dj;
+                                let (wr, wi) = bc.spectrum(i, j);
+                                let pix = (oy + di) * g.iw + ox + dj;
+                                let xo = (b * ihw + pix) * spec_stride + cb * kh;
+                                complex_mul_acc(
+                                    wr,
+                                    wi,
+                                    &xfr[xo..xo + kh],
+                                    &xfi[xo..xo + kh],
+                                    &mut ws.acc_r,
+                                    &mut ws.acc_i,
+                                );
+                                mult_groups += 1;
+                            }
+                        }
+                    }
+                    plan.irfft_halfspec(
+                        &ws.acc_r,
+                        &ws.acc_i,
+                        &mut out[dst + i * k..dst + (i + 1) * k],
+                        &mut ws.scratch,
+                    );
+                    iffts += 1;
+                }
             }
         }
         (mult_groups, iffts)
@@ -278,11 +373,19 @@ pub fn forward_cached(
 ///
 /// * every (output pixel, output block) gradient is FFT'd **once** per
 ///   sample and shared by both products;
+/// * the tap sweep is **weight-block-outer, spectrum-resident** (the same
+///   inversion as the forward): each `conj(W_ij)` spectrum and each
+///   `gw_ij` frequency-domain accumulator is loaded once per sample and
+///   swept across all output pixels.  `dL/dw`'s per-accumulator op order
+///   is unchanged (output pixels ascending), so it stays **bitwise** equal
+///   to the pre-resident tap walk (kept as [`backward_pixel_outer`]);
+///   `dL/dx`'s padded-grid accumulators gather their taps in a different
+///   order under the inversion, so that product is pinned against the twin
+///   with tolerance (and against `to_dense()` finite differences);
 /// * `dL/dx` accumulates `conj(W_ij) o G` into a padded-grid spectral
-///   buffer walking exactly the forward's `(o, i, cb, di, dj)` taps, then
-///   runs one irfft per *interior* (input pixel, channel block) — the
-///   padded border's gradients are discarded untransformed, mirroring the
-///   forward's border-FFT skip;
+///   buffer, then runs one irfft per *interior* (input pixel, channel
+///   block) — the padded border's gradients are discarded untransformed,
+///   mirroring the forward's border-FFT skip;
 /// * `dL/dw` accumulates `conj(X) o G` in the frequency domain across the
 ///   whole batch with one irfft per weight block at the end (the per-step
 ///   amortized transforms the training cost model charges).
@@ -302,7 +405,7 @@ pub fn backward(
     gw: &mut [f32],
 ) -> PhaseCounters {
     let threads = sched::shard_count(batch, 2 * bc.p * bc.q * (bc.k / 2 + 1) * shape.h * shape.w);
-    backward_threads(bc, cache, gys, batch, shape, gx, gw, threads)
+    backward_threads(bc, cache, gys, batch, shape, gx, gw, threads, true)
 }
 
 /// [`backward`] pinned to one shard — the serial baseline for benches and
@@ -316,7 +419,24 @@ pub fn backward_serial(
     gx: &mut [f32],
     gw: &mut [f32],
 ) -> PhaseCounters {
-    backward_threads(bc, cache, gys, batch, shape, gx, gw, 1)
+    backward_threads(bc, cache, gys, batch, shape, gx, gw, 1, true)
+}
+
+/// The pre-resident tap ordering (output pixel outer, weight spectra
+/// re-fetched per pixel), kept as the twin the resident backward is pinned
+/// against: `dL/dw` bitwise, `dL/dx` with tolerance (its padded-grid
+/// accumulators gather taps in a different order under the inversion).
+/// Strictly serial (one shard).
+pub fn backward_pixel_outer(
+    bc: &BlockCirculant,
+    cache: &ConvFwdCache,
+    gys: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    gx: &mut [f32],
+    gw: &mut [f32],
+) -> PhaseCounters {
+    backward_threads(bc, cache, gys, batch, shape, gx, gw, 1, false)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -329,6 +449,7 @@ fn backward_threads(
     gx: &mut [f32],
     gw: &mut [f32],
     threads: usize,
+    resident: bool,
 ) -> PhaseCounters {
     let k = bc.k;
     assert_eq!(shape.c % k, 0, "k must divide the channel count");
@@ -382,37 +503,83 @@ fn backward_threads(
             }
             gxr.fill(0.0);
             gxi.fill(0.0);
-            for opix in 0..ohw {
-                let (oy, ox) = (opix / g.ow, opix % g.ow);
+            if resident {
+                // weight-block-outer: conj(W_ij) and the gw_ij accumulator
+                // row stay hot while every output pixel streams through
+                // them (the forward's resident inversion).  Per gw_ij lane
+                // the pixels still arrive in ascending order — bitwise
+                // equal to the pixel-outer twin; the gx padded-grid lanes
+                // gather their taps in a different order (tolerance-pinned).
                 for i in 0..pb {
-                    let goff = (opix * pb + i) * kh;
                     for cb in 0..qc {
                         for di in 0..g.r {
                             for dj in 0..g.r {
                                 let j = (cb * g.r + di) * g.r + dj;
-                                let pix = (oy + di) * g.iw + ox + dj;
                                 let (wr, wi) = bc.spectrum(i, j);
-                                let xg = pix * spec_stride + cb * kh;
-                                complex_conj_mul_acc(
-                                    wr,
-                                    wi,
-                                    &gsr[goff..goff + kh],
-                                    &gsi[goff..goff + kh],
-                                    &mut gxr[xg..xg + kh],
-                                    &mut gxi[xg..xg + kh],
-                                );
-                                c.mult_groups += 1;
-                                let xo = (gb * ihw + pix) * spec_stride + cb * kh;
                                 let woff = (i * bc.q + j) * kh;
-                                complex_conj_mul_acc(
-                                    &cache.xfr[xo..xo + kh],
-                                    &cache.xfi[xo..xo + kh],
-                                    &gsr[goff..goff + kh],
-                                    &gsi[goff..goff + kh],
-                                    &mut gwr[woff..woff + kh],
-                                    &mut gwi[woff..woff + kh],
-                                );
-                                c.mult_groups += 1;
+                                for opix in 0..ohw {
+                                    let (oy, ox) = (opix / g.ow, opix % g.ow);
+                                    let goff = (opix * pb + i) * kh;
+                                    let pix = (oy + di) * g.iw + ox + dj;
+                                    let xg = pix * spec_stride + cb * kh;
+                                    complex_conj_mul_acc(
+                                        wr,
+                                        wi,
+                                        &gsr[goff..goff + kh],
+                                        &gsi[goff..goff + kh],
+                                        &mut gxr[xg..xg + kh],
+                                        &mut gxi[xg..xg + kh],
+                                    );
+                                    c.mult_groups += 1;
+                                    let xo = (gb * ihw + pix) * spec_stride + cb * kh;
+                                    complex_conj_mul_acc(
+                                        &cache.xfr[xo..xo + kh],
+                                        &cache.xfi[xo..xo + kh],
+                                        &gsr[goff..goff + kh],
+                                        &gsi[goff..goff + kh],
+                                        &mut gwr[woff..woff + kh],
+                                        &mut gwi[woff..woff + kh],
+                                    );
+                                    c.mult_groups += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            } else {
+                // pixel-outer: the pre-resident tap walk, kept verbatim
+                for opix in 0..ohw {
+                    let (oy, ox) = (opix / g.ow, opix % g.ow);
+                    for i in 0..pb {
+                        let goff = (opix * pb + i) * kh;
+                        for cb in 0..qc {
+                            for di in 0..g.r {
+                                for dj in 0..g.r {
+                                    let j = (cb * g.r + di) * g.r + dj;
+                                    let pix = (oy + di) * g.iw + ox + dj;
+                                    let (wr, wi) = bc.spectrum(i, j);
+                                    let xg = pix * spec_stride + cb * kh;
+                                    complex_conj_mul_acc(
+                                        wr,
+                                        wi,
+                                        &gsr[goff..goff + kh],
+                                        &gsi[goff..goff + kh],
+                                        &mut gxr[xg..xg + kh],
+                                        &mut gxi[xg..xg + kh],
+                                    );
+                                    c.mult_groups += 1;
+                                    let xo = (gb * ihw + pix) * spec_stride + cb * kh;
+                                    let woff = (i * bc.q + j) * kh;
+                                    complex_conj_mul_acc(
+                                        &cache.xfr[xo..xo + kh],
+                                        &cache.xfi[xo..xo + kh],
+                                        &gsr[goff..goff + kh],
+                                        &gsi[goff..goff + kh],
+                                        &mut gwr[woff..woff + kh],
+                                        &mut gwi[woff..woff + kh],
+                                    );
+                                    c.mult_groups += 1;
+                                }
                             }
                         }
                     }
@@ -603,11 +770,13 @@ mod tests {
 
     #[test]
     fn prop_parallel_conv_bit_identical_to_serial() {
-        // the parallel pipeline only reorders independent per-pixel work,
-        // and the skipped border spectra are identically zero, so it must
-        // agree with the pre-PR serial walk bit for bit — no tolerance
+        // the resident pipeline only reorders independent per-pixel work
+        // (per (pixel, output block) accumulator the taps still arrive in
+        // (cb, di, dj) order), and the skipped border spectra are
+        // identically zero, so resident, pixel-outer and the pre-PR serial
+        // walk must all agree bit for bit — no tolerance
         forall(
-            "parallel bc-conv == serial pre-PR path, bitwise",
+            "resident bc-conv == pixel-outer == serial pre-PR path, bitwise",
             |rng| {
                 let k = 1usize << (1 + rng.below(4)); // 2..16
                 let qc = 1 + rng.below(3) as usize;
@@ -641,6 +810,16 @@ mod tests {
                     return Err(format!(
                         "output differs at {i}: {} vs {}",
                         par.data[i], ser.data[i]
+                    ));
+                }
+                let po = forward_pixel_outer(bc, xs, *batch, *shape, bias, true);
+                if po.data != par.data {
+                    return Err("pixel-outer twin differs from resident (bitwise)".into());
+                }
+                if po.counters != par.counters {
+                    return Err(format!(
+                        "ordering must not change executed counters: {:?} vs {:?}",
+                        po.counters, par.counters
                     ));
                 }
                 Ok(())
@@ -859,6 +1038,38 @@ mod tests {
         assert_eq!(cs.ffts, b * iffts_total);
         assert_eq!(cs.iffts, b * ffts_total + (pb * qc * r * r) as u64);
         assert_eq!(cs.mult_groups, 2 * b * mult_total);
+    }
+
+    #[test]
+    fn conv_backward_resident_pinned_against_pixel_outer_twin() {
+        // the resident inversion keeps dL/dw's per-accumulator op order
+        // (output pixels ascending) — bitwise equal to the pixel-outer tap
+        // walk — while dL/dx's padded-grid lanes gather their taps in a
+        // different order: same math, reassociated sum, tolerance pin (the
+        // finite-difference oracle test pins correctness independently)
+        let mut rng = SplitMix::new(0x0DE2);
+        for &(k, qc, pb, r, h, w, same) in
+            &[(4usize, 2usize, 2usize, 3usize, 6usize, 5usize, true), (2, 1, 2, 2, 5, 4, false)]
+        {
+            let c = qc * k;
+            let shape = ConvShape { h, w, c, r, same };
+            let bc = random_conv_bc(&mut rng, pb, qc, r, k);
+            let batch = 3;
+            let (oh, ow) = if same { (h, w) } else { (h - r + 1, w - r + 1) };
+            let xs = rng.normal_vec(batch * h * w * c);
+            let gys = rng.normal_vec(batch * oh * ow * pb * k);
+            let mut cache = ConvFwdCache::new();
+            forward_cached(&bc, &xs, batch, shape, &[], false, &mut cache);
+            let mut gx_r = vec![0.0; xs.len()];
+            let mut gw_r = vec![0.0; bc.param_count()];
+            let cr = backward_serial(&bc, &cache, &gys, batch, shape, &mut gx_r, &mut gw_r);
+            let mut gx_p = vec![0.0; xs.len()];
+            let mut gw_p = vec![0.0; bc.param_count()];
+            let cp = backward_pixel_outer(&bc, &cache, &gys, batch, shape, &mut gx_p, &mut gw_p);
+            assert_eq!(cr, cp, "ordering must not change executed counters");
+            assert!(gw_r == gw_p, "dL/dw must be bitwise identical across orderings");
+            assert_all_close(&gx_r, &gx_p, 1e-4, 1e-4).unwrap();
+        }
     }
 
     #[test]

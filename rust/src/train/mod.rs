@@ -7,7 +7,11 @@
 //! matvec as a conjugate-spectrum product) and `dL/dw = IFFT(conj(FFT(x))
 //! o FFT(g))` (a circular cross-correlation).  This module wires those
 //! kernels (`circulant::block::{backward, input_spectra}`,
-//! `native::conv::backward`) into a full trainer: forward walks the same
+//! `native::conv::backward` — both running the weight-spectrum-resident
+//! sweep ordering, so each `conj(W_ij)` spectrum and each frequency-domain
+//! `gw_ij` accumulator is loaded once per shard and streamed across the
+//! batch; the executed transform counts, and therefore the accounting
+//! below, are ordering-invariant) into a full trainer: forward walks the same
 //! `native` op program the inference engine executes — every activation
 //! moved (not cloned) into a trace, BC input spectra kept hot in
 //! caller-owned scratch — backward masks through the recorded activations
