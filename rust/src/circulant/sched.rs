@@ -75,6 +75,18 @@ pub(crate) fn env_flag(name: &str) -> bool {
     std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
+/// Upper bound on useful concurrency for coarse-grained parallel
+/// structures (the serving-side layer pipeline sizes its stage count with
+/// this): the explicit `CIRCNN_THREADS` override when set, else the
+/// available hardware parallelism.  `CIRCNN_THREADS=1` therefore collapses
+/// the pipeline to a single serial stage, the same knob that forces every
+/// sharded loop serial.
+pub fn max_threads() -> usize {
+    thread_override().unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
 /// Shards for `items` independent work units of `lanes_per_item` lanes
 /// each.  An explicit `CIRCNN_THREADS` (read once per process) is honored
 /// as-is, capped only by the unit count; otherwise the available

@@ -30,6 +30,35 @@ impl Default for BatchPolicy {
     }
 }
 
+impl BatchPolicy {
+    /// Construct a policy with the degenerate edges clamped away
+    /// (see [`clamped`](Self::clamped)).
+    pub fn new(max_batch: usize, max_delay: Duration, max_queue: usize) -> Self {
+        Self { max_batch, max_delay, max_queue }.clamped()
+    }
+
+    /// Clamp the two silently-deadlocking edges:
+    ///
+    /// * `max_batch == 0` → every push reports `BatchReady` but
+    ///   `drain_batch` removes zero items, so the queue fills and no
+    ///   request is ever answered — clamped to 1;
+    /// * `max_queue < max_batch` → a size-triggered release can never
+    ///   assemble (admission rejects before the batch fills), leaving
+    ///   every batch to the deadline path — clamped to `max_queue >=
+    ///   max_batch`.
+    ///
+    /// [`new`](Self::new) and the server (`Server::start*`) apply this, so
+    /// a hand-built policy literal cannot wedge the serving executor.
+    /// `BatchQueue::new` takes the policy as given — property tests build
+    /// deliberately extreme literals (e.g. `max_batch: usize::MAX` as a
+    /// never-release queue) against the raw queue logic.
+    pub fn clamped(mut self) -> Self {
+        self.max_batch = self.max_batch.max(1);
+        self.max_queue = self.max_queue.max(self.max_batch);
+        self
+    }
+}
+
 /// A queued unit of work.
 #[derive(Debug)]
 pub struct Pending<T> {
@@ -184,6 +213,39 @@ mod tests {
         q.push(1, t0);
         let d = q.next_deadline(t0 + Duration::from_millis(4)).unwrap();
         assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn zero_max_batch_is_clamped_not_deadlocked() {
+        // max_batch = 0 reports BatchReady on every push while drain_batch
+        // removes nothing — the queue would fill and no request would ever
+        // be answered; the constructor clamps the edge away
+        let p = BatchPolicy::new(0, Duration::from_millis(1), 8);
+        assert_eq!(p.max_batch, 1);
+        let mut q = BatchQueue::new(p);
+        let t0 = Instant::now();
+        assert_eq!(q.push(7, t0), PushOutcome::BatchReady);
+        assert_eq!(q.drain_batch().len(), 1, "a released batch must drain work");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn max_queue_below_max_batch_is_clamped() {
+        // max_queue < max_batch could never assemble a size-triggered
+        // batch: admission would reject the fill before it reached
+        // max_batch, leaving every request to the deadline path
+        let p = BatchPolicy::new(8, Duration::from_millis(1), 3);
+        assert_eq!((p.max_batch, p.max_queue), (8, 8));
+        let mut q = BatchQueue::new(p);
+        let t0 = Instant::now();
+        for i in 0..7 {
+            assert_eq!(q.push(i, t0), PushOutcome::Queued, "push {i}");
+        }
+        assert_eq!(q.push(7, t0), PushOutcome::BatchReady);
+        assert_eq!(q.drain_batch().len(), 8);
+        // a valid policy (the Default) is untouched by the clamp
+        let ok = BatchPolicy::default().clamped();
+        assert_eq!((ok.max_batch, ok.max_queue), (64, 4096));
     }
 
     #[test]

@@ -1,7 +1,13 @@
-//! Serving metrics: lock-free counters + a fixed-bucket latency histogram.
+//! Serving metrics: lock-free counters, a fixed-bucket latency histogram,
+//! and (for the pipelined engine) per-stage occupancy attached by the
+//! executor so `summary()` can report busy/fill fractions next to the
+//! latency percentiles.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::pipeline::PipelineStats;
 
 /// Log-spaced latency buckets (upper bounds, microseconds).
 const BUCKETS_US: [u64; 12] = [
@@ -25,6 +31,9 @@ pub struct Metrics {
     pub padded_slots: AtomicU64,
     latency_buckets: [AtomicU64; 12],
     latency_sum_us: AtomicU64,
+    /// per-model pipeline stage occupancy (pipeline engine only; empty on
+    /// the serial executors)
+    pipelines: Mutex<Vec<(String, Arc<PipelineStats>)>>,
 }
 
 impl Metrics {
@@ -99,17 +108,42 @@ impl Metrics {
         padded as f64 / (items + padded) as f64
     }
 
-    /// One-line summary for logs / examples.
-    pub fn summary(&self) -> String {
-        let p95 = match self.percentile_bucket(95.0) {
+    /// Attach a running pipeline's stage stats under `model` so
+    /// [`summary`](Self::summary) reports its occupancy (one entry per
+    /// pipelined model; the executor calls this at startup).
+    pub fn attach_pipeline(&self, model: &str, stats: Arc<PipelineStats>) {
+        self.pipelines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push((model.to_string(), stats));
+    }
+
+    /// Snapshot of the attached pipelines (model name, stage stats).
+    pub fn pipelines(&self) -> Vec<(String, Arc<PipelineStats>)> {
+        self.pipelines
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// Render one latency percentile with the saturation convention: a
+    /// percentile landing in the open-ended overflow bucket prints as a
+    /// floor (`p95>…us`), never as `u64::MAX`.
+    fn percentile_summary(&self, p: f64) -> String {
+        match self.percentile_bucket(p) {
             // overflow bucket: the bound is a floor, not a ceiling
-            Some(i) if BUCKETS_US[i] == u64::MAX => format!("p95>{MAX_FINITE_US}us"),
-            Some(i) => format!("p95<={}us", BUCKETS_US[i]),
-            None => "p95<=0us".to_string(),
-        };
-        format!(
+            Some(i) if BUCKETS_US[i] == u64::MAX => format!("p{p:.0}>{MAX_FINITE_US}us"),
+            Some(i) => format!("p{p:.0}<={}us", BUCKETS_US[i]),
+            None => format!("p{p:.0}<=0us"),
+        }
+    }
+
+    /// One-line summary for logs / examples: counters, p50/p95/p99, and —
+    /// when a pipeline is attached — per-stage busy fractions.
+    pub fn summary(&self) -> String {
+        let mut s = format!(
             "requests={} responses={} rejected={} batches={} mean_batch={:.1} \
-             padding={:.1}% mean_latency={:.0}us {p95}",
+             padding={:.1}% mean_latency={:.0}us {} {} {}",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -117,7 +151,17 @@ impl Metrics {
             self.mean_batch_size(),
             self.padding_fraction() * 100.0,
             self.mean_latency_us(),
-        )
+            self.percentile_summary(50.0),
+            self.percentile_summary(95.0),
+            self.percentile_summary(99.0),
+        );
+        for (name, stats) in self.pipelines().iter() {
+            // only stages that saw traffic say anything useful
+            if stats.stages.iter().any(|st| st.batches.load(Ordering::Relaxed) > 0) {
+                s.push_str(&format!(" pipeline[{name}]: {}", stats.occupancy_summary()));
+            }
+        }
+        s
     }
 }
 
@@ -160,6 +204,46 @@ mod tests {
         m.padded_slots.fetch_add(32, Ordering::Relaxed);
         assert!((m.mean_batch_size() - 48.0).abs() < 1e-9);
         assert!((m.padding_fraction() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_reports_p50_p95_p99() {
+        let m = Metrics::new();
+        for _ in 0..98 {
+            m.record_latency(Duration::from_micros(50));
+        }
+        m.record_latency(Duration::from_millis(50));
+        m.record_latency(Duration::from_secs(2)); // overflow bucket
+        let s = m.summary();
+        assert!(s.contains("p50<=100us"), "{s}");
+        assert!(s.contains("p95<=100us"), "{s}");
+        assert!(s.contains("p99<=100000us"), "{s}");
+        // all three percentiles keep the saturation convention
+        let m2 = Metrics::new();
+        m2.record_latency(Duration::from_secs(2));
+        let s2 = m2.summary();
+        for needle in ["p50>1000000us", "p95>1000000us", "p99>1000000us"] {
+            assert!(s2.contains(needle), "{s2}");
+        }
+    }
+
+    #[test]
+    fn summary_appends_attached_pipeline_occupancy() {
+        use crate::pipeline::PipelineStats;
+        use std::sync::Arc;
+        use std::time::Instant;
+
+        let m = Metrics::new();
+        assert!(!m.summary().contains("pipeline["), "no pipeline attached yet");
+        let stats = Arc::new(PipelineStats::new(vec!["L00 bc_dense".into()]));
+        m.attach_pipeline("mnist_mlp_1", stats.clone());
+        // a stage with no traffic stays silent
+        assert!(!m.summary().contains("pipeline["), "{}", m.summary());
+        let t = Instant::now();
+        stats.record(0, 0, t, t + Duration::from_micros(10), 1);
+        let s = m.summary();
+        assert!(s.contains("pipeline[mnist_mlp_1]: s0="), "{s}");
+        assert_eq!(m.pipelines().len(), 1);
     }
 
     #[test]

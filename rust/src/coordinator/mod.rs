@@ -4,23 +4,35 @@
 //!
 //! ```text
 //!  clients ──► Router ──► per-model BatchQueue ──► executor thread
-//!              (validate,  (dynamic batching:       (owns the PJRT Engine,
-//!               dispatch,   size + deadline          pads to the artifact
-//!               admission)  policy, paper's          batch, executes, scatters
-//!                           50-100 batch)            replies)
+//!              (validate,  (dynamic batching:       (assembles released
+//!               dispatch,   size + deadline          batches, dispatches to
+//!               admission)  policy, paper's          the engine backend)
+//!                           50-100 batch)                  │
+//!          serial backends (native / PJRT):                │
+//!            execute end to end, scatter replies  ◄────────┤
+//!          pipeline backend (crate::pipeline):             │
+//!            [stage 0] ─► [stage 1] ─► … ─► sink  ◄────────┘
+//!            (multiple batches in flight, one per layer stage;
+//!             replies scatter from the last stage's worker)
 //! ```
 //!
-//! The executor thread is the software twin of the paper's single FPGA:
-//! `PjRtClient` is not `Send`, so exactly one thread owns it and the
-//! datapath is strictly serialized — batching is what buys throughput,
-//! precisely as in Fig. 4.  The batcher implements the paper's
-//! batch-processing design point (default max batch 64, bounded queueing
-//! with explicit backpressure).
+//! The serial executor is the software twin of the paper's single
+//! time-multiplexed FPGA: one thread walks every layer of a batch end to
+//! end (`PjRtClient` is not `Send`, so on the PJRT backend this is
+//! structural), and batching is what buys throughput.  The **pipeline**
+//! backend ([`server::EngineKind::Pipeline`]) is the twin of the paper's
+//! *deeply pipelined* datapath (Fig. 4): the native model's layer program
+//! is split into stage workers chained by bounded channels, so batch N
+//! streams through layer ℓ+1 while batch N+1 occupies layer ℓ — bitwise
+//! identical per-batch results, per-stage occupancy in [`Metrics`].
+//! The batcher implements the paper's batch-processing design point
+//! (default max batch 64, bounded queueing with explicit backpressure;
+//! degenerate policies are clamped, see `BatchPolicy::clamped`).
 //!
-//! The executor drives one of two backends (see [`server::EngineKind`]):
-//! PJRT artifacts (`pjrt` feature) or the always-available pure-Rust
-//! substrate, whose batch-major parallel `matmul` shards each released
-//! batch across cores.
+//! The executor drives one of three backends (see [`server::EngineKind`]):
+//! PJRT artifacts (`pjrt` feature), the always-available pure-Rust
+//! substrate — whose batch-major parallel `matmul` shards each released
+//! batch across cores — or that same substrate behind the layer pipeline.
 
 pub mod batcher;
 pub mod metrics;

@@ -6,7 +6,7 @@
 //! and all hot-path buffers (the padded batch input) are reused across
 //! batches.
 //!
-//! Two backends implement the datapath behind the same batching policy:
+//! Three backends implement the datapath behind the same batching policy:
 //!
 //! * **PJRT** (`pjrt` feature): compiled HLO artifacts through the `xla`
 //!   crate — `PjRtClient` is not `Send`, so the single executor thread is
@@ -15,6 +15,12 @@
 //!   ([`crate::native`]).  Batches execute through the batch-major parallel
 //!   [`BlockCirculant::matmul`](crate::circulant::BlockCirculant::matmul),
 //!   so the datapath itself shards each released batch across cores.
+//! * **Pipeline** (always available): the same native models behind the
+//!   deep-pipelined engine ([`crate::pipeline`]) — released batches stream
+//!   through per-layer stage workers with multiple batches in flight, and
+//!   replies scatter from the last stage.  The executor thread only
+//!   assembles and submits; `submit` blocking at the configured depth is
+//!   the third backpressure layer.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -23,11 +29,12 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::batcher::{BatchPolicy, BatchQueue, PushOutcome};
+use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending, PushOutcome};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{RouteError, Router};
 use crate::models;
-use crate::native::NativeModel;
+use crate::native::{NativeModel, Tensor};
+use crate::pipeline::{Pipeline, PipelinePlan};
 #[cfg(feature = "pjrt")]
 use crate::runtime::engine::{literal_f32, Engine};
 use crate::runtime::manifest::Manifest;
@@ -64,6 +71,11 @@ pub enum EngineKind {
     Auto,
     /// The pure-Rust block-circulant substrate (`crate::native`).
     Native,
+    /// The native substrate behind the deep-pipelined serving engine
+    /// (`crate::pipeline`): per-layer stage workers, multiple released
+    /// batches in flight.  Replies scatter from the last stage's worker;
+    /// per-batch results stay bitwise identical to [`EngineKind::Native`].
+    Pipeline,
     /// Compiled HLO artifacts through PJRT.
     #[cfg(feature = "pjrt")]
     Pjrt,
@@ -78,6 +90,14 @@ pub struct ServerConfig {
     /// (PJRT backend only)
     pub use_pallas: bool,
     pub engine: EngineKind,
+    /// [`EngineKind::Pipeline`] only: bound on concurrently in-flight
+    /// batches per model (`None` = one per stage, the full pipeline)
+    pub depth: Option<usize>,
+    /// native/pipeline backends: when a model's params archive is missing,
+    /// serve deterministic He-init random parameters
+    /// ([`NativeModel::init_random`], fixed seed) instead of failing its
+    /// requests — the demo/CI mode that needs no `make artifacts`
+    pub init_random_fallback: bool,
 }
 
 impl Default for ServerConfig {
@@ -87,6 +107,8 @@ impl Default for ServerConfig {
             policy: BatchPolicy::default(),
             use_pallas: false,
             engine: EngineKind::Auto,
+            depth: None,
+            init_random_fallback: false,
         }
     }
 }
@@ -112,10 +134,22 @@ impl Server {
     /// Load the manifest, spawn the executor thread, return the handle.
     pub fn start(config: ServerConfig) -> anyhow::Result<Self> {
         let manifest = Manifest::load(&config.artifacts_dir)?;
+        Self::start_with_manifest(manifest, config)
+    }
+
+    /// Start against an already-built manifest — the hook for
+    /// [`Manifest::synthetic`] (registry-only serving, no artifacts on
+    /// disk) and for tests that assemble manifests in memory.
+    pub fn start_with_manifest(
+        manifest: Manifest,
+        mut config: ServerConfig,
+    ) -> anyhow::Result<Self> {
+        // a hand-built policy literal must not wedge the executor
+        config.policy = config.policy.clamped();
         // the native substrate executes the policy's release size; only the
         // PJRT path is bound to a compiled artifact's batch
         #[cfg(feature = "pjrt")]
-        let native_batch = matches!(config.engine, EngineKind::Native)
+        let native_batch = matches!(config.engine, EngineKind::Native | EngineKind::Pipeline)
             .then_some(config.policy.max_batch.max(1));
         #[cfg(not(feature = "pjrt"))]
         let native_batch = Some(config.policy.max_batch.max(1));
@@ -213,6 +247,19 @@ enum ModelExec {
         w: usize,
         c: usize,
     },
+    /// The native model behind the deep-pipelined engine: released batches
+    /// stream into stage 0 and replies scatter from the last stage's
+    /// worker (the sink).  The executor hands a batch off without running
+    /// it; `submit` blocks only when this model is saturated (`depth`
+    /// batches in flight), and then at most until the oldest clears one
+    /// stage — strictly less executor stall than the serial path's inline
+    /// forward.
+    Pipeline {
+        pipe: Pipeline<Vec<Pending<Request>>>,
+        h: usize,
+        w: usize,
+        c: usize,
+    },
     /// The model's execution state failed to initialize (params missing or
     /// malformed).  The router still admits its requests — they reach the
     /// executor and fail with the load error, instead of the misleading
@@ -236,7 +283,7 @@ fn executor_loop(
     metrics: Arc<Metrics>,
 ) {
     #[cfg(feature = "pjrt")]
-    let use_pjrt = !matches!(config.engine, EngineKind::Native);
+    let use_pjrt = !matches!(config.engine, EngineKind::Native | EngineKind::Pipeline);
     #[cfg(not(feature = "pjrt"))]
     let use_pjrt = false;
 
@@ -280,62 +327,25 @@ fn executor_loop(
                 }
             }
         } else {
-            // native substrate: registry program + trained params archive.
-            // A load failure must not silently drop the model — the router
-            // already admits its requests, so keep a Failed state that
-            // answers them with the real error.
-            match models::by_name(&m.name) {
-                None => {
-                    eprintln!(
-                        "serve: {} not in the native registry; its requests will \
-                         fail with an engine error",
-                        m.name
-                    );
-                    ModelExec::Failed {
-                        reason: format!("model {} is not in the native registry", m.name),
-                    }
-                }
-                Some(model) => {
-                    let path =
-                        manifest.dir.join("params").join(format!("{}.npz", m.name));
-                    match NativeModel::load(&model, &path, Some(manifest.quant_bits as u32))
-                    {
-                        Ok(native) => {
-                            let (h, w, c) = model.input;
-                            ModelExec::Native { model: Box::new(native), h, w, c }
-                        }
-                        Err(err) => {
-                            eprintln!(
-                                "serve: {}: {err:#}; its requests will fail with an \
-                                 engine error",
-                                m.name
-                            );
-                            ModelExec::Failed {
-                                reason: format!(
-                                    "native params for {} failed to load: {err:#}",
-                                    m.name
-                                ),
-                            }
-                        }
-                    }
-                }
-            }
+            native_exec(&manifest, &config, &m.name, &metrics)
         };
         let exec_batch = match &exec {
             #[cfg(feature = "pjrt")]
             ModelExec::Pjrt { exec_batch, .. } => *exec_batch,
-            ModelExec::Native { .. } | ModelExec::Failed { .. } => {
-                config.policy.max_batch.max(1)
-            }
+            ModelExec::Native { .. }
+            | ModelExec::Pipeline { .. }
+            | ModelExec::Failed { .. } => config.policy.max_batch.max(1),
         };
         // a PJRT artifact executes a fixed batch size: cap this model's
         // release size at it so a larger policy.max_batch can neither
         // overflow the scratch buffer nor exceed the compiled batch
         let mut policy = config.policy;
         policy.max_batch = policy.max_batch.min(exec_batch).max(1);
-        // a Failed model never assembles a batch — don't hold its buffer
+        // a Failed model never assembles a batch, and the pipeline
+        // assembles straight into each job's tensor — neither holds a
+        // staging buffer
         let scratch = match &exec {
-            ModelExec::Failed { .. } => Vec::new(),
+            ModelExec::Pipeline { .. } | ModelExec::Failed { .. } => Vec::new(),
             _ => vec![0.0; exec_batch * image_elems],
         };
         states.insert(
@@ -443,6 +453,102 @@ struct NoEngine;
 #[cfg(not(feature = "pjrt"))]
 type EngineRef<'a> = NoEngine;
 
+/// Fixed seed for the [`ServerConfig::init_random_fallback`] parameters —
+/// deterministic, so two servers (e.g. serial vs pipelined in the
+/// equivalence tests) serve bit-identical weights.
+const INIT_RANDOM_SEED: u64 = 0x5EED;
+
+/// Build the native-substrate execution state for one model: registry
+/// program + trained params archive (or the deterministic random-init
+/// fallback), wrapped in the layer pipeline when the config asks for it.
+/// A load failure must not silently drop the model — the router already
+/// admits its requests, so a `Failed` state answers them with the real
+/// error.
+fn native_exec(
+    manifest: &Manifest,
+    config: &ServerConfig,
+    name: &str,
+    metrics: &Arc<Metrics>,
+) -> ModelExec {
+    let Some(model) = models::by_name(name) else {
+        eprintln!(
+            "serve: {name} not in the native registry; its requests will \
+             fail with an engine error"
+        );
+        return ModelExec::Failed {
+            reason: format!("model {name} is not in the native registry"),
+        };
+    };
+    let path = manifest.dir.join("params").join(format!("{name}.npz"));
+    let native = match NativeModel::load(&model, &path, Some(manifest.quant_bits as u32)) {
+        Ok(native) => native,
+        Err(err) if config.init_random_fallback => {
+            eprintln!(
+                "serve: {name}: {err:#}; serving deterministic random-init \
+                 parameters instead (init_random_fallback)"
+            );
+            let mut native = NativeModel::init_random(&model, INIT_RANDOM_SEED);
+            native.quant_bits = Some(manifest.quant_bits as u32);
+            native
+        }
+        Err(err) => {
+            eprintln!(
+                "serve: {name}: {err:#}; its requests will fail with an \
+                 engine error"
+            );
+            return ModelExec::Failed {
+                reason: format!("native params for {name} failed to load: {err:#}"),
+            };
+        }
+    };
+    let (h, w, c) = model.input;
+    if !matches!(config.engine, EngineKind::Pipeline) {
+        return ModelExec::Native { model: Box::new(native), h, w, c };
+    }
+    // pipelined backend: per-layer stage workers over the same model; the
+    // last stage's sink owns the reply scatter and its metrics bookkeeping
+    let native = Arc::new(native);
+    let sink_metrics = metrics.clone();
+    let pipe = Pipeline::start(
+        native.clone(),
+        PipelinePlan::auto(&native),
+        config.depth,
+        move |tensor: Tensor, pending: Vec<Pending<Request>>| {
+            // the native head defines its own class count (no padded rows)
+            let classes = tensor.data.len() / pending.len().max(1);
+            scatter_batch(&sink_metrics, &tensor.data, classes, pending);
+        },
+    );
+    metrics.attach_pipeline(name, pipe.stats().clone());
+    ModelExec::Pipeline { pipe, h, w, c }
+}
+
+/// Scatter one executed batch's logits back to its requests (argmax +
+/// latency bookkeeping) — shared by the serial executor and the pipeline
+/// sink.  `logits` may carry padded tail rows (PJRT); only the `pending`
+/// prefix is scattered.
+fn scatter_batch(
+    metrics: &Metrics,
+    logits: &[f32],
+    classes: usize,
+    pending: Vec<Pending<Request>>,
+) {
+    let occupied = pending.len();
+    let labels = argmax_rows(logits, classes);
+    for (slot, p) in pending.into_iter().enumerate() {
+        let latency = p.item.submitted.elapsed();
+        metrics.responses.fetch_add(1, Ordering::Relaxed);
+        metrics.record_latency(latency);
+        let row = &logits[slot * classes..(slot + 1) * classes];
+        let _ = p.item.resp.send(Ok(Response {
+            label: labels[slot],
+            logits: row.to_vec(),
+            latency,
+            batch_occupancy: occupied,
+        }));
+    }
+}
+
 fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metrics) {
     #[cfg(not(feature = "pjrt"))]
     let _ = engine;
@@ -460,6 +566,32 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
         return;
     }
     let occupied = pending.len();
+
+    if let ModelExec::Pipeline { pipe, h, w, c } = &state.exec {
+        // assemble straight into the job tensor (no scratch staging — the
+        // pipeline pads nothing, so the extra copy would buy nothing) and
+        // stream into stage 0.  `submit` returns immediately unless this
+        // model already has `depth` batches in flight; then it blocks
+        // until the oldest clears one stage — which stalls the executor
+        // (and every model's deadlines) for at most that long, the same
+        // head-of-line cost the serial path pays on *every* batch by
+        // running the full forward inline.  Counted as executed here,
+        // mirroring the serial path's books (requests == responses +
+        // rejected); the sink does the response-side accounting.
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .batched_items
+            .fetch_add(occupied as u64, Ordering::Relaxed);
+        let mut imgs = Vec::with_capacity(occupied * state.image_elems);
+        for p in &pending {
+            imgs.extend_from_slice(&p.item.image);
+        }
+        pipe.submit_tensor(
+            Tensor { batch: occupied, h: *h, w: *w, c: *c, data: imgs },
+            pending,
+        );
+        return;
+    }
 
     // assemble the batch into the reused scratch buffer (the occupied
     // prefix is fully overwritten, so only the PJRT pad tail needs zeroing)
@@ -489,7 +621,9 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
             let imgs = &state.scratch[..occupied * state.image_elems];
             (Ok(model.forward(imgs, occupied, *h, *w, *c)), 0)
         }
-        ModelExec::Failed { .. } => unreachable!("handled before batch assembly"),
+        ModelExec::Pipeline { .. } | ModelExec::Failed { .. } => {
+            unreachable!("handled before batch assembly")
+        }
     };
 
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -508,21 +642,11 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
                 ModelExec::Native { .. } => logits.len() / occupied,
                 #[cfg(feature = "pjrt")]
                 ModelExec::Pjrt { classes, .. } => *classes,
-                ModelExec::Failed { .. } => unreachable!("handled before batch assembly"),
+                ModelExec::Pipeline { .. } | ModelExec::Failed { .. } => {
+                    unreachable!("handled before batch assembly")
+                }
             };
-            let labels = argmax_rows(&logits, classes);
-            for (slot, p) in pending.into_iter().enumerate() {
-                let latency = p.item.submitted.elapsed();
-                metrics.responses.fetch_add(1, Ordering::Relaxed);
-                metrics.record_latency(latency);
-                let row = &logits[slot * classes..(slot + 1) * classes];
-                let _ = p.item.resp.send(Ok(Response {
-                    label: labels[slot],
-                    logits: row.to_vec(),
-                    latency,
-                    batch_occupancy: occupied,
-                }));
-            }
+            scatter_batch(metrics, &logits, classes, pending);
         }
         Err(err) => {
             // engine-failed requests are shed load, same bookkeeping as the

@@ -33,8 +33,9 @@
 //! | [`baselines`] | TrueNorth / reference-FPGA / analog analytical models |
 //! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT); [`native::conv`] runs the BcConv pipeline batch-parallel with the weight-block-outer *spectrum-resident* MAC sweep (each weight spectrum loaded once per shard — the BRAM-reuse ordering), forward and backward |
 //! | [`train`] | native FFT-domain training subsystem: O(n log n) spectral backprop (conjugate-spectrum `dL/dx`, frequency-accumulated `dL/dw`), SGD+momentum, softmax-CE head — `circnn train-demo` on default features |
+//! | [`pipeline`] | deep-pipelined serving engine: the `NativeModel` op walk split into per-layer stage workers with multiple batches in flight (token-bounded depth, bitwise-identical to `forward`, per-stage occupancy timeline — the executable twin of `fpga::controller`'s pipeline-fill story) |
 //! | [`runtime`] | artifact manifest (always) + PJRT engine (`pjrt` feature): load + execute HLO artifacts |
-//! | [`coordinator`] | router, dynamic batcher, executor over the native or PJRT backend |
+//! | [`coordinator`] | router, dynamic batcher, executor over the native, pipelined-native or PJRT backend |
 //! | [`experiments`] | Table-1 / Fig-3 / Fig-6 / analog report generators |
 //! | [`util`] | JSON, PRNG, property-test and bench harness kits (incl. machine-readable bench JSON) |
 
@@ -47,6 +48,7 @@ pub mod experiments;
 pub mod fpga;
 pub mod models;
 pub mod native;
+pub mod pipeline;
 pub mod runtime;
 pub mod train;
 pub mod util;

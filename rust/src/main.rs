@@ -91,7 +91,14 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
   infer      --model NAME [--count N] [--batch 1|64] [--pallas]
              [--engine native]   (pure-Rust, no PJRT)
   serve      [--model NAME] [--requests N] [--clients N] [--max-batch N]
-             [--engine native]   (serve on the pure-Rust substrate)
+             [--engine native|pipeline] [--depth N] [--synthetic]
+             --engine native:   serve on the pure-Rust substrate
+             --engine pipeline: deep-pipelined serving — per-layer stage
+                                workers, multiple batches in flight
+                                (--depth bounds them), prints the measured
+                                stage-occupancy timeline
+             --synthetic:       no artifacts needed — registry models with
+                                deterministic random-init params (demo/CI)
   train-demo [--model NAME] [--steps N] [--batch N] [--lr F] [--seed N]
              default build: native spectral-domain trainer (O(n log n)
              backprop, no artifacts needed); with `--features pjrt` it
@@ -399,16 +406,35 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     };
     let engine = match flags.get("engine").map(String::as_str) {
         Some("native") => EngineKind::Native,
+        Some("pipeline") => EngineKind::Pipeline,
         _ => EngineKind::Auto,
     };
-    let server = Server::start(ServerConfig {
-        policy,
-        use_pallas: flag_bool(flags, "pallas"),
-        engine,
-        ..ServerConfig::default()
-    })?;
-    let man = Manifest::load(Manifest::default_dir())?;
+    // --synthetic: registry-only serving, no artifacts on disk (demo/CI
+    // mode — deterministic random-init parameters stand in for missing
+    // archives); the multi-batch pipeline demo runs on exactly this
+    let synthetic = flag_bool(flags, "synthetic");
+    let man = if synthetic {
+        // serve only the requested model: the full registry would build
+        // execution state (and, on the pipeline engine, stage-worker
+        // pools) for five models this demo never queries
+        let mut man = Manifest::synthetic();
+        man.models.retain(|m| m.name == model);
+        man
+    } else {
+        Manifest::load(Manifest::default_dir())?
+    };
     let ds = data::dataset(&man.model(&model)?.dataset).unwrap();
+    let server = Server::start_with_manifest(
+        man,
+        ServerConfig {
+            policy,
+            use_pallas: flag_bool(flags, "pallas"),
+            engine,
+            depth: flags.get("depth").and_then(|v| v.parse().ok()),
+            init_random_fallback: synthetic,
+            ..ServerConfig::default()
+        },
+    )?;
 
     let t0 = Instant::now();
     std::thread::scope(|scope| {
@@ -431,6 +457,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     println!("served {requests} requests from {clients} clients in {:.3}s", dt.as_secs_f64());
     println!("throughput: {:.1} req/s", requests as f64 / dt.as_secs_f64());
     println!("{}", server.metrics().summary());
+    // the multi-batch demo payoff: the measured stage-occupancy timeline
+    // of the served model — the serving-side Fig. 4 (cf. `simulate
+    // --timeline`, which predicts the same picture from the cycle model)
+    for (name, stats) in server.metrics().pipelines() {
+        if name == model {
+            print!("{}", circnn::pipeline::timeline::render(&stats, 96));
+        }
+    }
     server.shutdown();
     Ok(())
 }

@@ -66,6 +66,33 @@ pub(crate) enum Op {
     ResidualEnd,
 }
 
+impl Op {
+    /// Weight-bearing (FFT/MAC-heavy) ops — these anchor the stages of the
+    /// serving-side layer pipeline (`crate::pipeline::PipelinePlan`).
+    pub(crate) fn is_weight(&self) -> bool {
+        matches!(
+            self,
+            Op::BcDense { .. } | Op::Dense { .. } | Op::BcConv { .. } | Op::Conv { .. }
+        )
+    }
+
+    /// Stable short name (accounting/stage-label vocabulary).
+    pub(crate) fn kind_name(&self) -> &'static str {
+        match self {
+            Op::BcDense { .. } => "bc_dense",
+            Op::Dense { .. } => "dense",
+            Op::BcConv { .. } => "bc_conv",
+            Op::Conv { .. } => "conv",
+            Op::AvgPool2 => "avg_pool",
+            Op::MaxPool2 => "max_pool",
+            Op::Flatten => "flatten",
+            Op::PriorPool { .. } => "prior_pool",
+            Op::ResidualBegin => "residual_begin",
+            Op::ResidualEnd => "residual_end",
+        }
+    }
+}
+
 /// A model compiled to the native substrate.
 pub struct NativeModel {
     pub name: String,
@@ -251,17 +278,48 @@ impl NativeModel {
         Self { name: model.name.to_string(), ops, quant_bits: None }
     }
 
+    /// Number of ops in the compiled program (the pipeline planner's
+    /// index space: a [`crate::pipeline::PipelinePlan`] covers `0..op_count`).
+    pub fn op_count(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The compiled op program (crate-internal: the pipeline planner walks
+    /// it to find weight anchors and residual regions).
+    pub(crate) fn ops_slice(&self) -> &[Op] {
+        &self.ops
+    }
+
     /// Forward a batch of raw images `(batch, h, w, c)` to logits
     /// `(batch, 10)`.
     pub fn forward(&self, images: &[f32], batch: usize, h: usize, w: usize, c: usize) -> Vec<f32> {
         assert_eq!(images.len(), batch * h * w * c, "image buffer size");
-        let mut x = Tensor { batch, h, w, c, data: images.to_vec() };
+        let x = Tensor { batch, h, w, c, data: images.to_vec() };
         let mut residuals: Vec<Tensor> = Vec::new();
-        for op in &self.ops {
-            x = self.step(op, x, &mut residuals);
-        }
+        let out = self.run_ops(0..self.ops.len(), x, &mut residuals);
         debug_assert!(residuals.is_empty(), "unbalanced residual markers");
-        x.data
+        out.data
+    }
+
+    /// Walk the contiguous op segment `range` over activation `x` through
+    /// the owned-input fast path ([`step`](Self::step)) — the exact code
+    /// path [`forward`](Self::forward) runs, exposed as a segment so the
+    /// serving pipeline (`crate::pipeline`) can split the same walk across
+    /// stage workers.  Per-batch results are therefore bitwise identical
+    /// to `forward` by construction (and property-pinned in
+    /// `pipeline::engine`).  `residuals` must be empty whenever `range`
+    /// starts or ends at residual nesting depth zero — the pipeline
+    /// planner only cuts at such boundaries.
+    pub(crate) fn run_ops(
+        &self,
+        range: std::ops::Range<usize>,
+        mut x: Tensor,
+        residuals: &mut Vec<Tensor>,
+    ) -> Tensor {
+        for op in &self.ops[range] {
+            x = self.step(op, x, residuals);
+        }
+        x
     }
 
     /// Forward keeping every intermediate activation: returns the chain

@@ -1,0 +1,385 @@
+//! The multi-batch-in-flight execution engine: stage workers chained by
+//! bounded channels, in-flight depth enforced by a token channel.
+//!
+//! Lifecycle: [`Pipeline::start`] spawns one worker thread per stage of
+//! the plan; [`Pipeline::submit`] feeds a batch into stage 0 (blocking
+//! while `depth` batches are in flight); the last stage hands each
+//! finished batch to the caller's sink closure and releases its token.
+//! Dropping (or [`Pipeline::shutdown`]) closes the input channel; workers
+//! drain and exit stage by stage, so every submitted batch reaches the
+//! sink before teardown completes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use crate::native::{NativeModel, Tensor};
+use crate::pipeline::plan::PipelinePlan;
+use crate::pipeline::stage::{stage_loop, Job, PipelineStats};
+
+/// A running layer pipeline over one model.  `P` is the per-batch payload
+/// the sink gets back (the server rides the pending request batch here;
+/// tests ride indices).
+pub struct Pipeline<P: Send + 'static> {
+    input: Option<mpsc::SyncSender<Job<P>>>,
+    tokens: Option<mpsc::SyncSender<()>>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<PipelineStats>,
+    depth: usize,
+    next_seq: AtomicU64,
+}
+
+impl<P: Send + 'static> Pipeline<P> {
+    /// Spawn the stage workers.  `depth` bounds the number of batches past
+    /// [`submit`](Self::submit) and not yet through `sink` (default: one
+    /// per stage — the classic full pipeline).  `sink` runs on the last
+    /// stage's worker thread, once per batch, in submission order.
+    pub fn start(
+        model: Arc<NativeModel>,
+        plan: PipelinePlan,
+        depth: Option<usize>,
+        sink: impl FnMut(Tensor, P) + Send + 'static,
+    ) -> Self {
+        let stages = plan.stages;
+        assert!(!stages.is_empty(), "a pipeline needs at least one stage");
+        let depth = depth.unwrap_or(stages.len()).max(1);
+        let stats = Arc::new(PipelineStats::new(
+            stages.iter().map(|s| s.label.clone()).collect(),
+        ));
+        // the token channel IS the in-flight bound: submit deposits one
+        // token per batch (blocking at `depth`), the sink withdraws it
+        let (token_tx, token_rx) = mpsc::sync_channel::<()>(depth);
+        let (input_tx, first_rx) = mpsc::sync_channel::<Job<P>>(depth);
+
+        let mut workers = Vec::with_capacity(stages.len());
+        let last = stages.len() - 1;
+        let mut rx = Some(first_rx);
+        let mut sink = Some(sink);
+        let mut token_rx = Some(token_rx);
+        for (i, spec) in stages.into_iter().enumerate() {
+            let model = model.clone();
+            let stats = stats.clone();
+            let stage_rx = rx.take().expect("one receiver per stage");
+            let builder = std::thread::Builder::new().name(format!("circnn-stage{i}"));
+            let handle = if i < last {
+                let (tx, next_rx) = mpsc::sync_channel::<Job<P>>(depth);
+                rx = Some(next_rx);
+                builder.spawn(move || {
+                    stage_loop(&model, spec.ops, i, stage_rx, &stats, move |job| {
+                        // a send fails only if downstream died; the batch
+                        // is then dropped with its response channels, which
+                        // surfaces as Shutdown at the clients
+                        let _ = tx.send(job);
+                    })
+                })
+            } else {
+                let mut sink = sink.take().expect("exactly one sink");
+                let token_rx = token_rx.take().expect("token receiver on the last stage");
+                builder.spawn(move || {
+                    stage_loop(&model, spec.ops, i, stage_rx, &stats, move |job: Job<P>| {
+                        sink(job.tensor, job.payload);
+                        // this batch's token was deposited before it could
+                        // enter stage 0, so the channel is never empty here
+                        let _ = token_rx.recv();
+                    })
+                })
+            };
+            workers.push(handle.expect("spawn pipeline stage worker"));
+        }
+
+        Self {
+            input: Some(input_tx),
+            tokens: Some(token_tx),
+            workers,
+            stats,
+            depth,
+            next_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Feed one batch into stage 0 and return its sequence number.
+    /// **Blocks** while `depth` batches are already in flight — bounded
+    /// backpressure, never unbounded buffering.  With a single submitter,
+    /// sink completions arrive in submission order.
+    pub fn submit(
+        &self,
+        images: &[f32],
+        batch: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        payload: P,
+    ) -> u64 {
+        assert_eq!(images.len(), batch * h * w * c, "image buffer size");
+        self.submit_tensor(Tensor { batch, h, w, c, data: images.to_vec() }, payload)
+    }
+
+    /// [`submit`](Self::submit) without the copy: the caller hands over an
+    /// already-assembled activation tensor (the server builds the batch
+    /// straight into it).
+    pub fn submit_tensor(&self, tensor: Tensor, payload: P) -> u64 {
+        assert_eq!(
+            tensor.data.len(),
+            tensor.batch * tensor.h * tensor.w * tensor.c,
+            "tensor buffer size"
+        );
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        self.tokens
+            .as_ref()
+            .expect("pipeline running")
+            .send(())
+            .expect("pipeline workers hung up");
+        let job = Job { seq, tensor, payload };
+        self.input
+            .as_ref()
+            .expect("pipeline running")
+            .send(job)
+            .expect("pipeline workers hung up");
+        seq
+    }
+
+    /// Occupancy counters + event log (shared with `Metrics`).
+    pub fn stats(&self) -> &Arc<PipelineStats> {
+        &self.stats
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stats.stage_count()
+    }
+
+    /// The in-flight bound this pipeline enforces.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Batches submitted so far.
+    pub fn submitted(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+
+    /// Graceful teardown: close the input, let every in-flight batch reach
+    /// the sink, join the workers.  `Drop` does the same.
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        self.input.take();
+        self.tokens.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl<P: Send + 'static> Drop for Pipeline<P> {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::models;
+    use crate::native::QUANT_BITS;
+    use crate::util::prop::forall;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{Condvar, Mutex};
+    use std::time::Duration;
+
+    /// Collect sink outputs keyed by seq.
+    fn collecting_sink(
+        out: Arc<Mutex<Vec<(u64, Vec<f32>)>>>,
+    ) -> impl FnMut(Tensor, u64) + Send + 'static {
+        move |t, seq| out.lock().unwrap().push((seq, t.data))
+    }
+
+    #[test]
+    fn prop_pipelined_batches_bitwise_equal_forward() {
+        // the acceptance pin: across stage counts, in-flight depths, float
+        // and 12-bit arithmetic, ragged batch streams — every batch out of
+        // the pipeline equals NativeModel::forward bit for bit
+        forall(
+            "pipeline == forward (bitwise)",
+            |r| {
+                let name = ["mnist_mlp_1", "mnist_mlp_2", "mnist_lenet"]
+                    [r.below(3) as usize];
+                let max_stages = 1 + r.below(4) as usize;
+                let depth = 1 + r.below(4) as usize;
+                let quant = r.below(2) == 0;
+                let batches: Vec<usize> =
+                    (0..1 + r.below(3)).map(|_| 1 + r.below(3) as usize).collect();
+                (name, max_stages, depth, quant, batches)
+            },
+            |&(name, max_stages, depth, quant, ref batches)| {
+                let model = models::by_name(name).unwrap();
+                let mut native = NativeModel::init_random(&model, 11);
+                native.quant_bits = if quant { Some(QUANT_BITS) } else { None };
+                let native = Arc::new(native);
+                let (h, w, c) = model.input;
+                let ds = data::dataset(model.dataset).unwrap();
+
+                let plan = PipelinePlan::for_model(&native, max_stages);
+                let got = Arc::new(Mutex::new(Vec::new()));
+                let pipe = Pipeline::start(
+                    native.clone(),
+                    plan,
+                    Some(depth),
+                    collecting_sink(got.clone()),
+                );
+                let mut want = Vec::new();
+                for (i, &b) in batches.iter().enumerate() {
+                    let (xs, _) = data::batch(&ds, (i * 8) as u64, b, false);
+                    let seq = pipe.submit(&xs, b, h, w, c, i as u64);
+                    assert_eq!(seq, i as u64);
+                    want.push(native.forward(&xs, b, h, w, c));
+                }
+                pipe.shutdown(); // drains every in-flight batch to the sink
+                let got = got.lock().unwrap();
+                if got.len() != batches.len() {
+                    return Err(format!(
+                        "{} batches in, {} out of the sink",
+                        batches.len(),
+                        got.len()
+                    ));
+                }
+                for (i, (seq, data)) in got.iter().enumerate() {
+                    if *seq != i as u64 {
+                        return Err(format!("completion order broke FIFO at {i}: seq {seq}"));
+                    }
+                    if data != &want[i] {
+                        return Err(format!("batch {i} diverged from forward (bitwise)"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn depth_one_single_stage_degenerates_to_serial() {
+        // the CIRCNN_THREADS=1 shape: one stage, one batch in flight
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let native = Arc::new(NativeModel::init_random(&model, 3));
+        let (h, w, c) = model.input;
+        let ds = data::dataset(model.dataset).unwrap();
+        let plan = PipelinePlan::for_model(&native, 1);
+        assert_eq!(plan.stage_count(), 1);
+        let got = Arc::new(Mutex::new(Vec::new()));
+        let pipe = Pipeline::start(native.clone(), plan, Some(1), collecting_sink(got.clone()));
+        let (xs, _) = data::batch(&ds, 0, 4, false);
+        pipe.submit(&xs, 4, h, w, c, 0);
+        pipe.shutdown();
+        let got = got.lock().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1, native.forward(&xs, 4, h, w, c));
+    }
+
+    #[test]
+    fn residual_model_streams_bitwise_through_the_pipeline() {
+        // cifar_wrn: the residual pairs ride inside single stages (the
+        // planner never cuts them) and the multi-stage walk must still be
+        // bitwise equal to forward
+        let model = models::by_name("cifar_wrn").unwrap();
+        let native = Arc::new(NativeModel::init_random(&model, 21));
+        let (h, w, c) = model.input;
+        let ds = data::dataset(model.dataset).unwrap();
+        let plan = PipelinePlan::for_model(&native, usize::MAX);
+        assert!(plan.stage_count() >= 4, "wrn should split into several stages");
+        let got = Arc::new(Mutex::new(Vec::new()));
+        let pipe = Pipeline::start(native.clone(), plan, None, collecting_sink(got.clone()));
+        let (xs, _) = data::batch(&ds, 0, 2, false);
+        pipe.submit(&xs, 2, h, w, c, 0);
+        pipe.shutdown();
+        let got = got.lock().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1, native.forward(&xs, 2, h, w, c));
+    }
+
+    #[test]
+    fn bounded_in_flight_blocks_stage_zero() {
+        // with the sink gated shut, a depth-2 pipeline must admit at most
+        // 2 batches; the 3rd submit blocks on the token channel instead of
+        // buffering — then opening the gate drains everything
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let native = Arc::new(NativeModel::init_random(&model, 5));
+        let (h, w, c) = model.input;
+        let ds = data::dataset(model.dataset).unwrap();
+        let (xs, _) = data::batch(&ds, 0, 1, false);
+
+        const DEPTH: usize = 2;
+        const TOTAL: usize = 5;
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let done = Arc::new(AtomicUsize::new(0));
+        let (sink_gate, sink_done) = (gate.clone(), done.clone());
+        let plan = PipelinePlan::for_model(&native, 3);
+        let pipe = Pipeline::start(
+            native.clone(),
+            plan,
+            Some(DEPTH),
+            move |_t: Tensor, _p: usize| {
+                let (lock, cv) = &*sink_gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                drop(open);
+                sink_done.fetch_add(1, Ordering::SeqCst);
+            },
+        );
+
+        let submitted = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|scope| {
+            let pipe = &pipe;
+            let counter = submitted.clone();
+            scope.spawn(move || {
+                for i in 0..TOTAL {
+                    pipe.submit(&xs, 1, h, w, c, i);
+                    counter.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            // give the submitter ample time to overrun the bound if it could
+            std::thread::sleep(Duration::from_millis(150));
+            let in_flight = submitted.load(Ordering::SeqCst);
+            assert!(
+                in_flight <= DEPTH,
+                "{in_flight} submits completed with the sink gated: \
+                 depth {DEPTH} bound not enforced"
+            );
+            assert_eq!(done.load(Ordering::SeqCst), 0);
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        });
+        pipe.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), TOTAL, "gated batches lost");
+    }
+
+    #[test]
+    fn stats_account_every_batch_once() {
+        let model = models::by_name("mnist_mlp_2").unwrap();
+        let native = Arc::new(NativeModel::init_random(&model, 9));
+        let (h, w, c) = model.input;
+        let ds = data::dataset(model.dataset).unwrap();
+        let plan = PipelinePlan::for_model(&native, usize::MAX);
+        let stages = plan.stage_count();
+        let pipe = Pipeline::start(native, plan, None, |_t: Tensor, _p: ()| {});
+        assert_eq!(pipe.depth(), stages, "default depth = one batch per stage");
+        let (xs, _) = data::batch(&ds, 0, 3, false);
+        for _ in 0..4 {
+            pipe.submit(&xs, 3, h, w, c, ());
+        }
+        assert_eq!(pipe.submitted(), 4);
+        let stats = pipe.stats().clone();
+        pipe.shutdown();
+        for s in &stats.stages {
+            assert_eq!(s.batches.load(Ordering::Relaxed), 4, "{}", s.label);
+            assert_eq!(s.items.load(Ordering::Relaxed), 12, "{}", s.label);
+        }
+        let events = stats.events.lock().unwrap();
+        assert_eq!(events.len(), 4 * stages);
+        assert!(events.iter().all(|e| e.end_us >= e.start_us));
+    }
+}

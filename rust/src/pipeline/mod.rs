@@ -1,0 +1,58 @@
+//! Deep-pipelined serving engine: the software twin of the paper's Fig.-4
+//! pipeline, executing a [`NativeModel`](crate::native::NativeModel) as a
+//! chain of per-layer **stage workers** with multiple batches in flight.
+//!
+//! The cycle simulator (`crate::fpga::controller`) *costs* the paper's
+//! deeply pipelined datapath; until this subsystem the serving stack never
+//! *ran* one — `coordinator::server`'s executor thread walked every layer
+//! of a batch end to end while the cores of every other layer idled.  Here
+//! the layer program is split into stages ([`plan::PipelinePlan`]), each
+//! stage owns a worker thread with its own resident weight spectra and
+//! scratch, and bounded channels stream batches down the chain: batch N
+//! occupies layer ℓ+1 while batch N+1 occupies layer ℓ, exactly the
+//! inter-layer pipelining CirCNN (Ding et al., MICRO'17) names as the
+//! throughput lever for block-circulant datapaths.
+//!
+//! ```text
+//!   submit ─► [stage 0] ─► [stage 1] ─► … ─► [stage S-1] ─► sink
+//!   (≤ depth batches in flight, token-bounded: stage 0 *blocks* rather
+//!    than buffering unboundedly — the serving-side backpressure story)
+//! ```
+//!
+//! Guarantees:
+//!
+//! * **Bitwise identity.** Every stage runs the same owned-step walk
+//!   ([`NativeModel::run_ops`](crate::native::NativeModel)) `forward` runs,
+//!   so per-batch results equal `NativeModel::forward` bit for bit — across
+//!   stage counts, in-flight depths and `CIRCNN_THREADS` settings
+//!   (property-pinned in [`engine`]).  Within a stage, work still shards
+//!   over [`crate::circulant::sched`].
+//! * **FIFO ordering.** One submitter sees completions in submission order
+//!   (each hop is a single-producer/single-consumer FIFO).
+//! * **Bounded in-flight.** At most `depth` batches are past `submit` and
+//!   not yet through the sink (default: one per stage).
+//!
+//! Per-stage occupancy (busy/idle fractions, per-batch events) is recorded
+//! in [`stage::PipelineStats`] and rendered by [`timeline::render`] — the
+//! serving-side analogue of `fpga::controller::render_timeline`, surfaced
+//! through `coordinator::metrics`.
+//!
+//! Thread-budget caveat: the stage count is capped at
+//! [`sched::max_threads`](crate::circulant::sched::max_threads), but each
+//! stage's inner matmul/conv still budgets its *own* shards against the
+//! full core count — concurrently busy stages can therefore oversubscribe
+//! the machine (≈ stages × shards runnable threads) on workloads big
+//! enough to shard inside every stage.  The small-problem shard cap keeps
+//! the common serving regime (modest batches) one shard per stage; a
+//! global thread budget shared between stage- and shard-level parallelism
+//! is the named follow-up in ROADMAP.  `CIRCNN_THREADS=1` bounds both
+//! levels today.
+
+pub mod engine;
+pub mod plan;
+pub mod stage;
+pub mod timeline;
+
+pub use engine::Pipeline;
+pub use plan::{PipelinePlan, StageSpec};
+pub use stage::{PipelineStats, StageEvent, StageStat};

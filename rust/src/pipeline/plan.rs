@@ -1,0 +1,190 @@
+//! Stage planning: split a compiled op program into contiguous pipeline
+//! stages.
+//!
+//! Two rules shape a plan:
+//!
+//! * a **residual pair stays within one stage** — the saved skip activation
+//!   lives on a stage-local stack, so a cut inside `ResidualBegin ..
+//!   ResidualEnd` would strand it on the wrong worker.  Cuts happen only at
+//!   op boundaries where the residual nesting depth is zero.
+//! * a **weight op anchors a stage** — the FFT/MAC-heavy layers are where
+//!   the cycles go (and where the FPGA keeps per-stage resident weight
+//!   spectra), so each gets its own worker; cheap ops (pools, reshapes,
+//!   prior-pool) ride along with the nearest anchor.
+//!
+//! The stage count is then capped (default: [`sched::max_threads`], so
+//! `CIRCNN_THREADS=1` degrades to one serial stage) by merging adjacent
+//! stages evenly.
+
+use std::ops::Range;
+
+use crate::circulant::sched;
+use crate::native::{NativeModel, Op};
+
+/// One pipeline stage: a contiguous op segment of the model program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageSpec {
+    /// op indices this stage executes (`model.run_ops(ops.clone(), ..)`)
+    pub ops: Range<usize>,
+    /// display label, e.g. `"L02 bc_dense"` (first weight op of the stage)
+    pub label: String,
+}
+
+/// A complete stage partition of one model program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelinePlan {
+    pub stages: Vec<StageSpec>,
+}
+
+impl PipelinePlan {
+    /// Plan `model` into at most `max_stages` stages (≥ 1; callers usually
+    /// pass [`sched::max_threads`]).  Every op is covered exactly once and
+    /// segment boundaries sit at residual depth zero.
+    pub fn for_model(model: &NativeModel, max_stages: usize) -> Self {
+        let ops = model.ops_slice();
+        if ops.is_empty() {
+            return Self { stages: vec![StageSpec { ops: 0..0, label: "L00 empty".into() }] };
+        }
+
+        // 1. indivisible units: maximal runs that begin and end at residual
+        //    nesting depth zero (each depth-0 op is its own unit; a whole
+        //    residual region is one unit)
+        let mut units: Vec<Range<usize>> = Vec::new();
+        let mut depth = 0usize;
+        let mut start = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            match op {
+                Op::ResidualBegin => depth += 1,
+                Op::ResidualEnd => depth = depth.saturating_sub(1),
+                _ => {}
+            }
+            if depth == 0 {
+                units.push(start..i + 1);
+                start = i + 1;
+            }
+        }
+        debug_assert_eq!(start, ops.len(), "unbalanced residual markers");
+
+        // 2. greedy anchoring: a unit containing a weight op opens a new
+        //    stage once the current stage already has one; cheap units
+        //    merge into the open stage (a cheap prefix rides with the
+        //    first anchor)
+        let has_weight = |r: &Range<usize>| ops[r.clone()].iter().any(|o| o.is_weight());
+        let mut anchored: Vec<Range<usize>> = Vec::new();
+        let mut cur: Option<(Range<usize>, bool)> = None;
+        for unit in units {
+            let w = has_weight(&unit);
+            match cur.take() {
+                None => cur = Some((unit, w)),
+                Some((range, cur_w)) if cur_w && w => {
+                    anchored.push(range);
+                    cur = Some((unit, true));
+                }
+                Some((range, cur_w)) => cur = Some((range.start..unit.end, cur_w || w)),
+            }
+        }
+        if let Some((range, _)) = cur {
+            anchored.push(range);
+        }
+
+        // 3. cap at `max_stages` by even contiguous grouping
+        let cap = max_stages.max(1).min(anchored.len());
+        let mut stages = Vec::with_capacity(cap);
+        for g in 0..cap {
+            let lo = g * anchored.len() / cap;
+            let hi = (g + 1) * anchored.len() / cap;
+            let range = anchored[lo].start..anchored[hi - 1].end;
+            let anchor = ops[range.clone()]
+                .iter()
+                .position(|o| o.is_weight())
+                .map_or(range.start, |off| range.start + off);
+            let label = format!("L{anchor:02} {}", ops[anchor].kind_name());
+            stages.push(StageSpec { ops: range, label });
+        }
+        Self { stages }
+    }
+
+    /// Default stage cap: one worker per available thread
+    /// ([`sched::max_threads`] — honors `CIRCNN_THREADS`).
+    pub fn auto(model: &NativeModel) -> Self {
+        Self::for_model(model, sched::max_threads())
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::native::NativeModel;
+
+    fn plan_of(name: &str, max_stages: usize) -> (NativeModel, PipelinePlan) {
+        let model = models::by_name(name).unwrap();
+        let native = NativeModel::init_random(&model, 1);
+        let plan = PipelinePlan::for_model(&native, max_stages);
+        (native, plan)
+    }
+
+    fn assert_covers(native: &NativeModel, plan: &PipelinePlan) {
+        let mut next = 0;
+        for s in &plan.stages {
+            assert_eq!(s.ops.start, next, "stages must tile the program");
+            assert!(s.ops.end > s.ops.start, "empty stage");
+            next = s.ops.end;
+        }
+        assert_eq!(next, native.op_count(), "stages must cover every op");
+    }
+
+    #[test]
+    fn every_registry_model_plans_at_every_cap() {
+        for m in models::registry() {
+            let native = NativeModel::init_random(&m, 2);
+            for cap in [1, 2, 3, 8, usize::MAX] {
+                let plan = PipelinePlan::for_model(&native, cap);
+                assert_covers(&native, &plan);
+                assert!(plan.stage_count() <= cap.max(1), "{}: cap violated", m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn weight_ops_anchor_stages_in_the_mlp() {
+        // mnist_mlp_2: PriorPool, Flatten, BcDense, BcDense, Dense — the
+        // cheap prefix rides with the first anchor, three stages total
+        let (native, plan) = plan_of("mnist_mlp_2", usize::MAX);
+        assert_covers(&native, &plan);
+        assert_eq!(plan.stage_count(), 3);
+        assert!(plan.stages[0].label.contains("bc_dense"), "{:?}", plan.stages);
+        assert!(plan.stages[2].label.contains("dense"), "{:?}", plan.stages);
+    }
+
+    #[test]
+    fn residual_pairs_are_never_cut() {
+        // cifar_wrn holds two ResidualBegin/End pairs, two BcConvs inside
+        // each — every stage boundary must sit at residual depth zero
+        let (native, plan) = plan_of("cifar_wrn", usize::MAX);
+        assert_covers(&native, &plan);
+        for s in &plan.stages {
+            let mut depth = 0i64;
+            for op in &native.ops_slice()[s.ops.clone()] {
+                match op {
+                    Op::ResidualBegin => depth += 1,
+                    Op::ResidualEnd => depth -= 1,
+                    _ => {}
+                }
+                assert!(depth >= 0, "residual_end before its begin in a stage");
+            }
+            assert_eq!(depth, 0, "stage {} cuts a residual pair", s.label);
+        }
+    }
+
+    #[test]
+    fn cap_one_degenerates_to_a_single_serial_stage() {
+        let (native, plan) = plan_of("svhn_cnn", 1);
+        assert_eq!(plan.stage_count(), 1);
+        assert_eq!(plan.stages[0].ops, 0..native.op_count());
+    }
+}

@@ -1,0 +1,256 @@
+//! Stage workers and their occupancy accounting.
+//!
+//! Each stage worker alternates between two states: **idle** (blocked on
+//! its input channel — the pipeline-fill bubbles of the paper's Fig. 4)
+//! and **busy** (running its op segment on one batch).  Both are measured
+//! per stage with monotonic clocks and accumulated in [`StageStat`], so
+//! `busy_fraction()` is the serving-side twin of the simulator's
+//! `Trace::bubble_fraction` — computed from wall time actually spent, not
+//! from a cycle model.  The first [`EVENT_CAP`] per-batch intervals are
+//! also kept as [`StageEvent`]s for the timeline renderer
+//! ([`super::timeline`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::native::{NativeModel, Tensor};
+
+/// Bound on the retained per-batch event log (the counters keep
+/// accumulating past it; only the timeline detail stops growing).
+pub const EVENT_CAP: usize = 4096;
+
+/// One batch flowing through the pipeline: the activation tensor plus an
+/// opaque payload the sink gets back (the server rides the pending request
+/// batch here).
+#[derive(Debug)]
+pub struct Job<P> {
+    /// submission sequence number (FIFO through every stage)
+    pub seq: u64,
+    pub tensor: Tensor,
+    pub payload: P,
+}
+
+/// Lock-free occupancy counters for one stage.
+#[derive(Debug)]
+pub struct StageStat {
+    /// plan label, e.g. `"L02 bc_dense"`
+    pub label: String,
+    /// batches executed
+    pub batches: AtomicU64,
+    /// images executed (occupied batch slots)
+    pub items: AtomicU64,
+    /// time spent executing the op segment
+    pub busy_us: AtomicU64,
+    /// closed idle intervals: time spent blocked on the input channel or
+    /// handing a batch downstream (pipeline-fill / backpressure bubbles)
+    pub idle_us: AtomicU64,
+    /// µs since pipeline start when the current idle interval opened;
+    /// [`IDLE_NONE`] while the stage is busy.  Readers fold the open
+    /// interval in ([`PipelineStats::busy_fraction`]), so occupancy decays
+    /// while a stage sits quiescent instead of freezing at its last value.
+    idle_since_us: AtomicU64,
+}
+
+/// Sentinel for "no idle interval open" (stage busy or not yet started).
+const IDLE_NONE: u64 = u64::MAX;
+
+impl StageStat {
+    fn new(label: String) -> Self {
+        Self {
+            label,
+            batches: AtomicU64::new(0),
+            items: AtomicU64::new(0),
+            busy_us: AtomicU64::new(0),
+            idle_us: AtomicU64::new(0),
+            idle_since_us: AtomicU64::new(IDLE_NONE),
+        }
+    }
+}
+
+/// One recorded busy interval: batch `seq` occupied stage `stage` from
+/// `start_us` to `end_us` (µs since the pipeline started).
+#[derive(Debug, Clone, Copy)]
+pub struct StageEvent {
+    pub stage: usize,
+    pub seq: u64,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+/// Shared occupancy state of one running pipeline (cheap to clone via
+/// `Arc`; the coordinator's `Metrics` holds one per pipelined model).
+#[derive(Debug)]
+pub struct PipelineStats {
+    started: Instant,
+    pub stages: Vec<StageStat>,
+    /// first [`EVENT_CAP`] per-batch busy intervals, in completion order
+    pub events: Mutex<Vec<StageEvent>>,
+}
+
+impl PipelineStats {
+    pub fn new(labels: Vec<String>) -> Self {
+        Self {
+            started: Instant::now(),
+            stages: labels.into_iter().map(StageStat::new).collect(),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn stage_count(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Stage `stage` starts waiting (input channel or downstream hand-off)
+    /// at `now` — opens an idle interval.
+    pub(crate) fn mark_idle(&self, stage: usize, now: Instant) {
+        let rel = now.duration_since(self.started).as_micros() as u64;
+        self.stages[stage].idle_since_us.store(rel, Ordering::Relaxed);
+    }
+
+    /// Stage `stage` got a batch at `now` — closes the open idle interval
+    /// into `idle_us`.
+    pub(crate) fn mark_busy(&self, stage: usize, now: Instant) {
+        let s = &self.stages[stage];
+        let since = s.idle_since_us.swap(IDLE_NONE, Ordering::Relaxed);
+        if since != IDLE_NONE {
+            let rel = now.duration_since(self.started).as_micros() as u64;
+            s.idle_us.fetch_add(rel.saturating_sub(since), Ordering::Relaxed);
+        }
+    }
+
+    /// busy / (busy + idle) for one stage, folding in the currently-open
+    /// idle interval — a quiescent stage's occupancy decays toward zero
+    /// instead of freezing at its last recorded value.  0.0 before the
+    /// stage has seen any time.
+    pub fn busy_fraction(&self, stage: usize) -> f64 {
+        let s = &self.stages[stage];
+        let busy = s.busy_us.load(Ordering::Relaxed) as f64;
+        let mut idle = s.idle_us.load(Ordering::Relaxed) as f64;
+        let since = s.idle_since_us.load(Ordering::Relaxed);
+        if since != IDLE_NONE {
+            let now = self.started.elapsed().as_micros() as u64;
+            idle += now.saturating_sub(since) as f64;
+        }
+        if busy + idle == 0.0 {
+            return 0.0;
+        }
+        busy / (busy + idle)
+    }
+
+    /// Record one executed batch on `stage`.
+    pub(crate) fn record(&self, stage: usize, seq: u64, t0: Instant, t1: Instant, items: usize) {
+        let s = &self.stages[stage];
+        s.batches.fetch_add(1, Ordering::Relaxed);
+        s.items.fetch_add(items as u64, Ordering::Relaxed);
+        s.busy_us
+            .fetch_add(t1.duration_since(t0).as_micros() as u64, Ordering::Relaxed);
+        let mut events = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        if events.len() < EVENT_CAP {
+            events.push(StageEvent {
+                stage,
+                seq,
+                start_us: t0.duration_since(self.started).as_micros() as u64,
+                end_us: t1.duration_since(self.started).as_micros() as u64,
+            });
+        }
+    }
+
+    /// Compact per-stage busy fractions, e.g. `"s0=83% s1=71% s2=64%"` —
+    /// what `Metrics::summary()` appends for a pipelined model.
+    pub fn occupancy_summary(&self) -> String {
+        (0..self.stages.len())
+            .map(|i| format!("s{i}={:.0}%", 100.0 * self.busy_fraction(i)))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+/// The worker body shared by every stage: receive a batch, charge the wait
+/// to idle, run the stage's op segment through the same owned-step walk
+/// `forward` uses, charge the run to busy, hand the batch to `deliver`
+/// (the next stage's channel, or the sink for the last stage).  Returns
+/// when the input channel closes and is drained — shutdown cascades stage
+/// by stage.
+pub(crate) fn stage_loop<P>(
+    model: &NativeModel,
+    ops: std::ops::Range<usize>,
+    idx: usize,
+    rx: Receiver<Job<P>>,
+    stats: &PipelineStats,
+    mut deliver: impl FnMut(Job<P>),
+) {
+    stats.mark_idle(idx, Instant::now());
+    while let Ok(mut job) = rx.recv() {
+        let t0 = Instant::now();
+        stats.mark_busy(idx, t0);
+        let mut residuals: Vec<Tensor> = Vec::new();
+        let items = job.tensor.batch;
+        job.tensor = model.run_ops(ops.clone(), job.tensor, &mut residuals);
+        debug_assert!(residuals.is_empty(), "stage cut inside a residual region");
+        let t1 = Instant::now();
+        stats.record(idx, job.seq, t0, t1, items);
+        // idle reopens at t1, before deliver: time blocked handing the
+        // batch downstream (full channel / slow sink — backpressure stall)
+        // is a bubble, not work, so it lands in the idle interval or the
+        // busy fraction would overstate occupancy exactly when the
+        // pipeline is unbalanced
+        stats.mark_idle(idx, t1);
+        deliver(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn busy_fraction_is_zero_then_tracks_counters() {
+        let stats = PipelineStats::new(vec!["L00 a".into(), "L01 b".into()]);
+        assert_eq!(stats.stage_count(), 2);
+        assert_eq!(stats.busy_fraction(0), 0.0);
+        let t0 = stats.started;
+        stats.record(0, 0, t0, t0 + Duration::from_micros(300), 4);
+        stats.stages[0].idle_us.fetch_add(100, Ordering::Relaxed);
+        let f = stats.busy_fraction(0);
+        assert!((f - 0.75).abs() < 1e-9, "busy fraction {f}");
+        assert_eq!(stats.stages[0].items.load(Ordering::Relaxed), 4);
+        let s = stats.occupancy_summary();
+        assert!(s.contains("s0=75%") && s.contains("s1=0%"), "{s}");
+    }
+
+    #[test]
+    fn open_idle_interval_decays_occupancy() {
+        // a stage that went quiet must not freeze at its last busy
+        // fraction: the open idle interval counts from the reader side
+        let stats = PipelineStats::new(vec!["L00 a".into()]);
+        let t0 = stats.started;
+        stats.record(0, 0, t0, t0 + Duration::from_micros(200), 1);
+        assert_eq!(stats.busy_fraction(0), 1.0, "no idle recorded yet");
+        stats.mark_idle(0, t0 + Duration::from_micros(200));
+        std::thread::sleep(Duration::from_millis(10));
+        let f = stats.busy_fraction(0);
+        assert!(f < 0.5, "stale busy fraction {f} ignores the open idle interval");
+        // closing the interval banks it into idle_us
+        stats.mark_busy(0, Instant::now());
+        assert!(stats.stages[0].idle_us.load(Ordering::Relaxed) >= 5_000);
+        stats.mark_busy(0, Instant::now()); // no open interval: no-op
+    }
+
+    #[test]
+    fn event_log_is_bounded() {
+        let stats = PipelineStats::new(vec!["L00 a".into()]);
+        let t = stats.started;
+        for seq in 0..(EVENT_CAP + 10) as u64 {
+            stats.record(0, seq, t, t + Duration::from_micros(1), 1);
+        }
+        assert_eq!(stats.events.lock().unwrap().len(), EVENT_CAP);
+        // counters keep accumulating past the event cap
+        assert_eq!(
+            stats.stages[0].batches.load(Ordering::Relaxed),
+            (EVENT_CAP + 10) as u64
+        );
+    }
+}

@@ -1,0 +1,103 @@
+//! ASCII occupancy timeline for a running (or finished) pipeline — the
+//! serving-side analogue of [`crate::fpga::controller::render_timeline`]:
+//! where the simulator *predicts* pipeline fill from the cycle model, this
+//! renders the busy intervals the stage workers actually measured, so the
+//! multi-batch-in-flight story becomes visible on real hardware.
+//!
+//! One row per stage; each busy interval is painted with the batch's
+//! sequence digit (`seq % 10`), idle time stays `.` — a healthy pipeline
+//! shows different digits stacked in the same column (batch N in stage 1
+//! while batch N+1 occupies stage 0).
+
+use crate::pipeline::stage::PipelineStats;
+
+/// Render the recorded events of `stats` into a `width`-column timeline
+/// plus a per-stage occupancy legend.
+pub fn render(stats: &PipelineStats, width: usize) -> String {
+    let width = width.max(8);
+    let events = stats.events.lock().unwrap_or_else(|e| e.into_inner());
+    let span = events.iter().map(|e| e.end_us).max().unwrap_or(0).max(1);
+    let scale = span as f64 / width as f64;
+    let mut rows = vec![vec!['.'; width]; stats.stage_count()];
+    for e in events.iter() {
+        // a < width always, so a+1 <= width keeps the clamp well-ordered
+        let a = ((e.start_us as f64 / scale) as usize).min(width - 1);
+        let b = ((e.end_us as f64 / scale).ceil() as usize).clamp(a + 1, width);
+        let ch = char::from(b'0' + (e.seq % 10) as u8);
+        for slot in rows[e.stage].iter_mut().take(b).skip(a) {
+            *slot = ch;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "pipeline: {} stages, {} batch-events over {span}us\n",
+        stats.stage_count(),
+        events.len(),
+    ));
+    drop(events);
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "S{i} |{}| {:>3.0}% busy  {}\n",
+            row.iter().collect::<String>(),
+            100.0 * stats.busy_fraction(i),
+            stats.stages[i].label,
+        ));
+    }
+    out.push_str("     digits = batch seq % 10   . = idle (pipeline fill)\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn stats_with(events: &[(usize, u64, u64, u64)]) -> PipelineStats {
+        let labels = (0..1 + events.iter().map(|e| e.0).max().unwrap_or(0))
+            .map(|i| format!("L{i:02} test"))
+            .collect();
+        let stats = PipelineStats::new(labels);
+        let t0 = Instant::now();
+        for &(stage, seq, a, b) in events {
+            stats.record(
+                stage,
+                seq,
+                t0 + Duration::from_micros(a),
+                t0 + Duration::from_micros(b),
+                1,
+            );
+        }
+        stats
+    }
+
+    #[test]
+    fn renders_overlapping_batches_on_distinct_rows() {
+        // batch 0 in stage 1 while batch 1 occupies stage 0 — the render
+        // must show both digits, one per row
+        let stats = stats_with(&[(0, 0, 0, 50), (1, 0, 50, 100), (0, 1, 50, 100)]);
+        let text = render(&stats, 40);
+        assert!(text.contains("S0 |"), "{text}");
+        assert!(text.contains("S1 |"), "{text}");
+        let s0 = text.lines().find(|l| l.starts_with("S0")).unwrap();
+        let s1 = text.lines().find(|l| l.starts_with("S1")).unwrap();
+        assert!(s0.contains('0') && s0.contains('1'), "{s0}");
+        assert!(s1.contains('0'), "{s1}");
+        assert!(text.contains("% busy"), "{text}");
+    }
+
+    #[test]
+    fn empty_stats_render_without_panicking() {
+        let stats = PipelineStats::new(vec!["L00 a".into()]);
+        let text = render(&stats, 24);
+        assert!(text.contains("0 batch-events"), "{text}");
+        assert!(text.contains("S0 |"), "{text}");
+    }
+
+    #[test]
+    fn width_is_clamped_and_events_stay_in_bounds() {
+        let stats = stats_with(&[(0, 3, 0, 1_000_000), (0, 4, 1_000_000, 1_000_001)]);
+        let text = render(&stats, 1); // clamps to the 8-column floor
+        let s0 = text.lines().find(|l| l.starts_with("S0")).unwrap();
+        assert_eq!(s0.split('|').nth(1).unwrap().chars().count(), 8);
+    }
+}

@@ -196,6 +196,44 @@ impl Manifest {
             .map(PathBuf::from)
             .unwrap_or_else(|_| PathBuf::from("artifacts"))
     }
+
+    /// An in-memory manifest covering the native registry — no files on
+    /// disk, no compiled artifacts.  Serving from it takes the native (or
+    /// pipelined-native) backend with either a params archive under
+    /// `<default_dir>/params/` or the server's `init_random_fallback`;
+    /// the PJRT path has nothing to execute.  This is the demo/CI serving
+    /// mode (`circnn serve --synthetic`) and the test hook for
+    /// `Server::start_with_manifest`.
+    pub fn synthetic() -> Self {
+        let models = crate::models::registry()
+            .iter()
+            .map(|m| ModelEntry {
+                name: m.name.to_string(),
+                dataset: m.dataset.to_string(),
+                input_shape: vec![m.input.0, m.input.1, m.input.2],
+                serve_batch: m.serve_batch,
+                accuracy: Accuracy {
+                    circulant_12bit: 0.0,
+                    circulant_f32: 0.0,
+                    dense_f32: 0.0,
+                },
+                paper_accuracy: m.paper_accuracy,
+                paper_kfps: m.paper_kfps,
+                paper_kfps_per_w: m.paper_kfps_per_w,
+                storage_reduction: 0.0,
+                equivalent_ops_per_image: 0,
+                artifacts: Vec::new(),
+                artifacts_pallas: Vec::new(),
+                training: None,
+            })
+            .collect();
+        Manifest {
+            dir: Self::default_dir(),
+            quant_bits: 12,
+            models,
+            dataset_checksums: HashMap::new(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -238,6 +276,17 @@ mod tests {
         assert!(m.training.is_none());
         assert!((m.accuracy.dense_f32 - 0.95).abs() < 1e-12);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn synthetic_manifest_covers_the_registry() {
+        let man = Manifest::synthetic();
+        assert_eq!(man.models.len(), crate::models::registry().len());
+        let m = man.model("mnist_mlp_1").unwrap();
+        assert_eq!(m.input_shape, vec![28, 28, 1]);
+        assert_eq!(m.input_shape.iter().product::<usize>(), 784);
+        assert!(m.artifacts.is_empty(), "synthetic entries have no artifacts");
+        assert_eq!(man.quant_bits, 12);
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Serving-level pipeline equivalence: the full coordinator path (router →
+//! dynamic batcher → engine) driven over the pipelined backend must produce
+//! **bitwise identical** responses to the serial native executor for
+//! identical request streams — including partial final batches and
+//! `max_delay`-released batches.
+//!
+//! These tests need no artifacts: they serve [`Manifest::synthetic`]
+//! registry entries with the server's deterministic random-init fallback,
+//! so both servers hold bit-identical weights.  Batch *composition* must
+//! match between the two servers for bitwise equality (the 12-bit
+//! activation quantization scales per batch tensor), so streams are
+//! submitted from one thread and sized so every release is size-triggered
+//! — except where a test deliberately exercises the deadline path.
+
+use std::time::Duration;
+
+use circnn::coordinator::{BatchPolicy, EngineKind, Server, ServerConfig};
+use circnn::data;
+use circnn::runtime::Manifest;
+use circnn::util::prop::forall;
+
+const MODEL: &str = "mnist_mlp_1";
+
+/// A synthetic manifest trimmed to one model, so each server builds (and,
+/// on the pipeline engine, spawns stage workers for) only what the test
+/// uses.
+fn manifest_for(model: &str) -> Manifest {
+    let mut man = Manifest::synthetic();
+    man.models.retain(|m| m.name == model);
+    assert_eq!(man.models.len(), 1, "{model} missing from the registry");
+    man
+}
+
+fn start(engine: EngineKind, policy: BatchPolicy, depth: Option<usize>) -> Server {
+    Server::start_with_manifest(
+        manifest_for(MODEL),
+        ServerConfig {
+            policy,
+            engine,
+            depth,
+            init_random_fallback: true,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start")
+}
+
+/// Submit `stream` (sample indices) from one thread, collect responses in
+/// order: (logits, label, batch_occupancy) per request.
+fn serve_stream(server: &Server, stream: &[u64]) -> Vec<(Vec<f32>, u32, usize)> {
+    let pending: Vec<_> = stream
+        .iter()
+        .map(|&i| {
+            let (img, _) = data::sample(&data::MNIST_S, i);
+            server.infer_async(MODEL, &img).expect("admitted")
+        })
+        .collect();
+    pending
+        .into_iter()
+        .map(|rx| {
+            let r = rx.recv().expect("channel alive").expect("response");
+            (r.logits, r.label, r.batch_occupancy)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_pipelined_serving_bitwise_equals_serial_executor() {
+    // forall over policy/depth/stream shapes (full size-triggered batches:
+    // composition is then deterministic, so bitwise equality must hold
+    // request by request)
+    forall(
+        "pipeline server == serial server (bitwise)",
+        |r| {
+            let max_batch = 1 + r.below(6) as usize;
+            let depth = (r.below(4) != 0).then(|| 1 + r.below(3) as usize);
+            let waves = 1 + r.below(3) as usize;
+            (max_batch, depth, waves)
+        },
+        |&(max_batch, depth, waves)| {
+            let policy = BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_secs(10), // size-triggered only
+                max_queue: 4096,
+            };
+            let stream: Vec<u64> = (0..(max_batch * waves) as u64).collect();
+            let serial = start(EngineKind::Native, policy, None);
+            let want = serve_stream(&serial, &stream);
+            serial.shutdown();
+            let pipelined = start(EngineKind::Pipeline, policy, depth);
+            let got = serve_stream(&pipelined, &stream);
+            pipelined.shutdown();
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                if w.2 != g.2 {
+                    return Err(format!(
+                        "request {i}: batch occupancy diverged ({} vs {})",
+                        w.2, g.2
+                    ));
+                }
+                if w.0 != g.0 || w.1 != g.1 {
+                    return Err(format!(
+                        "request {i}: pipelined logits diverged from serial \
+                         (max_batch {max_batch}, depth {depth:?})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn partial_final_batch_and_max_delay_release_agree() {
+    // 8 + 8 + 5: two size-triggered releases and a deadline-released tail —
+    // the ragged path must stay bitwise equal too
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(300),
+        max_queue: 4096,
+    };
+    let stream: Vec<u64> = (0..21).collect();
+    let serial = start(EngineKind::Native, policy, None);
+    let want = serve_stream(&serial, &stream);
+    serial.shutdown();
+    let pipelined = start(EngineKind::Pipeline, policy, None);
+    let got = serve_stream(&pipelined, &stream);
+    pipelined.shutdown();
+    assert_eq!(want.len(), got.len());
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(w.2, g.2, "request {i}: batch occupancy diverged");
+        assert_eq!(w.1, g.1, "request {i}: label diverged");
+        assert_eq!(w.0, g.0, "request {i}: logits diverged (bitwise)");
+    }
+    // the tail really was a partial, deadline-released batch
+    assert_eq!(got[20].2, 5, "tail batch occupancy");
+}
+
+#[test]
+fn pipelined_server_reports_stage_occupancy() {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(5),
+        max_queue: 4096,
+    };
+    let server = start(EngineKind::Pipeline, policy, None);
+    let stream: Vec<u64> = (0..32).collect();
+    let _ = serve_stream(&server, &stream);
+    let pipes = server.metrics().pipelines();
+    assert_eq!(pipes.len(), 1, "one pipelined model attached");
+    let (name, stats) = &pipes[0];
+    assert_eq!(name, MODEL);
+    let executed: u64 = stats.stages[0]
+        .batches
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(executed > 0, "stage 0 saw no batches");
+    assert!(
+        server.metrics().summary().contains("pipeline[mnist_mlp_1]: s0="),
+        "summary must carry stage occupancy: {}",
+        server.metrics().summary()
+    );
+    // the serving-side timeline renders from the recorded events
+    let text = circnn::pipeline::timeline::render(stats, 48);
+    assert!(text.contains("S0 |"), "{text}");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_pipelined_inflight_requests() {
+    // queued + in-flight work must reach clients before shutdown returns,
+    // exactly as on the serial executor
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_secs(5), // deadline won't fire; drain must
+        max_queue: 4096,
+    };
+    let server = start(EngineKind::Pipeline, policy, Some(2));
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    let pending: Vec<_> = (0..10)
+        .map(|_| server.infer_async(MODEL, &img).unwrap())
+        .collect();
+    server.shutdown();
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("response channel must not be dropped");
+        assert!(resp.is_ok(), "queued request {i} lost during pipelined shutdown");
+    }
+}
