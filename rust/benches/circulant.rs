@@ -17,7 +17,9 @@
 //! so every ratio emitted under a `*_speedup_*` name is a regression gate
 //! (serial vs parallel, old vs new ordering), while `*_ratio_*` names are
 //! informational trajectory points that may legitimately dip below 1.0 on
-//! small runners (per-case resident-vs-pixel-outer, SIMD-vs-scalar MAC).
+//! small runners (per-case resident-vs-pixel-outer, SIMD-vs-scalar MAC,
+//! int16-engine-vs-f32-engine).  The executed int16 BFP path gates its own
+//! `fixed_mac_speedup_*` / `fixed_conv_speedup_*` serial-vs-sharded keys.
 //!
 //! The multi-batch serving case follows the same contract: it gates
 //! `pipeline_speedup_<model>_b<batch>x<waves>` (deep-pipelined layer
@@ -149,6 +151,37 @@ fn main() {
         results.extend([ser, par]);
     }
 
+    println!("\n== int16 BFP matmul: serial vs batch-major parallel (executed fixed path) ==");
+    // the `--precision fixed16` datapath on the same shapes as the gated
+    // f32 matmul cases.  Gated key: serial vs parallel (same sharding win
+    // the f32 gate proves); the fixed-vs-f32 comparison is informational —
+    // the i16 engine adds per-spectrum quantize/rescale work, so parity,
+    // not speedup, is the expectation on wide-SIMD hosts.
+    for (n, k, batch) in [(1024usize, 64usize, 64usize), (2048, 64, 64), (1024, 128, 64)] {
+        let pq = n / k;
+        let mut bc = BlockCirculant::new(pq, pq, k, rng.normal_vec(pq * pq * k));
+        bc.precompute_fixed(12);
+        let xs = rng.normal_vec(batch * n);
+        let mut ys = vec![0.0f32; batch * n];
+        let f32_par = bench.run(&format!("matmul_f32_ref/b{batch}_n{n}_k{k}"), batch as u64, || {
+            bc.matmul(&xs, batch, &mut ys)
+        });
+        let ser = bench.run(&format!("matmul_fixed_serial/b{batch}_n{n}_k{k}"), batch as u64, || {
+            bc.matmul_fixed_serial(&xs, batch, &mut ys)
+        });
+        let par = bench.run(&format!("matmul_fixed/b{batch}_n{n}_k{k}"), batch as u64, || {
+            bc.matmul_fixed(&xs, batch, &mut ys)
+        });
+        let speedup = ser.median_ns() / par.median_ns();
+        let vs_f32 = f32_par.median_ns() / par.median_ns();
+        println!(
+            "   n={n:<5} k={k:<4} batch={batch:<3} parallel speedup {speedup:.2}x  vs f32 {vs_f32:.2}x"
+        );
+        derived.push((format!("fixed_mac_speedup_b{batch}_n{n}_k{k}"), speedup));
+        derived.push((format!("fixed_vs_f32_ratio_b{batch}_n{n}_k{k}"), vs_f32));
+        results.extend([f32_par, ser, par]);
+    }
+
     println!("\n== BcConv pixel pipeline: serial (pre-PR) vs pixel-outer vs resident ==");
     // the registry's CNN hot path: svhn/cifar-shaped SAME conv layers.
     // Three orderings of the same (bitwise-identical) computation: the
@@ -195,6 +228,42 @@ fn main() {
     }
     // gated: the resident ordering must win somewhere in the registry
     derived.push(("bc_conv_resident_speedup_best".into(), resident_best));
+
+    println!("\n== int16 BFP conv: serial vs sharded (executed fixed path) ==");
+    // the fixed twin of the gated conv cases, same contract as the fixed
+    // matmul section: the gate is serial-vs-sharded; fixed-vs-f32 is the
+    // informational trajectory point.
+    for (c, p, r, k, hw, batch) in conv_cases {
+        let (pb, qb) = (p / k, (c / k) * r * r);
+        let mut bc = BlockCirculant::new(pb, qb, k, rng.normal_vec(pb * qb * k));
+        bc.precompute_fixed(12);
+        let shape = ConvShape { h: hw, w: hw, c, r, same: true };
+        let xs = rng.normal_vec(batch * hw * hw * c);
+        let bias = rng.normal_vec(p);
+        let ref_name = format!("bc_conv_f32_ref/c{c}_p{p}_{hw}x{hw}_b{batch}");
+        let f32_par = bench.run(&ref_name, batch as u64, || {
+            conv::forward(&bc, &xs, batch, shape, &bias, true)
+        });
+        let ser_name = format!("bc_conv_fixed_serial/c{c}_p{p}_{hw}x{hw}_b{batch}");
+        let ser = bench.run(&ser_name, batch as u64, || {
+            conv::forward_fixed_serial(&bc, &xs, batch, shape, &bias, true)
+        });
+        let par_name = format!("bc_conv_fixed/c{c}_p{p}_{hw}x{hw}_b{batch}");
+        let par = bench.run(&par_name, batch as u64, || {
+            conv::forward_fixed(&bc, &xs, batch, shape, &bias, true)
+        });
+        let speedup = ser.median_ns() / par.median_ns();
+        let vs_f32 = f32_par.median_ns() / par.median_ns();
+        println!(
+            "   c={c:<3} p={p:<3} r={r} k={k} {hw}x{hw} batch={batch:<3} vs serial {speedup:.2}x  vs f32 {vs_f32:.2}x"
+        );
+        derived.push((format!("fixed_conv_speedup_c{c}_p{p}_{hw}x{hw}_b{batch}"), speedup));
+        derived.push((
+            format!("fixed_conv_vs_f32_ratio_c{c}_p{p}_{hw}x{hw}_b{batch}"),
+            vs_f32,
+        ));
+        results.extend([f32_par, ser, par]);
+    }
 
     println!("\n== native train step: serial vs parallel (spectral backprop) ==");
     // the new training workload: forward + conjugate-spectrum backward +

@@ -29,7 +29,11 @@
 //! over the split-plane spectra, bitwise identical to the scalar oracles
 //! they are property-pinned against, with `CIRCNN_NO_SIMD=1` forcing the
 //! oracle — see the dispatch-convention comment above
-//! [`complex_mul_acc_scalar`].
+//! [`complex_mul_acc_scalar`].  The int16 twins ([`complex_mul_acc_i16`] /
+//! [`complex_conj_mul_acc_i16`]) run the same phase on block-floating-point
+//! `i16` mantissa planes with `i32` accumulation — the executed side of the
+//! paper's 12–16-bit datapath (`Precision::Fixed16`), under the same
+//! dispatch and bitwise-oracle discipline.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -700,6 +704,387 @@ unsafe fn complex_conj_mul_acc_neon(
     }
 }
 
+// ---------------------------------------------------------------------------
+// int16 fixed-point multiply-accumulate engine (`Precision::Fixed16` phase 2)
+// ---------------------------------------------------------------------------
+//
+// The same phase-2 kernels on block-floating-point spectra
+// ([`super::quant::encode_spectrum_i16`]): `i16` mantissa planes in, `i32`
+// accumulator planes out, with a per-call arithmetic right shift aligning
+// each tap's product onto the output spectrum's shared scale.  Per lane:
+//
+//   pr = x_r*y_r - x_i*y_i      pi = x_r*y_i + x_i*y_r      (conj: +/-)
+//   acc += pr >> shift                                      (truncating)
+//
+// All arithmetic is wrapping i32 — mantissas are clamped to ±(2^(bits-1)-1)
+// so the product pairs can't overflow, but wrapping keeps the semantics
+// total (and bitwise-identical across engines) for arbitrary inputs.  The
+// narrow lanes are the point: 8 spectrum bins per AVX2 register load
+// (vs 8 f32 across *two* registers of work) and widening `vmull_s16` on
+// NEON — the paper's 12–16-bit datapath claim, executed.  Dispatch, oracle
+// discipline and the `CIRCNN_NO_SIMD` knob are shared with the f32 engine
+// above; `mac_backend()` reports for both.
+
+/// Element-wise int16 complex multiply-accumulate on separated
+/// block-floating-point mantissa planes: `acc += (a o b) >> shift` over
+/// `ar.len()` lanes, accumulating in i32.  Phase 2 of the `Fixed16`
+/// datapath; `shift` is clamped to 31 (i32 shifts past the width are UB).
+///
+/// Runtime-dispatched to the AVX2/NEON engine when available, bitwise
+/// identical to [`complex_mul_acc_i16_scalar`]; `CIRCNN_NO_SIMD=1` pins
+/// the oracle.
+#[inline]
+pub fn complex_mul_acc_i16(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: dispatch is guarded by runtime AVX2 detection
+            unsafe { complex_mul_acc_i16_avx2(ar, ai, br, bi, shift, acc_r, acc_i) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_enabled() {
+            // SAFETY: dispatch is guarded by runtime NEON detection
+            unsafe { complex_mul_acc_i16_neon(ar, ai, br, bi, shift, acc_r, acc_i) };
+            return;
+        }
+    }
+    complex_mul_acc_i16_scalar(ar, ai, br, bi, shift, acc_r, acc_i)
+}
+
+/// Int16 *conjugate* complex multiply-accumulate:
+/// `acc += (conj(a) o b) >> shift` — the fixed-point twin of
+/// [`complex_conj_mul_acc`], same dispatch as [`complex_mul_acc_i16`].
+#[inline]
+pub fn complex_conj_mul_acc_i16(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2_enabled() {
+            // SAFETY: dispatch is guarded by runtime AVX2 detection
+            unsafe { complex_conj_mul_acc_i16_avx2(ar, ai, br, bi, shift, acc_r, acc_i) };
+            return;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if neon_enabled() {
+            // SAFETY: dispatch is guarded by runtime NEON detection
+            unsafe { complex_conj_mul_acc_i16_neon(ar, ai, br, bi, shift, acc_r, acc_i) };
+            return;
+        }
+    }
+    complex_conj_mul_acc_i16_scalar(ar, ai, br, bi, shift, acc_r, acc_i)
+}
+
+/// The scalar oracle for [`complex_mul_acc_i16`] — same chunking as the
+/// f32 oracle; wrapping i32 arithmetic and a truncating arithmetic shift
+/// define the semantics the SIMD engines are pinned against.
+#[inline]
+pub fn complex_mul_acc_i16_scalar(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    const LANES: usize = 8;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let sh = shift.min(31);
+    let mut t = 0;
+    while t + LANES <= n {
+        for l in 0..LANES {
+            let i = t + l;
+            let (x_r, x_i) = (i32::from(ar[i]), i32::from(ai[i]));
+            let (y_r, y_i) = (i32::from(br[i]), i32::from(bi[i]));
+            let pr = x_r.wrapping_mul(y_r).wrapping_sub(x_i.wrapping_mul(y_i));
+            let pi = x_r.wrapping_mul(y_i).wrapping_add(x_i.wrapping_mul(y_r));
+            acc_r[i] = acc_r[i].wrapping_add(pr >> sh);
+            acc_i[i] = acc_i[i].wrapping_add(pi >> sh);
+        }
+        t += LANES;
+    }
+    while t < n {
+        let (x_r, x_i) = (i32::from(ar[t]), i32::from(ai[t]));
+        let (y_r, y_i) = (i32::from(br[t]), i32::from(bi[t]));
+        let pr = x_r.wrapping_mul(y_r).wrapping_sub(x_i.wrapping_mul(y_i));
+        let pi = x_r.wrapping_mul(y_i).wrapping_add(x_i.wrapping_mul(y_r));
+        acc_r[t] = acc_r[t].wrapping_add(pr >> sh);
+        acc_i[t] = acc_i[t].wrapping_add(pi >> sh);
+        t += 1;
+    }
+}
+
+/// The scalar oracle for [`complex_conj_mul_acc_i16`].
+#[inline]
+pub fn complex_conj_mul_acc_i16_scalar(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    const LANES: usize = 8;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let sh = shift.min(31);
+    let mut t = 0;
+    while t + LANES <= n {
+        for l in 0..LANES {
+            let i = t + l;
+            let (x_r, x_i) = (i32::from(ar[i]), i32::from(ai[i]));
+            let (y_r, y_i) = (i32::from(br[i]), i32::from(bi[i]));
+            let pr = x_r.wrapping_mul(y_r).wrapping_add(x_i.wrapping_mul(y_i));
+            let pi = x_r.wrapping_mul(y_i).wrapping_sub(x_i.wrapping_mul(y_r));
+            acc_r[i] = acc_r[i].wrapping_add(pr >> sh);
+            acc_i[i] = acc_i[i].wrapping_add(pi >> sh);
+        }
+        t += LANES;
+    }
+    while t < n {
+        let (x_r, x_i) = (i32::from(ar[t]), i32::from(ai[t]));
+        let (y_r, y_i) = (i32::from(br[t]), i32::from(bi[t]));
+        let pr = x_r.wrapping_mul(y_r).wrapping_add(x_i.wrapping_mul(y_i));
+        let pi = x_r.wrapping_mul(y_i).wrapping_sub(x_i.wrapping_mul(y_r));
+        acc_r[t] = acc_r[t].wrapping_add(pr >> sh);
+        acc_i[t] = acc_i[t].wrapping_add(pi >> sh);
+        t += 1;
+    }
+}
+
+/// AVX2 engine for [`complex_mul_acc_i16`]: one 128-bit load pulls 8
+/// mantissas per plane, sign-extended to 8 i32 lanes
+/// (`_mm256_cvtepi16_epi32`); `_mm256_mullo_epi32` is the wrapping
+/// multiply and `_mm256_sra_epi32` the truncating arithmetic shift — the
+/// exact scalar op sequence, vectorized.  (`_mm256_srai_epi32` needs a
+/// const-immediate count, so the runtime shift goes through the
+/// `sra`/`cvtsi32` pair.)  Scalar tail for the odd half-spectrum lengths.
+///
+/// # Safety
+/// Requires AVX2 (dispatch checks `is_x86_feature_detected!`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn complex_mul_acc_i16_avx2(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let sh = shift.min(31);
+    let count = _mm_cvtsi32_si128(sh as i32);
+    let mut t = 0;
+    while t + 8 <= n {
+        let x_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(ar.as_ptr().add(t).cast()));
+        let x_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(ai.as_ptr().add(t).cast()));
+        let y_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(br.as_ptr().add(t).cast()));
+        let y_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(bi.as_ptr().add(t).cast()));
+        let pr = _mm256_sub_epi32(_mm256_mullo_epi32(x_r, y_r), _mm256_mullo_epi32(x_i, y_i));
+        let pi = _mm256_add_epi32(_mm256_mullo_epi32(x_r, y_i), _mm256_mullo_epi32(x_i, y_r));
+        let p_r = acc_r.as_mut_ptr().add(t).cast::<__m256i>();
+        _mm256_storeu_si256(
+            p_r,
+            _mm256_add_epi32(_mm256_loadu_si256(p_r), _mm256_sra_epi32(pr, count)),
+        );
+        let p_i = acc_i.as_mut_ptr().add(t).cast::<__m256i>();
+        _mm256_storeu_si256(
+            p_i,
+            _mm256_add_epi32(_mm256_loadu_si256(p_i), _mm256_sra_epi32(pi, count)),
+        );
+        t += 8;
+    }
+    while t < n {
+        let (x_r, x_i) = (i32::from(ar[t]), i32::from(ai[t]));
+        let (y_r, y_i) = (i32::from(br[t]), i32::from(bi[t]));
+        let pr = x_r.wrapping_mul(y_r).wrapping_sub(x_i.wrapping_mul(y_i));
+        let pi = x_r.wrapping_mul(y_i).wrapping_add(x_i.wrapping_mul(y_r));
+        acc_r[t] = acc_r[t].wrapping_add(pr >> sh);
+        acc_i[t] = acc_i[t].wrapping_add(pi >> sh);
+        t += 1;
+    }
+}
+
+/// AVX2 engine for [`complex_conj_mul_acc_i16`] — sign-flipped twin of
+/// [`complex_mul_acc_i16_avx2`].
+///
+/// # Safety
+/// Requires AVX2 (dispatch checks `is_x86_feature_detected!`).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn complex_conj_mul_acc_i16_avx2(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    use std::arch::x86_64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let sh = shift.min(31);
+    let count = _mm_cvtsi32_si128(sh as i32);
+    let mut t = 0;
+    while t + 8 <= n {
+        let x_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(ar.as_ptr().add(t).cast()));
+        let x_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(ai.as_ptr().add(t).cast()));
+        let y_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(br.as_ptr().add(t).cast()));
+        let y_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(bi.as_ptr().add(t).cast()));
+        let pr = _mm256_add_epi32(_mm256_mullo_epi32(x_r, y_r), _mm256_mullo_epi32(x_i, y_i));
+        let pi = _mm256_sub_epi32(_mm256_mullo_epi32(x_r, y_i), _mm256_mullo_epi32(x_i, y_r));
+        let p_r = acc_r.as_mut_ptr().add(t).cast::<__m256i>();
+        _mm256_storeu_si256(
+            p_r,
+            _mm256_add_epi32(_mm256_loadu_si256(p_r), _mm256_sra_epi32(pr, count)),
+        );
+        let p_i = acc_i.as_mut_ptr().add(t).cast::<__m256i>();
+        _mm256_storeu_si256(
+            p_i,
+            _mm256_add_epi32(_mm256_loadu_si256(p_i), _mm256_sra_epi32(pi, count)),
+        );
+        t += 8;
+    }
+    while t < n {
+        let (x_r, x_i) = (i32::from(ar[t]), i32::from(ai[t]));
+        let (y_r, y_i) = (i32::from(br[t]), i32::from(bi[t]));
+        let pr = x_r.wrapping_mul(y_r).wrapping_add(x_i.wrapping_mul(y_i));
+        let pi = x_r.wrapping_mul(y_i).wrapping_sub(x_i.wrapping_mul(y_r));
+        acc_r[t] = acc_r[t].wrapping_add(pr >> sh);
+        acc_i[t] = acc_i[t].wrapping_add(pi >> sh);
+        t += 1;
+    }
+}
+
+/// NEON engine for [`complex_mul_acc_i16`]: `vmull_s16` is the widening
+/// i16×i16→i32 multiply (exact, so identical to the oracle's widened
+/// wrapping multiply), and `vshlq_s32` with a negative count is the
+/// truncating arithmetic right shift matching Rust `>>`.
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64; dispatch checks
+/// `is_aarch64_feature_detected!`).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn complex_mul_acc_i16_neon(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    use std::arch::aarch64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let sh = shift.min(31);
+    let count = vdupq_n_s32(-(sh as i32));
+    let mut t = 0;
+    while t + 4 <= n {
+        let x_r = vld1_s16(ar.as_ptr().add(t));
+        let x_i = vld1_s16(ai.as_ptr().add(t));
+        let y_r = vld1_s16(br.as_ptr().add(t));
+        let y_i = vld1_s16(bi.as_ptr().add(t));
+        let pr = vsubq_s32(vmull_s16(x_r, y_r), vmull_s16(x_i, y_i));
+        let pi = vaddq_s32(vmull_s16(x_r, y_i), vmull_s16(x_i, y_r));
+        let p_r = acc_r.as_mut_ptr().add(t);
+        vst1q_s32(p_r, vaddq_s32(vld1q_s32(p_r), vshlq_s32(pr, count)));
+        let p_i = acc_i.as_mut_ptr().add(t);
+        vst1q_s32(p_i, vaddq_s32(vld1q_s32(p_i), vshlq_s32(pi, count)));
+        t += 4;
+    }
+    while t < n {
+        let (x_r, x_i) = (i32::from(ar[t]), i32::from(ai[t]));
+        let (y_r, y_i) = (i32::from(br[t]), i32::from(bi[t]));
+        let pr = x_r.wrapping_mul(y_r).wrapping_sub(x_i.wrapping_mul(y_i));
+        let pi = x_r.wrapping_mul(y_i).wrapping_add(x_i.wrapping_mul(y_r));
+        acc_r[t] = acc_r[t].wrapping_add(pr >> sh);
+        acc_i[t] = acc_i[t].wrapping_add(pi >> sh);
+        t += 1;
+    }
+}
+
+/// NEON engine for [`complex_conj_mul_acc_i16`] — sign-flipped twin of
+/// [`complex_mul_acc_i16_neon`].
+///
+/// # Safety
+/// Requires NEON (baseline on aarch64; dispatch checks
+/// `is_aarch64_feature_detected!`).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn complex_conj_mul_acc_i16_neon(
+    ar: &[i16],
+    ai: &[i16],
+    br: &[i16],
+    bi: &[i16],
+    shift: u32,
+    acc_r: &mut [i32],
+    acc_i: &mut [i32],
+) {
+    use std::arch::aarch64::*;
+    let n = ar.len();
+    let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
+    let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
+    let sh = shift.min(31);
+    let count = vdupq_n_s32(-(sh as i32));
+    let mut t = 0;
+    while t + 4 <= n {
+        let x_r = vld1_s16(ar.as_ptr().add(t));
+        let x_i = vld1_s16(ai.as_ptr().add(t));
+        let y_r = vld1_s16(br.as_ptr().add(t));
+        let y_i = vld1_s16(bi.as_ptr().add(t));
+        let pr = vaddq_s32(vmull_s16(x_r, y_r), vmull_s16(x_i, y_i));
+        let pi = vsubq_s32(vmull_s16(x_r, y_i), vmull_s16(x_i, y_r));
+        let p_r = acc_r.as_mut_ptr().add(t);
+        vst1q_s32(p_r, vaddq_s32(vld1q_s32(p_r), vshlq_s32(pr, count)));
+        let p_i = acc_i.as_mut_ptr().add(t);
+        vst1q_s32(p_i, vaddq_s32(vld1q_s32(p_i), vshlq_s32(pi, count)));
+        t += 4;
+    }
+    while t < n {
+        let (x_r, x_i) = (i32::from(ar[t]), i32::from(ai[t]));
+        let (y_r, y_i) = (i32::from(br[t]), i32::from(bi[t]));
+        let pr = x_r.wrapping_mul(y_r).wrapping_add(x_i.wrapping_mul(y_i));
+        let pi = x_r.wrapping_mul(y_i).wrapping_sub(x_i.wrapping_mul(y_r));
+        acc_r[t] = acc_r[t].wrapping_add(pr >> sh);
+        acc_i[t] = acc_i[t].wrapping_add(pi >> sh);
+        t += 1;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1012,6 +1397,120 @@ mod tests {
         assert!(["avx2", "neon", "scalar"].contains(&mac_backend()));
         if std::env::var("CIRCNN_NO_SIMD").map(|v| !v.is_empty() && v != "0").unwrap_or(false) {
             assert_eq!(mac_backend(), "scalar", "CIRCNN_NO_SIMD must force the oracle");
+        }
+    }
+
+    /// Full-range random i16 vector (includes `i16::MIN`; the kernels'
+    /// wrapping semantics must be total, not just valid on clamped BFP
+    /// mantissas).
+    fn i16_vec(rng: &mut SplitMix, n: usize) -> Vec<i16> {
+        (0..n).map(|_| rng.next_u64() as i16).collect()
+    }
+
+    #[test]
+    fn dispatched_i16_mac_kernels_bitwise_equal_scalar_oracle_all_halfspec_lengths() {
+        // the int16 engines under the same pin as the f32 ones: every
+        // half-spectrum length the substrate produces (k/2+1 for k in
+        // {2..64}) plus every tail size of the 8- and 4-lane engines,
+        // across the full shift range 0..=31 (and the 32+ clamp)
+        let lengths: Vec<usize> = (1usize..=40).chain([2, 3, 5, 9, 17, 33]).collect();
+        for (case, &n) in lengths.iter().enumerate() {
+            let mut rng = SplitMix::new(0x1616 + case as u64);
+            let (ar, ai) = (i16_vec(&mut rng, n), i16_vec(&mut rng, n));
+            let (br, bi) = (i16_vec(&mut rng, n), i16_vec(&mut rng, n));
+            let (acc0_r, acc0_i): (Vec<i32>, Vec<i32>) = (
+                (0..n).map(|_| rng.next_u64() as i32).collect(),
+                (0..n).map(|_| rng.next_u64() as i32).collect(),
+            );
+            for shift in [0u32, 1, 7, 15, 23, 31, 40] {
+                for conj in [false, true] {
+                    let (mut dr, mut di) = (acc0_r.clone(), acc0_i.clone());
+                    let (mut sr, mut si) = (acc0_r.clone(), acc0_i.clone());
+                    if conj {
+                        complex_conj_mul_acc_i16(&ar, &ai, &br, &bi, shift, &mut dr, &mut di);
+                        complex_conj_mul_acc_i16_scalar(
+                            &ar, &ai, &br, &bi, shift, &mut sr, &mut si,
+                        );
+                    } else {
+                        complex_mul_acc_i16(&ar, &ai, &br, &bi, shift, &mut dr, &mut di);
+                        complex_mul_acc_i16_scalar(&ar, &ai, &br, &bi, shift, &mut sr, &mut si);
+                    }
+                    for t in 0..n {
+                        assert!(
+                            dr[t] == sr[t] && di[t] == si[t],
+                            "backend {} conj={conj} n={n} shift={shift} lane {t}: \
+                             ({}, {}) != scalar ({}, {})",
+                            mac_backend(),
+                            dr[t],
+                            di[t],
+                            sr[t],
+                            si[t],
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_dispatched_i16_mac_bitwise_equal_scalar() {
+        forall(
+            "complex_mul_acc_i16 dispatch == scalar oracle, exactly",
+            |r| {
+                let n = 1 + r.below(64) as usize;
+                let shift = r.below(32) as u32;
+                (
+                    i16_vec(r, n),
+                    i16_vec(r, n),
+                    i16_vec(r, n),
+                    i16_vec(r, n),
+                    (0..n).map(|_| r.next_u64() as i32).collect::<Vec<i32>>(),
+                    shift,
+                )
+            },
+            |(ar, ai, br, bi, acc0, shift)| {
+                for conj in [false, true] {
+                    let (mut dr, mut di) = (acc0.clone(), acc0.clone());
+                    let (mut sr, mut si) = (acc0.clone(), acc0.clone());
+                    if *conj {
+                        complex_conj_mul_acc_i16(ar, ai, br, bi, *shift, &mut dr, &mut di);
+                        complex_conj_mul_acc_i16_scalar(ar, ai, br, bi, *shift, &mut sr, &mut si);
+                    } else {
+                        complex_mul_acc_i16(ar, ai, br, bi, *shift, &mut dr, &mut di);
+                        complex_mul_acc_i16_scalar(ar, ai, br, bi, *shift, &mut sr, &mut si);
+                    }
+                    for t in 0..ar.len() {
+                        if dr[t] != sr[t] || di[t] != si[t] {
+                            return Err(format!(
+                                "conj={conj} lane {t}: dispatch ({}, {}) != scalar ({}, {})",
+                                dr[t], di[t], sr[t], si[t]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn i16_mac_shift_zero_matches_exact_integer_product() {
+        // at shift 0 on small mantissas the kernel is the exact complex
+        // product: cross-check against i64 reference arithmetic
+        let mut rng = SplitMix::new(0xFACE);
+        let n = 23;
+        let clamp = |v: u64| (v as i16) % 181; // small values, no overflow
+        let ar: Vec<i16> = (0..n).map(|_| clamp(rng.next_u64())).collect();
+        let ai: Vec<i16> = (0..n).map(|_| clamp(rng.next_u64())).collect();
+        let br: Vec<i16> = (0..n).map(|_| clamp(rng.next_u64())).collect();
+        let bi: Vec<i16> = (0..n).map(|_| clamp(rng.next_u64())).collect();
+        let (mut acc_r, mut acc_i) = (vec![0i32; n], vec![0i32; n]);
+        complex_mul_acc_i16(&ar, &ai, &br, &bi, 0, &mut acc_r, &mut acc_i);
+        for t in 0..n {
+            let (a, b) = (i64::from(ar[t]), i64::from(ai[t]));
+            let (c, d) = (i64::from(br[t]), i64::from(bi[t]));
+            assert_eq!(i64::from(acc_r[t]), a * c - b * d, "lane {t}");
+            assert_eq!(i64::from(acc_i[t]), a * d + b * c, "lane {t}");
         }
     }
 

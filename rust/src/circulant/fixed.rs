@@ -1,13 +1,28 @@
-//! Fixed-point FFT datapath — the arithmetic the FPGA actually performs.
+//! Fixed-point FFT datapath *simulation* — bit-accurate FPGA arithmetic.
 //!
-//! The rest of the stack models the paper's 12-bit datapath with
-//! *fake-quantization* (float values snapped to a 12-bit grid).  This
-//! module implements the real thing: two's-complement fixed-point
-//! butterflies with quantized twiddle ROMs and post-multiply rescaling,
-//! the way the bits move through the FPGA's DSP blocks.  The precision
-//! experiment (`circnn precision`, `experiments::precision`) uses it to
-//! regenerate the justification for the paper's 12-bit choice: SNR through
-//! the full FFT→∘→IFFT pipeline vs. datapath width.
+//! Two fixed-point stories coexist in this crate, and they answer
+//! different questions:
+//!
+//! * **Simulated** (this module): two's-complement fixed-point
+//!   butterflies with quantized twiddle ROMs and post-multiply rescaling,
+//!   the way the bits move through the FPGA's DSP blocks.  The precision
+//!   experiment (`circnn precision`, `experiments::precision`) uses it to
+//!   regenerate the justification for the paper's 12-bit choice: SNR
+//!   through the full FFT→∘→IFFT pipeline vs. datapath width.  Nothing
+//!   here runs on the serving hot path.
+//! * **Executed** ([`super::fft`] int16 kernels + `BlockCirculant`'s
+//!   `Fixed16` mode): the FFT/IFFT stay f32, but phase 2 — the MAC engine
+//!   that dominates runtime — runs on `i16` spectra under the
+//!   block-floating-point convention documented in [`super::quant`],
+//!   accumulating in `i32`.  That is the paper's "12–16-bit" claim made
+//!   load-bearing on CPU SIMD (twice the NEON lanes, four times the AVX2
+//!   lanes of the f32 engine).
+//!
+//! Format here: values are `i32` holding `frac` fractional bits
+//! (Q-format); twiddles hold `frac` fractional bits in `i32`; every
+//! multiply runs in `i64` and is rescaled by `>> frac` with
+//! round-to-nearest.  The inverse transform's 1/k scale is exact (k is a
+//! power of two → arithmetic shift).
 //!
 //! Format: values are `i32` holding `frac` fractional bits (Q-format);
 //! twiddles hold `frac` fractional bits in `i32`; every multiply runs in
@@ -29,8 +44,15 @@ pub struct FixedFft {
 }
 
 /// Round-to-nearest rescale of an i64 product by `frac` bits.
+///
+/// `frac == 0` is the identity — guarded explicitly, because the rounding
+/// bias `1 << (frac - 1)` would shift by 64-wrapped `u32::MAX` (a debug
+/// overflow panic) instead of producing the intended 0.
 #[inline]
 fn rescale(v: i64, frac: u32) -> i64 {
+    if frac == 0 {
+        return v;
+    }
     let half = 1i64 << (frac - 1);
     (v + half) >> frac
 }
@@ -274,5 +296,17 @@ mod tests {
     #[should_panic(expected = "power of 2")]
     fn rejects_non_pow2() {
         FixedFft::new(12, 12);
+    }
+
+    #[test]
+    fn rescale_frac_zero_is_identity() {
+        // the frac=0 edge used to underflow-panic (debug) on `frac - 1`
+        for v in [0i64, 1, -1, 7, -7, i64::from(i32::MAX), i64::from(i32::MIN)] {
+            assert_eq!(rescale(v, 0), v);
+        }
+        // and the rounding behavior at frac >= 1 is unchanged
+        assert_eq!(rescale(3, 1), 2); // (3 + 1) >> 1
+        assert_eq!(rescale(5, 2), 1); // (5 + 2) >> 2
+        assert_eq!(rescale(-5, 2), -1); // (-5 + 2) >> 2
     }
 }

@@ -28,3 +28,36 @@ pub mod sched;
 
 pub use block::BlockCirculant;
 pub use fft::FftPlan;
+
+/// Executed datapath of the spectral MAC engine: the default f32 SIMD
+/// engine, or the int16 block-floating-point engine — the paper's
+/// 12–16-bit FPGA datapath, executed (see [`fft::complex_mul_acc_i16`] and
+/// [`BlockCirculant::matmul_fixed`](block::BlockCirculant::matmul_fixed)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// f32 spectra, f32 MAC kernels (the default; bit-exact with the seed
+    /// engine).
+    #[default]
+    F32,
+    /// int16 BFP weight/input spectra, i32-accumulating integer MAC.
+    Fixed16,
+}
+
+impl Precision {
+    /// Parse a CLI/manifest spelling (`"f32"` / `"fixed16"`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "float" | "float32" => Some(Self::F32),
+            "fixed16" | "fixed" | "int16" => Some(Self::Fixed16),
+            _ => None,
+        }
+    }
+
+    /// Stable short name (CLI/report vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::Fixed16 => "fixed16",
+        }
+    }
+}

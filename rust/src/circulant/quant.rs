@@ -4,10 +4,30 @@
 //! max-abs scale.  [`Quantized`] additionally provides the packed integer
 //! representation used for the storage accounting (Fig. 3's "bit
 //! quantization" factor) and by the simulator's memory model.
+//!
+//! [`encode_spectrum_i16`] is the *executed* side of the story: the
+//! block-floating-point (BFP) encoding behind the int16 MAC engine
+//! (`Precision::Fixed16`).  Convention: one half-spectrum (its re and im
+//! planes jointly) shares a single **power-of-two** scale `2^e`, with `e`
+//! the smallest exponent such that `max_abs * 2^-e <= levels` where
+//! `levels = 2^(bits-1) - 1`; mantissas are `round(v * 2^-e)` clamped to
+//! `±levels` (never `-2^15`, so any product pair `a*c ± b*d` of two
+//! encoded spectra fits i32).  Power-of-two scales mean the phase-2 MAC
+//! needs only integer adds/multiplies plus arithmetic shifts — exactly the
+//! FPGA datapath shape — and the one float rescale per output spectrum is
+//! an exact `exp2` multiply.
+
+/// Minimum symmetric quantization width: 2 bits is the narrowest grid with
+/// a nonzero level ({-1, 0, +1}).  At `bits == 1` the level count
+/// `2^(bits-1) - 1` is zero, which would make the scale infinite and the
+/// grid NaN — callers asking for 1 bit get the documented 2-bit minimum.
+pub const MIN_BITS: u32 = 2;
 
 /// Quantize/dequantize in place (fake-quant): the value grid of a
-/// `bits`-bit symmetric fixed-point representation.
+/// `bits`-bit symmetric fixed-point representation.  `bits` below
+/// [`MIN_BITS`] is clamped up to it.
 pub fn fake_quant(x: &mut [f32], bits: u32) {
+    let bits = bits.max(MIN_BITS);
     let levels = ((1u32 << (bits - 1)) - 1) as f32;
     let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
     let scale = max_abs / levels;
@@ -54,6 +74,81 @@ impl Quantized {
     pub fn max_error(&self) -> f32 {
         self.scale / 2.0
     }
+}
+
+/// Exponent assigned to an all-zero spectrum by [`encode_spectrum_i16`].
+///
+/// Arithmetically any exponent would do (every mantissa is zero), but the
+/// fixed MAC takes `max` over tap exponents to pick the accumulator scale,
+/// so a zero spectrum must not inflate that max: −126 sits below every
+/// exponent the encoder can produce for nonzero data.
+pub const ZERO_EXP: i32 = -126;
+
+/// Block-floating-point encode of one half-spectrum into `i16` mantissas
+/// with a shared power-of-two scale.
+///
+/// Encodes the `re`/`im` planes jointly: returns the smallest exponent `e`
+/// with `max_abs * 2^-e <= levels` (`levels = 2^(bits-1) - 1`), writing
+/// `round(v * 2^-e)` clamped to `±levels` into `qre`/`qim`.  The decoded
+/// value of lane `t` is `qre[t] as f32 * 2^e` (resp. `qim`).  An all-zero
+/// spectrum gets zero mantissas and the [`ZERO_EXP`] sentinel.
+///
+/// `bits` must be in `MIN_BITS..=16`; non-finite inputs are rejected by
+/// debug assertion (weights and FFT outputs are finite by construction).
+pub fn encode_spectrum_i16(
+    re: &[f32],
+    im: &[f32],
+    bits: u32,
+    qre: &mut [i16],
+    qim: &mut [i16],
+) -> i32 {
+    assert!((MIN_BITS..=16).contains(&bits), "bits must be in 2..=16");
+    let n = re.len();
+    assert_eq!(im.len(), n);
+    let (qre, qim) = (&mut qre[..n], &mut qim[..n]);
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let max_abs = re
+        .iter()
+        .chain(im.iter())
+        .fold(0.0f32, |m, v| m.max(v.abs()));
+    debug_assert!(max_abs.is_finite(), "non-finite spectrum");
+    if max_abs == 0.0 {
+        qre.fill(0);
+        qim.fill(0);
+        return ZERO_EXP;
+    }
+    // smallest e with max_abs * 2^-e <= levels; the log2/ceil estimate can
+    // be off by one in either direction at float precision, so fix up with
+    // exact exp2 comparisons.  Clamped to -126 so exp2(-e) stays finite.
+    let mut e = ((max_abs / levels).log2().ceil() as i32).max(-126);
+    while max_abs * (-(e as f32)).exp2() > levels {
+        e += 1;
+    }
+    while e > -126 && max_abs * (-((e - 1) as f32)).exp2() <= levels {
+        e -= 1;
+    }
+    let inv = (-(e as f32)).exp2();
+    for (dst, &v) in qre.iter_mut().zip(re) {
+        *dst = (v * inv).round().clamp(-levels, levels) as i16;
+    }
+    for (dst, &v) in qim.iter_mut().zip(im) {
+        *dst = (v * inv).round().clamp(-levels, levels) as i16;
+    }
+    e
+}
+
+/// Headroom shift for the phase-2 i32 accumulator: the number of extra
+/// right-shift bits each tap product needs so that summing `taps` complex
+/// products of two `bits`-wide BFP spectra cannot overflow i32.
+///
+/// Per tap `|a*c ± b*d| < 2 * levels^2 < 2^(2(bits-1)+1)`; accumulating
+/// `taps` of them adds `ceil(log2(taps))` bits.  Anything at or under 31
+/// bits fits, so the headroom is the excess over 31 (zero for the common
+/// 12-bit × q<=36 configurations — headroom only kicks in near 16 bits).
+pub fn acc_headroom(bits: u32, taps: usize) -> u32 {
+    let per_tap = 2 * (bits - 1) + 1;
+    let tap_bits = taps.max(1).next_power_of_two().trailing_zeros();
+    (per_tap + tap_bits).saturating_sub(31)
 }
 
 #[cfg(test)]
@@ -115,5 +210,110 @@ mod tests {
     fn zero_tensor_safe() {
         let q = Quantized::encode(&[0.0, 0.0], 12);
         assert_eq!(q.decode(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_fake_quant_finite_and_bounded_all_bit_widths() {
+        // bits = 1 used to produce an infinite scale and a NaN grid; the
+        // clamp to MIN_BITS must keep every width in {1..16} finite with
+        // error bounded by half a grid step
+        forall(
+            "fake_quant finite, error <= scale/2, bits in 1..=16",
+            |r| {
+                let n = 1 + r.below(64) as usize;
+                let bits = 1 + r.below(16) as u32;
+                (r.normal_vec(n), bits)
+            },
+            |(x, bits)| {
+                let eff_bits = (*bits).max(MIN_BITS);
+                let levels = ((1u32 << (eff_bits - 1)) - 1) as f32;
+                let max_abs = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-8);
+                let bound = max_abs / levels / 2.0 + 1e-6;
+                let mut q = x.clone();
+                fake_quant(&mut q, *bits);
+                for (a, b) in x.iter().zip(&q) {
+                    if !b.is_finite() {
+                        return Err(format!("non-finite grid value {b} at bits={bits}"));
+                    }
+                    if (a - b).abs() > bound {
+                        return Err(format!("error {} > bound {bound}", (a - b).abs()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_bfp_spectrum_roundtrip_error_bounded() {
+        // decoded-value error of the joint-plane power-of-two encoding is
+        // at most half an ulp of the shared scale: 2^e / 2
+        forall(
+            "encode_spectrum_i16 error <= 2^e / 2",
+            |r| {
+                let n = 1 + r.below(64) as usize;
+                let bits = 2 + r.below(15) as u32;
+                // exercise a wide dynamic range, not just unit normals
+                let scale = (r.next_f32() * 40.0 - 20.0).exp2();
+                let re: Vec<f32> = r.normal_vec(n).iter().map(|v| v * scale).collect();
+                let im: Vec<f32> = r.normal_vec(n).iter().map(|v| v * scale).collect();
+                (re, im, bits)
+            },
+            |(re, im, bits)| {
+                let n = re.len();
+                let (mut qre, mut qim) = (vec![0i16; n], vec![0i16; n]);
+                let e = encode_spectrum_i16(re, im, *bits, &mut qre, &mut qim);
+                let levels = ((1u32 << (bits - 1)) - 1) as i32;
+                let step = (e as f32).exp2();
+                for (&q, &v) in qre.iter().chain(&qim).zip(re.iter().chain(im)) {
+                    if i32::from(q).abs() > levels {
+                        return Err(format!("mantissa {q} outside ±{levels}"));
+                    }
+                    let err = (f32::from(q) * step - v).abs();
+                    if err > step / 2.0 + step * 5e-3 {
+                        return Err(format!("decode error {err} > half step {step}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn acc_headroom_matches_worst_case_arithmetic() {
+        // 12-bit spectra: 23 product bits + up to 256 taps still fits i32
+        assert_eq!(acc_headroom(12, 36), 0);
+        assert_eq!(acc_headroom(12, 256), 0);
+        // 16-bit spectra: 31 product bits, so every extra tap bit shifts
+        assert_eq!(acc_headroom(16, 1), 0);
+        assert_eq!(acc_headroom(16, 2), 1);
+        assert_eq!(acc_headroom(16, 36), 6);
+        // exhaustive check against the direct i64 bound
+        for bits in MIN_BITS..=16 {
+            for taps in 1..=64usize {
+                let h = acc_headroom(bits, taps);
+                let levels = (1i64 << (bits - 1)) - 1;
+                let worst = (2 * levels * levels >> h) * taps as i64;
+                assert!(worst <= i64::from(i32::MAX) + 1, "overflow at bits={bits} taps={taps}");
+            }
+        }
+    }
+
+    #[test]
+    fn bfp_exponent_is_tight_and_zero_spectrum_gets_sentinel() {
+        let (mut qre, mut qim) = (vec![0i16; 4], vec![0i16; 4]);
+        // all-zero spectrum: sentinel exponent, zero mantissas
+        let e = encode_spectrum_i16(&[0.0; 4], &[0.0; 4], 12, &mut qre, &mut qim);
+        assert_eq!(e, ZERO_EXP);
+        assert!(qre.iter().chain(&qim).all(|&q| q == 0));
+        // max_abs exactly `levels`: e = 0 is the smallest admissible scale
+        let levels = ((1u32 << 11) - 1) as f32;
+        let e = encode_spectrum_i16(&[levels, -1.0, 0.5, 0.0], &[0.0; 4], 12, &mut qre, &mut qim);
+        assert_eq!(e, 0);
+        assert_eq!(qre[0], levels as i16);
+        // doubling the peak forces exactly one more exponent bit
+        let e2 =
+            encode_spectrum_i16(&[2.0 * levels, -1.0, 0.5, 0.0], &[0.0; 4], 12, &mut qre, &mut qim);
+        assert_eq!(e2, 1);
     }
 }

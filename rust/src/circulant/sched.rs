@@ -135,9 +135,59 @@ impl ShardWorkspace {
     }
 }
 
+/// Per-thread buffers for one shard of the *fixed-point* three-phase
+/// schedule (`Precision::Fixed16`): phases 1 and 3 stay f32 (FFT scratch +
+/// one-spectrum staging planes), phase 2 runs on block-floating-point
+/// `i16` mantissa planes with `i32` accumulators.  Same reuse story as
+/// [`ShardWorkspace`]: one workspace per shard, hot loops allocation-free.
+pub struct FixedShardWorkspace {
+    pub scratch: Vec<f32>,
+    /// one-spectrum f32 staging: phase-1 rFFT output before quantization,
+    /// reused as the phase-3 rescaled IFFT input
+    pub fr: Vec<f32>,
+    pub fi: Vec<f32>,
+    /// BFP mantissa planes of the shard's input spectra (`spectra * kh`)
+    pub qxr: Vec<i16>,
+    pub qxi: Vec<i16>,
+    /// per-input-spectrum block-floating-point exponents
+    pub xexp: Vec<i32>,
+    /// phase-2 accumulator planes
+    pub acc_r: Vec<i32>,
+    pub acc_i: Vec<i32>,
+}
+
+impl FixedShardWorkspace {
+    /// `k`: block size; `spectra`: input half-spectra held resident by the
+    /// shard (each `k/2+1` mantissa lanes + one exponent); `acc`: total
+    /// accumulator lanes.
+    pub fn new(k: usize, spectra: usize, acc: usize) -> Self {
+        let kh = k / 2 + 1;
+        Self {
+            scratch: vec![0.0; 2 * k],
+            fr: vec![0.0; kh],
+            fi: vec![0.0; kh],
+            qxr: vec![0; spectra * kh],
+            qxi: vec![0; spectra * kh],
+            xexp: vec![0; spectra],
+            acc_r: vec![0; acc],
+            acc_i: vec![0; acc],
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fixed_workspace_sizes() {
+        let ws = FixedShardWorkspace::new(8, 6, 10);
+        assert_eq!(ws.scratch.len(), 16);
+        assert_eq!((ws.fr.len(), ws.fi.len()), (5, 5));
+        assert_eq!((ws.qxr.len(), ws.qxi.len()), (30, 30));
+        assert_eq!(ws.xexp.len(), 6);
+        assert_eq!((ws.acc_r.len(), ws.acc_i.len()), (10, 10));
+    }
 
     #[test]
     fn shard_count_is_bounded_by_items() {

@@ -169,6 +169,7 @@ mod tests {
         let man = Manifest {
             dir: std::path::PathBuf::new(),
             quant_bits: 12,
+            fixed_bits: 12,
             models: vec![entry("m")],
             dataset_checksums: std::collections::HashMap::new(),
         };

@@ -29,6 +29,7 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::circulant::Precision;
 use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending, PushOutcome};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{RouteError, Router};
@@ -98,6 +99,11 @@ pub struct ServerConfig {
     /// ([`NativeModel::init_random`], fixed seed) instead of failing its
     /// requests — the demo/CI mode that needs no `make artifacts`
     pub init_random_fallback: bool,
+    /// native/pipeline backends: executed datapath of the spectral MAC
+    /// engine.  [`Precision::Fixed16`] runs every block-circulant layer
+    /// through the int16 BFP engine at the manifest's `fixed_bits` width
+    /// ([`NativeModel::set_precision`]); the PJRT backend ignores this.
+    pub precision: Precision,
 }
 
 impl Default for ServerConfig {
@@ -109,6 +115,7 @@ impl Default for ServerConfig {
             engine: EngineKind::Auto,
             depth: None,
             init_random_fallback: false,
+            precision: Precision::F32,
         }
     }
 }
@@ -480,7 +487,7 @@ fn native_exec(
         };
     };
     let path = manifest.dir.join("params").join(format!("{name}.npz"));
-    let native = match NativeModel::load(&model, &path, Some(manifest.quant_bits as u32)) {
+    let mut native = match NativeModel::load(&model, &path, Some(manifest.quant_bits as u32)) {
         Ok(native) => native,
         Err(err) if config.init_random_fallback => {
             eprintln!(
@@ -501,6 +508,9 @@ fn native_exec(
             };
         }
     };
+    // one hook covers both the serial native arm and the pipeline (the
+    // pipeline's stage workers run the same `NativeModel::run_ops` path)
+    native.set_precision(config.precision, Some(manifest.fixed_bits as u32));
     let (h, w, c) = model.input;
     if !matches!(config.engine, EngineKind::Pipeline) {
         return ModelExec::Native { model: Box::new(native), h, w, c };

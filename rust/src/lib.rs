@@ -25,13 +25,13 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`circulant`] | from-scratch FFT / block-circulant numerics: packed real-input FFT fast path (k/2-point complex FFT + untangle), crate-wide [`circulant::FftPlan::shared`] plan cache, NEON/AVX2 SIMD MAC engine (`circulant::fft::{complex_mul_acc, complex_conj_mul_acc}`, runtime-dispatched, bitwise-pinned to the scalar oracle, `CIRCNN_NO_SIMD=1` forces scalar), batch-major parallel `matmul` + weight-spectrum-resident training backward sharded over scoped threads ([`circulant::sched`] holds the shared shard policy/workspaces/counters) |
+//! | [`circulant`] | from-scratch FFT / block-circulant numerics: packed real-input FFT fast path (k/2-point complex FFT + untangle), crate-wide [`circulant::FftPlan::shared`] plan cache, NEON/AVX2 SIMD MAC engine (`circulant::fft::{complex_mul_acc, complex_conj_mul_acc}`, runtime-dispatched, bitwise-pinned to the scalar oracle, `CIRCNN_NO_SIMD=1` forces scalar), batch-major parallel `matmul` + weight-spectrum-resident training backward sharded over scoped threads ([`circulant::sched`] holds the shared shard policy/workspaces/counters); the **executed int16 fixed-point engine** — per-spectrum block-floating-point quantization ([`circulant::quant`]), i16 MAC kernels with i32 accumulators (`circulant::fft::complex_mul_acc_i16`, same dispatch/oracle discipline) and [`circulant::BlockCirculant::matmul_fixed`], selected end-to-end by [`circulant::Precision::Fixed16`] |
 //! | [`codesign`] | the Fig.-5 algorithm-hardware co-optimization search |
 //! | [`data`] | bit-exact Rust mirror of the Python synthetic datasets |
 //! | [`models`] | registry of the six Table-1 networks + accounting; `fft_real_mults` is the packed-rfft cost model the simulator charges |
 //! | [`fpga`] | cycle-level simulator of the paper's FPGA datapath |
 //! | [`baselines`] | TrueNorth / reference-FPGA / analog analytical models |
-//! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT); [`native::conv`] runs the BcConv pipeline batch-parallel with the weight-block-outer *spectrum-resident* MAC sweep (each weight spectrum loaded once per shard — the BRAM-reuse ordering), forward and backward |
+//! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT); [`native::conv`] runs the BcConv pipeline batch-parallel with the weight-block-outer *spectrum-resident* MAC sweep (each weight spectrum loaded once per shard — the BRAM-reuse ordering), forward and backward; `NativeModel::set_precision` swaps every block-circulant layer onto the executed int16 BFP engine (`serve --precision fixed16`, `circnn precision`) |
 //! | [`train`] | native FFT-domain training subsystem: O(n log n) spectral backprop (conjugate-spectrum `dL/dx`, frequency-accumulated `dL/dw`), SGD+momentum, softmax-CE head — `circnn train-demo` on default features |
 //! | [`pipeline`] | deep-pipelined serving engine: the `NativeModel` op walk split into per-layer stage workers with multiple batches in flight (token-bounded depth, bitwise-identical to `forward`, per-stage occupancy timeline — the executable twin of `fpga::controller`'s pipeline-fill story) |
 //! | [`runtime`] | artifact manifest (always) + PJRT engine (`pjrt` feature): load + execute HLO artifacts |

@@ -92,6 +92,7 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
              [--engine native]   (pure-Rust, no PJRT)
   serve      [--model NAME] [--requests N] [--clients N] [--max-batch N]
              [--engine native|pipeline] [--depth N] [--synthetic]
+             [--precision f32|fixed16]
              --engine native:   serve on the pure-Rust substrate
              --engine pipeline: deep-pipelined serving — per-layer stage
                                 workers, multiple batches in flight
@@ -99,6 +100,10 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
                                 stage-occupancy timeline
              --synthetic:       no artifacts needed — registry models with
                                 deterministic random-init params (demo/CI)
+             --precision fixed16: run block-circulant layers through the
+                                executed int16 BFP MAC engine at the
+                                manifest's fixed_bits width (native/
+                                pipeline engines; see `circnn precision`)
   train-demo [--model NAME] [--steps N] [--batch N] [--lr F] [--seed N]
              default build: native spectral-domain trainer (O(n log n)
              backprop, no artifacts needed); with `--features pjrt` it
@@ -409,6 +414,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         Some("pipeline") => EngineKind::Pipeline,
         _ => EngineKind::Auto,
     };
+    let precision = match flags.get("precision") {
+        Some(s) => circnn::circulant::Precision::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("unknown precision {s:?} (f32|fixed16)"))?,
+        None => circnn::circulant::Precision::F32,
+    };
     // --synthetic: registry-only serving, no artifacts on disk (demo/CI
     // mode — deterministic random-init parameters stand in for missing
     // archives); the multi-batch pipeline demo runs on exactly this
@@ -432,9 +442,13 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             engine,
             depth: flags.get("depth").and_then(|v| v.parse().ok()),
             init_random_fallback: synthetic,
+            precision,
             ..ServerConfig::default()
         },
     )?;
+    if precision != circnn::circulant::Precision::F32 {
+        println!("precision: {} (int16 BFP spectral MAC engine)", precision.name());
+    }
 
     let t0 = Instant::now();
     std::thread::scope(|scope| {

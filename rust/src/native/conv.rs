@@ -36,9 +36,16 @@
 //! — so the result is bit-identical to both the pixel-outer walk and the
 //! pre-PR serial walk (kept as [`forward_serial`], pinned by
 //! `prop_parallel_conv_bit_identical_to_serial`).
+//!
+//! The same pipeline has an int16 fixed-point twin ([`forward_fixed`], the
+//! CONV arm of `Precision::Fixed16`): identical schedule and resident
+//! ordering, with the phase-1 spectra block-floating-point-quantized to
+//! i16 mantissas and phase 2 running the integer MAC kernels — the
+//! paper's 12–16-bit FPGA datapath, executed.
 
-use crate::circulant::fft::{complex_conj_mul_acc, complex_mul_acc};
-use crate::circulant::sched::{self, PhaseCounters, ShardWorkspace};
+use crate::circulant::fft::{complex_conj_mul_acc, complex_mul_acc, complex_mul_acc_i16};
+use crate::circulant::quant;
+use crate::circulant::sched::{self, FixedShardWorkspace, PhaseCounters, ShardWorkspace};
 use crate::circulant::{im2col, BlockCirculant};
 
 /// Result of one BC-conv layer over a batch.
@@ -365,6 +372,244 @@ fn forward_impl(
     super::finish_rows(&mut out, bias, p_out, relu);
     cache.xfr = xfr;
     cache.xfi = xfi;
+    ConvOutput { data: out, oh: g.oh, ow: g.ow, counters }
+}
+
+/// [`forward`] through the int16 fixed-point datapath
+/// (`Precision::Fixed16`): the same decoupled schedule and
+/// weight-block-outer resident ordering, with phase 1 BFP-quantizing every
+/// interior pixel spectrum to i16 mantissas + one power-of-two exponent
+/// (border spectra keep zero mantissas and the [`quant::ZERO_EXP`]
+/// sentinel, so they never inflate an output spectrum's accumulator
+/// scale), phase 2 running [`complex_mul_acc_i16`] into i32 accumulators,
+/// and one exact power-of-two rescale per output spectrum before the f32
+/// IFFT.  Per-pixel work is independent, so the output is bit-identical to
+/// [`forward_fixed_serial`] (pinned in tests).  Requires
+/// [`BlockCirculant::precompute_fixed`].
+pub fn forward_fixed(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    bias: &[f32],
+    relu: bool,
+) -> ConvOutput {
+    forward_fixed_impl(bc, xs, batch, shape, bias, relu, false)
+}
+
+/// [`forward_fixed`] pinned to one shard — the serial baseline the benches
+/// measure the sharded fixed conv against (bitwise-identical: sharding
+/// splits independent pixel work only).
+pub fn forward_fixed_serial(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    bias: &[f32],
+    relu: bool,
+) -> ConvOutput {
+    forward_fixed_impl(bc, xs, batch, shape, bias, relu, true)
+}
+
+fn forward_fixed_impl(
+    bc: &BlockCirculant,
+    xs: &[f32],
+    batch: usize,
+    shape: ConvShape,
+    bias: &[f32],
+    relu: bool,
+    serial: bool,
+) -> ConvOutput {
+    let k = bc.k;
+    let bits = bc.fixed_bits();
+    assert!(bits != 0, "call precompute_fixed() first");
+    assert_eq!(xs.len(), batch * shape.h * shape.w * shape.c, "input buffer size");
+    assert_eq!(shape.c % k, 0, "k must divide the channel count");
+    let qc = shape.c / k;
+    assert_eq!(bc.q, qc * shape.r * shape.r, "weight grid != (c/k)*r*r input blocks");
+    let p_out = bc.rows();
+    let pb = bc.p;
+    let plan = bc.plan_arc();
+    let kh = plan.half_bins();
+    let g = Geom::new(shape);
+    let (ihw, ohw) = (g.ih * g.iw, g.oh * g.ow);
+
+    let mut counters = PhaseCounters::default();
+    let mut out = vec![0.0f32; batch * ohw * p_out];
+    if batch == 0 {
+        return ConvOutput { data: out, oh: g.oh, ow: g.ow, counters };
+    }
+
+    // ---- phase 1: rFFT + BFP-quantize the batch's input-pixel spectra,
+    // sharded by pixel.  Mantissa layout `[(b*ihw + pix) * qc + cb][kh]`,
+    // one exponent per (pixel, channel block); border pixels keep zero
+    // mantissas and the ZERO_EXP sentinel.
+    let spec_stride = qc * kh;
+    let mut qxr = vec![0i16; batch * ihw * spec_stride];
+    let mut qxi = vec![0i16; batch * ihw * spec_stride];
+    let mut xexp = vec![quant::ZERO_EXP; batch * ihw * qc];
+    let fft_shard = |unit0: usize, xr: &mut [i16], xi: &mut [i16], xe: &mut [i32]| -> u64 {
+        let mut ws = FixedShardWorkspace::new(k, 0, 0);
+        let mut ffts = 0u64;
+        for u in 0..xe.len() / qc {
+            let pix = (unit0 + u) % ihw;
+            let (y, x) = (pix / g.iw, pix % g.iw);
+            if y < g.lo || y >= g.lo + g.h || x < g.lo || x >= g.lo + g.w {
+                continue; // all-zero padded border: sentinel already in place
+            }
+            let b = (unit0 + u) / ihw;
+            let src = ((b * g.h + (y - g.lo)) * g.w + (x - g.lo)) * g.c;
+            for cb in 0..qc {
+                plan.rfft_halfspec(
+                    &xs[src + cb * k..src + (cb + 1) * k],
+                    &mut ws.fr,
+                    &mut ws.fi,
+                    &mut ws.scratch,
+                );
+                let off = u * spec_stride + cb * kh;
+                xe[u * qc + cb] = quant::encode_spectrum_i16(
+                    &ws.fr,
+                    &ws.fi,
+                    bits,
+                    &mut xr[off..off + kh],
+                    &mut xi[off..off + kh],
+                );
+                ffts += 1;
+            }
+        }
+        ffts
+    };
+    let units1 = batch * ihw;
+    let shards1 =
+        if serial { 1 } else { sched::shard_count(units1, qc * plan.real_mults() as usize) };
+    if shards1 <= 1 {
+        counters.ffts = fft_shard(0, &mut qxr, &mut qxi, &mut xexp);
+    } else {
+        let chunk_units = units1.div_ceil(shards1);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards1);
+            let mut unit0 = 0;
+            for ((xr, xi), xe) in qxr
+                .chunks_mut(chunk_units * spec_stride)
+                .zip(qxi.chunks_mut(chunk_units * spec_stride))
+                .zip(xexp.chunks_mut(chunk_units * qc))
+            {
+                let units_here = xe.len() / qc;
+                let (u0, f) = (unit0, &fft_shard);
+                handles.push(scope.spawn(move || f(u0, xr, xi, xe)));
+                unit0 += units_here;
+            }
+            for hdl in handles {
+                counters.ffts += hdl.join().expect("fixed phase-1 shard panicked");
+            }
+        });
+    }
+
+    // ---- phases 2+3: resident int16 MAC + one rescale + IFFT per (output
+    // pixel, output block).  Scale handling as in the FC fixed path: each
+    // output spectrum picks `P = max over taps (e_w + e_x)` plus the
+    // overflow headroom, every tap product is pre-shifted to that common
+    // scale, and the accumulator is worth `acc * 2^(P+h)` at the end.
+    let h_sh = quant::acc_headroom(bits, bc.q) as i32;
+    let mac_shard = |unit0: usize, out: &mut [f32]| -> (u64, u64) {
+        let units_here = out.len() / p_out;
+        let (mut mult_groups, mut iffts) = (0u64, 0u64);
+        let mut ws = FixedShardWorkspace::new(k, 0, units_here * kh);
+        // per-unit mantissa/exponent offsets of the pixel under tap (0, 0)
+        let base: Vec<(usize, usize)> = (0..units_here)
+            .map(|u| {
+                let (b, opix) = ((unit0 + u) / ohw, (unit0 + u) % ohw);
+                let (oy, ox) = (opix / g.ow, opix % g.ow);
+                let pix0 = b * ihw + oy * g.iw + ox;
+                (pix0 * spec_stride, pix0 * qc)
+            })
+            .collect();
+        let mut pmax = vec![0i32; units_here];
+        for i in 0..pb {
+            for pm in pmax.iter_mut() {
+                *pm = i32::MIN;
+            }
+            for cb in 0..qc {
+                for di in 0..g.r {
+                    for dj in 0..g.r {
+                        let j = (cb * g.r + di) * g.r + dj;
+                        let (_, _, we) = bc.fixed_spectrum(i, j);
+                        let te = (di * g.iw + dj) * qc + cb;
+                        for (u, pm) in pmax.iter_mut().enumerate() {
+                            *pm = (*pm).max(we + xexp[base[u].1 + te]);
+                        }
+                    }
+                }
+            }
+            ws.acc_r.fill(0);
+            ws.acc_i.fill(0);
+            for cb in 0..qc {
+                for di in 0..g.r {
+                    for dj in 0..g.r {
+                        let j = (cb * g.r + di) * g.r + dj;
+                        let (wr, wi, we) = bc.fixed_spectrum(i, j);
+                        let tap = (di * g.iw + dj) * spec_stride + cb * kh;
+                        let te = (di * g.iw + dj) * qc + cb;
+                        for (u, &(b0, e0)) in base.iter().enumerate() {
+                            let xo = b0 + tap;
+                            let shift =
+                                ((pmax[u] + h_sh - we - xexp[e0 + te]) as u32).min(31);
+                            complex_mul_acc_i16(
+                                wr,
+                                wi,
+                                &qxr[xo..xo + kh],
+                                &qxi[xo..xo + kh],
+                                shift,
+                                &mut ws.acc_r[u * kh..(u + 1) * kh],
+                                &mut ws.acc_i[u * kh..(u + 1) * kh],
+                            );
+                            mult_groups += 1;
+                        }
+                    }
+                }
+            }
+            for u in 0..units_here {
+                let scale = f64::from(pmax[u] + h_sh).exp2() as f32;
+                for t in 0..kh {
+                    ws.fr[t] = ws.acc_r[u * kh + t] as f32 * scale;
+                    ws.fi[t] = ws.acc_i[u * kh + t] as f32 * scale;
+                }
+                let dst = u * p_out;
+                plan.irfft_halfspec(
+                    &ws.fr,
+                    &ws.fi,
+                    &mut out[dst + i * k..dst + (i + 1) * k],
+                    &mut ws.scratch,
+                );
+                iffts += 1;
+            }
+        }
+        (mult_groups, iffts)
+    };
+    let units2 = batch * ohw;
+    let shards2 = if serial { 1 } else { sched::shard_count(units2, pb * bc.q * kh) };
+    if shards2 <= 1 {
+        (counters.mult_groups, counters.iffts) = mac_shard(0, &mut out);
+    } else {
+        let chunk = units2.div_ceil(shards2) * p_out;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(shards2);
+            let mut unit0 = 0;
+            for out_chunk in out.chunks_mut(chunk) {
+                let units_here = out_chunk.len() / p_out;
+                let (u0, f) = (unit0, &mac_shard);
+                handles.push(scope.spawn(move || f(u0, out_chunk)));
+                unit0 += units_here;
+            }
+            for hdl in handles {
+                let (mg, iff) = hdl.join().expect("fixed phase-2/3 shard panicked");
+                counters.mult_groups += mg;
+                counters.iffts += iff;
+            }
+        });
+    }
+
+    super::finish_rows(&mut out, bias, p_out, relu);
     ConvOutput { data: out, oh: g.oh, ow: g.ow, counters }
 }
 
@@ -905,6 +1150,80 @@ mod tests {
         assert_eq!(o.counters.ffts, (qc * h * w) as u64);
         assert_eq!(o.counters.iffts, (pb * oh * ow) as u64);
         assert_eq!(o.counters.mult_groups, (pb * qc * r * r * oh * ow) as u64);
+    }
+
+    #[test]
+    fn prop_fixed_conv_sharded_bitwise_equal_serial() {
+        // the fixed conv's per-pixel work (quantize, int MAC, rescale,
+        // IFFT) is independent, so sharding either sweep must not change a
+        // single bit of the output
+        forall(
+            "forward_fixed (sharded) == forward_fixed_serial, bitwise",
+            |rng| {
+                let k = 1usize << (1 + rng.below(4)); // 2..16
+                let qc = 1 + rng.below(3) as usize;
+                let pb = 1 + rng.below(3) as usize;
+                let r = 1 + rng.below(3) as usize;
+                let same = rng.below(2) == 1;
+                let (h, w) = (r + rng.below(5) as usize, r + rng.below(5) as usize);
+                let batch = 1 + rng.below(6) as usize;
+                let bits = 8 + rng.below(9) as u32; // 8..=16
+                let c = qc * k;
+                let mut bc = random_conv_bc(rng, pb, qc, r, k);
+                bc.precompute_fixed(bits);
+                let xs = rng.normal_vec(batch * h * w * c);
+                let bias = rng.normal_vec(pb * k);
+                (bc, xs, batch, ConvShape { h, w, c, r, same }, bias)
+            },
+            |(bc, xs, batch, shape, bias)| {
+                let par = forward_fixed(bc, xs, *batch, *shape, bias, true);
+                let ser = forward_fixed_serial(bc, xs, *batch, *shape, bias, true);
+                if par.data != ser.data {
+                    return Err("fixed conv sharded differs from serial (bitwise)".into());
+                }
+                if par.counters != ser.counters {
+                    return Err(format!(
+                        "sharding must not change executed counters: {:?} vs {:?}",
+                        par.counters, ser.counters
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fixed_conv_multi_shard_case_bit_identical_and_tracks_f32() {
+        // large enough that shard_count() splits both sweeps on a
+        // multi-core host; 16 bits exercises nonzero accumulator headroom
+        let mut rng = SplitMix::new(0xF1C0);
+        let (k, qc, pb, r, h, w, batch) = (8, 4, 4, 3, 16, 16, 8);
+        let c = qc * k;
+        let shape = ConvShape { h, w, c, r, same: true };
+        let mut bc = random_conv_bc(&mut rng, pb, qc, r, k);
+        let xs = rng.normal_vec(batch * h * w * c);
+        let bias = rng.normal_vec(pb * k);
+        let want = forward(&bc, &xs, batch, shape, &bias, false);
+        for bits in [12u32, 16] {
+            bc.precompute_fixed(bits);
+            let par = forward_fixed(&bc, &xs, batch, shape, &bias, false);
+            let ser = forward_fixed_serial(&bc, &xs, batch, shape, &bias, false);
+            assert!(par.data == ser.data, "fixed conv must be bitwise equal at {bits} bits");
+            // same executed transform counts as the f32 path (border FFTs
+            // skipped on both)
+            assert_eq!(par.counters, want.counters);
+            let snr = crate::circulant::fixed::snr_db(&want.data, &par.data);
+            assert!(snr > 35.0, "{bits}-bit conv SNR too low: {snr} dB");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "precompute_fixed")]
+    fn fixed_conv_without_precompute_fixed_panics() {
+        let mut rng = SplitMix::new(7);
+        let bc = random_conv_bc(&mut rng, 1, 1, 3, 4);
+        let shape = ConvShape { h: 5, w: 5, c: 4, r: 3, same: true };
+        forward_fixed(&bc, &rng.normal_vec(5 * 5 * 4), 1, shape, &[], false);
     }
 
     /// `L = Σ_pix u_pix · (to_dense(bc) @ patch_pix)` in f64 via the im2col

@@ -23,7 +23,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context};
 
-use crate::circulant::{dense, im2col, BlockCirculant};
+use crate::circulant::{dense, im2col, quant, BlockCirculant, Precision};
 use crate::data;
 use crate::models::{Layer, Model};
 use crate::util::npz::{self, Array};
@@ -98,6 +98,10 @@ pub struct NativeModel {
     pub name: String,
     pub(crate) ops: Vec<Op>,
     pub(crate) quant_bits: Option<u32>,
+    /// executed MAC datapath for the block-circulant layers; dense heads
+    /// and unstructured conv stems always run f32 (they are not the
+    /// spectral engine the paper's fixed-point claim is about)
+    pub(crate) precision: Precision,
 }
 
 /// Quantize a whole tensor in place (per-tensor max-abs symmetric grid),
@@ -212,7 +216,7 @@ impl NativeModel {
             };
             ops.push(op);
         }
-        Ok(Self { name: model.name.to_string(), ops, quant_bits })
+        Ok(Self { name: model.name.to_string(), ops, quant_bits, precision: Precision::F32 })
     }
 
     /// Initialize a model with He-init random parameters, float32 (no
@@ -275,7 +279,34 @@ impl NativeModel {
             };
             ops.push(op);
         }
-        Self { name: model.name.to_string(), ops, quant_bits: None }
+        Self { name: model.name.to_string(), ops, quant_bits: None, precision: Precision::F32 }
+    }
+
+    /// Switch the executed MAC datapath.  For [`Precision::Fixed16`] every
+    /// block-circulant weight spectrum is (re)quantized to int16
+    /// block-floating-point planes at `bits` mantissa width (`None`: the
+    /// model's fake-quant width, else the paper's 12-bit default), clamped
+    /// to the encoder's supported range — the Fixed16 analogue of the
+    /// offline `FFT(w)` precompute.  Back to `F32` is free: the f32
+    /// spectra are always kept.
+    pub fn set_precision(&mut self, precision: Precision, bits: Option<u32>) {
+        self.precision = precision;
+        if precision == Precision::Fixed16 {
+            let bits =
+                bits.or(self.quant_bits).unwrap_or(QUANT_BITS).clamp(quant::MIN_BITS, 16);
+            for op in &mut self.ops {
+                if let Op::BcDense { bc, .. } | Op::BcConv { bc, .. } = op {
+                    if bc.fixed_bits() != bits {
+                        bc.precompute_fixed(bits);
+                    }
+                }
+            }
+        }
+    }
+
+    /// The executed MAC datapath.
+    pub fn precision(&self) -> Precision {
+        self.precision
     }
 
     /// Number of ops in the compiled program (the pipeline planner's
@@ -467,7 +498,10 @@ impl NativeModel {
                 let (n, m) = (bc.cols(), bc.rows());
                 debug_assert_eq!(x.per_image(), n);
                 let mut out = vec![0.0f32; x.batch * m];
-                bc.matmul(xd, x.batch, &mut out);
+                match self.precision {
+                    Precision::F32 => bc.matmul(xd, x.batch, &mut out),
+                    Precision::Fixed16 => bc.matmul_fixed(xd, x.batch, &mut out),
+                }
                 finish_rows(&mut out, bias, m, *relu);
                 Tensor { batch: x.batch, h: m, w: 1, c: 1, data: out }
             }
@@ -496,7 +530,12 @@ impl NativeModel {
                 // pixel-parallel — see native::conv for the full story
                 let shape =
                     conv::ConvShape { h: x.h, w: x.w, c: x.c, r: *r, same: *same };
-                let o = conv::forward(bc, xd, x.batch, shape, bias, *relu);
+                let o = match self.precision {
+                    Precision::F32 => conv::forward(bc, xd, x.batch, shape, bias, *relu),
+                    Precision::Fixed16 => {
+                        conv::forward_fixed(bc, xd, x.batch, shape, bias, *relu)
+                    }
+                };
                 Tensor { batch: x.batch, h: o.oh, w: o.ow, c: bc.rows(), data: o.data }
             }
             Op::Conv { f, bias, c, p, r, same, relu } => {
@@ -593,6 +632,32 @@ mod tests {
                     "{name} quant={quant:?}: traced forward diverged from forward"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fixed16_forward_is_deterministic_and_tracks_f32() {
+        // the Fixed16 engine mode end to end: deterministic, close to the
+        // f32 logits, and reversible — switching back to F32 restores the
+        // default path byte for byte (the fixed planes are additive state)
+        for name in ["mnist_mlp_1", "svhn_cnn"] {
+            let model = models::by_name(name).unwrap();
+            let mut native = NativeModel::init_random(&model, 7);
+            let (h, w, c) = model.input;
+            let ds = data::dataset(model.dataset).unwrap();
+            let batch = 4;
+            let (xs, _) = data::batch(&ds, 0, batch, false);
+            let f32_logits = native.forward(&xs, batch, h, w, c);
+            native.set_precision(Precision::Fixed16, Some(12));
+            assert_eq!(native.precision(), Precision::Fixed16);
+            let a = native.forward(&xs, batch, h, w, c);
+            let b = native.forward(&xs, batch, h, w, c);
+            assert!(a == b, "{name}: fixed16 forward must be deterministic");
+            let snr = crate::circulant::fixed::snr_db(&f32_logits, &a);
+            assert!(snr > 20.0, "{name}: fixed16 logits SNR vs f32 too low: {snr} dB");
+            native.set_precision(Precision::F32, None);
+            let back = native.forward(&xs, batch, h, w, c);
+            assert!(back == f32_logits, "{name}: f32 path changed after precision round-trip");
         }
     }
 

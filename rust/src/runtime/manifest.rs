@@ -66,6 +66,10 @@ impl ModelEntry {
 pub struct Manifest {
     pub dir: PathBuf,
     pub quant_bits: u64,
+    /// mantissa width of the executed int16 fixed-point engine
+    /// (`--precision fixed16`); defaults to `quant_bits` when the manifest
+    /// doesn't name one
+    pub fixed_bits: u64,
     pub models: Vec<ModelEntry>,
     /// dataset name -> python-side checksum (bit-exactness contract)
     pub dataset_checksums: HashMap<String, u64>,
@@ -169,9 +173,11 @@ impl Manifest {
             });
         }
 
+        let quant_bits = root.get("quant_bits").and_then(|x| x.as_u64()).unwrap_or(12);
         Ok(Manifest {
             dir,
-            quant_bits: root.get("quant_bits").and_then(|x| x.as_u64()).unwrap_or(12),
+            quant_bits,
+            fixed_bits: root.get("fixed_bits").and_then(|x| x.as_u64()).unwrap_or(quant_bits),
             models,
             dataset_checksums,
         })
@@ -230,6 +236,7 @@ impl Manifest {
         Manifest {
             dir: Self::default_dir(),
             quant_bits: 12,
+            fixed_bits: 12,
             models,
             dataset_checksums: HashMap::new(),
         }
@@ -268,6 +275,7 @@ mod tests {
         write_manifest(&dir, MINIMAL);
         let man = Manifest::load(&dir).unwrap();
         assert_eq!(man.quant_bits, 12);
+        assert_eq!(man.fixed_bits, 12, "fixed_bits defaults to quant_bits");
         assert_eq!(man.dataset_checksums["mnist_s"], 12345);
         let m = man.model("m").unwrap();
         assert_eq!(m.serve_batch, 64);
@@ -287,6 +295,7 @@ mod tests {
         assert_eq!(m.input_shape.iter().product::<usize>(), 784);
         assert!(m.artifacts.is_empty(), "synthetic entries have no artifacts");
         assert_eq!(man.quant_bits, 12);
+        assert_eq!(man.fixed_bits, 12);
     }
 
     #[test]
