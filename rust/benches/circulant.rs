@@ -324,7 +324,8 @@ fn main() {
             (batch * waves) as u64,
             || {
                 for i in 0..waves {
-                    pipe.submit(&xs[i * batch * per..(i + 1) * batch * per], batch, h, w, c, i);
+                    pipe.submit(&xs[i * batch * per..(i + 1) * batch * per], batch, h, w, c, i)
+                        .expect("pipeline running");
                 }
                 for _ in 0..waves {
                     done_rx.recv().expect("pipeline sink hung up");

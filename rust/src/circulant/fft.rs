@@ -559,16 +559,24 @@ unsafe fn complex_mul_acc_avx2(
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let mut t = 0;
     while t + 8 <= n {
-        let x_r = _mm256_loadu_ps(ar.as_ptr().add(t));
-        let x_i = _mm256_loadu_ps(ai.as_ptr().add(t));
-        let y_r = _mm256_loadu_ps(br.as_ptr().add(t));
-        let y_i = _mm256_loadu_ps(bi.as_ptr().add(t));
-        let rr = _mm256_sub_ps(_mm256_mul_ps(x_r, y_r), _mm256_mul_ps(x_i, y_i));
-        let ri = _mm256_add_ps(_mm256_mul_ps(x_r, y_i), _mm256_mul_ps(x_i, y_r));
-        let pr = acc_r.as_mut_ptr().add(t);
-        _mm256_storeu_ps(pr, _mm256_add_ps(_mm256_loadu_ps(pr), rr));
-        let pi = acc_i.as_mut_ptr().add(t);
-        _mm256_storeu_ps(pi, _mm256_add_ps(_mm256_loadu_ps(pi), ri));
+        // SAFETY: the reslices above pin all six planes to exactly `n`
+        // elements and the loop guard proves `t + 8 <= n`, so every
+        // 8-lane load/store at offset `t` stays in bounds; the unaligned
+        // intrinsics carry no alignment requirement, and `acc_r`/`acc_i`
+        // are distinct `&mut` slices so the read-modify-write pointers
+        // don't alias the input planes.
+        unsafe {
+            let x_r = _mm256_loadu_ps(ar.as_ptr().add(t));
+            let x_i = _mm256_loadu_ps(ai.as_ptr().add(t));
+            let y_r = _mm256_loadu_ps(br.as_ptr().add(t));
+            let y_i = _mm256_loadu_ps(bi.as_ptr().add(t));
+            let rr = _mm256_sub_ps(_mm256_mul_ps(x_r, y_r), _mm256_mul_ps(x_i, y_i));
+            let ri = _mm256_add_ps(_mm256_mul_ps(x_r, y_i), _mm256_mul_ps(x_i, y_r));
+            let pr = acc_r.as_mut_ptr().add(t);
+            _mm256_storeu_ps(pr, _mm256_add_ps(_mm256_loadu_ps(pr), rr));
+            let pi = acc_i.as_mut_ptr().add(t);
+            _mm256_storeu_ps(pi, _mm256_add_ps(_mm256_loadu_ps(pi), ri));
+        }
         t += 8;
     }
     while t < n {
@@ -600,16 +608,21 @@ unsafe fn complex_conj_mul_acc_avx2(
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let mut t = 0;
     while t + 8 <= n {
-        let x_r = _mm256_loadu_ps(ar.as_ptr().add(t));
-        let x_i = _mm256_loadu_ps(ai.as_ptr().add(t));
-        let y_r = _mm256_loadu_ps(br.as_ptr().add(t));
-        let y_i = _mm256_loadu_ps(bi.as_ptr().add(t));
-        let rr = _mm256_add_ps(_mm256_mul_ps(x_r, y_r), _mm256_mul_ps(x_i, y_i));
-        let ri = _mm256_sub_ps(_mm256_mul_ps(x_r, y_i), _mm256_mul_ps(x_i, y_r));
-        let pr = acc_r.as_mut_ptr().add(t);
-        _mm256_storeu_ps(pr, _mm256_add_ps(_mm256_loadu_ps(pr), rr));
-        let pi = acc_i.as_mut_ptr().add(t);
-        _mm256_storeu_ps(pi, _mm256_add_ps(_mm256_loadu_ps(pi), ri));
+        // SAFETY: same bounds argument as `complex_mul_acc_avx2` — the
+        // reslices pin all six planes to `n` elements, the guard proves
+        // `t + 8 <= n`, unaligned intrinsics, disjoint `&mut` accumulators.
+        unsafe {
+            let x_r = _mm256_loadu_ps(ar.as_ptr().add(t));
+            let x_i = _mm256_loadu_ps(ai.as_ptr().add(t));
+            let y_r = _mm256_loadu_ps(br.as_ptr().add(t));
+            let y_i = _mm256_loadu_ps(bi.as_ptr().add(t));
+            let rr = _mm256_add_ps(_mm256_mul_ps(x_r, y_r), _mm256_mul_ps(x_i, y_i));
+            let ri = _mm256_sub_ps(_mm256_mul_ps(x_r, y_i), _mm256_mul_ps(x_i, y_r));
+            let pr = acc_r.as_mut_ptr().add(t);
+            _mm256_storeu_ps(pr, _mm256_add_ps(_mm256_loadu_ps(pr), rr));
+            let pi = acc_i.as_mut_ptr().add(t);
+            _mm256_storeu_ps(pi, _mm256_add_ps(_mm256_loadu_ps(pi), ri));
+        }
         t += 8;
     }
     while t < n {
@@ -642,16 +655,23 @@ unsafe fn complex_mul_acc_neon(
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let mut t = 0;
     while t + 4 <= n {
-        let x_r = vld1q_f32(ar.as_ptr().add(t));
-        let x_i = vld1q_f32(ai.as_ptr().add(t));
-        let y_r = vld1q_f32(br.as_ptr().add(t));
-        let y_i = vld1q_f32(bi.as_ptr().add(t));
-        let rr = vsubq_f32(vmulq_f32(x_r, y_r), vmulq_f32(x_i, y_i));
-        let ri = vaddq_f32(vmulq_f32(x_r, y_i), vmulq_f32(x_i, y_r));
-        let pr = acc_r.as_mut_ptr().add(t);
-        vst1q_f32(pr, vaddq_f32(vld1q_f32(pr), rr));
-        let pi = acc_i.as_mut_ptr().add(t);
-        vst1q_f32(pi, vaddq_f32(vld1q_f32(pi), ri));
+        // SAFETY: the reslices above pin all six planes to exactly `n`
+        // elements and the loop guard proves `t + 4 <= n`, so every
+        // 4-lane load/store at offset `t` stays in bounds; NEON loads
+        // are unaligned-tolerant and `acc_r`/`acc_i` are disjoint `&mut`
+        // slices, so the read-modify-write pointers don't alias inputs.
+        unsafe {
+            let x_r = vld1q_f32(ar.as_ptr().add(t));
+            let x_i = vld1q_f32(ai.as_ptr().add(t));
+            let y_r = vld1q_f32(br.as_ptr().add(t));
+            let y_i = vld1q_f32(bi.as_ptr().add(t));
+            let rr = vsubq_f32(vmulq_f32(x_r, y_r), vmulq_f32(x_i, y_i));
+            let ri = vaddq_f32(vmulq_f32(x_r, y_i), vmulq_f32(x_i, y_r));
+            let pr = acc_r.as_mut_ptr().add(t);
+            vst1q_f32(pr, vaddq_f32(vld1q_f32(pr), rr));
+            let pi = acc_i.as_mut_ptr().add(t);
+            vst1q_f32(pi, vaddq_f32(vld1q_f32(pi), ri));
+        }
         t += 4;
     }
     while t < n {
@@ -684,16 +704,21 @@ unsafe fn complex_conj_mul_acc_neon(
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let mut t = 0;
     while t + 4 <= n {
-        let x_r = vld1q_f32(ar.as_ptr().add(t));
-        let x_i = vld1q_f32(ai.as_ptr().add(t));
-        let y_r = vld1q_f32(br.as_ptr().add(t));
-        let y_i = vld1q_f32(bi.as_ptr().add(t));
-        let rr = vaddq_f32(vmulq_f32(x_r, y_r), vmulq_f32(x_i, y_i));
-        let ri = vsubq_f32(vmulq_f32(x_r, y_i), vmulq_f32(x_i, y_r));
-        let pr = acc_r.as_mut_ptr().add(t);
-        vst1q_f32(pr, vaddq_f32(vld1q_f32(pr), rr));
-        let pi = acc_i.as_mut_ptr().add(t);
-        vst1q_f32(pi, vaddq_f32(vld1q_f32(pi), ri));
+        // SAFETY: same bounds argument as `complex_mul_acc_neon` — the
+        // reslices pin all six planes to `n` elements, the guard proves
+        // `t + 4 <= n`, unaligned-tolerant loads, disjoint accumulators.
+        unsafe {
+            let x_r = vld1q_f32(ar.as_ptr().add(t));
+            let x_i = vld1q_f32(ai.as_ptr().add(t));
+            let y_r = vld1q_f32(br.as_ptr().add(t));
+            let y_i = vld1q_f32(bi.as_ptr().add(t));
+            let rr = vaddq_f32(vmulq_f32(x_r, y_r), vmulq_f32(x_i, y_i));
+            let ri = vsubq_f32(vmulq_f32(x_r, y_i), vmulq_f32(x_i, y_r));
+            let pr = acc_r.as_mut_ptr().add(t);
+            vst1q_f32(pr, vaddq_f32(vld1q_f32(pr), rr));
+            let pi = acc_i.as_mut_ptr().add(t);
+            vst1q_f32(pi, vaddq_f32(vld1q_f32(pi), ri));
+        }
         t += 4;
     }
     while t < n {
@@ -902,25 +927,34 @@ unsafe fn complex_mul_acc_i16_avx2(
     let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let sh = shift.min(31);
-    let count = _mm_cvtsi32_si128(sh as i32);
     let mut t = 0;
     while t + 8 <= n {
-        let x_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(ar.as_ptr().add(t).cast()));
-        let x_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(ai.as_ptr().add(t).cast()));
-        let y_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(br.as_ptr().add(t).cast()));
-        let y_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(bi.as_ptr().add(t).cast()));
-        let pr = _mm256_sub_epi32(_mm256_mullo_epi32(x_r, y_r), _mm256_mullo_epi32(x_i, y_i));
-        let pi = _mm256_add_epi32(_mm256_mullo_epi32(x_r, y_i), _mm256_mullo_epi32(x_i, y_r));
-        let p_r = acc_r.as_mut_ptr().add(t).cast::<__m256i>();
-        _mm256_storeu_si256(
-            p_r,
-            _mm256_add_epi32(_mm256_loadu_si256(p_r), _mm256_sra_epi32(pr, count)),
-        );
-        let p_i = acc_i.as_mut_ptr().add(t).cast::<__m256i>();
-        _mm256_storeu_si256(
-            p_i,
-            _mm256_add_epi32(_mm256_loadu_si256(p_i), _mm256_sra_epi32(pi, count)),
-        );
+        // SAFETY: the reslices above pin all six planes to exactly `n`
+        // elements and the loop guard proves `t + 8 <= n`: each 128-bit
+        // load reads the 8 i16 mantissas at `t..t+8` and each 256-bit
+        // load/store covers the 8 i32 accumulators at `t..t+8`, all in
+        // bounds; the unaligned (`loadu`/`storeu`) intrinsics carry no
+        // alignment requirement and `acc_r`/`acc_i` are disjoint `&mut`
+        // slices, so the read-modify-write pointers don't alias inputs.
+        unsafe {
+            let count = _mm_cvtsi32_si128(sh as i32);
+            let x_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(ar.as_ptr().add(t).cast()));
+            let x_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(ai.as_ptr().add(t).cast()));
+            let y_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(br.as_ptr().add(t).cast()));
+            let y_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(bi.as_ptr().add(t).cast()));
+            let pr = _mm256_sub_epi32(_mm256_mullo_epi32(x_r, y_r), _mm256_mullo_epi32(x_i, y_i));
+            let pi = _mm256_add_epi32(_mm256_mullo_epi32(x_r, y_i), _mm256_mullo_epi32(x_i, y_r));
+            let p_r = acc_r.as_mut_ptr().add(t).cast::<__m256i>();
+            _mm256_storeu_si256(
+                p_r,
+                _mm256_add_epi32(_mm256_loadu_si256(p_r), _mm256_sra_epi32(pr, count)),
+            );
+            let p_i = acc_i.as_mut_ptr().add(t).cast::<__m256i>();
+            _mm256_storeu_si256(
+                p_i,
+                _mm256_add_epi32(_mm256_loadu_si256(p_i), _mm256_sra_epi32(pi, count)),
+            );
+        }
         t += 8;
     }
     while t < n {
@@ -955,25 +989,30 @@ unsafe fn complex_conj_mul_acc_i16_avx2(
     let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let sh = shift.min(31);
-    let count = _mm_cvtsi32_si128(sh as i32);
     let mut t = 0;
     while t + 8 <= n {
-        let x_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(ar.as_ptr().add(t).cast()));
-        let x_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(ai.as_ptr().add(t).cast()));
-        let y_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(br.as_ptr().add(t).cast()));
-        let y_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(bi.as_ptr().add(t).cast()));
-        let pr = _mm256_add_epi32(_mm256_mullo_epi32(x_r, y_r), _mm256_mullo_epi32(x_i, y_i));
-        let pi = _mm256_sub_epi32(_mm256_mullo_epi32(x_r, y_i), _mm256_mullo_epi32(x_i, y_r));
-        let p_r = acc_r.as_mut_ptr().add(t).cast::<__m256i>();
-        _mm256_storeu_si256(
-            p_r,
-            _mm256_add_epi32(_mm256_loadu_si256(p_r), _mm256_sra_epi32(pr, count)),
-        );
-        let p_i = acc_i.as_mut_ptr().add(t).cast::<__m256i>();
-        _mm256_storeu_si256(
-            p_i,
-            _mm256_add_epi32(_mm256_loadu_si256(p_i), _mm256_sra_epi32(pi, count)),
-        );
+        // SAFETY: same bounds argument as `complex_mul_acc_i16_avx2` —
+        // resliced planes of `n` elements, `t + 8 <= n` guard, unaligned
+        // intrinsics, disjoint `&mut` accumulator slices.
+        unsafe {
+            let count = _mm_cvtsi32_si128(sh as i32);
+            let x_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(ar.as_ptr().add(t).cast()));
+            let x_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(ai.as_ptr().add(t).cast()));
+            let y_r = _mm256_cvtepi16_epi32(_mm_loadu_si128(br.as_ptr().add(t).cast()));
+            let y_i = _mm256_cvtepi16_epi32(_mm_loadu_si128(bi.as_ptr().add(t).cast()));
+            let pr = _mm256_add_epi32(_mm256_mullo_epi32(x_r, y_r), _mm256_mullo_epi32(x_i, y_i));
+            let pi = _mm256_sub_epi32(_mm256_mullo_epi32(x_r, y_i), _mm256_mullo_epi32(x_i, y_r));
+            let p_r = acc_r.as_mut_ptr().add(t).cast::<__m256i>();
+            _mm256_storeu_si256(
+                p_r,
+                _mm256_add_epi32(_mm256_loadu_si256(p_r), _mm256_sra_epi32(pr, count)),
+            );
+            let p_i = acc_i.as_mut_ptr().add(t).cast::<__m256i>();
+            _mm256_storeu_si256(
+                p_i,
+                _mm256_add_epi32(_mm256_loadu_si256(p_i), _mm256_sra_epi32(pi, count)),
+            );
+        }
         t += 8;
     }
     while t < n {
@@ -1011,19 +1050,28 @@ unsafe fn complex_mul_acc_i16_neon(
     let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let sh = shift.min(31);
-    let count = vdupq_n_s32(-(sh as i32));
     let mut t = 0;
     while t + 4 <= n {
-        let x_r = vld1_s16(ar.as_ptr().add(t));
-        let x_i = vld1_s16(ai.as_ptr().add(t));
-        let y_r = vld1_s16(br.as_ptr().add(t));
-        let y_i = vld1_s16(bi.as_ptr().add(t));
-        let pr = vsubq_s32(vmull_s16(x_r, y_r), vmull_s16(x_i, y_i));
-        let pi = vaddq_s32(vmull_s16(x_r, y_i), vmull_s16(x_i, y_r));
-        let p_r = acc_r.as_mut_ptr().add(t);
-        vst1q_s32(p_r, vaddq_s32(vld1q_s32(p_r), vshlq_s32(pr, count)));
-        let p_i = acc_i.as_mut_ptr().add(t);
-        vst1q_s32(p_i, vaddq_s32(vld1q_s32(p_i), vshlq_s32(pi, count)));
+        // SAFETY: the reslices above pin all six planes to exactly `n`
+        // elements and the loop guard proves `t + 4 <= n`: each `vld1_s16`
+        // reads the 4 i16 mantissas at `t..t+4` and each `vld1q_s32`/
+        // `vst1q_s32` covers the 4 i32 accumulators at `t..t+4`, all in
+        // bounds; NEON loads are unaligned-tolerant and `acc_r`/`acc_i`
+        // are disjoint `&mut` slices, so the read-modify-write pointers
+        // don't alias the input planes.
+        unsafe {
+            let count = vdupq_n_s32(-(sh as i32));
+            let x_r = vld1_s16(ar.as_ptr().add(t));
+            let x_i = vld1_s16(ai.as_ptr().add(t));
+            let y_r = vld1_s16(br.as_ptr().add(t));
+            let y_i = vld1_s16(bi.as_ptr().add(t));
+            let pr = vsubq_s32(vmull_s16(x_r, y_r), vmull_s16(x_i, y_i));
+            let pi = vaddq_s32(vmull_s16(x_r, y_i), vmull_s16(x_i, y_r));
+            let p_r = acc_r.as_mut_ptr().add(t);
+            vst1q_s32(p_r, vaddq_s32(vld1q_s32(p_r), vshlq_s32(pr, count)));
+            let p_i = acc_i.as_mut_ptr().add(t);
+            vst1q_s32(p_i, vaddq_s32(vld1q_s32(p_i), vshlq_s32(pi, count)));
+        }
         t += 4;
     }
     while t < n {
@@ -1059,19 +1107,24 @@ unsafe fn complex_conj_mul_acc_i16_neon(
     let (ai, br, bi) = (&ai[..n], &br[..n], &bi[..n]);
     let (acc_r, acc_i) = (&mut acc_r[..n], &mut acc_i[..n]);
     let sh = shift.min(31);
-    let count = vdupq_n_s32(-(sh as i32));
     let mut t = 0;
     while t + 4 <= n {
-        let x_r = vld1_s16(ar.as_ptr().add(t));
-        let x_i = vld1_s16(ai.as_ptr().add(t));
-        let y_r = vld1_s16(br.as_ptr().add(t));
-        let y_i = vld1_s16(bi.as_ptr().add(t));
-        let pr = vaddq_s32(vmull_s16(x_r, y_r), vmull_s16(x_i, y_i));
-        let pi = vsubq_s32(vmull_s16(x_r, y_i), vmull_s16(x_i, y_r));
-        let p_r = acc_r.as_mut_ptr().add(t);
-        vst1q_s32(p_r, vaddq_s32(vld1q_s32(p_r), vshlq_s32(pr, count)));
-        let p_i = acc_i.as_mut_ptr().add(t);
-        vst1q_s32(p_i, vaddq_s32(vld1q_s32(p_i), vshlq_s32(pi, count)));
+        // SAFETY: same bounds argument as `complex_mul_acc_i16_neon` —
+        // resliced planes of `n` elements, `t + 4 <= n` guard,
+        // unaligned-tolerant loads, disjoint `&mut` accumulator slices.
+        unsafe {
+            let count = vdupq_n_s32(-(sh as i32));
+            let x_r = vld1_s16(ar.as_ptr().add(t));
+            let x_i = vld1_s16(ai.as_ptr().add(t));
+            let y_r = vld1_s16(br.as_ptr().add(t));
+            let y_i = vld1_s16(bi.as_ptr().add(t));
+            let pr = vaddq_s32(vmull_s16(x_r, y_r), vmull_s16(x_i, y_i));
+            let pi = vsubq_s32(vmull_s16(x_r, y_i), vmull_s16(x_i, y_r));
+            let p_r = acc_r.as_mut_ptr().add(t);
+            vst1q_s32(p_r, vaddq_s32(vld1q_s32(p_r), vshlq_s32(pr, count)));
+            let p_i = acc_i.as_mut_ptr().add(t);
+            vst1q_s32(p_i, vaddq_s32(vld1q_s32(p_i), vshlq_s32(pi, count)));
+        }
         t += 4;
     }
     while t < n {

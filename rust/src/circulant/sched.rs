@@ -8,8 +8,60 @@
 //! loop in the substrate answers to the same knobs: an explicit
 //! `CIRCNN_THREADS` override, else the available parallelism capped by a
 //! minimum amount of work per shard so tiny problems stay on one core.
+//!
+//! This module is also the substrate's **only** doorway to the process
+//! environment: every `CIRCNN_*` knob is listed in the [`KNOBS`] registry
+//! and read through [`env_flag`] / [`env_parse`] / [`env_path`].  `circnn
+//! lint` enforces both halves mechanically — a raw `std::env::var` outside
+//! this module or a `CIRCNN_*` literal missing from the registry fails CI.
 
 use std::sync::OnceLock;
+
+/// One `CIRCNN_*` environment knob: its name and what it steers.
+#[derive(Debug, Clone, Copy)]
+pub struct Knob {
+    /// the environment variable, always `CIRCNN_`-prefixed
+    pub name: &'static str,
+    /// one-line description of what the knob controls
+    pub role: &'static str,
+}
+
+/// Central registry of every environment knob the substrate reads.  Keep
+/// this table exhaustive: `circnn lint` fails when a `CIRCNN_*` string
+/// literal appears in non-test crate code without a row here, or when a
+/// knob is read through raw `std::env::var` instead of this module's
+/// helpers.
+pub const KNOBS: &[Knob] = &[
+    Knob {
+        name: "CIRCNN_THREADS",
+        role: "explicit shard/stage thread budget (1 = fully serial)",
+    },
+    Knob {
+        name: "CIRCNN_NO_SIMD",
+        role: "force the scalar MAC oracle (pin kernel dispatch off)",
+    },
+    Knob {
+        name: "CIRCNN_PROP_CASES",
+        role: "property-test case budget per forall sweep",
+    },
+    Knob {
+        name: "CIRCNN_PROP_SEED",
+        role: "property-test base seed (failure replay)",
+    },
+    Knob {
+        name: "CIRCNN_ARTIFACTS",
+        role: "artifacts directory for manifests and params archives",
+    },
+];
+
+/// Every env read funnels through here so an unregistered knob is caught
+/// in debug/test builds even before the lint pass runs.
+fn assert_registered(name: &str) {
+    debug_assert!(
+        KNOBS.iter().any(|k| k.name == name),
+        "env knob {name} is not listed in circulant::sched::KNOBS"
+    );
+}
 
 /// Minimum phase-2 lanes per shard before a spawn pays for itself (~64k).
 const MIN_LANES_PER_SHARD_LOG2: u32 = 16;
@@ -58,11 +110,9 @@ impl PhaseCounters {
 
 fn thread_override() -> Option<usize> {
     static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
-    *OVERRIDE.get_or_init(|| {
-        std::env::var("CIRCNN_THREADS")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&t| t >= 1)
+    *OVERRIDE.get_or_init(|| match env_parse("CIRCNN_THREADS", 0usize) {
+        0 => None,
+        t => Some(t),
     })
 }
 
@@ -71,8 +121,23 @@ fn thread_override() -> Option<usize> {
 /// (`CIRCNN_NO_SIMD` in `super::fft`, future ones) parses the same way;
 /// callers memoize the result per process (`OnceLock`), matching the
 /// thread override's read-once semantics.
-pub(crate) fn env_flag(name: &str) -> bool {
+pub fn env_flag(name: &str) -> bool {
+    assert_registered(name);
     std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Parse a registered knob as `T`, falling back to `default` when the
+/// variable is unset or unparseable (a misspelled value never panics a
+/// serving process; it degrades to the default).
+pub fn env_parse<T: std::str::FromStr>(name: &str, default: T) -> T {
+    assert_registered(name);
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// A registered knob as a filesystem path, `default` when unset.
+pub fn env_path(name: &str, default: &str) -> std::path::PathBuf {
+    assert_registered(name);
+    std::env::var(name).map(std::path::PathBuf::from).unwrap_or_else(|_| default.into())
 }
 
 /// Upper bound on useful concurrency for coarse-grained parallel
@@ -213,5 +278,31 @@ mod tests {
         assert_eq!(ws.scratch.len(), 16);
         assert_eq!((ws.xr.len(), ws.xi.len()), (40, 40));
         assert_eq!((ws.acc_r.len(), ws.acc_i.len()), (5, 5));
+    }
+
+    #[test]
+    fn knob_registry_is_prefixed_and_duplicate_free() {
+        for (i, k) in KNOBS.iter().enumerate() {
+            assert!(k.name.starts_with("CIRCNN_"), "bad knob name {}", k.name);
+            assert!(!k.role.is_empty(), "{} has no role", k.name);
+            assert!(
+                !KNOBS[..i].iter().any(|p| p.name == k.name),
+                "duplicate registry row {}",
+                k.name
+            );
+        }
+    }
+
+    #[test]
+    fn env_helpers_read_registered_knobs() {
+        // values depend on the ambient environment (CI sets several of
+        // these); what's pinned is that reads of registered knobs succeed
+        // and fall back to the caller's default without panicking
+        let cases: usize = env_parse("CIRCNN_PROP_CASES", 64);
+        assert!(cases >= 1 || cases == 0);
+        let _ = env_flag("CIRCNN_NO_SIMD");
+        assert!(!env_path("CIRCNN_ARTIFACTS", "artifacts")
+            .as_os_str()
+            .is_empty());
     }
 }

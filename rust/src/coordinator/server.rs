@@ -585,21 +585,39 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
         // until the oldest clears one stage — which stalls the executor
         // (and every model's deadlines) for at most that long, the same
         // head-of-line cost the serial path pays on *every* batch by
-        // running the full forward inline.  Counted as executed here,
-        // mirroring the serial path's books (requests == responses +
-        // rejected); the sink does the response-side accounting.
-        metrics.batches.fetch_add(1, Ordering::Relaxed);
-        metrics
-            .batched_items
-            .fetch_add(occupied as u64, Ordering::Relaxed);
+        // running the full forward inline.
         let mut imgs = Vec::with_capacity(occupied * state.image_elems);
         for p in &pending {
             imgs.extend_from_slice(&p.item.image);
         }
-        pipe.submit_tensor(
+        match pipe.submit_tensor(
             Tensor { batch: occupied, h: *h, w: *w, c: *c, data: imgs },
             pending,
-        );
+        ) {
+            Ok(_) => {
+                // counted as executed only once the batch is in flight,
+                // mirroring the serial path's books (requests ==
+                // responses + rejected); the sink does the response-side
+                // accounting
+                metrics.batches.fetch_add(1, Ordering::Relaxed);
+                metrics
+                    .batched_items
+                    .fetch_add(occupied as u64, Ordering::Relaxed);
+            }
+            Err(err) => {
+                // stage workers gone (sink died / teardown raced us): the
+                // payload comes back — fail its requests instead of
+                // dropping them, and balance the books as shed load
+                let reason = err.to_string();
+                let pending = err.payload;
+                metrics
+                    .rejected
+                    .fetch_add(pending.len() as u64, Ordering::Relaxed);
+                for p in pending {
+                    let _ = p.item.resp.send(Err(InferError::Engine(reason.clone())));
+                }
+            }
+        }
         return;
     }
 
@@ -613,6 +631,8 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
     let (result, padded) = match &state.exec {
         #[cfg(feature = "pjrt")]
         ModelExec::Pjrt { artifact_path, input_shape, exec_batch, .. } => {
+            // lint:allow(unwrap): Pjrt exec state is only ever built when
+            // the executor owns an engine (start() invariant)
             let engine = engine.expect("pjrt state without engine");
             state.scratch[occupied * state.image_elems..].fill(0.0);
             let r = engine

@@ -30,6 +30,7 @@
 //! | [`data`] | bit-exact Rust mirror of the Python synthetic datasets |
 //! | [`models`] | registry of the six Table-1 networks + accounting; `fft_real_mults` is the packed-rfft cost model the simulator charges |
 //! | [`fpga`] | cycle-level simulator of the paper's FPGA datapath |
+//! | [`lint`] | repo-invariant static analysis (`circnn lint`): SAFETY comments, oracle-twin liveness, knob registry, bench-key contract, request-path unwrap hygiene — fixture-pinned, CI-blocking |
 //! | [`baselines`] | TrueNorth / reference-FPGA / analog analytical models |
 //! | [`native`] | pure-Rust inference engine (the FPGA datapath's functional twin; no PJRT); [`native::conv`] runs the BcConv pipeline batch-parallel with the weight-block-outer *spectrum-resident* MAC sweep (each weight spectrum loaded once per shard — the BRAM-reuse ordering), forward and backward; `NativeModel::set_precision` swaps every block-circulant layer onto the executed int16 BFP engine (`serve --precision fixed16`, `circnn precision`) |
 //! | [`train`] | native FFT-domain training subsystem: O(n log n) spectral backprop (conjugate-spectrum `dL/dx`, frequency-accumulated `dL/dw`), SGD+momentum, softmax-CE head — `circnn train-demo` on default features |
@@ -38,6 +39,37 @@
 //! | [`coordinator`] | router, dynamic batcher, executor over the native, pipelined-native or PJRT backend |
 //! | [`experiments`] | Table-1 / Fig-3 / Fig-6 / analog report generators |
 //! | [`util`] | JSON, PRNG, property-test and bench harness kits (incl. machine-readable bench JSON) |
+//!
+//! ## Correctness discipline (machine-checked)
+//!
+//! Six PRs of kernel and pipeline work rest on invariants that `circnn
+//! lint` ([`lint`]) now enforces mechanically — CI runs it as a blocking
+//! job, and `cargo run -- lint` reproduces it locally:
+//!
+//! * **SAFETY comments + pinned oracles.** Every `unsafe` site carries a
+//!   `// SAFETY:` justification (`#![deny(unsafe_op_in_unsafe_fn)]` is on
+//!   crate-wide), and every `#[target_feature]` SIMD kernel has a
+//!   `*_scalar` oracle that a test exercises against the dispatched name.
+//! * **No dead oracle twins.** Every kept ordering twin (`*_serial`,
+//!   `*_pixel_outer`, `*_sample_major`, `*_via_full`) is referenced by at
+//!   least one test, so a refactor cannot silently orphan a pin.
+//! * **Knob registry.** Every `CIRCNN_*` environment knob is read through
+//!   the [`circulant::sched`] helpers and listed in
+//!   [`circulant::sched::KNOBS`]; raw `std::env::var` reads elsewhere in
+//!   the crate fail the lint.
+//! * **Bench-key contract.** `*_speedup_*` keys in the bench JSON are
+//!   CI-gated (fail below 1.0) and `*_ratio_*` keys never are; the lint
+//!   checks the gate exists and no key mixes the two markers.
+//! * **Request-path hygiene.** No `.unwrap()`/`.expect()` on the
+//!   [`coordinator`]/[`pipeline`] request path and no unbounded channels
+//!   in [`pipeline`] (lock-poisoning recovery and `lint:allow(unwrap)`-
+//!   annotated construction invariants are the only exceptions).
+//!
+//! Violations are reported as `file:line: [rule] message` with a non-zero
+//! exit; the negative fixtures under `rust/tests/lint_fixtures/` pin that
+//! each rule actually fires.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod baselines;
 pub mod circulant;
@@ -46,6 +78,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod fpga;
+pub mod lint;
 pub mod models;
 pub mod native;
 pub mod pipeline;

@@ -1,0 +1,54 @@
+//! `circnn lint` — a repo-invariant static-analysis pass over the crate's
+//! own sources, dependency-free by construction.
+//!
+//! Six PRs of SIMD-kernel and pipelined-concurrency work rest on
+//! conventions that nothing used to check: `unsafe` blocks justified by
+//! `// SAFETY:` comments, `#[target_feature]` kernels pinned bitwise to
+//! `*_scalar` oracles, ordering twins kept alive by tests, `CIRCNN_*`
+//! knobs routed through the [`crate::circulant::sched`] registry, the
+//! bench-JSON `_speedup_`/`_ratio_` key contract matched against the CI
+//! gate, and no panicking calls or unbounded channels on the serving
+//! request path. This module turns each convention into a machine-checked
+//! rule (see [`rules`] for the full table) built on a line-level
+//! lexer/scanner ([`source`]) that strips comments, blanks string-literal
+//! contents, and tracks `#[cfg(test)]` regions — no syn, no regex, no
+//! external dependencies.
+//!
+//! Diagnostics render as `file:line: [rule] message` and any violation
+//! makes `circnn lint` exit non-zero, so the pass runs as a blocking CI
+//! job. The negative fixtures under `rust/tests/lint_fixtures/` seed one
+//! violation per rule and `tests/lint_rules.rs` pins that each is caught
+//! at the expected `file:line` — and that the merged tree itself lints
+//! clean.
+
+pub mod rules;
+pub mod source;
+
+use std::io;
+use std::path::Path;
+
+pub use rules::Diagnostic;
+pub use source::{FileKind, LintTree, SourceFile};
+
+/// Result of one lint pass.
+#[derive(Debug)]
+pub struct LintReport {
+    /// sorted by (file, line, rule), deduplicated
+    pub diagnostics: Vec<Diagnostic>,
+    /// how many `.rs` files were scanned
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+}
+
+/// Scan the tree rooted at `root` (the repo root, or the crate directory —
+/// [`source::collect`] finds `rust/` underneath either) and run every rule.
+pub fn run(root: &Path) -> io::Result<LintReport> {
+    let tree = source::collect(root)?;
+    let diagnostics = rules::check(&tree);
+    Ok(LintReport { diagnostics, files_scanned: tree.files.len() })
+}

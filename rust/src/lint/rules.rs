@@ -1,0 +1,672 @@
+//! The five invariant families `circnn lint` enforces, as passes over the
+//! scanned tree ([`super::source`]).  Every rule reports `file:line`
+//! [`Diagnostic`]s; the fixture tree under `rust/tests/lint_fixtures/`
+//! seeds one violation per rule and pins that it fires.
+//!
+//! | rule | invariant |
+//! |---|---|
+//! | `safety-comment` | every `unsafe` token carries a `// SAFETY:` (or `# Safety` doc) justification on the line or the comment block above |
+//! | `simd-oracle` | every `#[target_feature]` kernel has a `*_scalar` oracle, and a test exercises the oracle against the kernel (or its dispatcher) |
+//! | `dead-oracle` | every kept ordering twin (`*_serial`, `*_pixel_outer`, `*_sample_major`, `*_via_full`) is referenced by at least one test |
+//! | `env-knob` | `CIRCNN_*` knobs are read through `circulant::sched` helpers and listed in the `KNOBS` registry; raw `env::var` elsewhere fails |
+//! | `bench-key` | bench keys use the `_speedup_` (CI-gated) or `_ratio_` (informational) infix; the workflow gates `_speedup_` and never `_ratio_` |
+//! | `request-unwrap` | no `.unwrap()`/`.expect()` in non-test `coordinator`/`pipeline` code (lock-poisoning recovery and `lint:allow(unwrap)` excepted) |
+//! | `unbounded-channel` | no unbounded `mpsc::channel` in `pipeline` (backpressure must stay token/queue-bounded) |
+
+use std::collections::{BTreeSet, HashSet};
+use std::fmt;
+
+use super::source::{has_ident, FileKind, Line, LintTree, SourceFile};
+
+/// One lint violation, rendered `file:line: [rule] message`.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    pub file: String,
+    /// 1-indexed
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The kept-twin suffixes of rule `dead-oracle` — a fn named
+/// `<base><suffix>` where `<base>` is also a fn in non-test code is an
+/// oracle twin and must stay referenced by a test.
+const TWIN_SUFFIXES: [&str; 4] = ["_serial", "_pixel_outer", "_sample_major", "_via_full"];
+
+/// Run every rule over the tree; diagnostics come back sorted and deduped.
+pub fn check(tree: &LintTree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    safety_comments(&tree.files, &mut out);
+    simd_oracles(&tree.files, &mut out);
+    dead_oracles(&tree.files, &mut out);
+    env_knobs(&tree.files, &mut out);
+    bench_keys(tree, &mut out);
+    request_path(&tree.files, &mut out);
+    out.sort();
+    out.dedup();
+    out
+}
+
+fn diag(out: &mut Vec<Diagnostic>, file: &str, line: usize, rule: &'static str, message: String) {
+    out.push(Diagnostic { file: file.to_string(), line: line + 1, rule, message });
+}
+
+/// `// lint:allow(<what>): reason` on the flagged line or anywhere in the
+/// contiguous comment/attribute block above it suppresses the rule — the
+/// audited escape hatch for construction-time invariants.
+fn allowed(lines: &[Line], i: usize, marker: &str) -> bool {
+    if lines[i].raw.contains(marker) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let is_annotation = code.is_empty() || code.starts_with("#[") || code.starts_with("#!");
+        if !is_annotation {
+            return false;
+        }
+        if lines[j].raw.contains(marker) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Names of `fn` definitions on one stripped-code line.
+fn fn_defs(code: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("fn") {
+        let start = from + pos;
+        let end = start + 2;
+        from = start + 1;
+        let left_ok =
+            start == 0 || (!bytes[start - 1].is_ascii_alphanumeric() && bytes[start - 1] != b'_');
+        let right_ok = end < bytes.len() && bytes[end] == b' ';
+        if !(left_ok && right_ok) {
+            continue;
+        }
+        let rest = code[end..].trim_start();
+        let name_len = rest
+            .bytes()
+            .take_while(|b| b.is_ascii_alphanumeric() || *b == b'_')
+            .count();
+        if name_len > 0 {
+            out.push(&rest[..name_len]);
+        }
+    }
+    out
+}
+
+/// Rule `safety-comment`: every `unsafe` token in non-test code needs a
+/// `SAFETY:` (or `# Safety` doc-section) justification on the same line or
+/// in the contiguous comment/attribute block directly above.
+fn safety_comments(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    for f in files.iter().filter(|f| f.kind != FileKind::Test) {
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test || !has_ident(&line.code, "unsafe") {
+                continue;
+            }
+            if justified(&f.lines, i) {
+                continue;
+            }
+            diag(
+                out,
+                &f.rel,
+                i,
+                "safety-comment",
+                "`unsafe` without a `// SAFETY:` justification on the line or the \
+                 comment block above"
+                    .into(),
+            );
+        }
+    }
+}
+
+fn justified(lines: &[Line], i: usize) -> bool {
+    let carries = |l: &Line| l.raw.contains("SAFETY:") || l.raw.contains("# Safety");
+    if carries(&lines[i]) {
+        return true;
+    }
+    // walk up through the contiguous comment / attribute / blank block
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let is_annotation = code.is_empty() || code.starts_with("#[") || code.starts_with("#!");
+        if !is_annotation {
+            return false;
+        }
+        if carries(&lines[j]) {
+            return true;
+        }
+    }
+    false
+}
+
+/// Rule `simd-oracle`: a `#[target_feature]` kernel `foo_avx2`/`foo_neon`
+/// must have a `foo_scalar` oracle defined, and some test must exercise
+/// the oracle together with the kernel or its dispatcher `foo`.
+fn simd_oracles(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    let defs = non_test_fn_defs(files);
+    let test_texts: Vec<String> = files.iter().map(|f| f.test_text()).collect();
+
+    for f in files.iter().filter(|f| f.kind == FileKind::Src) {
+        let mut pending_target_feature = false;
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            if line.code.contains("#[target_feature") {
+                pending_target_feature = true;
+                continue;
+            }
+            let names = fn_defs(&line.code);
+            if names.is_empty() || !pending_target_feature {
+                continue;
+            }
+            pending_target_feature = false;
+            let kernel = names[0];
+            let base = kernel
+                .strip_suffix("_avx2")
+                .or_else(|| kernel.strip_suffix("_neon"))
+                .unwrap_or(kernel);
+            let oracle = format!("{base}_scalar");
+            if !defs.contains(oracle.as_str()) {
+                diag(
+                    out,
+                    &f.rel,
+                    i,
+                    "simd-oracle",
+                    format!("SIMD kernel `{kernel}` has no scalar oracle `{oracle}`"),
+                );
+                continue;
+            }
+            let pinned = test_texts.iter().any(|t| {
+                has_ident(t, &oracle) && (has_ident(t, kernel) || has_ident(t, base))
+            });
+            if !pinned {
+                diag(
+                    out,
+                    &f.rel,
+                    i,
+                    "simd-oracle",
+                    format!(
+                        "scalar oracle `{oracle}` is never exercised against `{kernel}` \
+                         (or its dispatcher `{base}`) in any test"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Rule `dead-oracle`: a kept ordering twin must be referenced by a test.
+fn dead_oracles(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    let defs = non_test_fn_defs(files);
+    let test_texts: Vec<String> = files.iter().map(|f| f.test_text()).collect();
+
+    for f in files.iter().filter(|f| f.kind == FileKind::Src) {
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for name in fn_defs(&line.code) {
+                let Some(base) = TWIN_SUFFIXES
+                    .iter()
+                    .find_map(|s| name.strip_suffix(s))
+                else {
+                    continue;
+                };
+                // `set_serial` is a setter, not a twin: only names whose
+                // base is itself a kept fn count as oracle twins
+                if base.is_empty() || !defs.contains(base) {
+                    continue;
+                }
+                if !test_texts.iter().any(|t| has_ident(t, name)) {
+                    diag(
+                        out,
+                        &f.rel,
+                        i,
+                        "dead-oracle",
+                        format!(
+                            "oracle twin `{name}` (twin of `{base}`) is not referenced \
+                             by any test — dead pin"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn non_test_fn_defs(files: &[SourceFile]) -> HashSet<String> {
+    let mut defs = HashSet::new();
+    for f in files.iter().filter(|f| f.kind == FileKind::Src) {
+        for line in f.lines.iter().filter(|l| !l.in_test) {
+            for name in fn_defs(&line.code) {
+                defs.insert(name.to_string());
+            }
+        }
+    }
+    defs
+}
+
+/// Rule `env-knob`: the file defining `const KNOBS` is the only place raw
+/// `env::var` may appear outside test code, and every `CIRCNN_*` string
+/// literal in non-test code must be a registered knob name.
+fn env_knobs(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    let registry_file = files.iter().find(|f| {
+        f.kind == FileKind::Src
+            && f.lines.iter().any(|l| {
+                !l.in_test && has_ident(&l.code, "const") && has_ident(&l.code, "KNOBS")
+            })
+    });
+    let registry: BTreeSet<&str> = registry_file
+        .map(|f| {
+            f.lines
+                .iter()
+                .filter(|l| !l.in_test)
+                .flat_map(|l| l.strings.iter())
+                .filter(|s| s.starts_with("CIRCNN_"))
+                .map(String::as_str)
+                .collect()
+        })
+        .unwrap_or_default();
+    let registry_rel = registry_file.map(|f| f.rel.as_str());
+
+    for f in files.iter().filter(|f| f.kind == FileKind::Src) {
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            if line.code.contains("env::var")
+                && Some(f.rel.as_str()) != registry_rel
+                && !allowed(&f.lines, i, "lint:allow(env)")
+            {
+                diag(
+                    out,
+                    &f.rel,
+                    i,
+                    "env-knob",
+                    "raw `env::var` read: route knobs through the \
+                     `circulant::sched` env helpers (env_flag/env_parse/env_path)"
+                        .into(),
+                );
+            }
+            for s in line.strings.iter().filter(|s| s.starts_with("CIRCNN_")) {
+                // knob names are SHOUTY literals; skip prose that merely
+                // mentions a knob inside a longer message, and the bare
+                // `"CIRCNN_"` prefix that prefix-matching code uses
+                let name_len = s
+                    .bytes()
+                    .take_while(|b| b.is_ascii_uppercase() || b.is_ascii_digit() || *b == b'_')
+                    .count();
+                if name_len != s.len() || s.len() == "CIRCNN_".len() {
+                    continue;
+                }
+                if !registry.contains(s.as_str()) {
+                    diag(
+                        out,
+                        &f.rel,
+                        i,
+                        "env-knob",
+                        format!(
+                            "env knob \"{s}\" is not listed in the central KNOBS registry"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Rule `bench-key`: derived bench keys carry exactly one of the
+/// `_speedup_` / `_ratio_` infixes; `_speedup_` keys require the CI
+/// workflow's `< 1.0` perf gate, and `_ratio_` keys must never be gated.
+fn bench_keys(tree: &LintTree, out: &mut Vec<Diagnostic>) {
+    let mut speedup_keys: Vec<(&str, usize, &str)> = Vec::new();
+    for f in tree.files.iter().filter(|f| f.kind == FileKind::Bench) {
+        for (i, line) in f.lines.iter().enumerate() {
+            for s in &line.strings {
+                if !is_key_candidate(s) {
+                    continue;
+                }
+                let (sp, ra) = (s.contains("_speedup_"), s.contains("_ratio_"));
+                match (sp, ra) {
+                    (true, true) => diag(
+                        out,
+                        &f.rel,
+                        i,
+                        "bench-key",
+                        format!(
+                            "bench key \"{s}\" mixes the `_speedup_` (gated) and \
+                             `_ratio_` (informational) markers"
+                        ),
+                    ),
+                    (true, false) => speedup_keys.push((&f.rel, i, s)),
+                    (false, true) => {}
+                    (false, false) => diag(
+                        out,
+                        &f.rel,
+                        i,
+                        "bench-key",
+                        format!(
+                            "bench key \"{s}\" must use the `_speedup_` (CI-gated) or \
+                             `_ratio_` (informational) infix"
+                        ),
+                    ),
+                }
+            }
+        }
+    }
+    if speedup_keys.is_empty() {
+        return;
+    }
+    match &tree.workflow {
+        None => {
+            for (rel, i, s) in speedup_keys {
+                diag(
+                    out,
+                    rel,
+                    i,
+                    "bench-key",
+                    format!("gated bench key \"{s}\": no CI workflow found to enforce the gate"),
+                );
+            }
+        }
+        Some((wf_rel, wf_lines)) => {
+            let gate_ok = wf_lines
+                .iter()
+                .any(|l| l.contains("_speedup_") && l.contains("< 1.0"));
+            if !gate_ok {
+                for (rel, i, s) in speedup_keys {
+                    diag(
+                        out,
+                        rel,
+                        i,
+                        "bench-key",
+                        format!(
+                            "gated bench key \"{s}\": {wf_rel} has no \
+                             `*_speedup_* < 1.0` perf gate"
+                        ),
+                    );
+                }
+            }
+            for (i, l) in wf_lines.iter().enumerate() {
+                if l.contains("_ratio_") && l.contains("< 1.0") {
+                    diag(
+                        out,
+                        wf_rel,
+                        i,
+                        "bench-key",
+                        "informational `*_ratio_*` bench keys must not be CI-gated".into(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A string literal is a derived-key candidate when `speedup` or `ratio`
+/// appears with an underscore directly on either side — prose like
+/// `"parallel speedup {x:.2}x"` is not a key.
+fn is_key_candidate(s: &str) -> bool {
+    for word in ["speedup", "ratio"] {
+        let bytes = s.as_bytes();
+        let mut from = 0;
+        while let Some(pos) = s[from..].find(word) {
+            let start = from + pos;
+            let end = start + word.len();
+            from = start + 1;
+            if (start > 0 && bytes[start - 1] == b'_')
+                || (end < bytes.len() && bytes[end] == b'_')
+            {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Rules `request-unwrap` + `unbounded-channel`: serving request-path
+/// hygiene in `src/coordinator/` and `src/pipeline/`.
+fn request_path(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    for f in files.iter().filter(|f| f.kind == FileKind::Src) {
+        let in_coord = f.rel.contains("src/coordinator/");
+        let in_pipe = f.rel.contains("src/pipeline/");
+        if !in_coord && !in_pipe {
+            continue;
+        }
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let panicky = line.code.contains(".unwrap()") || line.code.contains(".expect(");
+            if panicky
+                && !line.code.contains(".lock()")
+                && !allowed(&f.lines, i, "lint:allow(unwrap)")
+            {
+                diag(
+                    out,
+                    &f.rel,
+                    i,
+                    "request-unwrap",
+                    "`.unwrap()`/`.expect()` on the serving request path: return a \
+                     typed error, or annotate a construction-time invariant with \
+                     `// lint:allow(unwrap): why`"
+                        .into(),
+                );
+            }
+            if in_pipe
+                && has_path_token(&line.code, "mpsc::channel")
+                && !allowed(&f.lines, i, "lint:allow(channel)")
+            {
+                diag(
+                    out,
+                    &f.rel,
+                    i,
+                    "unbounded-channel",
+                    "unbounded `mpsc::channel` in the pipeline: use a bounded \
+                     `mpsc::sync_channel` (backpressure, never unbounded buffering)"
+                        .into(),
+                );
+            }
+        }
+    }
+}
+
+/// `needle` (a `::`-qualified path) occurs and is not a prefix of a longer
+/// identifier (`mpsc::channel` must not match `mpsc::channel_like`).
+fn has_path_token(haystack: &str, needle: &str) -> bool {
+    let bytes = haystack.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = haystack[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        from = start + 1;
+        if end == bytes.len() || !(bytes[end].is_ascii_alphanumeric() || bytes[end] == b'_') {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::source::scan;
+
+    fn file(rel: &str, kind: FileKind, text: &str) -> SourceFile {
+        SourceFile { rel: rel.to_string(), kind, lines: scan(text, kind) }
+    }
+
+    fn tree(files: Vec<SourceFile>) -> LintTree {
+        LintTree { files, workflow: None }
+    }
+
+    fn rules_of(d: &[Diagnostic]) -> Vec<&str> {
+        d.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = tree(vec![file(
+            "src/a.rs",
+            FileKind::Src,
+            "fn f(p: *const u8) { unsafe { p.read() }; }",
+        )]);
+        assert_eq!(rules_of(&check(&bad)), ["safety-comment"]);
+        let good = tree(vec![file(
+            "src/a.rs",
+            FileKind::Src,
+            "fn f(p: *const u8) {\n    // SAFETY: caller guarantees p is valid\n    unsafe { p.read() };\n}",
+        )]);
+        assert!(check(&good).is_empty(), "{:?}", check(&good));
+    }
+
+    #[test]
+    fn deny_attr_is_not_an_unsafe_token() {
+        let t = tree(vec![file("src/lib.rs", FileKind::Src, "#![deny(unsafe_op_in_unsafe_fn)]")]);
+        assert!(check(&t).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_tests_is_exempt() {
+        let t = tree(vec![file(
+            "src/a.rs",
+            FileKind::Src,
+            "#[cfg(test)]\nmod tests {\n    fn f(p: *const u8) { unsafe { p.read() }; }\n}",
+        )]);
+        assert!(check(&t).is_empty());
+    }
+
+    #[test]
+    fn kernel_without_oracle_or_pin_flagged() {
+        let no_oracle =
+            "// SAFETY: n/a\n#[target_feature(enable = \"avx2\")]\nunsafe fn frob_avx2() {}";
+        let t = tree(vec![file("src/k.rs", FileKind::Src, no_oracle)]);
+        let d = check(&t);
+        assert_eq!(rules_of(&d), ["simd-oracle"], "{d:?}");
+        assert!(d[0].message.contains("frob_scalar"));
+
+        let unpinned = format!("{no_oracle}\nfn frob_scalar() {{}}");
+        let t = tree(vec![file("src/k.rs", FileKind::Src, &unpinned)]);
+        let d = check(&t);
+        assert_eq!(rules_of(&d), ["simd-oracle"], "{d:?}");
+        assert!(d[0].message.contains("never exercised"));
+
+        let pinned = format!(
+            "{unpinned}\nfn frob() {{}}\n#[cfg(test)]\nmod tests {{\n    fn t() {{ frob(); frob_scalar(); }}\n}}"
+        );
+        let t = tree(vec![file("src/k.rs", FileKind::Src, &pinned)]);
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
+    }
+
+    #[test]
+    fn orphaned_twin_flagged_but_setters_are_not_twins() {
+        let orphan = "fn walk() {}\nfn walk_serial() {}";
+        let d = check(&tree(vec![file("src/t.rs", FileKind::Src, orphan)]));
+        assert_eq!(rules_of(&d), ["dead-oracle"], "{d:?}");
+
+        // no `fn set` exists, so `set_serial` is a setter, not a twin
+        let setter = "fn set_serial(&mut self, on: bool) {}";
+        assert!(check(&tree(vec![file("src/t.rs", FileKind::Src, setter)])).is_empty());
+
+        // a reference from an integration test keeps the twin alive
+        let lib = file("src/t.rs", FileKind::Src, orphan);
+        let it = file("tests/t.rs", FileKind::Test, "fn pin() { walk_serial(); }");
+        assert!(check(&tree(vec![lib, it])).is_empty());
+    }
+
+    #[test]
+    fn raw_env_reads_and_unregistered_knobs_flagged() {
+        let sched = file(
+            "src/circulant/sched.rs",
+            FileKind::Src,
+            "pub const KNOBS: &[Knob] = &[Knob { name: \"CIRCNN_GOOD\", role: \"x\" }];\n\
+             pub fn env_flag(n: &str) -> bool { std::env::var(n).is_ok() }",
+        );
+        let stray = file(
+            "src/other.rs",
+            FileKind::Src,
+            "fn f() { let _ = std::env::var(\"CIRCNN_GOOD\"); }\n\
+             fn g() -> &'static str { \"CIRCNN_ROGUE\" }",
+        );
+        let d = check(&tree(vec![stray, sched]));
+        assert_eq!(rules_of(&d), ["env-knob", "env-knob"], "{d:?}");
+        assert!(d.iter().any(|d| d.message.contains("raw `env::var`")));
+        assert!(d.iter().any(|d| d.message.contains("CIRCNN_ROGUE")));
+    }
+
+    #[test]
+    fn bench_key_contract() {
+        let b = file(
+            "benches/circulant.rs",
+            FileKind::Bench,
+            "fn main() {\n    let k = \"matmul_speedup_b8\";\n    let bad = \"fast_speedup8\";\n    let info = \"mac_ratio_k4\";\n}",
+        );
+        // gate present, ratio never gated => only the malformed key fires
+        let wf = (
+            "ci.yml".to_string(),
+            vec!["bad = [k for k in d if \"_speedup_\" in k and v < 1.0]".to_string()],
+        );
+        let t = LintTree { files: vec![b], workflow: Some(wf) };
+        let d = check(&t);
+        assert_eq!(rules_of(&d), ["bench-key"], "{d:?}");
+        assert!(d[0].message.contains("fast_speedup8"));
+    }
+
+    #[test]
+    fn speedup_keys_require_the_gate_and_ratio_must_stay_ungated() {
+        let b = file(
+            "benches/circulant.rs",
+            FileKind::Bench,
+            "fn main() { let k = \"x_speedup_k2\"; }",
+        );
+        let wf = (
+            "ci.yml".to_string(),
+            vec!["gate = [k for k in d if \"_ratio_\" in k and v < 1.0]".to_string()],
+        );
+        let t = LintTree { files: vec![b], workflow: Some(wf) };
+        let d = check(&t);
+        assert_eq!(rules_of(&d), ["bench-key", "bench-key"], "{d:?}");
+        assert!(d.iter().any(|x| x.message.contains("no `*_speedup_* < 1.0` perf gate")));
+        assert!(d.iter().any(|x| x.message.contains("must not be CI-gated")));
+    }
+
+    #[test]
+    fn request_path_hygiene() {
+        let text = "fn serve(rx: Receiver<u8>) {\n\
+                    \x20   let v = rx.recv().unwrap();\n\
+                    \x20   let g = self.m.lock().unwrap();\n\
+                    \x20   // lint:allow(unwrap): start-time invariant\n\
+                    \x20   let h = spawn().expect(\"spawn\");\n\
+                    \x20   let (tx2, rx2) = mpsc::channel();\n\
+                    }";
+        let d = check(&tree(vec![file("src/pipeline/engine.rs", FileKind::Src, text)]));
+        assert_eq!(rules_of(&d), ["request-unwrap", "unbounded-channel"], "{d:?}");
+        assert_eq!(d[0].line, 2, "the lock + annotated lines are exempt");
+        // the same unwrap outside coordinator/pipeline is out of scope
+        let elsewhere = check(&tree(vec![file("src/util/x.rs", FileKind::Src, text)]));
+        assert!(elsewhere.is_empty(), "{elsewhere:?}");
+    }
+
+    #[test]
+    fn sync_channel_is_not_unbounded() {
+        let t = tree(vec![file(
+            "src/pipeline/engine.rs",
+            FileKind::Src,
+            "fn f() { let (tx, rx) = mpsc::sync_channel::<u8>(4); }",
+        )]);
+        assert!(check(&t).is_empty());
+    }
+}

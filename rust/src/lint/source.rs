@@ -1,0 +1,435 @@
+//! Line-level source model for the lint pass: a from-scratch lexer that
+//! classifies every line of a Rust file into code, string literals and
+//! comment text, and marks `#[cfg(test)]` regions — the substrate the
+//! rules in [`super::rules`] match against.
+//!
+//! This is deliberately *not* a Rust parser.  The invariants `circnn lint`
+//! enforces are lexical (a `// SAFETY:` comment near an `unsafe` token, a
+//! `CIRCNN_*` string literal, a `fn name_serial(` definition), so a
+//! comment/string-aware line scanner is exactly enough — and it keeps the
+//! pass dependency-free, matching the crate's from-scratch `util` ethos.
+//! The scanner handles line and block comments (nested), plain and raw
+//! string literals, and disambiguates char literals from lifetimes.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// What part of the tree a file came from — rules scope themselves by kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FileKind {
+    /// `src/**` — library/binary code; `#[cfg(test)]` regions are tracked.
+    Src,
+    /// top-level `tests/*.rs` integration tests — every line is test code.
+    Test,
+    /// `benches/*.rs` — the bench-key contract applies here.
+    Bench,
+}
+
+/// One scanned line.
+#[derive(Debug)]
+pub struct Line {
+    /// the original text (markers, SAFETY comments and `lint:allow`
+    /// annotations are matched against this)
+    pub raw: String,
+    /// comment-stripped text with string-literal *contents* blanked to
+    /// spaces (quotes kept, so tokens never merge across a literal)
+    pub code: String,
+    /// contents of every string literal that starts on this line
+    pub strings: Vec<String>,
+    /// inside a `#[cfg(test)]` module (or a [`FileKind::Test`] file)
+    pub in_test: bool,
+}
+
+/// One scanned file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// path relative to the lint root, `/`-separated (diagnostic display)
+    pub rel: String,
+    pub kind: FileKind,
+    pub lines: Vec<Line>,
+}
+
+impl SourceFile {
+    /// Concatenated `code` of every test-region line — the unit the
+    /// oracle-pinning rules search for co-occurring identifiers.
+    pub fn test_text(&self) -> String {
+        let mut s = String::new();
+        for l in &self.lines {
+            if l.in_test {
+                s.push_str(&l.code);
+                s.push('\n');
+            }
+        }
+        s
+    }
+}
+
+/// `needle` occurs in `haystack` as a whole identifier (neighbors are not
+/// `[A-Za-z0-9_]`).  The matcher every rule uses, so `unsafe` never matches
+/// `unsafe_op_in_unsafe_fn` and `complex_mul_acc` never matches
+/// `complex_mul_acc_scalar`.
+pub fn has_ident(haystack: &str, needle: &str) -> bool {
+    if needle.is_empty() {
+        return false;
+    }
+    let bytes = haystack.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = haystack[from..].find(needle) {
+        let start = from + pos;
+        let end = start + needle.len();
+        let left_ok = start == 0 || !is_ident_byte(bytes[start - 1]);
+        let right_ok = end == bytes.len() || !is_ident_byte(bytes[end]);
+        if left_ok && right_ok {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lexer state that survives across lines.
+#[derive(Default)]
+struct ScanState {
+    /// nesting depth of `/* */` block comments
+    block_comment: usize,
+    /// inside a plain `"` string
+    in_str: bool,
+    /// inside a raw string, with this many `#`s in the closing delimiter
+    in_raw_str: Option<usize>,
+}
+
+/// Scan one file's text into classified lines with test regions marked.
+pub fn scan(text: &str, kind: FileKind) -> Vec<Line> {
+    let mut state = ScanState::default();
+    let mut out: Vec<Line> = Vec::new();
+    // test-region tracking: brace depth over stripped code, plus the depth
+    // at which the innermost `#[cfg(test)] mod` opened
+    let mut depth: i64 = 0;
+    let mut test_region_depth: Option<i64> = None;
+    // a `#[cfg(test)]` attribute waiting for its item
+    let mut pending_cfg_test = false;
+
+    for raw_line in text.lines() {
+        let (code, strings) = strip_line(raw_line, &mut state);
+        let depth_before = depth;
+        for b in code.bytes() {
+            match b {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        let trimmed = code.trim();
+        let mut in_test = kind == FileKind::Test;
+        if let Some(open) = test_region_depth {
+            // inside an open region: every line up to and including the
+            // closing brace is test code
+            in_test = true;
+            if depth <= open {
+                test_region_depth = None;
+            }
+        } else {
+            if trimmed.contains("#[cfg(test)]") {
+                pending_cfg_test = true;
+            }
+            if pending_cfg_test && has_ident(&code, "mod") {
+                test_region_depth = Some(depth_before);
+                pending_cfg_test = false;
+                in_test = true;
+                if depth <= depth_before {
+                    // one-line `#[cfg(test)] mod m {}`
+                    test_region_depth = None;
+                }
+            } else if pending_cfg_test && !trimmed.is_empty() && !trimmed.starts_with("#[") {
+                // the attribute attached to a non-mod item (a lone gated
+                // fn); treat it conservatively as non-test and move on
+                pending_cfg_test = false;
+            }
+        }
+        out.push(Line { raw: raw_line.to_string(), code, strings, in_test });
+    }
+    out
+}
+
+/// Strip comments from one line (updating cross-line state), returning the
+/// code text (string contents blanked, quotes kept) and the string-literal
+/// contents that started on this line.
+fn strip_line(line: &str, state: &mut ScanState) -> (String, Vec<String>) {
+    let mut code = String::with_capacity(line.len());
+    let mut strings: Vec<String> = Vec::new();
+    let mut cur_str = String::new();
+    let chars: Vec<char> = line.chars().collect();
+    let n = chars.len();
+    let mut i = 0;
+
+    while i < n {
+        let c = chars[i];
+        // --- inside a block comment ---
+        if state.block_comment > 0 {
+            if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                state.block_comment -= 1;
+                i += 2;
+            } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                state.block_comment += 1;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        // --- inside a raw string ---
+        if let Some(hashes) = state.in_raw_str {
+            if c == '"'
+                && chars[i + 1..].iter().take(hashes).filter(|&&h| h == '#').count() == hashes
+            {
+                state.in_raw_str = None;
+                strings.push(std::mem::take(&mut cur_str));
+                code.push('"');
+                for _ in 0..hashes {
+                    code.push(' ');
+                }
+                i += 1 + hashes;
+            } else {
+                cur_str.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // --- inside a plain string ---
+        if state.in_str {
+            if c == '\\' && i + 1 < n {
+                cur_str.push(c);
+                cur_str.push(chars[i + 1]);
+                code.push(' ');
+                code.push(' ');
+                i += 2;
+            } else if c == '"' {
+                state.in_str = false;
+                strings.push(std::mem::take(&mut cur_str));
+                code.push('"');
+                i += 1;
+            } else {
+                cur_str.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // --- normal code ---
+        match c {
+            '/' if i + 1 < n && chars[i + 1] == '/' => break, // line comment
+            '/' if i + 1 < n && chars[i + 1] == '*' => {
+                state.block_comment += 1;
+                i += 2;
+            }
+            '"' => {
+                state.in_str = true;
+                code.push('"');
+                i += 1;
+            }
+            'r' if i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '#') => {
+                // raw string candidate: r"..." or r#"..."#
+                let mut j = i + 1;
+                let mut hashes = 0;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    state.in_raw_str = Some(hashes);
+                    code.push('r');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    code.push('"');
+                    i = j + 1;
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // char literal vs lifetime: a literal is '\x', or 'c'
+                // (any single char followed by a closing quote)
+                if i + 1 < n && chars[i + 1] == '\\' {
+                    // escaped char literal: skip to the closing quote
+                    code.push('\'');
+                    let mut j = i + 2;
+                    while j < n && chars[j] != '\'' {
+                        code.push(' ');
+                        j += 1;
+                    }
+                    code.push('\'');
+                    i = (j + 1).min(n);
+                } else if i + 2 < n && chars[i + 2] == '\'' {
+                    code.push('\'');
+                    code.push(' ');
+                    code.push('\'');
+                    i += 3;
+                } else {
+                    // a lifetime — keep the tick, the identifier follows
+                    code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                code.push(c);
+                i += 1;
+            }
+        }
+    }
+    // a string still open at end of line continues on the next one
+    if (state.in_str || state.in_raw_str.is_some()) && !cur_str.is_empty() {
+        strings.push(std::mem::take(&mut cur_str));
+    }
+    (code, strings)
+}
+
+/// The tree layout the lint walks, resolved from a root directory.  The
+/// real repo keeps the crate under `rust/`; the negative-fixture tree (and
+/// any plain crate) keeps `src`/`benches` at the root — both are accepted.
+pub struct LintTree {
+    pub files: Vec<SourceFile>,
+    /// the CI workflow, when present: (relative path, raw lines)
+    pub workflow: Option<(String, Vec<String>)>,
+}
+
+/// Walk `root` and scan every relevant file.  Scanned: `src/**/*.rs`
+/// (recursive), top-level `tests/*.rs` (the fixture subtrees under
+/// `tests/` are *not* cargo targets and are not scanned), `benches/*.rs`,
+/// and the CI workflow (`.github/workflows/ci.yml`, or `ci.yml` at the
+/// root for fixture trees).
+pub fn collect(root: &Path) -> io::Result<LintTree> {
+    let crate_dir = if root.join("rust/src").is_dir() {
+        root.join("rust")
+    } else {
+        root.to_path_buf()
+    };
+    let mut files = Vec::new();
+    let src = crate_dir.join("src");
+    if src.is_dir() {
+        let mut paths = Vec::new();
+        walk_rs(&src, &mut paths)?;
+        for p in paths {
+            files.push(read_one(root, &p, FileKind::Src)?);
+        }
+    }
+    for (dir, kind) in [("tests", FileKind::Test), ("benches", FileKind::Bench)] {
+        let d = crate_dir.join(dir);
+        if d.is_dir() {
+            for p in top_level_rs(&d)? {
+                files.push(read_one(root, &p, kind)?);
+            }
+        }
+    }
+    files.sort_by(|a, b| a.rel.cmp(&b.rel));
+
+    let workflow = [root.join(".github/workflows/ci.yml"), root.join("ci.yml")]
+        .into_iter()
+        .find(|p| p.is_file())
+        .map(|p| -> io::Result<_> {
+            let text = fs::read_to_string(&p)?;
+            Ok((rel_display(root, &p), text.lines().map(str::to_string).collect()))
+        })
+        .transpose()?;
+
+    Ok(LintTree { files, workflow })
+}
+
+fn read_one(root: &Path, path: &Path, kind: FileKind) -> io::Result<SourceFile> {
+    let text = fs::read_to_string(path)?;
+    Ok(SourceFile { rel: rel_display(root, path), kind, lines: scan(&text, kind) })
+}
+
+fn rel_display(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// All `.rs` files under `dir`, recursively, sorted for determinism.
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// `.rs` files directly in `dir` (non-recursive), sorted.
+fn top_level_rs(dir: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut out: Vec<_> = fs::read_dir(dir)?
+        .collect::<io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .filter(|p| p.is_file() && p.extension().is_some_and(|x| x == "rs"))
+        .collect();
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_separated() {
+        let lines = scan(
+            "let x = \"unsafe in a string\"; // unsafe in a comment\nunsafe { x }",
+            FileKind::Src,
+        );
+        assert!(!has_ident(&lines[0].code, "unsafe"), "{}", lines[0].code);
+        assert_eq!(lines[0].strings, vec!["unsafe in a string".to_string()]);
+        assert!(has_ident(&lines[1].code, "unsafe"));
+    }
+
+    #[test]
+    fn ident_boundaries_respected() {
+        assert!(!has_ident("deny(unsafe_op_in_unsafe_fn)", "unsafe"));
+        assert!(!has_ident("complex_mul_acc_scalar(a)", "complex_mul_acc"));
+        assert!(has_ident("complex_mul_acc(a)", "complex_mul_acc"));
+        assert!(has_ident("unsafe { }", "unsafe"));
+    }
+
+    #[test]
+    fn char_literals_do_not_open_strings() {
+        let lines = scan("let c = '\"'; let d = 'x'; let r = &'a str;", FileKind::Src);
+        assert!(lines[0].strings.is_empty(), "{:?}", lines[0].strings);
+        assert!(lines[0].code.contains("str"));
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let lines = scan("/* start\n unsafe here\n*/ let a = 1;", FileKind::Src);
+        assert!(!has_ident(&lines[1].code, "unsafe"));
+        assert!(lines[2].code.contains("let a = 1;"));
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let text =
+            "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { live(); }\n}\nfn after() {}";
+        let lines = scan(text, FileKind::Src);
+        assert!(!lines[0].in_test);
+        assert!(lines[2].in_test && lines[3].in_test && lines[4].in_test);
+        assert!(!lines[5].in_test, "region must close at its brace");
+    }
+
+    #[test]
+    fn raw_strings_are_blanked() {
+        let lines = scan("let p = r\"unsafe \\ path\";", FileKind::Src);
+        assert!(!has_ident(&lines[0].code, "unsafe"));
+        assert_eq!(lines[0].strings, vec!["unsafe \\ path".to_string()]);
+    }
+}

@@ -17,6 +17,7 @@
 //!                               (loss curve; PJRT artifact driver with
 //!                               --features pjrt)
 //! circnn models                 list registry models + accounting
+//! circnn lint [--root DIR]      repo-invariant static analysis (CI-blocking)
 //! ```
 //!
 //! Arguments are parsed by hand (`clap` is outside the offline dependency
@@ -58,6 +59,7 @@ fn main() {
         "serve" => cmd_serve(&flags),
         "train-demo" => cmd_train_demo(&flags),
         "models" => cmd_models(),
+        "lint" => cmd_lint(&flags),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -112,6 +114,12 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
 
 misc:
   models     list the registry with accounting
+  lint       [--root DIR] repo-invariant static analysis over the crate's
+             own sources: SAFETY comments + pinned SIMD oracles, dead
+             oracle twins, the CIRCNN_* knob registry, the bench-key
+             gating contract, request-path unwrap/channel hygiene;
+             prints `file:line: [rule] message` and exits non-zero on
+             any violation (the CI lint job runs exactly this)
 ";
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -284,6 +292,47 @@ fn cmd_models() -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// Repo-invariant static analysis over the crate's own sources
+/// ([`circnn::lint`]). Non-zero exit on any violation; CI runs this as a
+/// blocking job.
+fn cmd_lint(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let root = match flags.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => lint_root()?,
+    };
+    let report = circnn::lint::run(&root)?;
+    for d in &report.diagnostics {
+        eprintln!("{d}");
+    }
+    if !report.is_clean() {
+        anyhow::bail!("{} lint violation(s)", report.diagnostics.len());
+    }
+    println!(
+        "lint: clean ({} files scanned under {})",
+        report.files_scanned,
+        root.display()
+    );
+    Ok(())
+}
+
+/// Walk up from the current directory, preferring an ancestor that holds
+/// `rust/src/lib.rs` (the repo root — keeps `.github/workflows/` in scope
+/// when invoked from `rust/`) over one that only holds `src/lib.rs`.
+fn lint_root() -> anyhow::Result<std::path::PathBuf> {
+    let cwd = std::env::current_dir()?;
+    let mut crate_root = None;
+    for dir in cwd.ancestors() {
+        if dir.join("rust").join("src").join("lib.rs").is_file() {
+            return Ok(dir.to_path_buf());
+        }
+        if crate_root.is_none() && dir.join("src").join("lib.rs").is_file() {
+            crate_root = Some(dir.to_path_buf());
+        }
+    }
+    crate_root
+        .ok_or_else(|| anyhow::anyhow!("no src/lib.rs above {} (pass --root)", cwd.display()))
 }
 
 fn cmd_infer(flags: &HashMap<String, String>) -> anyhow::Result<()> {

@@ -8,7 +8,14 @@
 //! Dropping (or [`Pipeline::shutdown`]) closes the input channel; workers
 //! drain and exit stage by stage, so every submitted batch reaches the
 //! sink before teardown completes.
+//!
+//! Submission is fallible: if the stage workers are gone (teardown raced
+//! the submitter, or a sink panicked), [`Pipeline::submit`] returns a
+//! [`SubmitError`] carrying the payload back instead of panicking on the
+//! serving request path.
 
+use std::error::Error;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -28,6 +35,35 @@ pub struct Pipeline<P: Send + 'static> {
     depth: usize,
     next_seq: AtomicU64,
 }
+
+/// The stage workers are gone — the batch could not enter the pipeline.
+/// Carries the payload back so the caller can fail its pending requests
+/// (or resubmit elsewhere) instead of losing them.
+pub struct SubmitError<P> {
+    /// the payload handed to [`Pipeline::submit`], returned untouched
+    pub payload: P,
+}
+
+impl<P> SubmitError<P> {
+    fn new(payload: P) -> Self {
+        Self { payload }
+    }
+}
+
+// manual impls: `P` is an arbitrary payload, so no derive bounds
+impl<P> fmt::Debug for SubmitError<P> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("SubmitError(..)")
+    }
+}
+
+impl<P> fmt::Display for SubmitError<P> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("pipeline stage workers shut down")
+    }
+}
+
+impl<P> Error for SubmitError<P> {}
 
 impl<P: Send + 'static> Pipeline<P> {
     /// Spawn the stage workers.  `depth` bounds the number of batches past
@@ -59,6 +95,8 @@ impl<P: Send + 'static> Pipeline<P> {
         for (i, spec) in stages.into_iter().enumerate() {
             let model = model.clone();
             let stats = stats.clone();
+            // lint:allow(unwrap): construction-time plumbing — exactly one
+            // receiver exists per stage by loop structure
             let stage_rx = rx.take().expect("one receiver per stage");
             let builder = std::thread::Builder::new().name(format!("circnn-stage{i}"));
             let handle = if i < last {
@@ -73,7 +111,10 @@ impl<P: Send + 'static> Pipeline<P> {
                     })
                 })
             } else {
+                // lint:allow(unwrap): construction-time — the last stage is
+                // visited once, taking the one sink and the token receiver
                 let mut sink = sink.take().expect("exactly one sink");
+                // lint:allow(unwrap): same construction-time invariant
                 let token_rx = token_rx.take().expect("token receiver on the last stage");
                 builder.spawn(move || {
                     stage_loop(&model, spec.ops, i, stage_rx, &stats, move |job: Job<P>| {
@@ -84,6 +125,8 @@ impl<P: Send + 'static> Pipeline<P> {
                     })
                 })
             };
+            // lint:allow(unwrap): thread spawn fails only on resource
+            // exhaustion at startup, before any request is in flight
             workers.push(handle.expect("spawn pipeline stage worker"));
         }
 
@@ -100,7 +143,8 @@ impl<P: Send + 'static> Pipeline<P> {
     /// Feed one batch into stage 0 and return its sequence number.
     /// **Blocks** while `depth` batches are already in flight — bounded
     /// backpressure, never unbounded buffering.  With a single submitter,
-    /// sink completions arrive in submission order.
+    /// sink completions arrive in submission order.  If the stage workers
+    /// are gone the payload comes back in the [`SubmitError`].
     pub fn submit(
         &self,
         images: &[f32],
@@ -109,7 +153,7 @@ impl<P: Send + 'static> Pipeline<P> {
         w: usize,
         c: usize,
         payload: P,
-    ) -> u64 {
+    ) -> Result<u64, SubmitError<P>> {
         assert_eq!(images.len(), batch * h * w * c, "image buffer size");
         self.submit_tensor(Tensor { batch, h, w, c, data: images.to_vec() }, payload)
     }
@@ -117,25 +161,25 @@ impl<P: Send + 'static> Pipeline<P> {
     /// [`submit`](Self::submit) without the copy: the caller hands over an
     /// already-assembled activation tensor (the server builds the batch
     /// straight into it).
-    pub fn submit_tensor(&self, tensor: Tensor, payload: P) -> u64 {
+    pub fn submit_tensor(&self, tensor: Tensor, payload: P) -> Result<u64, SubmitError<P>> {
         assert_eq!(
             tensor.data.len(),
             tensor.batch * tensor.h * tensor.w * tensor.c,
             "tensor buffer size"
         );
+        let (Some(tokens), Some(input)) = (self.tokens.as_ref(), self.input.as_ref()) else {
+            return Err(SubmitError::new(payload));
+        };
+        // deposit the in-flight token first; a closed token channel means
+        // the last-stage worker (the sink's thread) is gone
+        if tokens.send(()).is_err() {
+            return Err(SubmitError::new(payload));
+        }
         let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
-        self.tokens
-            .as_ref()
-            .expect("pipeline running")
-            .send(())
-            .expect("pipeline workers hung up");
-        let job = Job { seq, tensor, payload };
-        self.input
-            .as_ref()
-            .expect("pipeline running")
-            .send(job)
-            .expect("pipeline workers hung up");
-        seq
+        match input.send(Job { seq, tensor, payload }) {
+            Ok(()) => Ok(seq),
+            Err(mpsc::SendError(job)) => Err(SubmitError::new(job.payload)),
+        }
     }
 
     /// Occupancy counters + event log (shared with `Metrics`).
@@ -232,7 +276,7 @@ mod tests {
                 let mut want = Vec::new();
                 for (i, &b) in batches.iter().enumerate() {
                     let (xs, _) = data::batch(&ds, (i * 8) as u64, b, false);
-                    let seq = pipe.submit(&xs, b, h, w, c, i as u64);
+                    let seq = pipe.submit(&xs, b, h, w, c, i as u64).expect("pipeline running");
                     assert_eq!(seq, i as u64);
                     want.push(native.forward(&xs, b, h, w, c));
                 }
@@ -270,7 +314,7 @@ mod tests {
         let got = Arc::new(Mutex::new(Vec::new()));
         let pipe = Pipeline::start(native.clone(), plan, Some(1), collecting_sink(got.clone()));
         let (xs, _) = data::batch(&ds, 0, 4, false);
-        pipe.submit(&xs, 4, h, w, c, 0);
+        pipe.submit(&xs, 4, h, w, c, 0).unwrap();
         pipe.shutdown();
         let got = got.lock().unwrap();
         assert_eq!(got.len(), 1);
@@ -291,7 +335,7 @@ mod tests {
         let got = Arc::new(Mutex::new(Vec::new()));
         let pipe = Pipeline::start(native.clone(), plan, None, collecting_sink(got.clone()));
         let (xs, _) = data::batch(&ds, 0, 2, false);
-        pipe.submit(&xs, 2, h, w, c, 0);
+        pipe.submit(&xs, 2, h, w, c, 0).unwrap();
         pipe.shutdown();
         let got = got.lock().unwrap();
         assert_eq!(got.len(), 1);
@@ -336,7 +380,7 @@ mod tests {
             let counter = submitted.clone();
             scope.spawn(move || {
                 for i in 0..TOTAL {
-                    pipe.submit(&xs, 1, h, w, c, i);
+                    pipe.submit(&xs, 1, h, w, c, i).expect("pipeline running");
                     counter.fetch_add(1, Ordering::SeqCst);
                 }
             });
@@ -369,7 +413,7 @@ mod tests {
         assert_eq!(pipe.depth(), stages, "default depth = one batch per stage");
         let (xs, _) = data::batch(&ds, 0, 3, false);
         for _ in 0..4 {
-            pipe.submit(&xs, 3, h, w, c, ());
+            pipe.submit(&xs, 3, h, w, c, ()).unwrap();
         }
         assert_eq!(pipe.submitted(), 4);
         let stats = pipe.stats().clone();
@@ -381,5 +425,67 @@ mod tests {
         let events = stats.events.lock().unwrap();
         assert_eq!(events.len(), 4 * stages);
         assert!(events.iter().all(|e| e.end_us >= e.start_us));
+    }
+
+    #[test]
+    fn drop_with_batches_in_flight_drains_and_joins() {
+        // implicit teardown (Drop, not shutdown()) with work still moving
+        // through the stages: every submitted batch must reach the sink
+        // before drop returns — both multi-stage and the single-stage
+        // degenerate shape
+        for max_stages in [usize::MAX, 1] {
+            let model = models::by_name("mnist_mlp_2").unwrap();
+            let native = Arc::new(NativeModel::init_random(&model, 17));
+            let (h, w, c) = model.input;
+            let ds = data::dataset(model.dataset).unwrap();
+            let plan = PipelinePlan::for_model(&native, max_stages);
+            let got = Arc::new(Mutex::new(Vec::new()));
+            let pipe =
+                Pipeline::start(native.clone(), plan, Some(2), collecting_sink(got.clone()));
+            let (xs, _) = data::batch(&ds, 0, 2, false);
+            for i in 0..6u64 {
+                pipe.submit(&xs, 2, h, w, c, i).expect("pipeline running");
+            }
+            drop(pipe); // must block until the workers have drained + joined
+            let got = got.lock().unwrap();
+            assert_eq!(got.len(), 6, "batches lost on drop ({max_stages} stages cap)");
+            let want = native.forward(&xs, 2, h, w, c);
+            for (seq, data) in got.iter() {
+                assert_eq!(data, &want, "batch {seq} diverged after drop-drain");
+            }
+        }
+    }
+
+    #[test]
+    fn dead_sink_surfaces_as_submit_error_not_panic() {
+        // a panicking sink kills the last-stage worker; the submitter must
+        // get its payload back in a SubmitError instead of panicking, and
+        // dropping the pipeline must still join cleanly
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let native = Arc::new(NativeModel::init_random(&model, 7));
+        let (h, w, c) = model.input;
+        let ds = data::dataset(model.dataset).unwrap();
+        let plan = PipelinePlan::for_model(&native, 2);
+        let pipe = Pipeline::start(
+            native,
+            plan,
+            Some(2),
+            |_t: Tensor, _p: u64| panic!("sink dies on purpose"),
+        );
+        let (xs, _) = data::batch(&ds, 0, 1, false);
+        let mut refused = None;
+        for i in 0..200u64 {
+            match pipe.submit(&xs, 1, h, w, c, i) {
+                Ok(_) => std::thread::sleep(Duration::from_millis(5)),
+                Err(err) => {
+                    refused = Some((i, err));
+                    break;
+                }
+            }
+        }
+        let (i, err) = refused.expect("dead sink never refused a submit");
+        assert_eq!(err.payload, i, "payload must come back with the error");
+        assert_eq!(err.to_string(), "pipeline stage workers shut down");
+        drop(pipe); // joins the panicked worker without propagating
     }
 }

@@ -53,6 +53,6 @@ pub mod plan;
 pub mod stage;
 pub mod timeline;
 
-pub use engine::Pipeline;
+pub use engine::{Pipeline, SubmitError};
 pub use plan::{PipelinePlan, StageSpec};
 pub use stage::{PipelineStats, StageEvent, StageStat};

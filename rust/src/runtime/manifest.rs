@@ -196,11 +196,10 @@ impl Manifest {
         self.dir.join(file)
     }
 
-    /// Default artifacts directory: `$CIRCNN_ARTIFACTS` or `./artifacts`.
+    /// Default artifacts directory: `$CIRCNN_ARTIFACTS` or `./artifacts`
+    /// (read through the central knob registry in `circulant::sched`).
     pub fn default_dir() -> PathBuf {
-        std::env::var("CIRCNN_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+        crate::circulant::sched::env_path("CIRCNN_ARTIFACTS", "artifacts")
     }
 
     /// An in-memory manifest covering the native registry — no files on

@@ -16,16 +16,12 @@ pub struct Config {
 
 impl Default for Config {
     fn default() -> Self {
-        // CIRCNN_PROP_CASES / CIRCNN_PROP_SEED override for deeper sweeps
-        let cases = std::env::var("CIRCNN_PROP_CASES")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(64);
-        let seed = std::env::var("CIRCNN_PROP_SEED")
-            .ok()
-            .and_then(|v| v.parse().ok())
-            .unwrap_or(0xC1CC_0DE5);
-        Self { cases, seed }
+        // CIRCNN_PROP_CASES / CIRCNN_PROP_SEED override for deeper sweeps,
+        // read through the central knob registry in `circulant::sched`
+        Self {
+            cases: crate::circulant::sched::env_parse("CIRCNN_PROP_CASES", 64),
+            seed: crate::circulant::sched::env_parse("CIRCNN_PROP_SEED", 0xC1CC_0DE5),
+        }
     }
 }
 

@@ -1,0 +1,15 @@
+//! Fixture bench: seeded `bench-key` contract violations next to one
+//! well-formed pair.  The fixture workflow (`../ci.yml`) gates `_ratio_`
+//! keys and has no `_speedup_` gate, so the gated key below is flagged.
+
+fn main() {
+    let rows: Vec<(String, f64)> = vec![
+        ("conv_speedup_k8".to_string(), 1.5), // LINT-EXPECT: bench-key
+        ("mac_ratio_k8".to_string(), 0.8),
+        ("fast_speedup8".to_string(), 2.0), // LINT-EXPECT: bench-key
+        ("mixed_speedup_ratio_k4".to_string(), 1.0), // LINT-EXPECT: bench-key
+    ];
+    for (k, v) in rows {
+        println!("{k} {v}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Seeded `safety-comment` violation, with a justified site as the
+//! negative control.
+
+pub fn naked(p: *const u8) -> u8 {
+    unsafe { p.read() } // LINT-EXPECT: safety-comment
+}
+
+pub fn justified(p: *const u8) -> u8 {
+    // SAFETY: fixture caller passes a valid, aligned pointer
+    unsafe { p.read() }
+}
+
+pub fn justified_through_attributes(p: *const u8) -> u8 {
+    // SAFETY: the justification may sit above attribute lines
+    #[allow(clippy::let_and_return)]
+    let v = unsafe { p.read() };
+    v
+}

@@ -1,0 +1,12 @@
+//! Fixture knob registry — the one file where raw `env::var` is legal.
+
+pub struct Knob {
+    pub name: &'static str,
+    pub role: &'static str,
+}
+
+pub const KNOBS: &[Knob] = &[Knob { name: "CIRCNN_FIXTURE_OK", role: "fixture knob" }];
+
+pub fn env_flag(name: &str) -> bool {
+    std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}

@@ -1,0 +1,28 @@
+//! Seeded `request-unwrap` violations on the fixture's request path, with
+//! the two sanctioned escapes (lock-poisoning recovery, `lint:allow`) as
+//! negative controls.
+
+pub fn respond(rx: std::sync::mpsc::Receiver<u8>) -> u8 {
+    rx.recv().unwrap() // LINT-EXPECT: request-unwrap
+}
+
+pub fn label(x: Option<u8>) -> u8 {
+    x.expect("fixture label") // LINT-EXPECT: request-unwrap
+}
+
+pub fn poison_recovery(m: &std::sync::Mutex<u8>) -> u8 {
+    *m.lock().unwrap()
+}
+
+pub fn start_invariant(x: Option<u8>) -> u8 {
+    // lint:allow(unwrap): construction-time fixture invariant
+    x.expect("fixture start")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_may_unwrap() {
+        assert_eq!(Some(1u8).unwrap(), 1);
+    }
+}

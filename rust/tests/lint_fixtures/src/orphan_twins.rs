@@ -1,0 +1,29 @@
+//! Seeded `dead-oracle` violation: `walk_serial` twins `walk` but no test
+//! references it.  `probe_via_full` is the live negative control, and
+//! `set_serial` shows the setter exemption (no `fn set` exists).
+
+pub fn walk(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+pub fn walk_serial(xs: &[f32]) -> f32 { // LINT-EXPECT: dead-oracle
+    xs.iter().sum()
+}
+
+pub fn probe(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+pub fn probe_via_full(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+pub fn set_serial(_on: bool) {}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn probe_via_full_stays_pinned() {
+        assert_eq!(super::probe(&[1.0, 2.0]), super::probe_via_full(&[1.0, 2.0]));
+    }
+}

@@ -1,0 +1,15 @@
+//! Seeded `unbounded-channel` + `request-unwrap` violations in the
+//! fixture pipeline, with bounded and annotated channels staying quiet.
+
+pub fn leak() {
+    let (tx, rx) = std::sync::mpsc::channel::<u8>(); // LINT-EXPECT: unbounded-channel
+    tx.send(1).expect("send"); // LINT-EXPECT: request-unwrap
+    let _ = rx;
+}
+
+pub fn bounded() {
+    let (tx, rx) = std::sync::mpsc::sync_channel::<u8>(4);
+    let _ = (tx, rx);
+    // lint:allow(channel): fixture-pinned escape hatch
+    let (_tx2, _rx2) = std::sync::mpsc::channel::<u8>();
+}

@@ -1,0 +1,38 @@
+//! Seeded `simd-oracle` violations: a kernel with no oracle at all, a
+//! kernel whose oracle exists but is never exercised by a test, and (as
+//! the negative control) a fully pinned kernel/oracle/dispatcher trio.
+
+// SAFETY: fixture kernel; the dispatcher checks avx2 at runtime
+#[target_feature(enable = "avx2")]
+pub unsafe fn mac_avx2(xs: &mut [f32]) {} // LINT-EXPECT: simd-oracle
+
+// SAFETY: fixture kernel; the dispatcher checks neon at runtime
+#[target_feature(enable = "neon")]
+pub unsafe fn frob_neon(xs: &mut [f32]) {} // LINT-EXPECT: simd-oracle
+
+pub fn frob_scalar(_xs: &mut [f32]) {}
+
+// SAFETY: fixture kernel; the dispatcher checks avx2 at runtime
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot_avx2(_xs: &[f32]) -> f32 {
+    0.0
+}
+
+pub fn dot_scalar(xs: &[f32]) -> f32 {
+    xs.iter().sum()
+}
+
+pub fn dot(xs: &[f32]) -> f32 {
+    dot_scalar(xs)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn dot_simd_matches_scalar_oracle() {
+        // the dispatcher `dot` and the oracle `dot_scalar` co-occur here,
+        // which is what keeps `dot_avx2` pinned
+        let xs = [1.0f32, 2.0];
+        assert_eq!(super::dot(&xs), super::dot_scalar(&xs));
+    }
+}

@@ -1,0 +1,19 @@
+//! Seeded `env-knob` violations: a raw `env::var` read outside the
+//! registry file, and a `CIRCNN_*` literal the registry never lists.
+
+pub fn raw_read() -> bool {
+    std::env::var("CIRCNN_FIXTURE_OK").is_ok() // LINT-EXPECT: env-knob
+}
+
+pub fn rogue_name() -> &'static str {
+    "CIRCNN_FIXTURE_ROGUE" // LINT-EXPECT: env-knob
+}
+
+pub fn registered_read() -> bool {
+    crate::circulant::sched::env_flag("CIRCNN_FIXTURE_OK")
+}
+
+pub fn allowed_raw() -> bool {
+    // lint:allow(env): fixture-pinned escape hatch
+    std::env::var("CIRCNN_FIXTURE_OK").is_ok()
+}

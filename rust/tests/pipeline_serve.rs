@@ -165,6 +165,29 @@ fn pipelined_server_reports_stage_occupancy() {
 }
 
 #[test]
+fn dropping_server_with_inflight_batches_joins_and_answers() {
+    // implicit teardown (Drop, not shutdown()) while batches are still in
+    // flight: the executor and every stage worker must join, and every
+    // admitted request must still get an answer — no worker leaks, no
+    // dropped response channels
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_secs(5),
+        max_queue: 4096,
+    };
+    let server = start(EngineKind::Pipeline, policy, Some(2));
+    let (img, _) = data::sample(&data::MNIST_S, 0);
+    let pending: Vec<_> = (0..12)
+        .map(|_| server.infer_async(MODEL, &img).unwrap())
+        .collect();
+    drop(server);
+    for (i, rx) in pending.into_iter().enumerate() {
+        let resp = rx.recv().expect("response channel must not be dropped");
+        assert!(resp.is_ok(), "request {i} lost when the server was dropped mid-flight");
+    }
+}
+
+#[test]
 fn shutdown_drains_pipelined_inflight_requests() {
     // queued + in-flight work must reach clients before shutdown returns,
     // exactly as on the serial executor
