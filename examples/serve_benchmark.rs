@@ -6,6 +6,13 @@
 //! occupancy and padding waste — the serving-side counterpart of the
 //! paper's batch-processing study (Fig. 4 / AB3).
 //!
+//! Per-config latency percentiles come straight from the telemetry
+//! registry's `request_latency_us` histogram
+//! ([`circnn::coordinator::Metrics::latency_percentile_us`]) and are
+//! merged into `BENCH_circulant.json`'s `derived` map as
+//! `serve_latency_{p50,p95,p99}_us_b<batch>_c<clients>` — plain
+//! informational keys, outside the `_speedup_`/`_ratio_` CI contract.
+//!
 //! Run: `cargo run --release --example serve_benchmark`
 
 use std::time::Duration;
@@ -13,8 +20,15 @@ use std::time::Duration;
 use circnn::coordinator::{BatchPolicy, Server, ServerConfig};
 use circnn::data;
 use circnn::runtime::Manifest;
+use circnn::util::json::Json;
 
-fn drive(model: &str, clients: usize, requests: usize, policy: BatchPolicy) -> anyhow::Result<()> {
+fn drive(
+    model: &str,
+    clients: usize,
+    requests: usize,
+    policy: BatchPolicy,
+    derived: &mut Vec<(String, f64)>,
+) -> anyhow::Result<()> {
     let server = Server::start(ServerConfig {
         policy,
         ..ServerConfig::default()
@@ -59,8 +73,42 @@ fn drive(model: &str, clients: usize, requests: usize, policy: BatchPolicy) -> a
         100.0 * correct as f64 / requests as f64,
         m.summary()
     );
+    let tag = format!("b{}_c{clients}", policy.max_batch);
+    for (p, name) in [(50.0, "p50"), (95.0, "p95"), (99.0, "p99")] {
+        derived.push((
+            format!("serve_latency_{name}_us_{tag}"),
+            m.latency_percentile_us(p) as f64,
+        ));
+    }
     server.shutdown();
     Ok(())
+}
+
+/// Merge latency keys into the bench suite's `derived` map in place, so
+/// the serving percentiles ride the same perf-trajectory file as the
+/// kernel benches.  A missing or unparseable file gets a fresh doc.
+fn merge_derived(path: &str, extra: &[(String, f64)]) -> std::io::Result<()> {
+    let merged = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|doc| match doc {
+            Json::Obj(mut fields) => {
+                let slot = fields.iter_mut().find(|(k, _)| k == "derived")?;
+                let Json::Obj(entries) = &mut slot.1 else { return None };
+                for (k, v) in extra {
+                    match entries.iter_mut().find(|(n, _)| n == k) {
+                        Some(e) => e.1 = Json::Num(*v),
+                        None => entries.push((k.clone(), Json::Num(*v))),
+                    }
+                }
+                Some(Json::Obj(fields))
+            }
+            _ => None,
+        });
+    match merged {
+        Some(doc) => std::fs::write(path, doc.to_string() + "\n"),
+        None => circnn::util::benchkit::write_json(path, "circulant", &[], extra),
+    }
 }
 
 fn main() -> anyhow::Result<()> {
@@ -68,6 +116,7 @@ fn main() -> anyhow::Result<()> {
     let requests = 4096;
     println!("serving benchmark: {model}, {requests} requests per config\n");
 
+    let mut derived: Vec<(String, f64)> = Vec::new();
     // the paper's design point: large interleaved batches
     for (max_batch, delay_us, clients) in [
         (1usize, 200u64, 8usize), // no batching (per-image pipeline, AB3-like)
@@ -84,9 +133,14 @@ fn main() -> anyhow::Result<()> {
                 max_delay: Duration::from_micros(delay_us),
                 max_queue: 8192,
             },
+            &mut derived,
         )?;
     }
     println!("\nexpected shape (paper Fig. 4): larger interleaved batches lift throughput;\n\
               per-image execution pays pipeline fills / fixed overheads per request.");
+
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_circulant.json");
+    merge_derived(path, &derived)?;
+    println!("merged {} serve latency keys into {path}", derived.len());
     Ok(())
 }

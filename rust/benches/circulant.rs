@@ -26,15 +26,21 @@
 //! stages vs the serial one-batch-at-a-time executor) whenever the host
 //! plans ≥ 2 stages; on a single-core host the pipeline degenerates to one
 //! stage with nothing to overlap, and the same measurement is emitted
-//! informationally as `pipeline_ratio_…` instead.
+//! informationally as `pipeline_ratio_…` instead.  The telemetry layer
+//! pins its overhead-neutrality claim as
+//! `telemetry_overhead_ratio_serve_…` (traced/untraced serving medians,
+//! ~1.0 expected) — informational by construction, never a gate.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use circnn::circulant::fft;
 use circnn::circulant::{dense, BlockCirculant, FftPlan};
+use circnn::coordinator::{BatchPolicy, EngineKind, Server, ServerConfig};
 use circnn::native::conv::{self, ConvShape};
 use circnn::native::NativeModel;
 use circnn::pipeline::{Pipeline, PipelinePlan};
+use circnn::runtime::Manifest;
 use circnn::train::Trainer;
 use circnn::util::benchkit::{self, Bench, Measurement};
 use circnn::util::rng::SplitMix;
@@ -346,6 +352,57 @@ fn main() {
         };
         derived.push((key, speedup));
         results.extend([ser, par]);
+    }
+
+    println!("\n== telemetry overhead: traced vs untraced serving (informational) ==");
+    // the telemetry layer's overhead-neutrality trajectory point: the same
+    // synthetic request stream through the full coordinator path with span
+    // tracing off vs on.  Tracing adds two `Instant` stamps and one ring
+    // insert per request, so ~1.0 is the expectation; the key is a
+    // `_ratio_` (never CI-gated, header contract) because sub-percent
+    // effects drown in scheduler noise on small runners.  Value is
+    // traced/untraced median — above 1.0 reads as tracing overhead.
+    {
+        let model = "mnist_mlp_1";
+        let mut man = Manifest::synthetic();
+        man.models.retain(|m| m.name == model);
+        let (batch, waves) = (16usize, 4usize);
+        let imgs: Vec<_> =
+            (0..(batch * waves) as u64).map(|i| data::sample(&data::MNIST_S, i).0).collect();
+        let mut serve = |trace: bool, label: &str| {
+            let server = Server::start_with_manifest(
+                man.clone(),
+                ServerConfig {
+                    policy: BatchPolicy {
+                        max_batch: batch,
+                        max_delay: Duration::from_secs(5),
+                        max_queue: 8192,
+                    },
+                    engine: EngineKind::Native,
+                    init_random_fallback: true,
+                    trace,
+                    ..ServerConfig::default()
+                },
+            )
+            .expect("bench server");
+            let m = bench.run(label, (batch * waves) as u64, || {
+                let pending: Vec<_> = imgs
+                    .iter()
+                    .map(|img| server.infer_async(model, img).expect("admitted"))
+                    .collect();
+                for rx in pending {
+                    rx.recv().expect("server alive").expect("response");
+                }
+            });
+            server.shutdown();
+            m
+        };
+        let off = serve(false, "serve_untraced/mnist_mlp_1_b16x4");
+        let on = serve(true, "serve_traced/mnist_mlp_1_b16x4");
+        let overhead = on.median_ns() / off.median_ns();
+        println!("   mnist_mlp_1 batch={batch} waves={waves} traced/untraced {overhead:.3}x");
+        derived.push(("telemetry_overhead_ratio_serve_mnist_mlp_1_b16x4".into(), overhead));
+        results.extend([off, on]);
     }
 
     println!("\n== block-size sweep at n = 2048 (compression/speed frontier) ==");

@@ -52,6 +52,10 @@ pub const KNOBS: &[Knob] = &[
         name: "CIRCNN_ARTIFACTS",
         role: "artifacts directory for manifests and params archives",
     },
+    Knob {
+        name: "CIRCNN_TRACE",
+        role: "per-request span tracing in the server (same as serve --trace)",
+    },
 ];
 
 /// Every env read funnels through here so an unregistered knob is caught

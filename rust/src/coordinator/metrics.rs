@@ -1,39 +1,67 @@
-//! Serving metrics: lock-free counters, a fixed-bucket latency histogram,
-//! and (for the pipelined engine) per-stage occupancy attached by the
-//! executor so `summary()` can report busy/fill fractions next to the
-//! latency percentiles.
+//! Serving metrics, rendered *from* the unified telemetry registry
+//! ([`crate::telemetry::Registry`]): lock-free counters, the fixed-bucket
+//! request-latency histogram, a log2 queue-wait histogram, and (for the
+//! pipelined engine) per-stage occupancy gauges refreshed from the
+//! attached [`PipelineStats`].
+//!
+//! `summary()` keeps its historical one-line format byte for byte — it is
+//! now a *view* over the registry, so the same numbers are available as
+//! Prometheus-style text ([`Metrics::export_text`]) and machine-readable
+//! JSON ([`Metrics::export_json`], what `serve --trace-dump` writes and
+//! CI's telemetry smoke asserts on).
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::pipeline::PipelineStats;
+use crate::telemetry::{Counter, Gauge, Histogram, Registry};
 
-/// Log-spaced latency buckets (upper bounds, microseconds).
-const BUCKETS_US: [u64; 12] = [
-    10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000, u64::MAX,
-];
+/// Log-spaced latency buckets (finite upper bounds, microseconds); the
+/// registry histogram adds the open-ended overflow bucket.
+const BUCKETS_US: [u64; 11] =
+    [10, 30, 100, 300, 1_000, 3_000, 10_000, 30_000, 100_000, 300_000, 1_000_000];
 
 /// Largest finite bucket bound — percentiles landing in the open-ended
 /// overflow bucket saturate here instead of reporting `u64::MAX`.
-const MAX_FINITE_US: u64 = BUCKETS_US[BUCKETS_US.len() - 2];
+const MAX_FINITE_US: u64 = BUCKETS_US[BUCKETS_US.len() - 1];
 
-/// Shared serving metrics (all atomic; cheap to clone via Arc).
-#[derive(Debug, Default)]
+/// Shared serving metrics (cheap to clone via Arc).  The handle fields are
+/// registry-backed atomics: `requests.inc()` both feeds `summary()` and
+/// shows up as `requests_total` in the exposition.
+#[derive(Debug)]
 pub struct Metrics {
-    pub requests: AtomicU64,
-    pub responses: AtomicU64,
-    pub rejected: AtomicU64,
-    pub batches: AtomicU64,
+    registry: Arc<Registry>,
+    pub requests: Counter,
+    pub responses: Counter,
+    pub rejected: Counter,
+    pub batches: Counter,
     /// total occupied slots over all executed batches
-    pub batched_items: AtomicU64,
+    pub batched_items: Counter,
     /// total padded (wasted) slots
-    pub padded_slots: AtomicU64,
-    latency_buckets: [AtomicU64; 12],
-    latency_sum_us: AtomicU64,
+    pub padded_slots: Counter,
+    latency: Histogram,
+    queue_wait: Histogram,
     /// per-model pipeline stage occupancy (pipeline engine only; empty on
-    /// the serial executors)
-    pipelines: Mutex<Vec<(String, Arc<PipelineStats>)>>,
+    /// the serial executors) plus the registry gauges mirroring it
+    pipelines: Mutex<Vec<(String, Arc<PipelineStats>, Vec<Gauge>)>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        let registry = Arc::new(Registry::new());
+        Self {
+            requests: registry.counter("requests_total"),
+            responses: registry.counter("responses_total"),
+            rejected: registry.counter("rejected_total"),
+            batches: registry.counter("batches_total"),
+            batched_items: registry.counter("batched_items_total"),
+            padded_slots: registry.counter("padded_slots_total"),
+            latency: registry.histogram_edges("request_latency_us", &BUCKETS_US),
+            queue_wait: registry.histogram("queue_wait_us"),
+            pipelines: Mutex::new(Vec::new()),
+            registry,
+        }
+    }
 }
 
 impl Metrics {
@@ -41,41 +69,29 @@ impl Metrics {
         Self::default()
     }
 
+    /// The registry every serving metric lives in — the attachment point
+    /// for phase-profiling hooks (model accounting gauges, trainer step
+    /// timing) and the span tracer's own counters.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
     pub fn record_latency(&self, latency: Duration) {
-        let us = latency.as_micros() as u64;
-        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(11);
-        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.latency.observe(latency.as_micros() as u64);
+    }
+
+    /// Time a request spent queued in the batcher before its batch was
+    /// released (recorded at drain for every request, tracing or not).
+    pub fn record_queue_wait(&self, wait: Duration) {
+        self.queue_wait.observe(wait.as_micros() as u64);
     }
 
     pub fn mean_latency_us(&self) -> f64 {
-        let n = self.responses.load(Ordering::Relaxed);
+        let n = self.responses.get();
         if n == 0 {
             return 0.0;
         }
-        self.latency_sum_us.load(Ordering::Relaxed) as f64 / n as f64
-    }
-
-    /// Index into `BUCKETS_US` of the bucket holding percentile `p`
-    /// (`None` with no samples).
-    fn percentile_bucket(&self, p: f64) -> Option<usize> {
-        let total: u64 = self
-            .latency_buckets
-            .iter()
-            .map(|b| b.load(Ordering::Relaxed))
-            .sum();
-        if total == 0 {
-            return None;
-        }
-        let target = (total as f64 * p / 100.0).ceil() as u64;
-        let mut seen = 0;
-        for (i, b) in self.latency_buckets.iter().enumerate() {
-            seen += b.load(Ordering::Relaxed);
-            if seen >= target {
-                return Some(i);
-            }
-        }
-        Some(BUCKETS_US.len() - 1)
+        self.latency.sum() as f64 / n as f64
     }
 
     /// Approximate latency percentile from the histogram (the bucket's
@@ -83,25 +99,23 @@ impl Metrics {
     /// saturates to [`MAX_FINITE_US`] — a *lower* bound in that case, never
     /// `u64::MAX`; `summary()` reports it as `>1000000us`.
     pub fn latency_percentile_us(&self, p: f64) -> u64 {
-        match self.percentile_bucket(p) {
-            None => 0,
-            Some(i) => BUCKETS_US[i].min(MAX_FINITE_US),
-        }
+        self.latency.quantile_edge(p / 100.0)
     }
 
     /// Mean occupied batch size.
     pub fn mean_batch_size(&self) -> f64 {
-        let batches = self.batches.load(Ordering::Relaxed);
+        let batches = self.batches.get();
         if batches == 0 {
             return 0.0;
         }
-        self.batched_items.load(Ordering::Relaxed) as f64 / batches as f64
+        self.batched_items.get() as f64 / batches as f64
     }
 
-    /// Fraction of executed slots wasted on padding.
+    /// Fraction of executed slots wasted on padding (0.0 with no samples —
+    /// never NaN).
     pub fn padding_fraction(&self) -> f64 {
-        let items = self.batched_items.load(Ordering::Relaxed);
-        let padded = self.padded_slots.load(Ordering::Relaxed);
+        let items = self.batched_items.get();
+        let padded = self.padded_slots.get();
         if items + padded == 0 {
             return 0.0;
         }
@@ -110,12 +124,22 @@ impl Metrics {
 
     /// Attach a running pipeline's stage stats under `model` so
     /// [`summary`](Self::summary) reports its occupancy (one entry per
-    /// pipelined model; the executor calls this at startup).
+    /// pipelined model; the executor calls this at startup).  Each stage
+    /// also gets a `pipeline_stage_busy_permille{model,stage}` gauge,
+    /// refreshed from the measured busy fraction at exposition time.
     pub fn attach_pipeline(&self, model: &str, stats: Arc<PipelineStats>) {
+        let gauges: Vec<Gauge> = (0..stats.stage_count())
+            .map(|s| {
+                self.registry.gauge_with(
+                    "pipeline_stage_busy_permille",
+                    &[("model", model.to_string()), ("stage", s.to_string())],
+                )
+            })
+            .collect();
         self.pipelines
             .lock()
             .unwrap_or_else(|e| e.into_inner())
-            .push((model.to_string(), stats));
+            .push((model.to_string(), stats, gauges));
     }
 
     /// Snapshot of the attached pipelines (model name, stage stats).
@@ -123,31 +147,57 @@ impl Metrics {
         self.pipelines
             .lock()
             .unwrap_or_else(|e| e.into_inner())
-            .clone()
+            .iter()
+            .map(|(name, stats, _)| (name.clone(), stats.clone()))
+            .collect()
+    }
+
+    /// Fold the measured per-stage busy fractions into their registry
+    /// gauges (permille, so the exposition stays integer-valued).
+    fn refresh_stage_gauges(&self) {
+        let pipes = self.pipelines.lock().unwrap_or_else(|e| e.into_inner());
+        for (_, stats, gauges) in pipes.iter() {
+            for (s, gauge) in gauges.iter().enumerate() {
+                gauge.set((1000.0 * stats.busy_fraction(s)) as u64);
+            }
+        }
+    }
+
+    /// Prometheus-style text exposition of every serving metric.
+    pub fn export_text(&self) -> String {
+        self.refresh_stage_gauges();
+        self.registry.render_text()
+    }
+
+    /// JSON exposition (`{"counters":…,"gauges":…,"histograms":…}`).
+    pub fn export_json(&self) -> String {
+        self.refresh_stage_gauges();
+        self.registry.render_json()
     }
 
     /// Render one latency percentile with the saturation convention: a
     /// percentile landing in the open-ended overflow bucket prints as a
     /// floor (`p95>…us`), never as `u64::MAX`.
     fn percentile_summary(&self, p: f64) -> String {
-        match self.percentile_bucket(p) {
+        match self.latency.quantile_bucket(p / 100.0) {
             // overflow bucket: the bound is a floor, not a ceiling
-            Some(i) if BUCKETS_US[i] == u64::MAX => format!("p{p:.0}>{MAX_FINITE_US}us"),
+            Some(i) if i >= BUCKETS_US.len() => format!("p{p:.0}>{MAX_FINITE_US}us"),
             Some(i) => format!("p{p:.0}<={}us", BUCKETS_US[i]),
             None => format!("p{p:.0}<=0us"),
         }
     }
 
     /// One-line summary for logs / examples: counters, p50/p95/p99, and —
-    /// when a pipeline is attached — per-stage busy fractions.
+    /// when a pipeline is attached — per-stage busy fractions.  Rendered
+    /// entirely from the registry handles.
     pub fn summary(&self) -> String {
         let mut s = format!(
             "requests={} responses={} rejected={} batches={} mean_batch={:.1} \
              padding={:.1}% mean_latency={:.0}us {} {} {}",
-            self.requests.load(Ordering::Relaxed),
-            self.responses.load(Ordering::Relaxed),
-            self.rejected.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
+            self.requests.get(),
+            self.responses.get(),
+            self.rejected.get(),
+            self.batches.get(),
             self.mean_batch_size(),
             self.padding_fraction() * 100.0,
             self.mean_latency_us(),
@@ -157,6 +207,7 @@ impl Metrics {
         );
         for (name, stats) in self.pipelines().iter() {
             // only stages that saw traffic say anything useful
+            use std::sync::atomic::Ordering;
             if stats.stages.iter().any(|st| st.batches.load(Ordering::Relaxed) > 0) {
                 s.push_str(&format!(" pipeline[{name}]: {}", stats.occupancy_summary()));
             }
@@ -168,6 +219,7 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::json::Json;
 
     #[test]
     fn latency_histogram_percentiles() {
@@ -199,9 +251,9 @@ mod tests {
     #[test]
     fn batch_stats() {
         let m = Metrics::new();
-        m.batches.fetch_add(2, Ordering::Relaxed);
-        m.batched_items.fetch_add(96, Ordering::Relaxed);
-        m.padded_slots.fetch_add(32, Ordering::Relaxed);
+        m.batches.add(2);
+        m.batched_items.add(96);
+        m.padded_slots.add(32);
         assert!((m.mean_batch_size() - 48.0).abs() < 1e-9);
         assert!((m.padding_fraction() - 0.25).abs() < 1e-9);
     }
@@ -213,6 +265,7 @@ mod tests {
             m.record_latency(Duration::from_micros(50));
         }
         m.record_latency(Duration::from_millis(50));
+        m.responses.add(99);
         m.record_latency(Duration::from_secs(2)); // overflow bucket
         let s = m.summary();
         assert!(s.contains("p50<=100us"), "{s}");
@@ -244,14 +297,47 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("pipeline[mnist_mlp_1]: s0="), "{s}");
         assert_eq!(m.pipelines().len(), 1);
+        // the occupancy gauge rides the exposition under the stable name
+        let text = m.export_text();
+        assert!(
+            text.contains("pipeline_stage_busy_permille{model=\"mnist_mlp_1\",stage=\"0\"}"),
+            "{text}"
+        );
     }
 
     #[test]
     fn empty_metrics_are_zero() {
+        // the zero-sample edges: all three means/fractions report 0.0,
+        // never NaN or a divide-by-zero panic
         let m = Metrics::new();
         assert_eq!(m.mean_latency_us(), 0.0);
         assert_eq!(m.latency_percentile_us(95.0), 0);
         assert_eq!(m.mean_batch_size(), 0.0);
+        assert_eq!(m.padding_fraction(), 0.0);
         assert!(m.summary().contains("requests=0"));
+        assert!(m.summary().contains("p50<=0us"));
+    }
+
+    #[test]
+    fn exposition_carries_the_serving_metrics() {
+        let m = Metrics::new();
+        m.requests.inc();
+        m.responses.inc();
+        m.record_latency(Duration::from_micros(70));
+        m.record_queue_wait(Duration::from_micros(12));
+        let doc = Json::parse(&m.export_json()).expect("exposition parses");
+        let counters = doc.get("counters").expect("counters");
+        assert_eq!(counters.get("requests_total").and_then(Json::as_u64), Some(1));
+        let hists = doc.get("histograms").expect("histograms");
+        let lat = hists.get("request_latency_us").expect("latency histogram");
+        assert_eq!(lat.get("count").and_then(Json::as_u64), Some(1));
+        assert_eq!(
+            lat.get("edges").and_then(Json::as_arr).map(|a| a.len()),
+            Some(BUCKETS_US.len()),
+            "deterministic bucket edges"
+        );
+        let qw = hists.get("queue_wait_us").expect("queue-wait histogram");
+        assert_eq!(qw.get("count").and_then(Json::as_u64), Some(1));
+        assert_eq!(qw.get("p50").and_then(Json::as_u64), Some(16), "log2 edge");
     }
 }

@@ -24,18 +24,18 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::circulant::Precision;
+use crate::circulant::{sched, Precision};
 use crate::coordinator::batcher::{BatchPolicy, BatchQueue, Pending, PushOutcome};
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::router::{RouteError, Router};
 use crate::models;
 use crate::native::{NativeModel, Tensor};
 use crate::pipeline::{Pipeline, PipelinePlan};
+use crate::telemetry::{self, Registry, Seg, SpanRecord, Tracer};
 #[cfg(feature = "pjrt")]
 use crate::runtime::engine::{literal_f32, Engine};
 use crate::runtime::manifest::Manifest;
@@ -104,6 +104,13 @@ pub struct ServerConfig {
     /// through the int16 BFP engine at the manifest's `fixed_bits` width
     /// ([`NativeModel::set_precision`]); the PJRT backend ignores this.
     pub precision: Precision,
+    /// enable per-request span tracing ([`crate::telemetry::Tracer`]):
+    /// spans are minted at admission, stamped at batch release and reply
+    /// scatter, and collected for [`Server::trace_waterfall`] /
+    /// [`Server::telemetry_json`].  Also switched on by the registered
+    /// `CIRCNN_TRACE` env knob; off (zero-overhead) by default, and
+    /// results are bitwise identical either way (property-pinned).
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -116,6 +123,7 @@ impl Default for ServerConfig {
             depth: None,
             init_random_fallback: false,
             precision: Precision::F32,
+            trace: false,
         }
     }
 }
@@ -126,6 +134,8 @@ struct Request {
     /// client-side submit time — the end-to-end latency origin (includes
     /// channel wait, unlike the batcher's queue-entry stamp)
     submitted: Instant,
+    /// span id minted at admission when tracing is on (0 = untraced)
+    span_id: u64,
     resp: mpsc::Sender<Result<Response, InferError>>,
 }
 
@@ -134,6 +144,7 @@ pub struct Server {
     router: Arc<Router>,
     tx: Option<mpsc::SyncSender<Request>>,
     metrics: Arc<Metrics>,
+    tracer: Option<Arc<Tracer>>,
     executor: Option<JoinHandle<()>>,
 }
 
@@ -162,15 +173,19 @@ impl Server {
         let native_batch = Some(config.policy.max_batch.max(1));
         let router = Arc::new(Router::from_manifest_sized(&manifest, native_batch));
         let metrics = Arc::new(Metrics::new());
+        let tracer = (config.trace || sched::env_flag("CIRCNN_TRACE"))
+            .then(|| Tracer::new(metrics.registry()));
         let (tx, rx) = mpsc::sync_channel::<Request>(config.policy.max_queue);
         let exec_metrics = metrics.clone();
+        let exec_tracer = tracer.clone();
         let executor = std::thread::Builder::new()
             .name("circnn-executor".into())
-            .spawn(move || executor_loop(manifest, config, rx, exec_metrics))?;
+            .spawn(move || executor_loop(manifest, config, rx, exec_metrics, exec_tracer))?;
         Ok(Self {
             router,
             tx: Some(tx),
             metrics,
+            tracer,
             executor: Some(executor),
         })
     }
@@ -181,6 +196,57 @@ impl Server {
 
     pub fn router(&self) -> &Router {
         &self.router
+    }
+
+    /// Whether this server is recording per-request spans.
+    pub fn tracing(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Completed request spans, joined with the per-stage busy intervals of
+    /// any attached pipeline (by batch sequence number — each matching
+    /// [`crate::pipeline::StageEvent`] becomes an `sN` segment on the span,
+    /// converted from the pipeline's epoch to the tracer's).  Empty when
+    /// tracing is off or nothing has completed yet.
+    pub fn trace_spans(&self) -> Vec<SpanRecord> {
+        let Some(tracer) = &self.tracer else {
+            return Vec::new();
+        };
+        let mut spans = tracer.spans();
+        for (model, stats) in self.metrics.pipelines() {
+            let base = tracer.offset_us(stats.started());
+            let events = stats.events.lock().unwrap_or_else(|e| e.into_inner());
+            for span in spans.iter_mut().filter(|s| s.model == model) {
+                let Some(seq) = span.seq else { continue };
+                for e in events.iter().filter(|e| e.seq == seq) {
+                    span.segs.push(Seg {
+                        label: format!("s{}", e.stage),
+                        start_us: base + e.start_us,
+                        end_us: base + e.end_us,
+                    });
+                }
+            }
+        }
+        spans
+    }
+
+    /// ASCII waterfall of the completed spans ([`telemetry::render_waterfall`]),
+    /// or `None` when tracing is off.
+    pub fn trace_waterfall(&self, width: usize) -> Option<String> {
+        self.tracer
+            .as_ref()
+            .map(|_| telemetry::render_waterfall(&self.trace_spans(), width))
+    }
+
+    /// One JSON document with everything observable about this server:
+    /// `{"metrics": <registry exposition>, "spans": [<completed spans>]}` —
+    /// what `circnn serve --trace-dump PATH` writes.
+    pub fn telemetry_json(&self) -> String {
+        format!(
+            "{{\"metrics\":{},\"spans\":{}}}",
+            self.metrics.export_json(),
+            telemetry::spans_to_json(&self.trace_spans()),
+        )
     }
 
     /// Blocking inference of one image.
@@ -196,12 +262,18 @@ impl Server {
         image: &[f32],
     ) -> Result<mpsc::Receiver<Result<Response, InferError>>, InferError> {
         self.router.validate(model, image)?;
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.inc();
         let (resp_tx, resp_rx) = mpsc::channel();
+        let submitted = Instant::now();
+        let span_id = match &self.tracer {
+            Some(tracer) => tracer.admitted(model, submitted),
+            None => 0,
+        };
         let req = Request {
             model: model.to_string(),
             image: image.to_vec(),
-            submitted: Instant::now(),
+            submitted,
+            span_id,
             resp: resp_tx,
         };
         match self
@@ -212,7 +284,10 @@ impl Server {
         {
             Ok(()) => Ok(resp_rx),
             Err(mpsc::TrySendError::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.inc();
+                if let Some(tracer) = &self.tracer {
+                    tracer.abandon(span_id);
+                }
                 Err(InferError::Rejected)
             }
             Err(mpsc::TrySendError::Disconnected(_)) => Err(InferError::Shutdown),
@@ -288,6 +363,7 @@ fn executor_loop(
     config: ServerConfig,
     rx: mpsc::Receiver<Request>,
     metrics: Arc<Metrics>,
+    tracer: Option<Arc<Tracer>>,
 ) {
     #[cfg(feature = "pjrt")]
     let use_pjrt = !matches!(config.engine, EngineKind::Native | EngineKind::Pipeline);
@@ -334,7 +410,7 @@ fn executor_loop(
                 }
             }
         } else {
-            native_exec(&manifest, &config, &m.name, &metrics)
+            native_exec(&manifest, &config, &m.name, &metrics, tracer.as_ref())
         };
         let exec_batch = match &exec {
             #[cfg(feature = "pjrt")]
@@ -388,17 +464,23 @@ fn executor_loop(
                 // a Failed model's outcome is known now: answer immediately
                 // instead of letting the request ride out the batch deadline
                 if let ModelExec::Failed { reason } = &state.exec {
-                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    metrics.rejected.inc();
+                    if let Some(tracer) = &tracer {
+                        tracer.abandon(req.span_id);
+                    }
                     let _ = req.resp.send(Err(InferError::Engine(reason.clone())));
                     continue;
                 }
                 match state.queue.push(req, Instant::now()) {
                     PushOutcome::Rejected(req) => {
-                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        metrics.rejected.inc();
+                        if let Some(tracer) = &tracer {
+                            tracer.abandon(req.span_id);
+                        }
                         let _ = req.resp.send(Err(InferError::Rejected));
                     }
                     PushOutcome::BatchReady => {
-                        execute_batch(engine, state, &metrics);
+                        execute_batch(engine, state, &metrics, tracer.as_deref());
                     }
                     PushOutcome::Queued => {}
                 }
@@ -408,7 +490,7 @@ fn executor_loop(
                 // drain remaining queued work, then exit
                 for state in states.values_mut() {
                     while !state.queue.is_empty() {
-                        execute_batch(engine, state, &metrics);
+                        execute_batch(engine, state, &metrics, tracer.as_deref());
                     }
                 }
                 return;
@@ -419,7 +501,7 @@ fn executor_loop(
         let now = Instant::now();
         for state in states.values_mut() {
             if state.queue.ready(now) {
-                execute_batch(engine, state, &metrics);
+                execute_batch(engine, state, &metrics, tracer.as_deref());
             }
         }
     }
@@ -476,6 +558,7 @@ fn native_exec(
     config: &ServerConfig,
     name: &str,
     metrics: &Arc<Metrics>,
+    tracer: Option<&Arc<Tracer>>,
 ) -> ModelExec {
     let Some(model) = models::by_name(name) else {
         eprintln!(
@@ -511,6 +594,7 @@ fn native_exec(
     // one hook covers both the serial native arm and the pipeline (the
     // pipeline's stage workers run the same `NativeModel::run_ops` path)
     native.set_precision(config.precision, Some(manifest.fixed_bits as u32));
+    publish_phase_charge(metrics.registry(), &model, config.precision);
     let (h, w, c) = model.input;
     if !matches!(config.engine, EngineKind::Pipeline) {
         return ModelExec::Native { model: Box::new(native), h, w, c };
@@ -519,6 +603,7 @@ fn native_exec(
     // last stage's sink owns the reply scatter and its metrics bookkeeping
     let native = Arc::new(native);
     let sink_metrics = metrics.clone();
+    let sink_tracer = tracer.cloned();
     let pipe = Pipeline::start(
         native.clone(),
         PipelinePlan::auto(&native),
@@ -526,11 +611,36 @@ fn native_exec(
         move |tensor: Tensor, pending: Vec<Pending<Request>>| {
             // the native head defines its own class count (no padded rows)
             let classes = tensor.data.len() / pending.len().max(1);
-            scatter_batch(&sink_metrics, &tensor.data, classes, pending);
+            scatter_batch(&sink_metrics, sink_tracer.as_deref(), &tensor.data, classes, pending);
         },
     );
     metrics.attach_pipeline(name, pipe.stats().clone());
     ModelExec::Pipeline { pipe, h, w, c }
+}
+
+/// Publish the analytic per-layer FFT-work *charge* of `model` into the
+/// registry as gauges, labelled by model/layer/precision.  Together with the
+/// executed [`crate::circulant::sched::PhaseCounters`] parity (pinned in
+/// `native::staged`), this makes the paper's FftWork accounting visible at
+/// runtime next to the serving counters it explains.
+fn publish_phase_charge(registry: &Arc<Registry>, model: &models::Model, precision: Precision) {
+    let precision = format!("{precision:?}").to_lowercase();
+    for (i, row) in model.accounting().iter().enumerate() {
+        let labels = [
+            ("model", model.name.to_string()),
+            ("layer", format!("{i:02}_{}", row.kind)),
+            ("precision", precision.clone()),
+        ];
+        registry
+            .gauge_with("model_layer_ffts_per_image", &labels)
+            .set(row.fft_work.ffts_total);
+        registry
+            .gauge_with("model_layer_iffts_per_image", &labels)
+            .set(row.fft_work.iffts_total);
+        registry
+            .gauge_with("model_layer_mult_groups_per_image", &labels)
+            .set(row.fft_work.mult_groups_total);
+    }
 }
 
 /// Scatter one executed batch's logits back to its requests (argmax +
@@ -539,16 +649,21 @@ fn native_exec(
 /// prefix is scattered.
 fn scatter_batch(
     metrics: &Metrics,
+    tracer: Option<&Tracer>,
     logits: &[f32],
     classes: usize,
     pending: Vec<Pending<Request>>,
 ) {
     let occupied = pending.len();
     let labels = argmax_rows(logits, classes);
+    let done = Instant::now();
     for (slot, p) in pending.into_iter().enumerate() {
         let latency = p.item.submitted.elapsed();
-        metrics.responses.fetch_add(1, Ordering::Relaxed);
+        metrics.responses.inc();
         metrics.record_latency(latency);
+        if let Some(tracer) = tracer {
+            tracer.finished(p.item.span_id, done);
+        }
         let row = &logits[slot * classes..(slot + 1) * classes];
         let _ = p.item.resp.send(Ok(Response {
             label: labels[slot],
@@ -559,7 +674,12 @@ fn scatter_batch(
     }
 }
 
-fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metrics) {
+fn execute_batch(
+    engine: EngineRef<'_>,
+    state: &mut ModelState,
+    metrics: &Metrics,
+    tracer: Option<&Tracer>,
+) {
     #[cfg(not(feature = "pjrt"))]
     let _ = engine;
     let pending = state.queue.drain_batch();
@@ -569,13 +689,29 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
     if let ModelExec::Failed { reason } = &state.exec {
         // count these as shed load so the books stay balanced
         // (requests == responses + rejected) — no batch ever executes
-        metrics.rejected.fetch_add(pending.len() as u64, Ordering::Relaxed);
+        metrics.rejected.add(pending.len() as u64);
         for p in pending {
+            if let Some(tracer) = tracer {
+                tracer.abandon(p.item.span_id);
+            }
             let _ = p.item.resp.send(Err(InferError::Engine(reason.clone())));
         }
         return;
     }
     let occupied = pending.len();
+    // batch release: every drained request's queue wait lands in the
+    // `queue_wait_us` histogram, and its span (if traced) moves from the
+    // queue segment into exec
+    let released = Instant::now();
+    for p in &pending {
+        metrics.record_queue_wait(released.duration_since(p.enqueued));
+    }
+    // span ids survive `pending` being moved into the pipeline below; the
+    // pipeline arm stamps them with the batch seq once `submit` assigns it
+    let span_ids: Vec<u64> = match tracer {
+        Some(_) => pending.iter().map(|p| p.item.span_id).collect(),
+        None => Vec::new(),
+    };
 
     if let ModelExec::Pipeline { pipe, h, w, c } = &state.exec {
         // assemble straight into the job tensor (no scratch staging — the
@@ -594,15 +730,20 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
             Tensor { batch: occupied, h: *h, w: *w, c: *c, data: imgs },
             pending,
         ) {
-            Ok(_) => {
+            Ok(seq) => {
                 // counted as executed only once the batch is in flight,
                 // mirroring the serial path's books (requests ==
                 // responses + rejected); the sink does the response-side
                 // accounting
-                metrics.batches.fetch_add(1, Ordering::Relaxed);
-                metrics
-                    .batched_items
-                    .fetch_add(occupied as u64, Ordering::Relaxed);
+                metrics.batches.inc();
+                metrics.batched_items.add(occupied as u64);
+                if let Some(tracer) = tracer {
+                    // the sink may have already finished a fast span; a
+                    // late `released` on a completed span is a no-op
+                    for id in &span_ids {
+                        tracer.released(*id, released, Some(seq));
+                    }
+                }
             }
             Err(err) => {
                 // stage workers gone (sink died / teardown raced us): the
@@ -610,10 +751,11 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
                 // dropping them, and balance the books as shed load
                 let reason = err.to_string();
                 let pending = err.payload;
-                metrics
-                    .rejected
-                    .fetch_add(pending.len() as u64, Ordering::Relaxed);
+                metrics.rejected.add(pending.len() as u64);
                 for p in pending {
+                    if let Some(tracer) = tracer {
+                        tracer.abandon(p.item.span_id);
+                    }
                     let _ = p.item.resp.send(Err(InferError::Engine(reason.clone())));
                 }
             }
@@ -656,16 +798,19 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
         }
     };
 
-    metrics.batches.fetch_add(1, Ordering::Relaxed);
-    metrics
-        .batched_items
-        .fetch_add(occupied as u64, Ordering::Relaxed);
-    metrics
-        .padded_slots
-        .fetch_add(padded as u64, Ordering::Relaxed);
+    metrics.batches.inc();
+    metrics.batched_items.add(occupied as u64);
+    metrics.padded_slots.add(padded as u64);
 
     match result {
         Ok(logits) => {
+            if let Some(tracer) = tracer {
+                // serial path: the batch was "released" and executed inline
+                // on this thread — no pipeline seq to join stage hops on
+                for id in &span_ids {
+                    tracer.released(*id, released, None);
+                }
+            }
             // the native head defines its own class count; the artifact's
             // declared output shape only binds the PJRT path
             let classes = match &state.exec {
@@ -676,13 +821,16 @@ fn execute_batch(engine: EngineRef<'_>, state: &mut ModelState, metrics: &Metric
                     unreachable!("handled before batch assembly")
                 }
             };
-            scatter_batch(metrics, &logits, classes, pending);
+            scatter_batch(metrics, tracer, &logits, classes, pending);
         }
         Err(err) => {
             // engine-failed requests are shed load, same bookkeeping as the
             // Failed-model path: requests == responses + rejected
-            metrics.rejected.fetch_add(pending.len() as u64, Ordering::Relaxed);
+            metrics.rejected.add(pending.len() as u64);
             for p in pending {
+                if let Some(tracer) = tracer {
+                    tracer.abandon(p.item.span_id);
+                }
                 let _ = p.item.resp.send(Err(InferError::Engine(err.clone())));
             }
         }

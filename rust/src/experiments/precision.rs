@@ -19,6 +19,7 @@
 
 use crate::circulant::fixed::{float_circulant_matvec, snr_db, FixedFft};
 use crate::circulant::Precision;
+use crate::telemetry::Registry;
 use crate::util::argmax_rows;
 use crate::util::rng::SplitMix;
 
@@ -122,6 +123,26 @@ pub fn executed_sweep(model_names: &[&str], bits_list: &[u32], samples: usize) -
 pub const EXEC_WIDTHS: [u32; 5] = [8, 10, 12, 14, 16];
 pub const EXEC_MODELS: [&str; 3] = ["mnist_mlp_1", "mnist_mlp_2", "svhn_cnn"];
 
+/// Publish an executed sweep into a metrics registry as labelled gauges —
+/// the experiments' accounting in the same exposition the server serves
+/// (`circnn precision --metrics`).  Fractional quantities ride as
+/// fixed-point integers: permille for agreement, ×10 for the dB / ratio
+/// columns (the registry is integer-valued by design).
+pub fn publish(rows: &[ExecutedRow], registry: &Registry) {
+    for r in rows {
+        let labels = [("model", r.model.to_string()), ("bits", r.bits.to_string())];
+        registry
+            .gauge_with("precision_agreement_permille", &labels)
+            .set((1000.0 * r.agreement).round() as u64);
+        registry
+            .gauge_with("precision_logits_snr_db_x10", &labels)
+            .set((10.0 * r.logits_snr_db).max(0.0).round() as u64);
+        registry
+            .gauge_with("precision_storage_reduction_x10", &labels)
+            .set((10.0 * r.storage_reduction).round() as u64);
+    }
+}
+
 pub fn render() -> String {
     let rows = sweep(&[6, 8, 10, 12, 14, 16], 256);
     let mut out = String::new();
@@ -187,6 +208,37 @@ mod tests {
         if let (Some(a6), Some(a12)) = (rows[0].accuracy, rows[2].accuracy) {
             assert!(a12 >= a6 - 0.02, "more bits must not hurt");
         }
+    }
+
+    #[test]
+    fn publish_exposes_the_sweep_as_labelled_gauges() {
+        let rows = vec![
+            ExecutedRow {
+                model: "mnist_mlp_1",
+                bits: 12,
+                storage_reduction: 21.3,
+                logits_snr_db: 47.8,
+                agreement: 0.997,
+            },
+            ExecutedRow {
+                model: "mnist_mlp_1",
+                bits: 8,
+                storage_reduction: 32.0,
+                logits_snr_db: 18.2,
+                agreement: 0.62,
+            },
+        ];
+        let reg = Registry::new();
+        publish(&rows, &reg);
+        let labels = [("model", "mnist_mlp_1".to_string()), ("bits", "12".to_string())];
+        assert_eq!(reg.gauge_with("precision_agreement_permille", &labels).get(), 997);
+        assert_eq!(reg.gauge_with("precision_logits_snr_db_x10", &labels).get(), 478);
+        assert_eq!(reg.gauge_with("precision_storage_reduction_x10", &labels).get(), 213);
+        let text = reg.render_text();
+        assert!(
+            text.contains("precision_agreement_permille{model=\"mnist_mlp_1\",bits=\"8\"} 620"),
+            "{text}"
+        );
     }
 
     /// Golden pin of the executed table: shape (models x widths, width-major

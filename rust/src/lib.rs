@@ -36,6 +36,7 @@
 //! | [`train`] | native FFT-domain training subsystem: O(n log n) spectral backprop (conjugate-spectrum `dL/dx`, frequency-accumulated `dL/dw`), SGD+momentum, softmax-CE head — `circnn train-demo` on default features |
 //! | [`pipeline`] | deep-pipelined serving engine: the `NativeModel` op walk split into per-layer stage workers with multiple batches in flight (token-bounded depth, bitwise-identical to `forward`, per-stage occupancy timeline — the executable twin of `fpga::controller`'s pipeline-fill story) |
 //! | [`runtime`] | artifact manifest (always) + PJRT engine (`pjrt` feature): load + execute HLO artifacts |
+//! | [`telemetry`] | unified observability substrate: the process-wide metrics [`telemetry::Registry`] (atomic counters/gauges/log2 histograms, Prometheus-style text + JSON exposition, lint-checked snake_case naming contract), per-request span tracing ([`telemetry::Tracer`], ASCII waterfall + JSON dump via `serve --trace`, gated by the registered `CIRCNN_TRACE` knob) and the phase-level profiling hooks `coordinator`/`train` publish through |
 //! | [`coordinator`] | router, dynamic batcher, executor over the native, pipelined-native or PJRT backend |
 //! | [`experiments`] | Table-1 / Fig-3 / Fig-6 / analog report generators |
 //! | [`util`] | JSON, PRNG, property-test and bench harness kits (incl. machine-readable bench JSON) |
@@ -64,6 +65,10 @@
 //!   [`coordinator`]/[`pipeline`] request path and no unbounded channels
 //!   in [`pipeline`] (lock-poisoning recovery and `lint:allow(unwrap)`-
 //!   annotated construction invariants are the only exceptions).
+//! * **Metric naming contract.** Every metric registered with the
+//!   [`telemetry`] registry uses a literal `snake_case` name, unique
+//!   crate-wide, and `*_hits`/`*_misses` pairs always ship together
+//!   (the `metric-name` rule).
 //!
 //! Violations are reported as `file:line: [rule] message` with a non-zero
 //! exit; the negative fixtures under `rust/tests/lint_fixtures/` pin that
@@ -83,6 +88,7 @@ pub mod models;
 pub mod native;
 pub mod pipeline;
 pub mod runtime;
+pub mod telemetry;
 pub mod train;
 pub mod util;
 

@@ -12,6 +12,7 @@
 //! | `bench-key` | bench keys use the `_speedup_` (CI-gated) or `_ratio_` (informational) infix; the workflow gates `_speedup_` and never `_ratio_` |
 //! | `request-unwrap` | no `.unwrap()`/`.expect()` in non-test `coordinator`/`pipeline` code (lock-poisoning recovery and `lint:allow(unwrap)` excepted) |
 //! | `unbounded-channel` | no unbounded `mpsc::channel` in `pipeline` (backpressure must stay token/queue-bounded) |
+//! | `metric-name` | telemetry registrations use literal `snake_case` names, unique crate-wide (one registering site per name — labels carry dynamic dimensions), and `*_hits`/`*_misses` pairs both exist |
 
 use std::collections::{BTreeSet, HashSet};
 use std::fmt;
@@ -48,6 +49,7 @@ pub fn check(tree: &LintTree) -> Vec<Diagnostic> {
     env_knobs(&tree.files, &mut out);
     bench_keys(tree, &mut out);
     request_path(&tree.files, &mut out);
+    metric_names(&tree.files, &mut out);
     out.sort();
     out.dedup();
     out
@@ -484,6 +486,159 @@ fn request_path(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
     }
 }
 
+/// The registration methods of `telemetry::Registry` whose first argument
+/// is a metric name.  The registry's private `register_*` internals are
+/// deliberately absent: the public wrappers forward non-literal arguments
+/// to them, and only *call sites* of the public surface are in scope.
+const METRIC_TOKENS: [&str; 7] = [
+    ".counter(",
+    ".counter_with(",
+    ".gauge(",
+    ".gauge_with(",
+    ".histogram(",
+    ".histogram_with(",
+    ".histogram_edges(",
+];
+
+/// Rule `metric-name`: every metric registration in non-test crate code
+/// uses a **literal** `snake_case` name (so the full metric namespace is
+/// greppable and stable), each name has exactly one registering site
+/// (dynamic dimensions belong in labels, not name suffixes), and
+/// `*_hits` / `*_misses` counters come in pairs.  Deliberate re-reads of
+/// an already-registered handle carry `lint:allow(metric-name)`.
+fn metric_names(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
+    // (name, file, 0-indexed line) of every literal registration site
+    let mut seen: Vec<(String, String, usize)> = Vec::new();
+    for f in files.iter().filter(|f| f.kind == FileKind::Src) {
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for tok in METRIC_TOKENS {
+                let mut from = 0;
+                while let Some(pos) = line.code[from..].find(tok) {
+                    let after = from + pos + tok.len();
+                    from = after;
+                    if allowed(&f.lines, i, "lint:allow(metric-name)") {
+                        continue;
+                    }
+                    match literal_name(f, i, after) {
+                        None => diag(
+                            out,
+                            &f.rel,
+                            i,
+                            "metric-name",
+                            format!(
+                                "metric name passed to `{}...)` must be a string literal \
+                                 (dynamic dimensions belong in labels); deliberate handle \
+                                 re-reads carry `lint:allow(metric-name)`",
+                                tok
+                            ),
+                        ),
+                        Some(name) => {
+                            check_metric_name(&name, &f.rel, i, &mut seen, out);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // pairing pass: a cache-style `_hits` counter without its `_misses`
+    // twin (or vice versa) hides half the story
+    for (name, rel, i) in &seen {
+        let twin = if let Some(stem) = name.strip_suffix("_hits") {
+            format!("{stem}_misses")
+        } else if let Some(stem) = name.strip_suffix("_misses") {
+            format!("{stem}_hits")
+        } else {
+            continue;
+        };
+        if !seen.iter().any(|(n, _, _)| n == &twin) {
+            diag(
+                out,
+                rel,
+                *i,
+                "metric-name",
+                format!("metric \"{name}\" has no \"{twin}\" twin — hits/misses come in pairs"),
+            );
+        }
+    }
+}
+
+/// Validate one literal metric name and record it for the uniqueness and
+/// pairing passes.
+fn check_metric_name(
+    name: &str,
+    rel: &str,
+    i: usize,
+    seen: &mut Vec<(String, String, usize)>,
+    out: &mut Vec<Diagnostic>,
+) {
+    let snake = name.starts_with(|c: char| c.is_ascii_lowercase())
+        && !name.ends_with('_')
+        && !name.contains("__")
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
+    if !snake {
+        diag(
+            out,
+            rel,
+            i,
+            "metric-name",
+            format!("metric name \"{name}\" is not snake_case ([a-z][a-z0-9_]*, no __ runs)"),
+        );
+        return;
+    }
+    // a site is checked before it is recorded, so any hit is a prior site
+    if let Some((_, prev_rel, prev_i)) = seen.iter().find(|(n, _, _)| n == name) {
+        diag(
+            out,
+            rel,
+            i,
+            "metric-name",
+            format!(
+                "metric \"{name}\" is already registered at {prev_rel}:{} — one \
+                 registering site per name (labels carry dynamic dimensions; \
+                 re-reads carry `lint:allow(metric-name)`)",
+                prev_i + 1
+            ),
+        );
+        return;
+    }
+    seen.push((name.to_string(), rel.to_string(), i));
+}
+
+/// Recover the literal first argument of a registration call: the next
+/// non-space character after the open paren (same line, or the first
+/// following line when the call wraps) must open a string literal; its
+/// contents come from the lexer's per-line string table (`line.code` keeps
+/// the quotes but blanks the contents, so the n-th opening quote on a line
+/// maps to `strings[n]`).  `None` = not a literal.
+fn literal_name(f: &SourceFile, i: usize, after: usize) -> Option<String> {
+    let mut j = i;
+    let mut at = after;
+    loop {
+        let code = &f.lines[j].code;
+        let rest = &code[at.min(code.len())..];
+        let offset = rest.len() - rest.trim_start().len();
+        if let Some(c) = rest.trim_start().chars().next() {
+            if c != '"' {
+                return None;
+            }
+            let quote_pos = at + offset;
+            let quotes_before = code[..quote_pos].matches('"').count();
+            return f.lines[j].strings.get(quotes_before / 2).cloned();
+        }
+        // the call wraps: the name must open the very next line
+        j += 1;
+        at = 0;
+        if j >= f.lines.len() {
+            return None;
+        }
+    }
+}
+
 /// `needle` (a `::`-qualified path) occurs and is not a prefix of a longer
 /// identifier (`mpsc::channel` must not match `mpsc::channel_like`).
 fn has_path_token(haystack: &str, needle: &str) -> bool {
@@ -668,5 +823,65 @@ mod tests {
             "fn f() { let (tx, rx) = mpsc::sync_channel::<u8>(4); }",
         )]);
         assert!(check(&t).is_empty());
+    }
+
+    #[test]
+    fn metric_names_must_be_literal_and_snake_case() {
+        let dynamic = "fn f(r: &Registry, n: &'static str) { r.counter(n); }";
+        let d = check(&tree(vec![file("src/m.rs", FileKind::Src, dynamic)]));
+        assert_eq!(rules_of(&d), ["metric-name"], "{d:?}");
+        assert!(d[0].message.contains("string literal"));
+
+        let camel = "fn f(r: &Registry) { r.counter(\"RequestsTotal\"); }";
+        let d = check(&tree(vec![file("src/m.rs", FileKind::Src, camel)]));
+        assert_eq!(rules_of(&d), ["metric-name"], "{d:?}");
+        assert!(d[0].message.contains("snake_case"));
+
+        let fine = "fn f(r: &Registry) { r.histogram_edges(\"wait_us\", &[10, 100]); }";
+        assert!(check(&tree(vec![file("src/m.rs", FileKind::Src, fine)])).is_empty());
+    }
+
+    #[test]
+    fn metric_names_are_unique_crate_wide_unless_allowed() {
+        let first = "fn f(r: &Registry) { r.counter(\"dup_total\"); }";
+        let b = file(
+            "src/b.rs",
+            FileKind::Src,
+            "fn g(r: &Registry) { r.counter(\"dup_total\"); }",
+        );
+        let d = check(&tree(vec![file("src/a.rs", FileKind::Src, first), b]));
+        assert_eq!(rules_of(&d), ["metric-name"], "{d:?}");
+        assert!(d[0].message.contains("already registered at src/a.rs:1"), "{d:?}");
+
+        // the audited escape hatch for deliberate handle re-reads
+        let allowed = file(
+            "src/b.rs",
+            FileKind::Src,
+            "fn g(r: &Registry) {\n    // lint:allow(metric-name): re-reading a's handle\n    r.counter(\"dup_total\");\n}",
+        );
+        assert!(check(&tree(vec![file("src/a.rs", FileKind::Src, first), allowed])).is_empty());
+    }
+
+    #[test]
+    fn hits_require_misses_and_wrapped_calls_resolve() {
+        let lonely = "fn f(r: &Registry) { r.counter(\"cache_hits\"); }";
+        let d = check(&tree(vec![file("src/m.rs", FileKind::Src, lonely)]));
+        assert_eq!(rules_of(&d), ["metric-name"], "{d:?}");
+        assert!(d[0].message.contains("cache_misses"), "{d:?}");
+
+        let paired =
+            "fn f(r: &Registry) { r.counter(\"cache_hits\"); r.counter(\"cache_misses\"); }";
+        assert!(check(&tree(vec![file("src/m.rs", FileKind::Src, paired)])).is_empty());
+
+        // a call wrapped across lines still resolves its literal name (and
+        // a second string on the same line doesn't confuse the mapping)
+        let wrapped = "fn f(r: &Registry) {\n\
+                       \x20   let a = r.gauge_with(\n\
+                       \x20       \"wrapped_permille\",\n\
+                       \x20       &[(\"model\", m.to_string())],\n\
+                       \x20   );\n\
+                       \x20   let b = r.counter(\"plain_total\"); let s = \"prose\";\n\
+                       }";
+        assert!(check(&tree(vec![file("src/m.rs", FileKind::Src, wrapped)])).is_empty());
     }
 }

@@ -50,10 +50,7 @@ fn main() {
         "ablations" => cmd_ablations(),
         "sweep" => cmd_sweep(&flags),
         "codesign" => cmd_codesign(&flags),
-        "precision" => {
-            print!("{}", circnn::experiments::precision::render());
-            Ok(())
-        }
+        "precision" => cmd_precision(&flags),
         "simulate" => cmd_simulate(&flags),
         "infer" => cmd_infer(&flags),
         "serve" => cmd_serve(&flags),
@@ -80,6 +77,8 @@ circnn — CirCNN-Flow: block-circulant DNN co-design framework (AAAI'18 repro)
 
 experiments:
   table1 | fig3 | fig6 | analog | ablations | sweep | precision
+  precision [--metrics]   --metrics also prints the executed sweep as a
+                          metrics-registry text exposition (labelled gauges)
 
 co-optimization (Fig. 5):
   codesign  --model NAME [--device cyclone_v|kintex7] [--min-accuracy 0.95]
@@ -94,7 +93,7 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
              [--engine native]   (pure-Rust, no PJRT)
   serve      [--model NAME] [--requests N] [--clients N] [--max-batch N]
              [--engine native|pipeline] [--depth N] [--synthetic]
-             [--precision f32|fixed16]
+             [--precision f32|fixed16] [--trace] [--trace-dump PATH]
              --engine native:   serve on the pure-Rust substrate
              --engine pipeline: deep-pipelined serving — per-layer stage
                                 workers, multiple batches in flight
@@ -106,6 +105,12 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
                                 executed int16 BFP MAC engine at the
                                 manifest's fixed_bits width (native/
                                 pipeline engines; see `circnn precision`)
+             --trace:           per-request span tracing (admission ->
+                                queue wait -> batch release -> stage hops
+                                -> reply); prints the span waterfall after
+                                the run (CIRCNN_TRACE=1 does the same)
+             --trace-dump PATH: write the full telemetry document
+                                ({\"metrics\": ..., \"spans\": ...}) as JSON
   train-demo [--model NAME] [--steps N] [--batch N] [--lr F] [--seed N]
              default build: native spectral-domain trainer (O(n log n)
              backprop, no artifacts needed); with `--features pjrt` it
@@ -117,7 +122,8 @@ misc:
   lint       [--root DIR] repo-invariant static analysis over the crate's
              own sources: SAFETY comments + pinned SIMD oracles, dead
              oracle twins, the CIRCNN_* knob registry, the bench-key
-             gating contract, request-path unwrap/channel hygiene;
+             gating contract, request-path unwrap/channel hygiene, and
+             the metric naming contract (literal snake_case names);
              prints `file:line: [rule] message` and exits non-zero on
              any violation (the CI lint job runs exactly this)
 ";
@@ -187,6 +193,23 @@ fn cmd_analog() -> anyhow::Result<()> {
 
 fn cmd_ablations() -> anyhow::Result<()> {
     print!("{}", ablations::render());
+    Ok(())
+}
+
+/// The precision experiment (P1); `--metrics` additionally re-publishes
+/// the executed sweep into a metrics registry and prints the text
+/// exposition — the experiments' accounting in the same format the server
+/// serves.
+fn cmd_precision(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use circnn::experiments::precision;
+    print!("{}", precision::render());
+    if flag_bool(flags, "metrics") {
+        let rows = precision::executed_sweep(&precision::EXEC_MODELS, &precision::EXEC_WIDTHS, 64);
+        let registry = circnn::telemetry::Registry::new();
+        precision::publish(&rows, &registry);
+        println!("\n# executed sweep as a registry exposition");
+        print!("{}", registry.render_text());
+    }
     Ok(())
 }
 
@@ -492,6 +515,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             depth: flags.get("depth").and_then(|v| v.parse().ok()),
             init_random_fallback: synthetic,
             precision,
+            trace: flag_bool(flags, "trace") || flags.contains_key("trace-dump"),
             ..ServerConfig::default()
         },
     )?;
@@ -528,6 +552,15 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             print!("{}", circnn::pipeline::timeline::render(&stats, 96));
         }
     }
+    // the per-request twin of the stage timeline: the span waterfall
+    // (queue wait / execution / stage hops per request)
+    if let Some(waterfall) = server.trace_waterfall(96) {
+        print!("{waterfall}");
+    }
+    if let Some(path) = flags.get("trace-dump") {
+        std::fs::write(path, server.telemetry_json())?;
+        println!("telemetry dump written to {path}");
+    }
     server.shutdown();
     Ok(())
 }
@@ -562,6 +595,8 @@ fn cmd_train_demo_native(flags: &HashMap<String, String>) -> anyhow::Result<()> 
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", model.dataset))?;
     let mut trainer =
         circnn::train::Trainer::new(&model, flag_usize(flags, "seed", 0) as u64)?;
+    let registry = std::sync::Arc::new(circnn::telemetry::Registry::new());
+    trainer.attach_telemetry(&registry, model_name);
     println!(
         "training {} for {} steps (batch {})",
         model.name, cfg.steps, cfg.batch
@@ -569,6 +604,15 @@ fn cmd_train_demo_native(flags: &HashMap<String, String>) -> anyhow::Result<()> 
     let t0 = Instant::now();
     trainer.train(&ds, &cfg);
     println!("done in {:.2}s", t0.elapsed().as_secs_f64());
+    // lint:allow(metric-name): re-reading handles the trainer registered
+    let step_us = registry.histogram("train_step_us");
+    println!(
+        "steps: {} | step time p50<={}us p95<={}us (log2 buckets) | executed FFTs {}",
+        registry.counter("train_steps_total").get(), // lint:allow(metric-name): re-read
+        step_us.quantile_edge(0.50),
+        step_us.quantile_edge(0.95),
+        trainer.layer_counters().iter().map(|c| c.ffts).sum::<u64>(),
+    );
     let acc = trainer.eval_accuracy(&ds, 512, 128);
     println!("test accuracy {:.1}% (512 held-out samples, float32 native)", 100.0 * acc);
     Ok(())

@@ -102,6 +102,14 @@ impl PipelineStats {
         self.stages.len()
     }
 
+    /// The instant the pipeline started — the epoch every recorded
+    /// [`StageEvent`]'s `start_us`/`end_us` is relative to.  The server's
+    /// trace join uses this to convert stage events into span-tracer
+    /// offsets (`telemetry::Tracer` keeps its own epoch).
+    pub fn started(&self) -> Instant {
+        self.started
+    }
+
     /// Stage `stage` starts waiting (input channel or downstream hand-off)
     /// at `now` — opens an idle interval.
     pub(crate) fn mark_idle(&self, stage: usize, now: Instant) {

@@ -8,6 +8,11 @@
 //! sequence digit (`seq % 10`), idle time stays `.` — a healthy pipeline
 //! shows different digits stacked in the same column (batch N in stage 1
 //! while batch N+1 occupies stage 0).
+//!
+//! This is the *per-stage* view; the *per-request* twin is the span
+//! waterfall ([`crate::telemetry::render_waterfall`], `circnn serve
+//! --trace`), which joins the same [`StageEvent`](super::StageEvent)s
+//! onto each request's queue/exec span by batch sequence number.
 
 use crate::pipeline::stage::PipelineStats;
 

@@ -1,0 +1,87 @@
+//! Unified observability layer: metrics registry, per-request span
+//! tracing, and phase-level profiling — dependency-free by construction
+//! (std only, no serde/prometheus/tracing crates).
+//!
+//! Until this module the stack's observability was three disjoint,
+//! string-summary-only silos: `coordinator::Metrics` (atomic fields +
+//! a hand-rolled latency histogram), `pipeline::PipelineStats` (per-stage
+//! busy/idle events) and `circulant::sched::PhaseCounters` (executed
+//! FFT/MAC counts, visible only to tests).  The paper's headline claims
+//! rest on *measured, attributable* per-layer and per-phase costs, and the
+//! ROADMAP's next items (network front-end with SLO-gated p50/p99,
+//! spectrum cache with `*_hits/_misses` telemetry, global scheduler
+//! occupancy) all report through a substrate like this one.
+//!
+//! # Observability
+//!
+//! ## Metric naming contract
+//!
+//! Every metric is registered through [`Registry`] under a **literal**
+//! `snake_case` name, unique crate-wide — machine-checked by the
+//! `metric-name` lint rule (`crate::lint::rules`):
+//!
+//! * names are `[a-z0-9_]`, start with a letter, no `__` runs, no
+//!   trailing `_`;
+//! * counters end in `_total`; histograms of durations end in `_us`;
+//!   gauges carry their unit as a suffix (`_permille`, `_bits`,
+//!   `_per_image`);
+//! * cache-style pairs follow the `*_hits`/`*_misses`(/`*_evictions`)
+//!   convention — registering one of the pair without the other is a lint
+//!   error, so a cache can never ship half its telemetry;
+//! * dynamic dimensions (model, layer, stage, precision) go in **labels**
+//!   (`counter_with`/`gauge_with`/`histogram_with`), never in the name.
+//!
+//! ## Span lifecycle
+//!
+//! One span per admitted request, minted at `coordinator::server`
+//! admission and finished at reply scatter:
+//!
+//! ```text
+//!   infer_async          batcher            executor / pipeline     scatter
+//!       │                   │                       │                  │
+//!   admitted(model) ──► queued (enqueued) ──► released(seq) ──► … ──► finished
+//!       │  span id minted   │   queue-wait seg     │  exec seg        │
+//!       ▼                   ▼                      ▼                  ▼
+//!     [admit t0]········[queue t0..t1]·········[exec t1..t2]······[ring buffer]
+//! ```
+//!
+//! Completed spans land in a bounded ring buffer (oldest dropped first,
+//! drops counted in `trace_spans_dropped_total`), renderable as an ASCII
+//! waterfall ([`render_waterfall`] — the per-request analogue of
+//! `pipeline::timeline::render`) and dumpable as JSON (`circnn serve
+//! --trace [--trace-dump PATH]`, gated by the registered `CIRCNN_TRACE`
+//! knob).  For pipelined engines the server joins each span's `seq`
+//! against `PipelineStats` stage events, so the waterfall shows every
+//! stage hop inside the exec segment.  Tracing is overhead-neutral when
+//! disabled (no span is minted, no lock is touched) and never perturbs
+//! results: serving output is property-pinned bitwise identical with
+//! tracing on and off.
+//!
+//! ## Exposition formats
+//!
+//! [`Registry::render_text`] emits Prometheus-style text:
+//!
+//! ```text
+//! # TYPE requests_total counter
+//! requests_total 512
+//! # TYPE queue_wait_us histogram
+//! queue_wait_us_bucket{le="1"} 0
+//! queue_wait_us_bucket{le="+Inf"} 512
+//! queue_wait_us_sum 92816
+//! queue_wait_us_count 512
+//! ```
+//!
+//! [`Registry::render_json`] emits the machine-readable twin consumed by
+//! CI's telemetry-dump smoke and `util::benchkit`-style tooling:
+//! `{"counters":{...},"gauges":{...},"histograms":{name:{"edges":[...],
+//! "counts":[...],"sum":n,"count":n,"p50":e,"p95":e,"p99":e}}}` — all
+//! integers, so the output is deterministic for deterministic inputs
+//! (golden-tested).  Histogram quantiles saturate into the last finite
+//! edge on overflow, matching `coordinator::Metrics`' `p95>…` floor
+//! convention.
+
+pub mod registry;
+pub mod span;
+
+pub use registry::{log2_edges, Counter, Gauge, Histogram, Registry};
+pub use span::{render_waterfall, spans_to_json, Seg, SpanRecord, Tracer};

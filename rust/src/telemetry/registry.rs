@@ -1,0 +1,495 @@
+//! The process-wide metrics registry: atomic counters, gauges, and
+//! fixed-boundary histograms with deterministic bucket edges, plus the
+//! Prometheus-style text and JSON expositions.
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap `Arc`-backed
+//! clones: registration takes the registry lock once, the hot path is a
+//! single relaxed atomic op, and re-registering the same `(name, labels)`
+//! pair returns the existing handle (idempotent — a second `Metrics` or a
+//! reattached trainer sees the same cell).  Metric *names* must be literal
+//! `snake_case` strings (enforced by the `metric-name` lint rule); dynamic
+//! dimensions ride in labels.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A monotonically increasing counter.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins gauge.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-boundary histogram: `edges.len() + 1` atomic buckets (the last
+/// is the overflow bucket), upper-inclusive (`v <= edge`), with a
+/// saturating sum.  Edges are fixed at registration, so bucket boundaries
+/// are deterministic across runs — the property the golden exposition
+/// test pins.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistCore>);
+
+#[derive(Debug)]
+struct HistCore {
+    edges: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    fn new(edges: &[u64]) -> Self {
+        debug_assert!(edges.windows(2).all(|w| w[0] < w[1]), "edges must increase");
+        debug_assert!(!edges.is_empty(), "a histogram needs at least one edge");
+        let buckets = (0..=edges.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistCore {
+            edges: edges.to_vec(),
+            buckets,
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }))
+    }
+
+    /// Record one observation.  Values beyond the last edge land in the
+    /// overflow bucket; the running sum saturates instead of wrapping, so
+    /// a `u64::MAX` observation cannot corrupt the mean.
+    pub fn observe(&self, v: u64) {
+        let c = &*self.0;
+        let idx = c.edges.iter().position(|&e| v <= e).unwrap_or(c.edges.len());
+        c.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = c.sum.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_add(v);
+            match c.sum.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn edges(&self) -> &[u64] {
+        &self.0.edges
+    }
+
+    /// Per-bucket counts, overflow bucket last (`edges().len() + 1` long).
+    pub fn counts(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Index of the bucket holding quantile `q` (0.0..=1.0): `None` when
+    /// empty; `Some(edges().len())` means the overflow bucket.
+    pub fn quantile_bucket(&self, q: f64) -> Option<usize> {
+        let counts = self.counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Some(i);
+            }
+        }
+        Some(counts.len() - 1)
+    }
+
+    /// Upper edge of the quantile-`q` bucket.  Overflow saturates into the
+    /// last finite edge (the `p95>edge` floor convention: the true value is
+    /// at least this large); an empty histogram reports 0.
+    pub fn quantile_edge(&self, q: f64) -> u64 {
+        match self.quantile_bucket(q) {
+            None => 0,
+            Some(i) => self.0.edges[i.min(self.0.edges.len() - 1)],
+        }
+    }
+}
+
+/// The default duration edges: powers of two from 1µs to ~537s — the
+/// "fixed-boundary log2 histogram" of the module contract.
+pub fn log2_edges() -> Vec<u64> {
+    (0..30).map(|i| 1u64 << i).collect()
+}
+
+enum Kind {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Entry {
+    name: &'static str,
+    labels: Vec<(String, String)>,
+    kind: Kind,
+}
+
+impl Entry {
+    /// `name` or `name{k="v",…}` — the exposition key.
+    fn key(&self) -> String {
+        if self.labels.is_empty() {
+            return self.name.to_string();
+        }
+        let body: Vec<String> =
+            self.labels.iter().map(|(k, v)| format!("{k}=\"{}\"", esc(v))).collect();
+        format!("{}{{{}}}", self.name, body.join(","))
+    }
+}
+
+/// The registry itself: an ordered set of named metrics behind one mutex
+/// (locked only at registration and exposition — never on the hot path).
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Vec<Entry>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.inner.lock().map(|v| v.len()).unwrap_or(0);
+        write!(f, "Registry({n} metrics)")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &'static str) -> Counter {
+        self.register_counter(name, &[])
+    }
+
+    pub fn counter_with(&self, name: &'static str, labels: &[(&str, String)]) -> Counter {
+        self.register_counter(name, labels)
+    }
+
+    pub fn gauge(&self, name: &'static str) -> Gauge {
+        self.register_gauge(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &'static str, labels: &[(&str, String)]) -> Gauge {
+        self.register_gauge(name, labels)
+    }
+
+    /// A histogram over the default [`log2_edges`].
+    pub fn histogram(&self, name: &'static str) -> Histogram {
+        self.register_histogram(name, &[], &log2_edges())
+    }
+
+    pub fn histogram_with(&self, name: &'static str, labels: &[(&str, String)]) -> Histogram {
+        self.register_histogram(name, labels, &log2_edges())
+    }
+
+    /// A histogram with explicit finite edges (strictly increasing; the
+    /// overflow bucket is implicit).
+    pub fn histogram_edges(&self, name: &'static str, edges: &[u64]) -> Histogram {
+        self.register_histogram(name, &[], edges)
+    }
+
+    fn register_counter(&self, name: &'static str, labels: &[(&str, String)]) -> Counter {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = find(&inner, name, labels) {
+            if let Kind::Counter(c) = &e.kind {
+                return c.clone();
+            }
+            debug_assert!(false, "metric `{name}` re-registered as a different kind");
+        }
+        let c = Counter(Arc::new(AtomicU64::new(0)));
+        inner.push(Entry { name, labels: own(labels), kind: Kind::Counter(c.clone()) });
+        c
+    }
+
+    fn register_gauge(&self, name: &'static str, labels: &[(&str, String)]) -> Gauge {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = find(&inner, name, labels) {
+            if let Kind::Gauge(g) = &e.kind {
+                return g.clone();
+            }
+            debug_assert!(false, "metric `{name}` re-registered as a different kind");
+        }
+        let g = Gauge(Arc::new(AtomicU64::new(0)));
+        inner.push(Entry { name, labels: own(labels), kind: Kind::Gauge(g.clone()) });
+        g
+    }
+
+    fn register_histogram(
+        &self,
+        name: &'static str,
+        labels: &[(&str, String)],
+        edges: &[u64],
+    ) -> Histogram {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = find(&inner, name, labels) {
+            if let Kind::Histogram(h) = &e.kind {
+                debug_assert_eq!(h.edges(), edges, "metric `{name}` re-registered with new edges");
+                return h.clone();
+            }
+            debug_assert!(false, "metric `{name}` re-registered as a different kind");
+        }
+        let h = Histogram::new(edges);
+        inner.push(Entry { name, labels: own(labels), kind: Kind::Histogram(h.clone()) });
+        h
+    }
+
+    /// Prometheus-style text exposition (see the module docs for a
+    /// sample).  Deterministic for deterministic registration order and
+    /// values — the golden test compares it byte for byte.
+    pub fn render_text(&self) -> String {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut out = String::new();
+        let mut typed: Vec<&str> = Vec::new();
+        for e in inner.iter() {
+            let kind = match &e.kind {
+                Kind::Counter(_) => "counter",
+                Kind::Gauge(_) => "gauge",
+                Kind::Histogram(_) => "histogram",
+            };
+            if !typed.contains(&e.name) {
+                typed.push(e.name);
+                out.push_str(&format!("# TYPE {} {kind}\n", e.name));
+            }
+            match &e.kind {
+                Kind::Counter(c) => out.push_str(&format!("{} {}\n", e.key(), c.get())),
+                Kind::Gauge(g) => out.push_str(&format!("{} {}\n", e.key(), g.get())),
+                Kind::Histogram(h) => {
+                    let counts = h.counts();
+                    let mut cum = 0u64;
+                    for (i, &c) in counts.iter().enumerate() {
+                        cum += c;
+                        let le = match h.edges().get(i) {
+                            Some(edge) => edge.to_string(),
+                            None => "+Inf".to_string(),
+                        };
+                        out.push_str(&format!("{}_bucket{{le=\"{le}\"}} {cum}\n", e.name));
+                    }
+                    out.push_str(&format!("{}_sum {}\n", e.name, h.sum()));
+                    out.push_str(&format!("{}_count {}\n", e.name, h.count()));
+                }
+            }
+        }
+        out
+    }
+
+    /// JSON exposition: `{"counters":{…},"gauges":{…},"histograms":{…}}`,
+    /// all values integers, parseable by [`crate::util::json`].
+    pub fn render_json(&self) -> String {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut hists = Vec::new();
+        for e in inner.iter() {
+            match &e.kind {
+                Kind::Counter(c) => counters.push(format!("\"{}\":{}", esc(&e.key()), c.get())),
+                Kind::Gauge(g) => gauges.push(format!("\"{}\":{}", esc(&e.key()), g.get())),
+                Kind::Histogram(h) => {
+                    let edges: Vec<String> = h.edges().iter().map(u64::to_string).collect();
+                    let counts: Vec<String> = h.counts().iter().map(u64::to_string).collect();
+                    hists.push(format!(
+                        "\"{}\":{{\"edges\":[{}],\"counts\":[{}],\"sum\":{},\"count\":{},\
+                         \"p50\":{},\"p95\":{},\"p99\":{}}}",
+                        esc(&e.key()),
+                        edges.join(","),
+                        counts.join(","),
+                        h.sum(),
+                        h.count(),
+                        h.quantile_edge(0.50),
+                        h.quantile_edge(0.95),
+                        h.quantile_edge(0.99),
+                    ));
+                }
+            }
+        }
+        format!(
+            "{{\"counters\":{{{}}},\"gauges\":{{{}}},\"histograms\":{{{}}}}}",
+            counters.join(","),
+            gauges.join(","),
+            hists.join(",")
+        )
+    }
+}
+
+fn find<'a>(entries: &'a [Entry], name: &str, labels: &[(&str, String)]) -> Option<&'a Entry> {
+    entries.iter().find(|e| {
+        e.name == name
+            && e.labels.len() == labels.len()
+            && e.labels.iter().zip(labels).all(|(a, b)| a.0 == b.0 && a.1 == b.1)
+    })
+}
+
+fn own(labels: &[(&str, String)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.clone())).collect()
+}
+
+/// Minimal JSON/label string escape (backslash, quote, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn golden_text_and_json_exposition() {
+        // the acceptance golden: stable names, deterministic bucket edges,
+        // byte-exact text exposition
+        let reg = Registry::new();
+        let c = reg.counter("demo_requests_total");
+        let g = reg.gauge_with("demo_stage_busy_permille", &[("stage", "0".into())]);
+        let h = reg.histogram_edges("demo_wait_us", &[10, 100, 1000]);
+        c.add(3);
+        g.set(417);
+        h.observe(0);
+        h.observe(10); // exactly on an edge: upper-inclusive
+        h.observe(11);
+        h.observe(5000); // overflow
+        let want = "\
+# TYPE demo_requests_total counter
+demo_requests_total 3
+# TYPE demo_stage_busy_permille gauge
+demo_stage_busy_permille{stage=\"0\"} 417
+# TYPE demo_wait_us histogram
+demo_wait_us_bucket{le=\"10\"} 2
+demo_wait_us_bucket{le=\"100\"} 3
+demo_wait_us_bucket{le=\"1000\"} 3
+demo_wait_us_bucket{le=\"+Inf\"} 4
+demo_wait_us_sum 5021
+demo_wait_us_count 4
+";
+        assert_eq!(reg.render_text(), want);
+
+        let doc = Json::parse(&reg.render_json()).expect("exposition parses");
+        let counters = doc.get("counters").expect("counters");
+        assert_eq!(counters.get("demo_requests_total").and_then(Json::as_f64), Some(3.0));
+        let hist = doc.get("histograms").and_then(|h| h.get("demo_wait_us")).expect("hist");
+        assert_eq!(hist.get("count").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(hist.get("p50").and_then(Json::as_f64), Some(10.0));
+        // overflow saturates the p99 into the last finite edge
+        assert_eq!(hist.get("p99").and_then(Json::as_f64), Some(1000.0));
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // values exactly on an edge, zero, and u64::MAX saturation
+        let reg = Registry::new();
+        let h = reg.histogram_edges("edge_cases_us", &[10, 30, 100]);
+        h.observe(0);
+        assert_eq!(h.counts(), vec![1, 0, 0, 0], "zero lands in the first bucket");
+        h.observe(10);
+        h.observe(30);
+        h.observe(100);
+        assert_eq!(h.counts(), vec![2, 1, 1, 0], "edge values are upper-inclusive");
+        h.observe(101);
+        h.observe(u64::MAX);
+        assert_eq!(h.counts(), vec![2, 1, 1, 2], "past-the-end lands in overflow");
+        assert_eq!(h.sum(), u64::MAX, "sum saturates instead of wrapping");
+        // the overflow quantile saturates into the last finite edge — the
+        // `p95>100us` floor convention
+        assert_eq!(h.quantile_bucket(0.99), Some(3));
+        assert_eq!(h.quantile_edge(0.99), 100);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let reg = Registry::new();
+        let h = reg.histogram("empty_us");
+        assert_eq!(h.quantile_bucket(0.5), None);
+        assert_eq!(h.quantile_edge(0.5), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.edges(), log2_edges().as_slice());
+    }
+
+    #[test]
+    fn reregistration_is_idempotent() {
+        let reg = Registry::new();
+        let a = reg.counter("idem_total");
+        let b = reg.counter("idem_total");
+        a.inc();
+        b.inc();
+        assert_eq!(a.get(), 2, "same name must resolve to the same cell");
+        // distinct labels are distinct cells under one name
+        let l0 = reg.counter_with("idem_labeled_total", &[("m", "a".into())]);
+        let l1 = reg.counter_with("idem_labeled_total", &[("m", "b".into())]);
+        l0.add(5);
+        assert_eq!(l1.get(), 0);
+        assert!(reg.render_text().contains("idem_labeled_total{m=\"a\"} 5"));
+    }
+
+    #[test]
+    fn concurrent_hammer_from_many_threads() {
+        // the TSAN-tier test: many threads, one registry — registration
+        // races, hot-path increments, and concurrent exposition
+        let reg = Arc::new(Registry::new());
+        let threads = 8;
+        let per = 500u64;
+        thread::scope(|s| {
+            for t in 0..threads {
+                let reg = Arc::clone(&reg);
+                s.spawn(move || {
+                    let c = reg.counter("hammer_total");
+                    let h = reg.histogram_edges("hammer_us", &[4, 64, 1024]);
+                    for i in 0..per {
+                        c.inc();
+                        h.observe(i * (t + 1));
+                        if i % 128 == 0 {
+                            // re-register mid-hammer and render concurrently
+                            let again = reg.counter("hammer_total");
+                            let _ = again.get();
+                            let _ = reg.render_json();
+                        }
+                    }
+                });
+            }
+        });
+        let c = reg.counter("hammer_total");
+        let h = reg.histogram_edges("hammer_us", &[4, 64, 1024]);
+        assert_eq!(c.get(), threads * per);
+        assert_eq!(h.count(), threads * per);
+        assert_eq!(h.counts().iter().sum::<u64>(), threads * per);
+    }
+}

@@ -1,0 +1,340 @@
+//! Per-request span tracing: a span ID minted at server admission,
+//! stamped at batch release and reply scatter, collected into a bounded
+//! ring buffer of completed [`SpanRecord`]s.
+//!
+//! The tracer records *offsets in microseconds from its own epoch* (the
+//! `Instant` it was created at), so records are plain integers — cheap to
+//! store, deterministic to serialize ([`spans_to_json`]) and trivial to
+//! join against `pipeline::PipelineStats` stage events (the server
+//! converts the stats' epoch into tracer offsets and appends one segment
+//! per stage hop before rendering).  See the module docs of
+//! [`crate::telemetry`] for the span lifecycle diagram.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::registry::{Counter, Registry};
+
+/// Completed spans kept for rendering/dumping; oldest dropped first.
+const SPAN_RING_CAP: usize = 4096;
+
+/// One labelled wall-clock segment of a span, offsets in µs from the
+/// tracer epoch.
+#[derive(Debug, Clone)]
+pub struct Seg {
+    pub label: String,
+    pub start_us: u64,
+    pub end_us: u64,
+}
+
+/// One completed request span.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    pub id: u64,
+    pub model: String,
+    /// pipeline batch sequence number (None on the serial executor) — the
+    /// join key against `PipelineStats` stage events
+    pub seq: Option<u64>,
+    pub segs: Vec<Seg>,
+}
+
+impl SpanRecord {
+    pub fn start_us(&self) -> u64 {
+        self.segs.iter().map(|s| s.start_us).min().unwrap_or(0)
+    }
+
+    pub fn end_us(&self) -> u64 {
+        self.segs.iter().map(|s| s.end_us).max().unwrap_or(0)
+    }
+
+    fn seg(&self, label: &str) -> Option<&Seg> {
+        self.segs.iter().find(|s| s.label == label)
+    }
+}
+
+struct PendingSpan {
+    id: u64,
+    model: String,
+    admitted_us: u64,
+    released_us: Option<u64>,
+    seq: Option<u64>,
+}
+
+struct Inner {
+    pending: Vec<PendingSpan>, // id-sorted (ids are minted monotonically)
+    done: VecDeque<SpanRecord>,
+}
+
+/// The span tracer.  All methods are cheap and lock only a small state
+/// mutex; when tracing is disabled the server holds no tracer at all, so
+/// the disabled-path overhead is exactly zero.
+pub struct Tracer {
+    epoch: Instant,
+    next_id: AtomicU64,
+    inner: Mutex<Inner>,
+    spans_total: Counter,
+    spans_dropped: Counter,
+}
+
+impl Tracer {
+    pub fn new(reg: &Registry) -> Arc<Self> {
+        Arc::new(Tracer {
+            epoch: Instant::now(),
+            next_id: AtomicU64::new(1),
+            inner: Mutex::new(Inner { pending: Vec::new(), done: VecDeque::new() }),
+            spans_total: reg.counter("trace_spans_total"),
+            spans_dropped: reg.counter("trace_spans_dropped_total"),
+        })
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// µs offset of `at` from the tracer epoch (0 for pre-epoch instants).
+    pub fn offset_us(&self, at: Instant) -> u64 {
+        at.checked_duration_since(self.epoch).map(|d| d.as_micros() as u64).unwrap_or(0)
+    }
+
+    /// Mint a span for a request admitted at `at`; returns its ID (> 0).
+    pub fn admitted(&self, model: &str, at: Instant) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let admitted_us = self.offset_us(at);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.pending.push(PendingSpan {
+            id,
+            model: model.to_string(),
+            admitted_us,
+            released_us: None,
+            seq: None,
+        });
+        self.spans_total.inc();
+        id
+    }
+
+    /// The request's batch was released from the queue at `at` (with the
+    /// pipeline sequence number when the pipelined engine runs it).
+    pub fn released(&self, id: u64, at: Instant, seq: Option<u64>) {
+        let released_us = self.offset_us(at);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Ok(i) = inner.pending.binary_search_by_key(&id, |p| p.id) {
+            inner.pending[i].released_us = Some(released_us);
+            inner.pending[i].seq = seq;
+        }
+    }
+
+    /// The reply was scattered at `at`: the span completes into the ring.
+    pub fn finished(&self, id: u64, at: Instant) {
+        let done_us = self.offset_us(at);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let Ok(i) = inner.pending.binary_search_by_key(&id, |p| p.id) else { return };
+        let p = inner.pending.remove(i);
+        let released = p.released_us.unwrap_or(done_us);
+        let record = SpanRecord {
+            id: p.id,
+            model: p.model,
+            seq: p.seq,
+            segs: vec![
+                Seg { label: "queue".into(), start_us: p.admitted_us, end_us: released },
+                Seg { label: "exec".into(), start_us: released, end_us: done_us },
+            ],
+        };
+        if inner.done.len() >= SPAN_RING_CAP {
+            inner.done.pop_front();
+            self.spans_dropped.inc();
+        }
+        inner.done.push_back(record);
+    }
+
+    /// Drop a span that will never complete (admission rejected after
+    /// minting).
+    pub fn abandon(&self, id: u64) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Ok(i) = inner.pending.binary_search_by_key(&id, |p| p.id) {
+            inner.pending.remove(i);
+        }
+    }
+
+    /// Snapshot of the completed-span ring, oldest first.
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.done.iter().cloned().collect()
+    }
+}
+
+/// Paint character for a segment: `queue` → `q`, `exec` → `x`, stage hops
+/// (`s0`, `s1`, …) → their stage digit.
+fn paint(label: &str) -> char {
+    match label {
+        "queue" => 'q',
+        "exec" => 'x',
+        other => other.chars().last().unwrap_or('?'),
+    }
+}
+
+/// ASCII waterfall over completed spans: one row per request, segments
+/// painted over a shared time axis (the per-request analogue of
+/// [`crate::pipeline::timeline::render`]).
+pub fn render_waterfall(spans: &[SpanRecord], width: usize) -> String {
+    let width = width.max(8);
+    if spans.is_empty() {
+        return "(no completed spans — run with --trace / CIRCNN_TRACE=1)\n".to_string();
+    }
+    let t0 = spans.iter().map(SpanRecord::start_us).min().unwrap_or(0);
+    let t1 = spans.iter().map(SpanRecord::end_us).max().unwrap_or(t0).max(t0 + 1);
+    let per_col = ((t1 - t0) as f64 / width as f64).max(1.0);
+    let mut out = format!(
+        "== per-request span waterfall ({} spans, {}us, 1 col = {:.0}us) ==\n",
+        spans.len(),
+        t1 - t0,
+        per_col
+    );
+    out.push_str(&format!(
+        "{:>6} {:<14} {:>5} {:>9} {:>8}  timeline (q=queue x=exec digits=stage)\n",
+        "id", "model", "seq", "queue_us", "exec_us"
+    ));
+    for span in spans {
+        let mut row = vec!['.'; width];
+        for seg in &span.segs {
+            let a = (seg.start_us.saturating_sub(t0) as f64 / per_col) as usize;
+            let end = seg.end_us.max(seg.start_us + 1);
+            let b = (end.saturating_sub(t0) as f64 / per_col).ceil() as usize;
+            let ch = paint(&seg.label);
+            for cell in row.iter_mut().take(b.min(width)).skip(a.min(width)) {
+                *cell = ch;
+            }
+        }
+        let queue_us = span.seg("queue").map(|s| s.end_us - s.start_us).unwrap_or(0);
+        let exec_us = span.seg("exec").map(|s| s.end_us - s.start_us).unwrap_or(0);
+        let seq = span.seq.map(|s| s.to_string()).unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:>6} {:<14} {:>5} {:>9} {:>8}  |{}|\n",
+            span.id,
+            span.model,
+            seq,
+            queue_us,
+            exec_us,
+            row.into_iter().collect::<String>()
+        ));
+    }
+    out
+}
+
+/// JSON array of spans: `[{"id":…,"model":…,"seq":…|null,"segs":[{"label":
+/// …,"start_us":…,"end_us":…},…]},…]` — integers and plain strings only.
+pub fn spans_to_json(spans: &[SpanRecord]) -> String {
+    let rows: Vec<String> = spans
+        .iter()
+        .map(|s| {
+            let segs: Vec<String> = s
+                .segs
+                .iter()
+                .map(|g| {
+                    format!(
+                        "{{\"label\":\"{}\",\"start_us\":{},\"end_us\":{}}}",
+                        g.label, g.start_us, g.end_us
+                    )
+                })
+                .collect();
+            let seq = s.seq.map(|v| v.to_string()).unwrap_or_else(|| "null".into());
+            format!(
+                "{{\"id\":{},\"model\":\"{}\",\"seq\":{},\"segs\":[{}]}}",
+                s.id,
+                s.model,
+                seq,
+                segs.join(",")
+            )
+        })
+        .collect();
+    format!("[{}]", rows.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+    use std::time::Duration;
+
+    fn at(tracer: &Tracer, us: u64) -> Instant {
+        tracer.epoch() + Duration::from_micros(us)
+    }
+
+    #[test]
+    fn span_lifecycle_records_queue_and_exec_segments() {
+        let reg = Registry::new();
+        let tr = Tracer::new(&reg);
+        let id = tr.admitted("mnist_mlp_1", at(&tr, 100));
+        tr.released(id, at(&tr, 250), Some(7));
+        tr.finished(id, at(&tr, 900));
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!((s.id, s.seq), (id, Some(7)));
+        assert_eq!(s.model, "mnist_mlp_1");
+        assert_eq!(s.segs.len(), 2);
+        assert_eq!((s.segs[0].start_us, s.segs[0].end_us), (100, 250), "queue");
+        assert_eq!((s.segs[1].start_us, s.segs[1].end_us), (250, 900), "exec");
+        assert_eq!(reg.counter("trace_spans_total").get(), 1);
+    }
+
+    #[test]
+    fn abandoned_spans_never_complete() {
+        let reg = Registry::new();
+        let tr = Tracer::new(&reg);
+        let id = tr.admitted("m", at(&tr, 1));
+        tr.abandon(id);
+        tr.finished(id, at(&tr, 2)); // must be a no-op
+        assert!(tr.spans().is_empty());
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let reg = Registry::new();
+        let tr = Tracer::new(&reg);
+        let n = SPAN_RING_CAP + 10;
+        for i in 0..n {
+            let id = tr.admitted("m", at(&tr, i as u64));
+            tr.finished(id, at(&tr, i as u64 + 1));
+        }
+        let spans = tr.spans();
+        assert_eq!(spans.len(), SPAN_RING_CAP);
+        assert_eq!(reg.counter("trace_spans_dropped_total").get(), 10);
+        // oldest were dropped: the first surviving span is id 11
+        assert_eq!(spans[0].id, 11);
+    }
+
+    #[test]
+    fn waterfall_and_json_render() {
+        let reg = Registry::new();
+        let tr = Tracer::new(&reg);
+        for i in 0..3u64 {
+            let id = tr.admitted("svhn_cnn", at(&tr, i * 10));
+            tr.released(id, at(&tr, i * 10 + 40), Some(i));
+            tr.finished(id, at(&tr, i * 10 + 100));
+        }
+        let mut spans = tr.spans();
+        // a stage hop appended by the server-side join paints its digit
+        spans[0].segs.push(Seg { label: "s1".into(), start_us: 50, end_us: 70 });
+        let text = render_waterfall(&spans, 48);
+        assert!(text.contains("3 spans"), "{text}");
+        assert!(text.contains('q') && text.contains('x'), "{text}");
+        assert!(text.contains('1'), "stage digit missing: {text}");
+
+        let doc = Json::parse(&spans_to_json(&spans)).expect("span json parses");
+        let arr = doc.as_arr().expect("array");
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get("model").and_then(Json::as_str), Some("svhn_cnn"));
+        assert_eq!(arr[0].get("seq").and_then(Json::as_u64), Some(0));
+        let segs = arr[0].get("segs").and_then(Json::as_arr).expect("segs");
+        assert_eq!(segs[0].get("label").and_then(Json::as_str), Some("queue"));
+        assert_eq!(segs[1].get("end_us").and_then(Json::as_u64), Some(100));
+    }
+
+    #[test]
+    fn empty_waterfall_is_a_hint_not_a_panic() {
+        let text = render_waterfall(&[], 32);
+        assert!(text.contains("no completed spans"), "{text}");
+    }
+}

@@ -62,6 +62,9 @@ pub mod backprop;
 pub mod loss;
 pub mod optim;
 
+use std::sync::Arc;
+use std::time::Instant;
+
 use anyhow::bail;
 
 use crate::circulant::sched::PhaseCounters;
@@ -69,6 +72,7 @@ use crate::data;
 use crate::models::Model;
 use crate::native::conv::{self, ConvFwdCache, ConvShape};
 use crate::native::{self, NativeModel, Op, Tensor};
+use crate::telemetry::{Counter, Histogram, Registry};
 
 use optim::Sgd;
 
@@ -113,6 +117,17 @@ impl LayerScratch {
     }
 }
 
+/// Pre-registered telemetry handles ([`Trainer::attach_telemetry`]): one
+/// step-duration histogram plus, per op, the three executed-transform
+/// counters — the runtime view of the same [`PhaseCounters`] evidence the
+/// train parity test pins.
+struct TrainTelemetry {
+    steps: Counter,
+    step_us: Histogram,
+    /// per op: `[ffts, iffts, mult_groups]` running totals
+    layers: Vec<[Counter; 3]>,
+}
+
 /// The native trainer: owns a float32 [`NativeModel`] and updates it in
 /// place, step by step, entirely in the spectral domain.
 pub struct Trainer {
@@ -129,6 +144,9 @@ pub struct Trainer {
     /// rotating input-gradient buffer (reused across ops and steps)
     gbuf: Vec<f32>,
     serial: bool,
+    /// publish step timing + executed transforms into a metrics registry
+    /// (`None` = zero overhead: no clocks read, no counters touched)
+    telemetry: Option<TrainTelemetry>,
 }
 
 impl Trainer {
@@ -175,7 +193,32 @@ impl Trainer {
             scratch: (0..n_ops).map(|_| LayerScratch::new()).collect(),
             gbuf: Vec::new(),
             serial: false,
+            telemetry: None,
         })
+    }
+
+    /// Publish per-step timing (`train_step_us` histogram, log2 buckets)
+    /// and per-layer executed transforms (`train_layer_*_total` counters,
+    /// labelled by model/layer) into `registry` from every subsequent
+    /// [`step`](Self::step).  Handles are registered once here, so the
+    /// per-step cost is a few relaxed atomic adds.
+    pub fn attach_telemetry(&mut self, registry: &Arc<Registry>, model_name: &str) {
+        let layers = (0..self.model.ops.len())
+            .map(|i| {
+                let labels =
+                    [("model", model_name.to_string()), ("layer", format!("{i:02}"))];
+                [
+                    registry.counter_with("train_layer_ffts_total", &labels),
+                    registry.counter_with("train_layer_iffts_total", &labels),
+                    registry.counter_with("train_layer_mult_groups_total", &labels),
+                ]
+            })
+            .collect();
+        self.telemetry = Some(TrainTelemetry {
+            steps: registry.counter("train_steps_total"),
+            step_us: registry.histogram("train_step_us"),
+            layers,
+        });
     }
 
     /// Route the FC forward/backward and the conv backward through the
@@ -217,6 +260,7 @@ impl Trainer {
         let batch = ys.len();
         assert!(batch > 0, "empty batch");
         assert_eq!(xs.len(), batch * h * w * c, "image buffer size");
+        let step_t0 = self.telemetry.as_ref().map(|_| Instant::now());
         for ctr in &mut self.layer_counters {
             *ctr = PhaseCounters::default();
         }
@@ -393,6 +437,15 @@ impl Trainer {
             }
         }
         self.gbuf = spare;
+        if let (Some(tel), Some(t0)) = (&self.telemetry, step_t0) {
+            tel.steps.inc();
+            tel.step_us.observe(t0.elapsed().as_micros() as u64);
+            for (ctr, handles) in self.layer_counters.iter().zip(&tel.layers) {
+                handles[0].add(ctr.ffts);
+                handles[1].add(ctr.iffts);
+                handles[2].add(ctr.mult_groups);
+            }
+        }
         loss_val
     }
 
@@ -526,6 +579,34 @@ mod tests {
         tr.train(&data::MNIST_S, &cfg);
         let acc = tr.eval_accuracy(&data::MNIST_S, 256, 64);
         assert!(acc > 0.2, "test accuracy {acc} not above chance");
+    }
+
+    #[test]
+    fn attached_telemetry_mirrors_the_executed_counters() {
+        let model = models::by_name("mnist_mlp_1").unwrap();
+        let mut tr = Trainer::new(&model, 5).unwrap();
+        let registry = Arc::new(Registry::new());
+        tr.attach_telemetry(&registry, "mnist_mlp_1");
+        let (xs, ys) = data::batch(&data::MNIST_S, 0, 8, false);
+        tr.step(&xs, &ys);
+        tr.step(&xs, &ys);
+        assert_eq!(registry.counter("train_steps_total").get(), 2);
+        assert_eq!(registry.histogram("train_step_us").count(), 2);
+        // both steps execute identical work, so each per-layer counter
+        // holds exactly twice the last step's executed transforms
+        for (i, ctr) in tr.layer_counters().iter().enumerate() {
+            let labels = [("model", "mnist_mlp_1".to_string()), ("layer", format!("{i:02}"))];
+            assert_eq!(
+                registry.counter_with("train_layer_ffts_total", &labels).get(),
+                2 * ctr.ffts,
+                "op {i} fft counter"
+            );
+            assert_eq!(
+                registry.counter_with("train_layer_mult_groups_total", &labels).get(),
+                2 * ctr.mult_groups,
+                "op {i} mult-group counter"
+            );
+        }
     }
 
     #[test]

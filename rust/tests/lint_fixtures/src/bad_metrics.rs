@@ -1,0 +1,46 @@
+//! Seeded `metric-name` violations: a dynamic (non-literal) name, a
+//! non-snake_case name, a second registering site for an existing name,
+//! and a `_hits` counter without its `_misses` twin — next to negative
+//! controls (clean literals, a wrapped call, an allowed re-read, and a
+//! test-region registration) that must stay quiet.
+
+pub fn dynamic_name(r: &Registry, suffix: &str) -> Counter {
+    r.counter(&format!("requests_{suffix}")) // LINT-EXPECT: metric-name
+}
+
+pub fn shouting_name(r: &Registry) -> Gauge {
+    r.gauge("QueueDepth") // LINT-EXPECT: metric-name
+}
+
+pub fn first_site(r: &Registry) -> Counter {
+    r.counter("fixture_dup_total")
+}
+
+pub fn second_site(r: &Registry) -> Counter {
+    r.counter("fixture_dup_total") // LINT-EXPECT: metric-name
+}
+
+pub fn lonely_hits(r: &Registry) -> Counter {
+    r.counter("fixture_cache_hits") // LINT-EXPECT: metric-name
+}
+
+// --- negative controls ---------------------------------------------------
+
+pub fn clean_sites(r: &Registry) {
+    let _ = r.histogram("fixture_wait_us");
+    let _ = r.gauge_with(
+        "fixture_depth_permille",
+        &[("model", "m".to_string())],
+    );
+    // lint:allow(metric-name): deliberate re-read of the first site's handle
+    let _ = r.counter("fixture_dup_total");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let r = Registry::new();
+        let _ = r.counter("AnythingGoesHere");
+    }
+}

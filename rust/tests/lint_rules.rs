@@ -71,6 +71,7 @@ fn every_seeded_fixture_violation_is_caught_at_its_line() {
         "bench-key",
         "request-unwrap",
         "unbounded-channel",
+        "metric-name",
     ] {
         assert!(fired.contains(rule), "no fixture pins rule `{rule}`");
     }

@@ -32,6 +32,10 @@ fn manifest_for(model: &str) -> Manifest {
 }
 
 fn start(engine: EngineKind, policy: BatchPolicy, depth: Option<usize>) -> Server {
+    start_cfg(engine, policy, depth, false)
+}
+
+fn start_cfg(engine: EngineKind, policy: BatchPolicy, depth: Option<usize>, trace: bool) -> Server {
     Server::start_with_manifest(
         manifest_for(MODEL),
         ServerConfig {
@@ -39,6 +43,7 @@ fn start(engine: EngineKind, policy: BatchPolicy, depth: Option<usize>) -> Serve
             engine,
             depth,
             init_random_fallback: true,
+            trace,
             ..ServerConfig::default()
         },
     )
@@ -162,6 +167,98 @@ fn pipelined_server_reports_stage_occupancy() {
     let text = circnn::pipeline::timeline::render(stats, 48);
     assert!(text.contains("S0 |"), "{text}");
     server.shutdown();
+}
+
+#[test]
+fn prop_tracing_does_not_change_served_bits() {
+    // the telemetry tentpole's overhead-neutrality pin: span tracing is
+    // pure observation, so a traced server must serve bitwise identical
+    // logits/labels/occupancies to an untraced one — on both engines
+    forall(
+        "serve --trace == serve (bitwise)",
+        |r| {
+            let pipelined = r.below(2) == 1;
+            let max_batch = 1 + r.below(5) as usize;
+            let waves = 1 + r.below(3) as usize;
+            (pipelined, max_batch, waves)
+        },
+        |&(pipelined, max_batch, waves)| {
+            let policy = BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_secs(10), // size-triggered only
+                max_queue: 4096,
+            };
+            let engine = if pipelined { EngineKind::Pipeline } else { EngineKind::Native };
+            let stream: Vec<u64> = (0..(max_batch * waves) as u64).collect();
+            let plain = start_cfg(engine, policy, None, false);
+            let want = serve_stream(&plain, &stream);
+            plain.shutdown();
+            let traced = start_cfg(engine, policy, None, true);
+            let got = serve_stream(&traced, &stream);
+            let spans = traced.trace_spans();
+            traced.shutdown();
+            if spans.len() != stream.len() {
+                return Err(format!(
+                    "traced server recorded {} spans for {} requests",
+                    spans.len(),
+                    stream.len()
+                ));
+            }
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                if w != g {
+                    return Err(format!(
+                        "request {i}: traced serving diverged from untraced \
+                         (engine {engine:?}, max_batch {max_batch})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn traced_server_renders_waterfall_and_telemetry_json() {
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(5),
+        max_queue: 4096,
+    };
+    let server = start_cfg(EngineKind::Pipeline, policy, None, true);
+    let stream: Vec<u64> = (0..16).collect();
+    let _ = serve_stream(&server, &stream);
+    assert!(server.tracing());
+
+    let waterfall = server.trace_waterfall(80).expect("tracing server renders a waterfall");
+    assert!(waterfall.contains("span waterfall"), "{waterfall}");
+    assert!(waterfall.contains("16 spans"), "{waterfall}");
+
+    // the --trace-dump payload: metrics exposition + span records, one doc
+    let dump = server.telemetry_json();
+    let json = circnn::util::json::Json::parse(&dump).expect("telemetry dump parses");
+    let requests = json
+        .get("metrics")
+        .and_then(|m| m.get("counters"))
+        .and_then(|c| c.get("requests_total"))
+        .and_then(|v| v.as_u64())
+        .expect("requests_total in the dump");
+    assert_eq!(requests, 16);
+    assert!(
+        json.get("metrics")
+            .and_then(|m| m.get("histograms"))
+            .and_then(|h| h.get("queue_wait_us"))
+            .is_some(),
+        "queue_wait_us histogram in the dump"
+    );
+    let spans = json.get("spans").and_then(|s| s.as_arr()).expect("spans array");
+    assert_eq!(spans.len(), 16, "one span per request");
+    server.shutdown();
+
+    // an untraced server exposes metrics but no waterfall
+    let plain = start(EngineKind::Native, policy, None);
+    assert!(!plain.tracing());
+    assert!(plain.trace_waterfall(80).is_none());
+    plain.shutdown();
 }
 
 #[test]
