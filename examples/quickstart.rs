@@ -6,6 +6,10 @@
 //! the same network does on the paper's CyClone V design point.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! Wider tour: `docs/ARCHITECTURE.md` (dataflow + twin discipline),
+//! `docs/PROTOCOL.md` (the TCP wire format), `docs/OPERATIONS.md`
+//! (serving flags, knobs, metrics, load-shedding walkthrough).
 
 use circnn::data;
 use circnn::fpga::device::CYCLONE_V;

@@ -20,7 +20,6 @@ use std::time::Duration;
 use circnn::coordinator::{BatchPolicy, Server, ServerConfig};
 use circnn::data;
 use circnn::runtime::Manifest;
-use circnn::util::json::Json;
 
 fn drive(
     model: &str,
@@ -84,33 +83,6 @@ fn drive(
     Ok(())
 }
 
-/// Merge latency keys into the bench suite's `derived` map in place, so
-/// the serving percentiles ride the same perf-trajectory file as the
-/// kernel benches.  A missing or unparseable file gets a fresh doc.
-fn merge_derived(path: &str, extra: &[(String, f64)]) -> std::io::Result<()> {
-    let merged = std::fs::read_to_string(path)
-        .ok()
-        .and_then(|t| Json::parse(&t).ok())
-        .and_then(|doc| match doc {
-            Json::Obj(mut fields) => {
-                let slot = fields.iter_mut().find(|(k, _)| k == "derived")?;
-                let Json::Obj(entries) = &mut slot.1 else { return None };
-                for (k, v) in extra {
-                    match entries.iter_mut().find(|(n, _)| n == k) {
-                        Some(e) => e.1 = Json::Num(*v),
-                        None => entries.push((k.clone(), Json::Num(*v))),
-                    }
-                }
-                Some(Json::Obj(fields))
-            }
-            _ => None,
-        });
-    match merged {
-        Some(doc) => std::fs::write(path, doc.to_string() + "\n"),
-        None => circnn::util::benchkit::write_json(path, "circulant", &[], extra),
-    }
-}
-
 fn main() -> anyhow::Result<()> {
     let model = "mnist_mlp_1";
     let requests = 4096;
@@ -140,7 +112,7 @@ fn main() -> anyhow::Result<()> {
               per-image execution pays pipeline fills / fixed overheads per request.");
 
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_circulant.json");
-    merge_derived(path, &derived)?;
+    circnn::util::benchkit::merge_derived(path, "circulant", &derived)?;
     println!("merged {} serve latency keys into {path}", derived.len());
     Ok(())
 }

@@ -41,9 +41,38 @@ pub struct Metrics {
     pub padded_slots: Counter,
     latency: Histogram,
     queue_wait: Histogram,
+    /// TCP front-end counters (`rust/src/net`).  Registered eagerly here —
+    /// not lazily by the listener — so a server started *without* the TCP
+    /// front-end still exposes every `net_*` name at zero and the bench
+    /// JSON schema is identical across configs.
+    pub net: NetMetrics,
     /// per-model pipeline stage occupancy (pipeline engine only; empty on
     /// the serial executors) plus the registry gauges mirroring it
     pipelines: Mutex<Vec<(String, Arc<PipelineStats>, Vec<Gauge>)>>,
+}
+
+/// Registry handles for the TCP front-end (`net::TcpServer` increments
+/// them; everything else only reads).  All live in the same registry as
+/// the serving counters, under stable `net_*` names.
+#[derive(Debug)]
+pub struct NetMetrics {
+    /// connections ever accepted
+    pub connections: Counter,
+    /// currently open connections (maintained by the accept/reader threads)
+    pub connections_open: Gauge,
+    /// request frames decoded off the wire
+    pub frames_rx: Counter,
+    /// reply frames written to the wire
+    pub frames_tx: Counter,
+    /// raw bytes read from all connections
+    pub bytes_rx: Counter,
+    /// raw bytes written to all connections
+    pub bytes_tx: Counter,
+    /// requests answered `Overloaded` (connection in-flight cap, connection
+    /// cap, or the batcher's `max_queue` admission limit)
+    pub overloaded: Counter,
+    /// connections dropped on a malformed/oversized/unsupported frame
+    pub decode_errors: Counter,
 }
 
 impl Default for Metrics {
@@ -58,6 +87,16 @@ impl Default for Metrics {
             padded_slots: registry.counter("padded_slots_total"),
             latency: registry.histogram_edges("request_latency_us", &BUCKETS_US),
             queue_wait: registry.histogram("queue_wait_us"),
+            net: NetMetrics {
+                connections: registry.counter("net_connections_total"),
+                connections_open: registry.gauge("net_connections_open"),
+                frames_rx: registry.counter("net_frames_rx_total"),
+                frames_tx: registry.counter("net_frames_tx_total"),
+                bytes_rx: registry.counter("net_bytes_rx_total"),
+                bytes_tx: registry.counter("net_bytes_tx_total"),
+                overloaded: registry.counter("net_overloaded_total"),
+                decode_errors: registry.counter("net_decode_errors_total"),
+            },
             pipelines: Mutex::new(Vec::new()),
             registry,
         }
@@ -205,6 +244,15 @@ impl Metrics {
             self.percentile_summary(95.0),
             self.percentile_summary(99.0),
         );
+        // always rendered — zero-valued without a TCP listener — so the
+        // summary's shape matches the exposition's stable net_* schema
+        s.push_str(&format!(
+            " net[conns={} frames_rx={} frames_tx={} shed={}]",
+            self.net.connections.get(),
+            self.net.frames_rx.get(),
+            self.net.frames_tx.get(),
+            self.net.overloaded.get(),
+        ));
         for (name, stats) in self.pipelines().iter() {
             // only stages that saw traffic say anything useful
             use std::sync::atomic::Ordering;
@@ -316,6 +364,34 @@ mod tests {
         assert_eq!(m.padding_fraction(), 0.0);
         assert!(m.summary().contains("requests=0"));
         assert!(m.summary().contains("p50<=0us"));
+    }
+
+    #[test]
+    fn net_metrics_present_at_zero_without_a_listener() {
+        // the stable-schema contract: a server that never started the TCP
+        // front-end still reports every net_* name (zero-valued), so bench
+        // tooling sees one JSON shape across configs
+        let m = Metrics::new();
+        let doc = Json::parse(&m.export_json()).expect("exposition parses");
+        let counters = doc.get("counters").expect("counters");
+        for name in [
+            "net_connections_total",
+            "net_frames_rx_total",
+            "net_frames_tx_total",
+            "net_bytes_rx_total",
+            "net_bytes_tx_total",
+            "net_overloaded_total",
+            "net_decode_errors_total",
+        ] {
+            assert_eq!(counters.get(name).and_then(Json::as_u64), Some(0), "{name}");
+        }
+        let gauges = doc.get("gauges").expect("gauges");
+        assert_eq!(gauges.get("net_connections_open").and_then(Json::as_u64), Some(0));
+        assert!(
+            m.summary().contains("net[conns=0 frames_rx=0 frames_tx=0 shed=0]"),
+            "{}",
+            m.summary()
+        );
     }
 
     #[test]

@@ -33,6 +33,12 @@
 //! PJRT artifacts (`pjrt` feature), the always-available pure-Rust
 //! substrate — whose batch-major parallel `matmul` shards each released
 //! batch across cores — or that same substrate behind the layer pipeline.
+//!
+//! Clients reach the coordinator two ways: in-process ([`Server::infer`] /
+//! [`Server::infer_async`]) or over TCP through [`crate::net::TcpServer`],
+//! which feeds the same executor through the transport-agnostic
+//! [`Frontend`] seam — the wire protocol and framing live in `crate::net`,
+//! documented in `docs/PROTOCOL.md`.
 
 pub mod batcher;
 pub mod metrics;
@@ -40,6 +46,6 @@ pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, BatchQueue};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, NetMetrics};
 pub use router::Router;
-pub use server::{EngineKind, InferError, Response, Server, ServerConfig};
+pub use server::{EngineKind, Frontend, InferError, Response, Server, ServerConfig};

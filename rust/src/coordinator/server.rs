@@ -148,6 +148,79 @@ pub struct Server {
     executor: Option<JoinHandle<()>>,
 }
 
+/// Transport-agnostic submission seam: the validated enqueue half of the
+/// server, cheap to clone into connection-handler threads (`rust/src/net`
+/// holds one per TCP connection).  A `Frontend` does exactly what
+/// [`Server::infer_async`] does — validate, count, mint a span, `try_send`
+/// — but lets the caller stamp the admission instant, so the TCP path can
+/// start the latency clock (and the span) at frame-decode time instead of
+/// at submit time.
+///
+/// Holding a clone keeps the executor's request channel open: every
+/// `Frontend` must drop before [`Server::begin_drain`]/`shutdown` can
+/// drain, which is why the TCP server joins its readers first.
+#[derive(Clone)]
+pub struct Frontend {
+    router: Arc<Router>,
+    tx: mpsc::SyncSender<Request>,
+    metrics: Arc<Metrics>,
+    tracer: Option<Arc<Tracer>>,
+}
+
+impl Frontend {
+    /// Validate + enqueue one image, stamped at `Instant::now()`.
+    pub fn submit(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Response, InferError>>, InferError> {
+        self.submit_at(model, image, Instant::now())
+    }
+
+    /// Validate + enqueue with an explicit admission timestamp `at` — the
+    /// end-to-end latency origin and (when tracing) the span's birth.  The
+    /// TCP front-end passes the instant the request frame was decoded off
+    /// the wire, so queueing inside the connection handler is charged to
+    /// the request, not hidden.
+    pub fn submit_at(
+        &self,
+        model: &str,
+        image: Vec<f32>,
+        at: Instant,
+    ) -> Result<mpsc::Receiver<Result<Response, InferError>>, InferError> {
+        self.router.validate(model, &image)?;
+        self.metrics.requests.inc();
+        let (resp_tx, resp_rx) = mpsc::channel();
+        let span_id = match &self.tracer {
+            Some(tracer) => tracer.admitted(model, at),
+            None => 0,
+        };
+        let req = Request {
+            model: model.to_string(),
+            image,
+            submitted: at,
+            span_id,
+            resp: resp_tx,
+        };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(resp_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.rejected.inc();
+                if let Some(tracer) = &self.tracer {
+                    tracer.abandon(span_id);
+                }
+                Err(InferError::Rejected)
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(InferError::Shutdown),
+        }
+    }
+
+    /// The serving metrics shared with the server this frontend feeds.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+}
+
 impl Server {
     /// Load the manifest, spawn the executor thread, return the handle.
     pub fn start(config: ServerConfig) -> anyhow::Result<Self> {
@@ -261,37 +334,34 @@ impl Server {
         model: &str,
         image: &[f32],
     ) -> Result<mpsc::Receiver<Result<Response, InferError>>, InferError> {
-        self.router.validate(model, image)?;
-        self.metrics.requests.inc();
-        let (resp_tx, resp_rx) = mpsc::channel();
-        let submitted = Instant::now();
-        let span_id = match &self.tracer {
-            Some(tracer) => tracer.admitted(model, submitted),
-            None => 0,
-        };
-        let req = Request {
-            model: model.to_string(),
-            image: image.to_vec(),
-            submitted,
-            span_id,
-            resp: resp_tx,
-        };
-        match self
-            .tx
-            .as_ref()
+        self.frontend()
             .ok_or(InferError::Shutdown)?
-            .try_send(req)
-        {
-            Ok(()) => Ok(resp_rx),
-            Err(mpsc::TrySendError::Full(_)) => {
-                self.metrics.rejected.inc();
-                if let Some(tracer) = &self.tracer {
-                    tracer.abandon(span_id);
-                }
-                Err(InferError::Rejected)
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => Err(InferError::Shutdown),
-        }
+            .submit(model, image.to_vec())
+    }
+
+    /// A transport-agnostic submission handle sharing this server's
+    /// router/metrics/tracer, or `None` once [`begin_drain`](Self::begin_drain)
+    /// has closed the intake.
+    pub fn frontend(&self) -> Option<Frontend> {
+        Some(Frontend {
+            router: self.router.clone(),
+            tx: self.tx.as_ref()?.clone(),
+            metrics: self.metrics.clone(),
+            tracer: self.tracer.clone(),
+        })
+    }
+
+    /// Close the request intake without tearing the server down: drop the
+    /// server's own channel sender so — once every outstanding [`Frontend`]
+    /// clone is gone too — the executor drains all queued batches (every
+    /// admitted request still gets its answer) and exits.  Subsequent
+    /// `infer*`/[`frontend`](Self::frontend) calls report `Shutdown`;
+    /// metrics/telemetry stay readable, and a later
+    /// [`shutdown`](Self::shutdown) just joins the executor.  The TCP
+    /// front-end calls this between joining its readers and draining its
+    /// writers.
+    pub fn begin_drain(&mut self) {
+        self.tx.take();
     }
 
     /// Graceful shutdown: drain in-flight work and join the executor.

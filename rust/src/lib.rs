@@ -38,6 +38,7 @@
 //! | [`runtime`] | artifact manifest (always) + PJRT engine (`pjrt` feature): load + execute HLO artifacts |
 //! | [`telemetry`] | unified observability substrate: the process-wide metrics [`telemetry::Registry`] (atomic counters/gauges/log2 histograms, Prometheus-style text + JSON exposition, lint-checked snake_case naming contract), per-request span tracing ([`telemetry::Tracer`], ASCII waterfall + JSON dump via `serve --trace`, gated by the registered `CIRCNN_TRACE` knob) and the phase-level profiling hooks `coordinator`/`train` publish through |
 //! | [`coordinator`] | router, dynamic batcher, executor over the native, pipelined-native or PJRT backend |
+//! | [`net`] | TCP serving front-end (std::net only): length-framed binary protocol ([`net::protocol`], documented byte-for-byte in `docs/PROTOCOL.md`), per-connection incremental frame reader with layered admission control and explicit `Overloaded` shedding, graceful drain — plus the fixed-seed open-loop load harness `circnn loadgen` ([`net::loadgen`]: Poisson/bursty arrivals, warm/cold connection mixes, registry-derived percentiles) |
 //! | [`experiments`] | Table-1 / Fig-3 / Fig-6 / analog report generators |
 //! | [`util`] | JSON, PRNG, property-test and bench harness kits (incl. machine-readable bench JSON) |
 //!
@@ -62,13 +63,30 @@
 //!   CI-gated (fail below 1.0) and `*_ratio_*` keys never are; the lint
 //!   checks the gate exists and no key mixes the two markers.
 //! * **Request-path hygiene.** No `.unwrap()`/`.expect()` on the
-//!   [`coordinator`]/[`pipeline`] request path and no unbounded channels
-//!   in [`pipeline`] (lock-poisoning recovery and `lint:allow(unwrap)`-
-//!   annotated construction invariants are the only exceptions).
+//!   [`coordinator`]/[`pipeline`]/[`net`] request path and no unbounded
+//!   channels in [`pipeline`] or [`net`] (lock-poisoning recovery and
+//!   `lint:allow(unwrap)`-annotated construction invariants are the only
+//!   exceptions).
 //! * **Metric naming contract.** Every metric registered with the
 //!   [`telemetry`] registry uses a literal `snake_case` name, unique
 //!   crate-wide, and `*_hits`/`*_misses` pairs always ship together
 //!   (the `metric-name` rule).
+//! * **Docs freshness.** Every registered metric name and every
+//!   `CIRCNN_*` knob in the [`circulant::sched::KNOBS`] registry must
+//!   appear in `docs/OPERATIONS.md` — the operator's guide cannot
+//!   silently fall behind the code (the `docs-fresh` rule).
+//!
+//! ## Documentation
+//!
+//! * `docs/PROTOCOL.md` — the TCP wire format, byte-for-byte (framing,
+//!   field offsets, status codes, version negotiation), pinned by a
+//!   round-trip test over its example frames.
+//! * `docs/OPERATIONS.md` — the operator's guide: every `circnn serve` /
+//!   `circnn loadgen` flag, every `CIRCNN_*` knob, every registered
+//!   metric, and the load-shedding/SLO walkthrough (lint-enforced fresh).
+//! * `docs/ARCHITECTURE.md` — the circulant → native → pipeline →
+//!   coordinator → net dataflow, the bitwise-oracle/twin discipline, and
+//!   the bench-key gating contract.
 //!
 //! Violations are reported as `file:line: [rule] message` with a non-zero
 //! exit; the negative fixtures under `rust/tests/lint_fixtures/` pin that
@@ -86,6 +104,7 @@ pub mod fpga;
 pub mod lint;
 pub mod models;
 pub mod native;
+pub mod net;
 pub mod pipeline;
 pub mod runtime;
 pub mod telemetry;

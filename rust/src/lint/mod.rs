@@ -8,10 +8,14 @@
 //! knobs routed through the [`crate::circulant::sched`] registry, the
 //! bench-JSON `_speedup_`/`_ratio_` key contract matched against the CI
 //! gate, no panicking calls or unbounded channels on the serving
-//! request path, and — since the telemetry layer — metric names that are
-//! literal snake_case strings registered at exactly one site each (see
-//! [`crate::telemetry`] for the naming contract the `metric-name` rule
-//! enforces). This module turns each convention into a machine-checked
+//! request path (coordinator, pipeline, and the TCP front-end alike),
+//! metric names that are literal snake_case strings registered at
+//! exactly one site each (see [`crate::telemetry`] for the naming
+//! contract the `metric-name` rule enforces), and — since the serving
+//! front-end — documentation freshness: every registered metric and
+//! every `CIRCNN_*` knob must appear in `docs/OPERATIONS.md` (the
+//! `docs-fresh` rule). This module turns each convention into a
+//! machine-checked
 //! rule (see [`rules`] for the full table) built on a line-level
 //! lexer/scanner ([`source`]) that strips comments, blanks string-literal
 //! contents, and tracks `#[cfg(test)]` regions — no syn, no regex, no

@@ -1,4 +1,4 @@
-//! The five invariant families `circnn lint` enforces, as passes over the
+//! The invariant families `circnn lint` enforces, as passes over the
 //! scanned tree ([`super::source`]).  Every rule reports `file:line`
 //! [`Diagnostic`]s; the fixture tree under `rust/tests/lint_fixtures/`
 //! seeds one violation per rule and pins that it fires.
@@ -10,9 +10,10 @@
 //! | `dead-oracle` | every kept ordering twin (`*_serial`, `*_pixel_outer`, `*_sample_major`, `*_via_full`) is referenced by at least one test |
 //! | `env-knob` | `CIRCNN_*` knobs are read through `circulant::sched` helpers and listed in the `KNOBS` registry; raw `env::var` elsewhere fails |
 //! | `bench-key` | bench keys use the `_speedup_` (CI-gated) or `_ratio_` (informational) infix; the workflow gates `_speedup_` and never `_ratio_` |
-//! | `request-unwrap` | no `.unwrap()`/`.expect()` in non-test `coordinator`/`pipeline` code (lock-poisoning recovery and `lint:allow(unwrap)` excepted) |
-//! | `unbounded-channel` | no unbounded `mpsc::channel` in `pipeline` (backpressure must stay token/queue-bounded) |
+//! | `request-unwrap` | no `.unwrap()`/`.expect()` in non-test `coordinator`/`pipeline`/`net` code (lock-poisoning recovery and `lint:allow(unwrap)` excepted) |
+//! | `unbounded-channel` | no unbounded `mpsc::channel` in `pipeline` or `net` (backpressure must stay token/queue-bounded) |
 //! | `metric-name` | telemetry registrations use literal `snake_case` names, unique crate-wide (one registering site per name — labels carry dynamic dimensions), and `*_hits`/`*_misses` pairs both exist |
+//! | `docs-fresh` | every registered metric name and every `CIRCNN_*` knob in the `KNOBS` registry appears in `docs/OPERATIONS.md` (silent when the doc is absent) |
 
 use std::collections::{BTreeSet, HashSet};
 use std::fmt;
@@ -50,6 +51,7 @@ pub fn check(tree: &LintTree) -> Vec<Diagnostic> {
     bench_keys(tree, &mut out);
     request_path(&tree.files, &mut out);
     metric_names(&tree.files, &mut out);
+    docs_fresh(tree, &mut out);
     out.sort();
     out.dedup();
     out
@@ -440,12 +442,13 @@ fn is_key_candidate(s: &str) -> bool {
 }
 
 /// Rules `request-unwrap` + `unbounded-channel`: serving request-path
-/// hygiene in `src/coordinator/` and `src/pipeline/`.
+/// hygiene in `src/coordinator/`, `src/pipeline/` and `src/net/`.
 fn request_path(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
     for f in files.iter().filter(|f| f.kind == FileKind::Src) {
         let in_coord = f.rel.contains("src/coordinator/");
         let in_pipe = f.rel.contains("src/pipeline/");
-        if !in_coord && !in_pipe {
+        let in_net = f.rel.contains("src/net/");
+        if !in_coord && !in_pipe && !in_net {
             continue;
         }
         for (i, line) in f.lines.iter().enumerate() {
@@ -468,7 +471,7 @@ fn request_path(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
                         .into(),
                 );
             }
-            if in_pipe
+            if (in_pipe || in_net)
                 && has_path_token(&line.code, "mpsc::channel")
                 && !allowed(&f.lines, i, "lint:allow(channel)")
             {
@@ -477,7 +480,7 @@ fn request_path(files: &[SourceFile], out: &mut Vec<Diagnostic>) {
                     &f.rel,
                     i,
                     "unbounded-channel",
-                    "unbounded `mpsc::channel` in the pipeline: use a bounded \
+                    "unbounded `mpsc::channel` on the serving path: use a bounded \
                      `mpsc::sync_channel` (backpressure, never unbounded buffering)"
                         .into(),
                 );
@@ -574,13 +577,7 @@ fn check_metric_name(
     seen: &mut Vec<(String, String, usize)>,
     out: &mut Vec<Diagnostic>,
 ) {
-    let snake = name.starts_with(|c: char| c.is_ascii_lowercase())
-        && !name.ends_with('_')
-        && !name.contains("__")
-        && name
-            .chars()
-            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_');
-    if !snake {
+    if !is_snake_case(name) {
         diag(
             out,
             rel,
@@ -607,6 +604,107 @@ fn check_metric_name(
         return;
     }
     seen.push((name.to_string(), rel.to_string(), i));
+}
+
+fn is_snake_case(name: &str) -> bool {
+    name.starts_with(|c: char| c.is_ascii_lowercase())
+        && !name.ends_with('_')
+        && !name.contains("__")
+        && name
+            .chars()
+            .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+}
+
+/// Rule `docs-fresh`: the operator's guide (`docs/OPERATIONS.md`) must
+/// mention every metric name registered with the telemetry registry and
+/// every `CIRCNN_*` knob listed in the `KNOBS` registry — code-level
+/// observability surface cannot silently outrun its documentation.  The
+/// rule is silent when the tree ships no `docs/OPERATIONS.md` (plain
+/// fixture crates don't opt in); malformed or non-literal metric names
+/// are `metric-name`'s concern and are skipped here.  The audited escape
+/// hatch is `// lint:allow(docs-fresh): why`.
+fn docs_fresh(tree: &LintTree, out: &mut Vec<Diagnostic>) {
+    let Some(doc) = &tree.ops_doc else { return };
+
+    // every literal metric registration (first site wins — duplicates are
+    // metric-name's concern)
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+    for f in tree.files.iter().filter(|f| f.kind == FileKind::Src) {
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for tok in METRIC_TOKENS {
+                let mut from = 0;
+                while let Some(pos) = line.code[from..].find(tok) {
+                    let after = from + pos + tok.len();
+                    from = after;
+                    let Some(name) = literal_name(f, i, after) else { continue };
+                    if !is_snake_case(&name) || !seen.insert(name.clone()) {
+                        continue;
+                    }
+                    if allowed(&f.lines, i, "lint:allow(docs-fresh)") {
+                        continue;
+                    }
+                    if !doc.contains(name.as_str()) {
+                        diag(
+                            out,
+                            &f.rel,
+                            i,
+                            "docs-fresh",
+                            format!(
+                                "metric \"{name}\" is not documented in docs/OPERATIONS.md — \
+                                 every registered metric belongs in the operator's guide"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // every knob in the KNOBS registry file (same literal filter as the
+    // `env-knob` rule: full SHOUTY names only, not the bare prefix)
+    let registry_file = tree.files.iter().find(|f| {
+        f.kind == FileKind::Src
+            && f.lines.iter().any(|l| {
+                !l.in_test && has_ident(&l.code, "const") && has_ident(&l.code, "KNOBS")
+            })
+    });
+    if let Some(f) = registry_file {
+        let mut seen_knobs: BTreeSet<&str> = BTreeSet::new();
+        for (i, line) in f.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for s in line.strings.iter().filter(|s| s.starts_with("CIRCNN_")) {
+                let name_len = s
+                    .bytes()
+                    .take_while(|b| b.is_ascii_uppercase() || b.is_ascii_digit() || *b == b'_')
+                    .count();
+                if name_len != s.len() || s.len() == "CIRCNN_".len() {
+                    continue;
+                }
+                if !seen_knobs.insert(s.as_str())
+                    || allowed(&f.lines, i, "lint:allow(docs-fresh)")
+                {
+                    continue;
+                }
+                if !doc.contains(s.as_str()) {
+                    diag(
+                        out,
+                        &f.rel,
+                        i,
+                        "docs-fresh",
+                        format!(
+                            "env knob \"{s}\" is not documented in docs/OPERATIONS.md — \
+                             every registered knob belongs in the operator's guide"
+                        ),
+                    );
+                }
+            }
+        }
+    }
 }
 
 /// Recover the literal first argument of a registration call: the next
@@ -665,7 +763,7 @@ mod tests {
     }
 
     fn tree(files: Vec<SourceFile>) -> LintTree {
-        LintTree { files, workflow: None }
+        LintTree { files, workflow: None, ops_doc: None }
     }
 
     fn rules_of(d: &[Diagnostic]) -> Vec<&str> {
@@ -774,7 +872,7 @@ mod tests {
             "ci.yml".to_string(),
             vec!["bad = [k for k in d if \"_speedup_\" in k and v < 1.0]".to_string()],
         );
-        let t = LintTree { files: vec![b], workflow: Some(wf) };
+        let t = LintTree { files: vec![b], workflow: Some(wf), ops_doc: None };
         let d = check(&t);
         assert_eq!(rules_of(&d), ["bench-key"], "{d:?}");
         assert!(d[0].message.contains("fast_speedup8"));
@@ -791,7 +889,7 @@ mod tests {
             "ci.yml".to_string(),
             vec!["gate = [k for k in d if \"_ratio_\" in k and v < 1.0]".to_string()],
         );
-        let t = LintTree { files: vec![b], workflow: Some(wf) };
+        let t = LintTree { files: vec![b], workflow: Some(wf), ops_doc: None };
         let d = check(&t);
         assert_eq!(rules_of(&d), ["bench-key", "bench-key"], "{d:?}");
         assert!(d.iter().any(|x| x.message.contains("no `*_speedup_* < 1.0` perf gate")));
@@ -823,6 +921,20 @@ mod tests {
             "fn f() { let (tx, rx) = mpsc::sync_channel::<u8>(4); }",
         )]);
         assert!(check(&t).is_empty());
+    }
+
+    #[test]
+    fn net_front_end_is_on_the_request_path() {
+        let text = "fn accept(rx: Receiver<u8>) {\n\
+                    \x20   let v = rx.recv().unwrap();\n\
+                    \x20   let (tx2, rx2) = mpsc::channel();\n\
+                    }";
+        let d = check(&tree(vec![file("src/net/server.rs", FileKind::Src, text)]));
+        assert_eq!(rules_of(&d), ["request-unwrap", "unbounded-channel"], "{d:?}");
+        // coordinator stays out of unbounded-channel scope (its response
+        // channels are rendezvous by design)
+        let d = check(&tree(vec![file("src/coordinator/server.rs", FileKind::Src, text)]));
+        assert_eq!(rules_of(&d), ["request-unwrap"], "{d:?}");
     }
 
     #[test]
@@ -883,5 +995,55 @@ mod tests {
                        \x20   let b = r.counter(\"plain_total\"); let s = \"prose\";\n\
                        }";
         assert!(check(&tree(vec![file("src/m.rs", FileKind::Src, wrapped)])).is_empty());
+    }
+
+    #[test]
+    fn docs_fresh_flags_undocumented_metrics_and_knobs() {
+        let src = file(
+            "src/m.rs",
+            FileKind::Src,
+            "fn f(r: &Registry) { r.counter(\"documented_total\"); r.counter(\"missing_total\"); }",
+        );
+        let sched = file(
+            "src/circulant/sched.rs",
+            FileKind::Src,
+            "pub const KNOBS: &[Knob] = &[\n\
+             \x20   Knob { name: \"CIRCNN_DOCUMENTED\", role: \"x\" },\n\
+             \x20   Knob { name: \"CIRCNN_MISSING\", role: \"y\" },\n\
+             ];",
+        );
+        let doc = "`documented_total` counts requests; `CIRCNN_DOCUMENTED` is a knob.";
+        let t = LintTree {
+            files: vec![src, sched],
+            workflow: None,
+            ops_doc: Some(doc.to_string()),
+        };
+        let d = check(&t);
+        assert_eq!(rules_of(&d), ["docs-fresh", "docs-fresh"], "{d:?}");
+        assert!(d.iter().any(|x| x.message.contains("missing_total")), "{d:?}");
+        assert!(d.iter().any(|x| x.message.contains("CIRCNN_MISSING")), "{d:?}");
+    }
+
+    #[test]
+    fn docs_fresh_is_silent_without_the_doc_and_honors_allow() {
+        let reg = "fn f(r: &Registry) { r.counter(\"undoc_total\"); }";
+        // no docs/OPERATIONS.md in the tree: the rule does not opt in
+        assert!(check(&tree(vec![file("src/m.rs", FileKind::Src, reg)])).is_empty());
+
+        // the audited escape hatch for internal-only metrics
+        let escaped = file(
+            "src/m.rs",
+            FileKind::Src,
+            "fn f(r: &Registry) {\n\
+             \x20   // lint:allow(docs-fresh): internal-only metric\n\
+             \x20   r.counter(\"undoc_total\");\n\
+             }",
+        );
+        let t = LintTree {
+            files: vec![escaped],
+            workflow: None,
+            ops_doc: Some("the guide".to_string()),
+        };
+        assert!(check(&t).is_empty(), "{:?}", check(&t));
     }
 }

@@ -298,6 +298,9 @@ pub struct LintTree {
     pub files: Vec<SourceFile>,
     /// the CI workflow, when present: (relative path, raw lines)
     pub workflow: Option<(String, Vec<String>)>,
+    /// `docs/OPERATIONS.md`, when present — the docs-fresh rule checks
+    /// every registered metric name and `CIRCNN_*` knob appears in it
+    pub ops_doc: Option<String>,
 }
 
 /// Walk `root` and scan every relevant file.  Scanned: `src/**/*.rs`
@@ -339,7 +342,9 @@ pub fn collect(root: &Path) -> io::Result<LintTree> {
         })
         .transpose()?;
 
-    Ok(LintTree { files, workflow })
+    let ops_doc = fs::read_to_string(root.join("docs/OPERATIONS.md")).ok();
+
+    Ok(LintTree { files, workflow, ops_doc })
 }
 
 fn read_one(root: &Path, path: &Path, kind: FileKind) -> io::Result<SourceFile> {

@@ -13,6 +13,11 @@
 //! circnn simulate [flags]       one FPGA-sim design point
 //! circnn infer [flags]          run images through a compiled artifact
 //! circnn serve [flags]          serving demo: batched requests + metrics
+//!                               (--tcp serves the framed protocol of
+//!                               docs/PROTOCOL.md over a TCP listener)
+//! circnn loadgen [flags]        open-loop TCP load harness: Poisson or
+//!                               bursty arrivals, warm/cold connections,
+//!                               registry-derived latency percentiles
 //! circnn train-demo [flags]     train natively in the spectral domain
 //!                               (loss curve; PJRT artifact driver with
 //!                               --features pjrt)
@@ -54,6 +59,7 @@ fn main() {
         "simulate" => cmd_simulate(&flags),
         "infer" => cmd_infer(&flags),
         "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "train-demo" => cmd_train_demo(&flags),
         "models" => cmd_models(),
         "lint" => cmd_lint(&flags),
@@ -94,6 +100,8 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
   serve      [--model NAME] [--requests N] [--clients N] [--max-batch N]
              [--engine native|pipeline] [--depth N] [--synthetic]
              [--precision f32|fixed16] [--trace] [--trace-dump PATH]
+             [--tcp] [--tcp-addr HOST:PORT] [--max-conns N]
+             [--max-inflight N]
              --engine native:   serve on the pure-Rust substrate
              --engine pipeline: deep-pipelined serving — per-layer stage
                                 workers, multiple batches in flight
@@ -111,6 +119,27 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
                                 the run (CIRCNN_TRACE=1 does the same)
              --trace-dump PATH: write the full telemetry document
                                 ({\"metrics\": ..., \"spans\": ...}) as JSON
+             --tcp:             also serve the framed wire protocol
+                                (docs/PROTOCOL.md) on --tcp-addr (default
+                                127.0.0.1:0 = ephemeral port); the demo
+                                clients then connect over TCP.  --max-conns
+                                caps concurrent connections, --max-inflight
+                                caps unanswered requests per connection;
+                                both shed with explicit Overloaded replies
+                                (see docs/OPERATIONS.md)
+  loadgen    [--addr HOST:PORT | --synthetic] [--model NAME] [--requests N]
+             [--rate R] [--process poisson|bursty] [--burst N]
+             [--connections N] [--cold N] [--seed N]
+             [--engine native|pipeline] [--max-batch N] [--bench-json PATH]
+             open-loop load harness for the TCP front-end (arrivals follow
+             a fixed-seed schedule, never the server's reply rate).
+             --addr drives an already-running `serve --tcp`; --synthetic
+             (default) starts its own synthetic server, also replays the
+             identical schedule in-process, and derives
+             tcp_vs_inproc_ratio_* alongside serve_tcp_latency_p*_us_*;
+             --bench-json merges those keys into BENCH_circulant.json
+             (informational keys, never CI-gated).
+             full walkthrough: docs/OPERATIONS.md
   train-demo [--model NAME] [--steps N] [--batch N] [--lr F] [--seed N]
              default build: native spectral-domain trainer (O(n log n)
              backprop, no artifacts needed); with `--features pjrt` it
@@ -122,8 +151,10 @@ misc:
   lint       [--root DIR] repo-invariant static analysis over the crate's
              own sources: SAFETY comments + pinned SIMD oracles, dead
              oracle twins, the CIRCNN_* knob registry, the bench-key
-             gating contract, request-path unwrap/channel hygiene, and
-             the metric naming contract (literal snake_case names);
+             gating contract, request-path unwrap/channel hygiene
+             (coordinator/pipeline/net), the metric naming contract
+             (literal snake_case names), and docs freshness (every
+             metric + knob documented in docs/OPERATIONS.md);
              prints `file:line: [rule] message` and exits non-zero on
              any violation (the CI lint job runs exactly this)
 ";
@@ -524,22 +555,70 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     }
 
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for c in 0..clients {
-            let server = &server;
-            let model = &model;
-            scope.spawn(move || {
-                let per = requests / clients;
-                for i in 0..per {
-                    let (img, _) = data::sample(&ds, (c * per + i) as u64);
-                    match server.infer(model, &img) {
-                        Ok(_) | Err(circnn::coordinator::InferError::Rejected) => {}
-                        Err(e) => eprintln!("client {c}: {e}"),
+    // --tcp: wrap the coordinator in the TCP front-end and run the demo
+    // clients over the wire protocol instead of in-process calls
+    let server = if flag_bool(flags, "tcp") {
+        let net_cfg = circnn::net::NetConfig {
+            addr: flags
+                .get("tcp-addr")
+                .cloned()
+                .unwrap_or_else(|| "127.0.0.1:0".to_string()),
+            max_connections: flag_usize(flags, "max-conns", 256),
+            max_inflight: flag_usize(flags, "max-inflight", 1024),
+            ..circnn::net::NetConfig::default()
+        };
+        let tcp = circnn::net::TcpServer::start(server, net_cfg)?;
+        let addr = tcp.local_addr();
+        println!("tcp front-end listening on {addr} (protocol: docs/PROTOCOL.md)");
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let model = &model;
+                let ds = &ds;
+                scope.spawn(move || {
+                    let mut client = match circnn::net::Client::connect(addr) {
+                        Ok(cl) => cl,
+                        Err(e) => {
+                            eprintln!("client {c}: connect: {e}");
+                            return;
+                        }
+                    };
+                    let per = requests / clients;
+                    for i in 0..per {
+                        let (img, _) = data::sample(ds, (c * per + i) as u64);
+                        let dims = [img.len() as u32];
+                        match client.infer(model, &dims, img) {
+                            Ok(_) => {}
+                            Err(e) => {
+                                eprintln!("client {c}: {e}");
+                                return;
+                            }
+                        }
                     }
-                }
-            });
-        }
-    });
+                });
+            }
+        });
+        // graceful drain: stop accepting, answer everything admitted,
+        // then hand the coordinator back for the report below
+        tcp.shutdown()
+    } else {
+        std::thread::scope(|scope| {
+            for c in 0..clients {
+                let server = &server;
+                let model = &model;
+                scope.spawn(move || {
+                    let per = requests / clients;
+                    for i in 0..per {
+                        let (img, _) = data::sample(&ds, (c * per + i) as u64);
+                        match server.infer(model, &img) {
+                            Ok(_) | Err(circnn::coordinator::InferError::Rejected) => {}
+                            Err(e) => eprintln!("client {c}: {e}"),
+                        }
+                    }
+                });
+            }
+        });
+        server
+    };
     let dt = t0.elapsed();
     println!("served {requests} requests from {clients} clients in {:.3}s", dt.as_secs_f64());
     println!("throughput: {:.1} req/s", requests as f64 / dt.as_secs_f64());
@@ -562,6 +641,109 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("telemetry dump written to {path}");
     }
     server.shutdown();
+    Ok(())
+}
+
+/// `circnn loadgen` — drive a TCP front-end with the open-loop harness
+/// ([`circnn::net::loadgen`]).  With `--addr` it targets an external
+/// `serve --tcp`; by default (`--synthetic`) it starts its own synthetic
+/// server, replays the identical fixed-seed schedule in-process, and
+/// derives the `tcp_vs_inproc_ratio_*` / `serve_tcp_latency_p*_us_*`
+/// bench keys (informational; never CI-gated).
+fn cmd_loadgen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use circnn::net::{loadgen, Arrival, LoadConfig, NetConfig, TcpServer};
+
+    let model = flags
+        .get("model")
+        .cloned()
+        .unwrap_or_else(|| "mnist_mlp_1".to_string());
+    let entry = models::by_name(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (see `circnn models`)"))?;
+    let (h, w, c) = entry.input;
+    let ds = data::dataset(entry.dataset)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", entry.dataset))?;
+    let arrival = match flags.get("process").map(String::as_str) {
+        Some("bursty") => Arrival::Bursty { burst: flag_usize(flags, "burst", 8) },
+        Some("poisson") | None => Arrival::Poisson,
+        Some(other) => anyhow::bail!("unknown arrival process {other:?} (poisson|bursty)"),
+    };
+    let cfg = LoadConfig {
+        model: model.clone(),
+        dims: vec![(h * w * c) as u32],
+        requests: flag_usize(flags, "requests", 512),
+        rate: flags.get("rate").and_then(|v| v.parse().ok()).unwrap_or(500.0),
+        arrival,
+        warm: flag_usize(flags, "connections", 4),
+        cold: flag_usize(flags, "cold", 0),
+        seed: flag_usize(flags, "seed", 0x10AD) as u64,
+    };
+    let sample = |i: u64| data::sample(&ds, i).0;
+    println!(
+        "loadgen: {} requests at {:.0} req/s ({:?}), {} warm + {} cold connections, seed {}",
+        cfg.requests, cfg.rate, cfg.arrival, cfg.warm, cfg.cold, cfg.seed
+    );
+
+    // --addr: external server; no in-process twin is reachable, so only
+    // the TCP-side percentiles are reported
+    if let Some(addr) = flags.get("addr") {
+        use std::net::ToSocketAddrs;
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{addr:?} resolved to no address"))?;
+        let report = loadgen::run_tcp(addr, &cfg, &sample);
+        println!("tcp     {}", report.summary());
+        return Ok(());
+    }
+
+    // --synthetic (default): own server, registry weights, deterministic
+    // random-init — the CI/bench mode, no artifacts needed
+    let policy = BatchPolicy {
+        max_batch: flag_usize(flags, "max-batch", 64),
+        ..BatchPolicy::default()
+    };
+    let engine = match flags.get("engine").map(String::as_str) {
+        Some("pipeline") => EngineKind::Pipeline,
+        _ => EngineKind::Native,
+    };
+    let mut man = Manifest::synthetic();
+    man.models.retain(|m| m.name == model);
+    let server = Server::start_with_manifest(
+        man,
+        ServerConfig {
+            policy,
+            engine,
+            init_random_fallback: true,
+            ..ServerConfig::default()
+        },
+    )?;
+    let tcp = TcpServer::start(server, NetConfig::default())?;
+    let addr = tcp.local_addr();
+    println!("synthetic server on {addr} (engine {engine:?}, max_batch {})", policy.max_batch);
+
+    let tcp_report = loadgen::run_tcp(addr, &cfg, &sample);
+    println!("tcp     {}", tcp_report.summary());
+    // the no-network twin: identical schedule, identical server, replies
+    // through the in-process seam — isolates the wire + framing cost
+    let inproc_report = loadgen::run_inprocess(tcp.server(), &cfg, &sample);
+    println!("inproc  {}", inproc_report.summary());
+    let ratio = tcp_report.p50_us as f64 / inproc_report.p50_us.max(1) as f64;
+    println!("tcp/inproc p50 ratio: {ratio:.2}x");
+    let server = tcp.shutdown();
+    println!("server  {}", server.metrics().summary());
+    server.shutdown();
+
+    if let Some(path) = flags.get("bench-json") {
+        let tag = format!("b{}_c{}", policy.max_batch, cfg.warm + cfg.cold);
+        let derived = vec![
+            (format!("serve_tcp_latency_p50_us_{tag}"), tcp_report.p50_us as f64),
+            (format!("serve_tcp_latency_p95_us_{tag}"), tcp_report.p95_us as f64),
+            (format!("serve_tcp_latency_p99_us_{tag}"), tcp_report.p99_us as f64),
+            (format!("tcp_vs_inproc_ratio_{tag}"), ratio),
+        ];
+        circnn::util::benchkit::merge_derived(path, "circulant", &derived)?;
+        println!("merged {} loadgen keys into {path}", derived.len());
+    }
     Ok(())
 }
 

@@ -1,0 +1,80 @@
+//! A minimal blocking client for the framed protocol — used by the
+//! `circnn serve --tcp` demo clients, the `circnn loadgen` harness, and
+//! the loopback integration tests.  One request in flight at a time per
+//! [`Client`]; open more clients (connections) for concurrency, matching
+//! the server's per-connection reply ordering.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::net::protocol::{
+    encode_request, Frame, FrameReader, ReplyFrame, RequestFrame, DEFAULT_MAX_FRAME,
+};
+
+/// Blocking connection to a [`crate::net::TcpServer`].
+pub struct Client {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_id: u64,
+}
+
+impl Client {
+    /// Connect; `TCP_NODELAY` is set so single-frame requests are not
+    /// Nagle-delayed behind the previous reply's ACK.
+    pub fn connect(addr: SocketAddr) -> std::io::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream, reader: FrameReader::new(DEFAULT_MAX_FRAME), next_id: 0 })
+    }
+
+    /// Write one request frame; returns the request id assigned to it.
+    /// Ids are per-connection and monotonically increasing.
+    pub fn send(&mut self, model: &str, dims: &[u32], payload: Vec<f32>) -> std::io::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let frame =
+            RequestFrame { id, model: model.to_string(), dims: dims.to_vec(), payload };
+        self.stream.write_all(&encode_request(&frame))?;
+        Ok(id)
+    }
+
+    /// Block until the next reply frame arrives (replies come back in
+    /// request order on a connection).
+    pub fn recv(&mut self) -> std::io::Result<ReplyFrame> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.reader.next_frame() {
+                Ok(Some(Frame::Reply(rep))) => return Ok(rep),
+                Ok(Some(Frame::Request(_))) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "server sent a request frame",
+                    ));
+                }
+                Ok(None) => {}
+                Err(err) => {
+                    return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, err));
+                }
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                ));
+            }
+            self.reader.feed(&chunk[..n]);
+        }
+    }
+
+    /// One synchronous round trip: [`Client::send`] then [`Client::recv`].
+    pub fn infer(
+        &mut self,
+        model: &str,
+        dims: &[u32],
+        payload: Vec<f32>,
+    ) -> std::io::Result<ReplyFrame> {
+        self.send(model, dims, payload)?;
+        self.recv()
+    }
+}

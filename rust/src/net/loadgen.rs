@@ -1,0 +1,519 @@
+//! Open-loop load generation for the TCP front-end (`circnn loadgen`).
+//!
+//! **Open-loop** means arrivals follow a precomputed schedule, not the
+//! server's reply rate: a slow server cannot throttle its own offered
+//! load, which is exactly what makes load-shedding visible (closed-loop
+//! harnesses hide overload by waiting).  The whole schedule — arrival
+//! offsets, sample indices, connection assignment — derives from one
+//! [`SplitMix`] seed, so two runs with the same seed offer byte-identical
+//! request streams in the same per-connection order.
+//!
+//! Two arrival processes ([`Arrival`]): **Poisson** (exponential
+//! inter-arrival gaps at `rate` req/s, the classic open-system model) and
+//! **bursty** (back-to-back bursts of `burst` requests separated by
+//! exponential gaps with the same long-run rate — the batcher's best case
+//! and the admission path's worst case).  Connections come in a
+//! **warm/cold mix**: warm slots hold one connection open for the whole
+//! run (steady-state framing cost), cold slots reconnect per request
+//! (handshake + slow-start cost on every sample).
+//!
+//! Results land in a private [`Registry`] (`loadgen_*` names, documented
+//! in `docs/OPERATIONS.md`); [`LoadReport`] derives p50/p95/p99 from the
+//! log2 latency histogram — the same quantile machinery the server's own
+//! `request_latency_us` uses, so the two sides are comparable.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{InferError, Server};
+use crate::net::client::Client;
+use crate::net::protocol::{
+    encode_request, Frame, FrameReader, RequestFrame, Status, DEFAULT_MAX_FRAME,
+};
+use crate::telemetry::{Counter, Histogram, Registry};
+use crate::util::rng::SplitMix;
+
+/// The arrival process shaping the open-loop schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// exponential inter-arrival gaps (memoryless, rate req/s)
+    Poisson,
+    /// bursts of `burst` back-to-back requests; exponential gaps between
+    /// bursts keep the long-run rate at the configured req/s
+    Bursty { burst: usize },
+}
+
+/// One load-generation run.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub model: String,
+    /// tensor dims sent on the wire (product = payload length)
+    pub dims: Vec<u32>,
+    pub requests: usize,
+    /// offered load, requests per second
+    pub rate: f64,
+    pub arrival: Arrival,
+    /// persistent connections held open for the whole run
+    pub warm: usize,
+    /// reconnect-per-request slots (cold-connection cost in every sample)
+    pub cold: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            model: "mnist_mlp_1".to_string(),
+            dims: vec![784],
+            requests: 256,
+            rate: 500.0,
+            arrival: Arrival::Poisson,
+            warm: 4,
+            cold: 0,
+            seed: 0x10AD,
+        }
+    }
+}
+
+/// One scheduled send: fire at `offset` from run start, on connection
+/// `slot`, with deterministic dataset sample `sample`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SendSlot {
+    pub offset: Duration,
+    pub sample: u64,
+    pub slot: usize,
+}
+
+/// Derive the full open-loop schedule from the seed — pure function of
+/// the config, so TCP and in-process runs can offer the identical stream.
+pub fn schedule(cfg: &LoadConfig) -> Vec<SendSlot> {
+    let mut rng = SplitMix::new(cfg.seed);
+    let slots = (cfg.warm + cfg.cold).max(1);
+    let rate = cfg.rate.max(1e-6);
+    let mut sends = Vec::with_capacity(cfg.requests);
+    let mut t = 0.0f64;
+    while sends.len() < cfg.requests {
+        match cfg.arrival {
+            Arrival::Poisson => {
+                t += exp_gap(&mut rng, rate);
+                push_send(&mut sends, t, slots);
+            }
+            Arrival::Bursty { burst } => {
+                let burst = burst.max(1);
+                t += exp_gap(&mut rng, rate / burst as f64);
+                for _ in 0..burst.min(cfg.requests - sends.len()) {
+                    push_send(&mut sends, t, slots);
+                }
+            }
+        }
+    }
+    sends
+}
+
+/// One exponential inter-arrival gap with mean `1/rate` seconds.
+fn exp_gap(rng: &mut SplitMix, rate: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() / rate
+}
+
+fn push_send(sends: &mut Vec<SendSlot>, t: f64, slots: usize) {
+    let i = sends.len();
+    sends.push(SendSlot {
+        offset: Duration::from_secs_f64(t),
+        sample: i as u64,
+        slot: i % slots,
+    });
+}
+
+/// The harness's own metric handles — registered once here, read through
+/// [`LoadReport`].
+struct LoadMetrics {
+    latency_us: Histogram,
+    sched_lag_us: Histogram,
+    sent: Counter,
+    ok: Counter,
+    overloaded: Counter,
+    errors: Counter,
+}
+
+impl LoadMetrics {
+    fn new(registry: &Registry) -> Self {
+        Self {
+            latency_us: registry.histogram("loadgen_latency_us"),
+            sched_lag_us: registry.histogram("loadgen_sched_lag_us"),
+            sent: registry.counter("loadgen_sent_total"),
+            ok: registry.counter("loadgen_ok_total"),
+            overloaded: registry.counter("loadgen_overloaded_total"),
+            errors: registry.counter("loadgen_errors_total"),
+        }
+    }
+}
+
+/// Outcome of one run; percentiles come from the log2 latency histogram
+/// (upper bucket edges, same resolution as the server's own latency
+/// metrics).
+#[derive(Debug)]
+pub struct LoadReport {
+    /// the harness registry (full `loadgen_*` exposition lives here)
+    pub registry: Arc<Registry>,
+    pub elapsed: Duration,
+    pub sent: u64,
+    pub ok: u64,
+    pub overloaded: u64,
+    pub errors: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+}
+
+impl LoadReport {
+    fn gather(registry: Arc<Registry>, lg: &LoadMetrics, elapsed: Duration) -> Self {
+        Self {
+            elapsed,
+            sent: lg.sent.get(),
+            ok: lg.ok.get(),
+            overloaded: lg.overloaded.get(),
+            errors: lg.errors.get(),
+            p50_us: lg.latency_us.quantile_edge(0.50),
+            p95_us: lg.latency_us.quantile_edge(0.95),
+            p99_us: lg.latency_us.quantile_edge(0.99),
+            registry,
+        }
+    }
+
+    /// Achieved request rate over the wall-clock run.
+    pub fn achieved_rate(&self) -> f64 {
+        self.sent as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "sent={} ok={} shed={} err={} in {:.3}s ({:.1} req/s) \
+             latency p50<={}us p95<={}us p99<={}us",
+            self.sent,
+            self.ok,
+            self.overloaded,
+            self.errors,
+            self.elapsed.as_secs_f64(),
+            self.achieved_rate(),
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+        )
+    }
+}
+
+/// Payload source: deterministic sample index → input tensor.
+pub type SampleFn<'a> = &'a (dyn Fn(u64) -> Vec<f32> + Sync);
+
+/// Drive a TCP server at `addr` with the config's open-loop schedule.
+pub fn run_tcp(addr: SocketAddr, cfg: &LoadConfig, sample: SampleFn<'_>) -> LoadReport {
+    let sends = schedule(cfg);
+    let warm = if cfg.warm + cfg.cold == 0 { 1 } else { cfg.warm };
+    let slots = (cfg.warm + cfg.cold).max(1);
+    let registry = Arc::new(Registry::new());
+    let lg = LoadMetrics::new(&registry);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for slot in 0..slots {
+            let work: Vec<SendSlot> =
+                sends.iter().filter(|s| s.slot == slot).cloned().collect();
+            if work.is_empty() {
+                continue;
+            }
+            let lg = &lg;
+            let cfg = &*cfg;
+            if slot < warm {
+                scope.spawn(move || warm_slot(addr, cfg, work, start, lg, sample));
+            } else {
+                scope.spawn(move || cold_slot(addr, cfg, work, start, lg, sample));
+            }
+        }
+    });
+    LoadReport::gather(registry, &lg, start.elapsed())
+}
+
+/// Sleep until `target`, recording how late the send actually fires
+/// (scheduler + previous-work lag — nonzero lag means the offered load
+/// fell below the configured rate).
+fn pace(target: Instant, lg: &LoadMetrics) {
+    let now = Instant::now();
+    if target > now {
+        std::thread::sleep(target - now);
+    }
+    lg.sched_lag_us
+        .observe(Instant::now().saturating_duration_since(target).as_micros() as u64);
+}
+
+fn record_status(status: Status, lg: &LoadMetrics) {
+    match status {
+        Status::Ok => lg.ok.inc(),
+        Status::Overloaded => lg.overloaded.inc(),
+        _ => lg.errors.inc(),
+    }
+}
+
+/// Warm slot: one connection for the run; a paired reader thread records
+/// reply latencies while the sender keeps to the schedule (true open
+/// loop — sends never wait for replies).
+fn warm_slot(
+    addr: SocketAddr,
+    cfg: &LoadConfig,
+    work: Vec<SendSlot>,
+    start: Instant,
+    lg: &LoadMetrics,
+    sample: SampleFn<'_>,
+) {
+    let stream = match TcpStream::connect(addr) {
+        Ok(s) => s,
+        Err(_) => {
+            lg.errors.add(work.len() as u64);
+            return;
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            lg.errors.add(work.len() as u64);
+            return;
+        }
+    };
+    // replies come back in send order on one connection, so a FIFO of
+    // send timestamps is all the reader needs to pair them up
+    let sent_at: Arc<Mutex<VecDeque<Instant>>> = Arc::new(Mutex::new(VecDeque::new()));
+    let expected = work.len();
+    std::thread::scope(|scope| {
+        let reader_q = sent_at.clone();
+        scope.spawn(move || reply_reader(read_half, expected, reader_q, lg));
+        let mut stream = stream;
+        for (i, req) in work.iter().enumerate() {
+            pace(start + req.offset, lg);
+            let frame = RequestFrame {
+                id: req.sample,
+                model: cfg.model.clone(),
+                dims: cfg.dims.clone(),
+                payload: sample(req.sample),
+            };
+            let bytes = encode_request(&frame);
+            // stamp before the write: the reply races the send returning
+            sent_at.lock().unwrap().push_back(Instant::now());
+            if stream.write_all(&bytes).is_err() {
+                sent_at.lock().unwrap().pop_back();
+                lg.errors.add((work.len() - i) as u64);
+                break;
+            }
+            lg.sent.inc();
+        }
+        // the reader exits after `expected` replies or on EOF
+    });
+}
+
+/// Count down `expected` reply frames, recording latency and status.
+fn reply_reader(
+    mut stream: TcpStream,
+    expected: usize,
+    sent_at: Arc<Mutex<VecDeque<Instant>>>,
+    lg: &LoadMetrics,
+) {
+    let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+    let mut chunk = [0u8; 16 * 1024];
+    let mut got = 0usize;
+    while got < expected {
+        match reader.next_frame() {
+            Ok(Some(Frame::Reply(rep))) => {
+                let now = Instant::now();
+                if let Some(sent) = sent_at.lock().unwrap().pop_front() {
+                    lg.latency_us.observe(now.duration_since(sent).as_micros() as u64);
+                }
+                record_status(rep.status, lg);
+                got += 1;
+                continue;
+            }
+            Ok(Some(Frame::Request(_))) | Err(_) => {
+                lg.errors.add((expected - got) as u64);
+                return;
+            }
+            Ok(None) => {}
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) | Err(_) => {
+                // connection gone: the sender accounts for unsent work,
+                // this covers replies already owed
+                let owed = sent_at.lock().unwrap().len();
+                lg.errors.add(owed as u64);
+                return;
+            }
+            Ok(n) => reader.feed(&chunk[..n]),
+        }
+    }
+}
+
+/// Cold slot: fresh connect + one round trip per request — every sample
+/// pays the connection-establishment cost.
+fn cold_slot(
+    addr: SocketAddr,
+    cfg: &LoadConfig,
+    work: Vec<SendSlot>,
+    start: Instant,
+    lg: &LoadMetrics,
+    sample: SampleFn<'_>,
+) {
+    for req in &work {
+        pace(start + req.offset, lg);
+        let t0 = Instant::now();
+        lg.sent.inc();
+        let reply = Client::connect(addr)
+            .and_then(|mut c| c.infer(&cfg.model, &cfg.dims, sample(req.sample)));
+        match reply {
+            Ok(rep) => {
+                lg.latency_us.observe(t0.elapsed().as_micros() as u64);
+                record_status(rep.status, lg);
+            }
+            Err(_) => lg.errors.inc(),
+        }
+    }
+}
+
+/// Drive an in-process [`Server`] with the *identical* schedule — the
+/// no-network twin behind the `tcp_vs_inproc_ratio_*` bench keys.  Same
+/// slots, same pacing, same samples; submission goes through
+/// [`Server::infer_async`] instead of the wire.
+pub fn run_inprocess(server: &Server, cfg: &LoadConfig, sample: SampleFn<'_>) -> LoadReport {
+    let sends = schedule(cfg);
+    let slots = (cfg.warm + cfg.cold).max(1);
+    let registry = Arc::new(Registry::new());
+    let lg = LoadMetrics::new(&registry);
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for slot in 0..slots {
+            let work: Vec<SendSlot> =
+                sends.iter().filter(|s| s.slot == slot).cloned().collect();
+            if work.is_empty() {
+                continue;
+            }
+            let lg = &lg;
+            let cfg = &*cfg;
+            scope.spawn(move || inproc_slot(server, cfg, work, start, lg, sample));
+        }
+    });
+    LoadReport::gather(registry, &lg, start.elapsed())
+}
+
+type PendingReply = (Instant, mpsc::Receiver<Result<crate::coordinator::Response, InferError>>);
+
+fn inproc_slot(
+    server: &Server,
+    cfg: &LoadConfig,
+    work: Vec<SendSlot>,
+    start: Instant,
+    lg: &LoadMetrics,
+    sample: SampleFn<'_>,
+) {
+    // the in-process mirror of the TCP writer: a collector consumes
+    // pending replies FIFO so latency is stamped at arrival, not at a
+    // post-hoc join
+    let (tx, pending) = mpsc::sync_channel::<PendingReply>(work.len().max(1));
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            while let Ok((sent, rx)) = pending.recv() {
+                let status = match rx.recv() {
+                    Ok(Ok(_)) => Status::Ok,
+                    Ok(Err(InferError::Rejected)) => Status::Overloaded,
+                    Ok(Err(_)) | Err(_) => Status::Internal,
+                };
+                lg.latency_us
+                    .observe(Instant::now().duration_since(sent).as_micros() as u64);
+                record_status(status, lg);
+            }
+        });
+        for req in &work {
+            pace(start + req.offset, lg);
+            let sent = Instant::now();
+            lg.sent.inc();
+            match server.infer_async(&cfg.model, &sample(req.sample)) {
+                Ok(rx) => {
+                    if tx.send((sent, rx)).is_err() {
+                        lg.errors.inc();
+                    }
+                }
+                Err(InferError::Rejected) => {
+                    // the wire twin still measures a (tiny) shed latency
+                    lg.latency_us.observe(sent.elapsed().as_micros() as u64);
+                    lg.overloaded.inc();
+                }
+                Err(_) => lg.errors.inc(),
+            }
+        }
+        drop(tx);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(requests: usize, arrival: Arrival, warm: usize, cold: usize) -> LoadConfig {
+        LoadConfig {
+            requests,
+            arrival,
+            warm,
+            cold,
+            rate: 1000.0,
+            seed: 7,
+            ..LoadConfig::default()
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_ordered() {
+        let c = cfg(64, Arrival::Poisson, 3, 1);
+        let a = schedule(&c);
+        let b = schedule(&c);
+        assert_eq!(a, b, "same seed, same schedule");
+        assert_eq!(a.len(), 64);
+        assert!(a.windows(2).all(|w| w[0].offset <= w[1].offset), "monotone offsets");
+        // round-robin over warm + cold slots, samples are the indices
+        for (i, s) in a.iter().enumerate() {
+            assert_eq!(s.slot, i % 4);
+            assert_eq!(s.sample, i as u64);
+        }
+        let mut other = c.clone();
+        other.seed = 8;
+        assert_ne!(schedule(&other), a, "different seed, different schedule");
+    }
+
+    #[test]
+    fn poisson_long_run_rate_matches() {
+        let c = cfg(4000, Arrival::Poisson, 1, 0);
+        let s = schedule(&c);
+        let span = s.last().unwrap().offset.as_secs_f64();
+        let rate = s.len() as f64 / span;
+        assert!(
+            (rate - c.rate).abs() / c.rate < 0.1,
+            "offered rate {rate:.1} vs configured {}",
+            c.rate
+        );
+    }
+
+    #[test]
+    fn bursty_schedule_clusters_and_keeps_the_rate() {
+        let c = cfg(4000, Arrival::Bursty { burst: 8 }, 2, 0);
+        let s = schedule(&c);
+        // bursts share one offset: at least 7 of every 8 gaps are zero
+        let zero_gaps = s.windows(2).filter(|w| w[0].offset == w[1].offset).count();
+        assert!(zero_gaps >= s.len() * 7 / 8 - 8, "{zero_gaps} zero gaps in {}", s.len());
+        let span = s.last().unwrap().offset.as_secs_f64();
+        let rate = s.len() as f64 / span;
+        assert!((rate - c.rate).abs() / c.rate < 0.15, "long-run rate {rate:.1}");
+    }
+
+    #[test]
+    fn zero_connections_still_get_one_slot() {
+        let c = cfg(10, Arrival::Poisson, 0, 0);
+        assert!(schedule(&c).iter().all(|s| s.slot == 0));
+    }
+}

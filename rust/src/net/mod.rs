@@ -1,0 +1,35 @@
+//! TCP serving front-end: a dependency-free (std::net only) network layer
+//! over the [`crate::coordinator`] — plus the open-loop load harness that
+//! drives it.
+//!
+//! * [`protocol`] — the length-framed binary wire format (`CIRC` magic,
+//!   version byte, request id, dims, f32 payload), documented
+//!   byte-for-byte in `docs/PROTOCOL.md`, with the incremental
+//!   [`protocol::FrameReader`] both ends share.
+//! * [`server`] — [`TcpServer`]: accept loop + per-connection
+//!   reader/writer threads feeding the coordinator through its
+//!   transport-agnostic [`crate::coordinator::Frontend`] seam; layered
+//!   admission control (connection cap, per-connection in-flight cap, the
+//!   batcher's own `max_queue`) where every shed is an explicit
+//!   `Overloaded` reply counted in `net_overloaded_total`; graceful drain
+//!   on shutdown.
+//! * [`client`] — a minimal blocking [`Client`] (demo clients, tests).
+//! * [`loadgen`] — `circnn loadgen`: fixed-seed open-loop generator with
+//!   Poisson and bursty arrivals and warm/cold connection mixes, reporting
+//!   registry-derived latency percentiles (see `docs/OPERATIONS.md` for
+//!   the walkthrough).
+//!
+//! Everything observable lands in the shared [`crate::telemetry`]
+//! registry under `net_*` / `loadgen_*` names; a server without a TCP
+//! listener still exposes the `net_*` family at zero so the bench-JSON
+//! schema never depends on the transport mix.
+
+pub mod client;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use client::Client;
+pub use loadgen::{Arrival, LoadConfig, LoadReport};
+pub use protocol::{Frame, FrameReader, ReplyFrame, RequestFrame, Status, WireError};
+pub use server::{NetConfig, TcpServer};

@@ -1,0 +1,500 @@
+//! The length-framed binary wire protocol, byte for byte.
+//!
+//! This module is the single source of truth for the format documented in
+//! `docs/PROTOCOL.md` — every constant, offset and example frame there is
+//! pinned by the round-trip tests below and in `rust/tests/net_loopback.rs`.
+//! Everything is **little-endian** and dependency-free (`std` only).
+//!
+//! A frame is a fixed 20-byte header followed by `body_len` body bytes:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic  b"CIRC"
+//!      4     1  version (currently 1)
+//!      5     1  frame type (1 = Request, 2 = Reply)
+//!      6     2  reserved (senders write 0, receivers ignore)
+//!      8     8  request id (u64, echoed verbatim in the reply)
+//!     16     4  body_len (u32, bytes after the header)
+//! ```
+//!
+//! [`FrameReader`] is the incremental decode loop the per-connection reader
+//! threads run: bytes are fed in as they arrive off the socket, frames come
+//! out as soon as they are complete, and a partial frame simply stays
+//! buffered until the next read ("partial-frame resume").  The buffer is
+//! bounded: a frame announcing more than `max_frame` bytes is rejected
+//! before any body byte is read, so a connection can hold at most one
+//! maximum-size frame plus one read chunk in memory.
+
+/// Frame magic, first on the wire: `b"CIRC"`.
+pub const MAGIC: [u8; 4] = *b"CIRC";
+/// The protocol version this build speaks.  A server receiving any other
+/// version replies [`Status::UnsupportedVersion`] and closes.
+pub const VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_LEN: usize = 20;
+/// Frame type tag: client request.
+pub const TYPE_REQUEST: u8 = 1;
+/// Frame type tag: server reply.
+pub const TYPE_REPLY: u8 = 2;
+/// Default cap on a whole frame (header + body): 4 MiB, comfortably above
+/// any registry model's input tensor.
+pub const DEFAULT_MAX_FRAME: usize = 1 << 22;
+
+/// Reply status codes (byte 0 of a reply body).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    /// request served; `label`/`logits` are valid
+    Ok = 0,
+    /// load shed: the connection's in-flight cap, the listener's
+    /// connection cap, or the batcher's `max_queue` admission limit
+    Overloaded = 1,
+    /// the model id names nothing in the routing table
+    UnknownModel = 2,
+    /// malformed request (wrong tensor geometry, non-finite payload, or an
+    /// undecodable body)
+    BadRequest = 3,
+    /// the execution engine failed; `message` carries the reason
+    Internal = 4,
+    /// the server is draining; no further requests will be admitted
+    ShuttingDown = 5,
+    /// version negotiation failed — the server speaks [`VERSION`] only and
+    /// closes the connection after this reply
+    UnsupportedVersion = 6,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> Result<Self, WireError> {
+        Ok(match v {
+            0 => Status::Ok,
+            1 => Status::Overloaded,
+            2 => Status::UnknownModel,
+            3 => Status::BadRequest,
+            4 => Status::Internal,
+            5 => Status::ShuttingDown,
+            6 => Status::UnsupportedVersion,
+            other => return Err(WireError::UnknownStatus(other)),
+        })
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+/// Everything that can be wrong with bytes on the wire.  Any of these ends
+/// the connection (after a best-effort error reply where a request id is
+/// known) — the stream is no longer frame-aligned.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum WireError {
+    #[error("bad magic {0:02x?} (expected \"CIRC\")")]
+    BadMagic([u8; 4]),
+    #[error("unsupported protocol version {0} (this build speaks {VERSION})")]
+    UnsupportedVersion(u8),
+    #[error("unknown frame type {0:#04x}")]
+    UnknownFrameType(u8),
+    #[error("frame of {len} bytes exceeds the {max}-byte cap")]
+    Oversize { len: usize, max: usize },
+    #[error("frame body truncated ({need} more bytes promised than present)")]
+    Truncated { need: usize },
+    #[error("{0} trailing bytes after the frame body")]
+    TrailingBytes(usize),
+    #[error("model name is not UTF-8")]
+    BadUtf8,
+    #[error("payload/dims mismatch: dims promise {expected} f32s, body carries {got}")]
+    BadPayload { expected: u64, got: u64 },
+    #[error("unknown reply status {0}")]
+    UnknownStatus(u8),
+}
+
+/// A decoded client request: classify `payload` (row-major, shaped `dims`)
+/// with `model`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub model: String,
+    pub dims: Vec<u32>,
+    pub payload: Vec<f32>,
+}
+
+/// A decoded server reply.  `label`/`logits` are meaningful only when
+/// `status` is [`Status::Ok`]; `message` is empty unless the status carries
+/// a human-readable reason.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplyFrame {
+    pub id: u64,
+    pub status: Status,
+    pub label: u32,
+    /// occupied size of the batch this request rode in (0 on errors)
+    pub occupancy: u32,
+    pub logits: Vec<f32>,
+    pub message: String,
+}
+
+impl ReplyFrame {
+    /// An error reply carrying no result rows.
+    pub fn error(id: u64, status: Status, message: impl Into<String>) -> Self {
+        Self { id, status, label: 0, occupancy: 0, logits: Vec::new(), message: message.into() }
+    }
+}
+
+/// Either side of the conversation, as decoded off the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    Request(RequestFrame),
+    Reply(ReplyFrame),
+}
+
+fn push_header(out: &mut Vec<u8>, frame_type: u8, id: u64, body_len: usize) {
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(frame_type);
+    out.extend_from_slice(&[0u8; 2]); // reserved
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+}
+
+/// Encode one request frame (header + body) to wire bytes.
+pub fn encode_request(req: &RequestFrame) -> Vec<u8> {
+    let elems: u64 = req.dims.iter().map(|&d| d as u64).product();
+    debug_assert_eq!(elems, req.payload.len() as u64, "dims must describe the payload");
+    let body_len = 2 + req.model.len() + 1 + 4 * req.dims.len() + 4 * req.payload.len();
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len);
+    push_header(&mut out, TYPE_REQUEST, req.id, body_len);
+    out.extend_from_slice(&(req.model.len() as u16).to_le_bytes());
+    out.extend_from_slice(req.model.as_bytes());
+    out.push(req.dims.len() as u8);
+    for &d in &req.dims {
+        out.extend_from_slice(&d.to_le_bytes());
+    }
+    for &v in &req.payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Encode one reply frame (header + body) to wire bytes.
+pub fn encode_reply(rep: &ReplyFrame) -> Vec<u8> {
+    let body_len = 1 + 4 + 4 + 4 + 4 * rep.logits.len() + 2 + rep.message.len();
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len);
+    push_header(&mut out, TYPE_REPLY, rep.id, body_len);
+    out.push(rep.status.as_u8());
+    out.extend_from_slice(&rep.label.to_le_bytes());
+    out.extend_from_slice(&rep.occupancy.to_le_bytes());
+    out.extend_from_slice(&(rep.logits.len() as u32).to_le_bytes());
+    for &v in &rep.logits {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out.extend_from_slice(&(rep.message.len() as u16).to_le_bytes());
+    out.extend_from_slice(rep.message.as_bytes());
+    out
+}
+
+/// Validated header fields (magic/version/type already checked).
+#[derive(Debug, Clone, Copy)]
+struct Header {
+    frame_type: u8,
+    id: u64,
+    body_len: usize,
+}
+
+fn parse_header(h: &[u8]) -> Result<Header, WireError> {
+    if h[..4] != MAGIC {
+        return Err(WireError::BadMagic([h[0], h[1], h[2], h[3]]));
+    }
+    if h[4] != VERSION {
+        return Err(WireError::UnsupportedVersion(h[4]));
+    }
+    let frame_type = h[5];
+    if frame_type != TYPE_REQUEST && frame_type != TYPE_REPLY {
+        return Err(WireError::UnknownFrameType(frame_type));
+    }
+    // bytes 6..8 are reserved: ignored on receive for forward compatibility
+    let id = u64::from_le_bytes([h[8], h[9], h[10], h[11], h[12], h[13], h[14], h[15]]);
+    let body_len = u32::from_le_bytes([h[16], h[17], h[18], h[19]]) as usize;
+    Ok(Header { frame_type, id, body_len })
+}
+
+/// Bounds-checked little-endian body reader.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: n - self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+}
+
+fn decode_body(hdr: Header, body: &[u8]) -> Result<Frame, WireError> {
+    let mut c = Cursor::new(body);
+    let frame = match hdr.frame_type {
+        TYPE_REQUEST => {
+            let name_len = c.u16()? as usize;
+            let model = std::str::from_utf8(c.take(name_len)?)
+                .map_err(|_| WireError::BadUtf8)?
+                .to_string();
+            let ndims = c.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(c.u32()?);
+            }
+            let expected: u64 = dims.iter().map(|&d| d as u64).product();
+            let got = (c.remaining() / 4) as u64;
+            if c.remaining() % 4 != 0 || expected != got {
+                return Err(WireError::BadPayload { expected, got });
+            }
+            let mut payload = Vec::with_capacity(got as usize);
+            for _ in 0..got {
+                payload.push(c.f32()?);
+            }
+            Frame::Request(RequestFrame { id: hdr.id, model, dims, payload })
+        }
+        TYPE_REPLY => {
+            let status = Status::from_u8(c.u8()?)?;
+            let label = c.u32()?;
+            let occupancy = c.u32()?;
+            let n_logits = c.u32()? as usize;
+            let mut logits = Vec::with_capacity(n_logits.min(c.remaining() / 4));
+            for _ in 0..n_logits {
+                logits.push(c.f32()?);
+            }
+            let msg_len = c.u16()? as usize;
+            let message = std::str::from_utf8(c.take(msg_len)?)
+                .map_err(|_| WireError::BadUtf8)?
+                .to_string();
+            Frame::Reply(ReplyFrame { id: hdr.id, status, label, occupancy, logits, message })
+        }
+        _ => return Err(WireError::UnknownFrameType(hdr.frame_type)),
+    };
+    if c.remaining() != 0 {
+        return Err(WireError::TrailingBytes(c.remaining()));
+    }
+    Ok(frame)
+}
+
+/// Decode exactly one standalone frame (header + body, nothing after).
+pub fn decode_frame(bytes: &[u8]) -> Result<Frame, WireError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(WireError::Truncated { need: HEADER_LEN - bytes.len() });
+    }
+    let hdr = parse_header(&bytes[..HEADER_LEN])?;
+    let total = HEADER_LEN + hdr.body_len;
+    if bytes.len() < total {
+        return Err(WireError::Truncated { need: total - bytes.len() });
+    }
+    if bytes.len() > total {
+        return Err(WireError::TrailingBytes(bytes.len() - total));
+    }
+    decode_body(hdr, &bytes[HEADER_LEN..])
+}
+
+/// Incremental frame decoder: feed socket bytes in as they arrive, pull
+/// complete frames out.  A partially-buffered frame resumes on the next
+/// `feed`; any [`WireError`] is terminal for the stream (frame alignment
+/// is lost), so callers drop the connection.
+#[derive(Debug)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    max_frame: usize,
+}
+
+impl FrameReader {
+    /// `max_frame` caps a whole frame (header + body); a header announcing
+    /// more is rejected before its body is buffered.
+    pub fn new(max_frame: usize) -> Self {
+        Self { buf: Vec::new(), max_frame: max_frame.max(HEADER_LEN) }
+    }
+
+    /// Append freshly-read socket bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes currently buffered (bounded by `max_frame` + one read chunk).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// The next complete frame, `Ok(None)` while one is still partial.
+    /// Call in a loop after each `feed` — one read may complete several
+    /// small frames.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        if self.buf.len() < HEADER_LEN {
+            return Ok(None);
+        }
+        let hdr = parse_header(&self.buf[..HEADER_LEN])?;
+        let total = HEADER_LEN + hdr.body_len;
+        if total > self.max_frame {
+            return Err(WireError::Oversize { len: total, max: self.max_frame });
+        }
+        if self.buf.len() < total {
+            return Ok(None); // partial-frame resume: wait for more bytes
+        }
+        let frame = decode_body(hdr, &self.buf[HEADER_LEN..total])?;
+        self.buf.drain(..total);
+        Ok(Some(frame))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request() -> RequestFrame {
+        RequestFrame {
+            id: 7,
+            model: "mnist_mlp_1".into(),
+            dims: vec![28, 28, 1],
+            payload: (0..784).map(|i| i as f32 / 784.0).collect(),
+        }
+    }
+
+    fn reply() -> ReplyFrame {
+        ReplyFrame {
+            id: 7,
+            status: Status::Ok,
+            label: 3,
+            occupancy: 8,
+            logits: vec![-0.5, 1.25, 0.0, 9.75],
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn request_roundtrip_is_exact() {
+        let req = request();
+        let bytes = encode_request(&req);
+        assert_eq!(&bytes[..4], b"CIRC");
+        assert_eq!(bytes[4], VERSION);
+        assert_eq!(bytes[5], TYPE_REQUEST);
+        assert_eq!(decode_frame(&bytes), Ok(Frame::Request(req)));
+    }
+
+    #[test]
+    fn reply_roundtrip_is_exact() {
+        let rep = reply();
+        let bytes = encode_reply(&rep);
+        assert_eq!(bytes[5], TYPE_REPLY);
+        assert_eq!(decode_frame(&bytes), Ok(Frame::Reply(rep)));
+        let err = ReplyFrame::error(9, Status::Overloaded, "shed");
+        let bytes = encode_reply(&err);
+        assert_eq!(decode_frame(&bytes), Ok(Frame::Reply(err)));
+    }
+
+    #[test]
+    fn reader_resumes_partial_frames_byte_by_byte() {
+        // the pathological fragmentation: one byte per feed, two frames
+        let mut wire = encode_request(&request());
+        wire.extend_from_slice(&encode_reply(&reply()));
+        let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
+        let mut frames = Vec::new();
+        for b in wire {
+            reader.feed(&[b]);
+            while let Some(f) = reader.next_frame().expect("clean stream") {
+                frames.push(f);
+            }
+        }
+        assert_eq!(frames, vec![Frame::Request(request()), Frame::Reply(reply())]);
+        assert_eq!(reader.buffered(), 0);
+    }
+
+    #[test]
+    fn reader_rejects_oversize_before_buffering_the_body() {
+        let mut reader = FrameReader::new(64);
+        let mut req = request();
+        req.payload = vec![0.0; 4096];
+        req.dims = vec![4096];
+        reader.feed(&encode_request(&req)[..HEADER_LEN]);
+        match reader.next_frame() {
+            Err(WireError::Oversize { len, max: 64 }) => assert!(len > 64),
+            other => panic!("expected Oversize, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_validation_catches_magic_version_type() {
+        let good = encode_request(&request());
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(matches!(decode_frame(&bad), Err(WireError::BadMagic(_))));
+        let mut bad = good.clone();
+        bad[4] = 9;
+        assert_eq!(decode_frame(&bad), Err(WireError::UnsupportedVersion(9)));
+        let mut bad = good.clone();
+        bad[5] = 0x7f;
+        assert_eq!(decode_frame(&bad), Err(WireError::UnknownFrameType(0x7f)));
+        // reserved bytes are ignored on receive (forward compatibility)
+        let mut odd = good;
+        odd[6] = 0xaa;
+        odd[7] = 0xbb;
+        assert_eq!(decode_frame(&odd), Ok(Frame::Request(request())));
+    }
+
+    #[test]
+    fn payload_must_match_dims_exactly() {
+        // drop one trailing f32 and patch body_len, so only the dims vs
+        // payload mismatch remains for the decoder to find
+        let mut bytes = encode_request(&request());
+        bytes.truncate(bytes.len() - 4);
+        let body_len = (bytes.len() - HEADER_LEN) as u32;
+        bytes[16..20].copy_from_slice(&body_len.to_le_bytes());
+        assert_eq!(
+            decode_frame(&bytes),
+            Err(WireError::BadPayload { expected: 784, got: 783 })
+        );
+    }
+
+    #[test]
+    fn truncated_and_trailing_bytes_are_flagged() {
+        let bytes = encode_request(&request());
+        assert!(matches!(
+            decode_frame(&bytes[..bytes.len() - 3]),
+            Err(WireError::Truncated { need: 3 })
+        ));
+        let mut extra = bytes;
+        extra.push(0);
+        assert_eq!(decode_frame(&extra), Err(WireError::TrailingBytes(1)));
+    }
+
+    #[test]
+    fn every_status_code_roundtrips() {
+        for v in 0..=6u8 {
+            let s = Status::from_u8(v).expect("documented status");
+            assert_eq!(s.as_u8(), v);
+        }
+        assert_eq!(Status::from_u8(7), Err(WireError::UnknownStatus(7)));
+    }
+}

@@ -1,0 +1,471 @@
+//! The TCP front-end: a listener + per-connection reader/writer threads
+//! feeding the coordinator through its transport-agnostic
+//! [`Frontend`] seam.
+//!
+//! Per connection, a **reader** thread runs the incremental
+//! [`FrameReader`] loop (bounded buffer, partial-frame resume), stamps
+//! each decoded request with its decode instant — the latency origin and,
+//! when tracing, the span's birth — and submits through the shared
+//! [`Frontend`].  A paired **writer** thread answers strictly in request
+//! order: it consumes a bounded FIFO of pending responses and blocks on
+//! each in turn, so replies on one connection never overtake each other
+//! (head-of-line ordering is part of the documented protocol; clients
+//! wanting concurrency open more connections).
+//!
+//! Admission control is layered exactly like the in-process path, plus two
+//! connection-level caps, and every shed is an explicit
+//! [`Status::Overloaded`] reply counted in the registry:
+//!
+//! 1. listener connection cap (`max_connections`) — excess connections get
+//!    one `Overloaded` reply and are closed;
+//! 2. per-connection in-flight cap (`max_inflight`) — frames beyond it are
+//!    answered `Overloaded` without touching the coordinator;
+//! 3. the coordinator's own `BatchPolicy::max_queue` backpressure —
+//!    [`InferError::Rejected`] maps to `Overloaded` on the wire.
+//!
+//! Graceful drain ([`TcpServer::shutdown`]): stop accepting, join the
+//! readers (frames already decoded stay admitted; bytes still in socket
+//! buffers are abandoned), close the coordinator intake so the executor
+//! drains every queued batch, then join the writers — every admitted
+//! request gets its reply before the listener is gone.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::router::RouteError;
+use crate::coordinator::{Frontend, InferError, Metrics, Response, Server};
+use crate::net::protocol::{
+    encode_reply, Frame, FrameReader, ReplyFrame, RequestFrame, Status, DEFAULT_MAX_FRAME,
+};
+
+/// Socket read granularity; also the slack the frame buffer may hold
+/// beyond one maximum-size frame.
+const READ_CHUNK: usize = 16 * 1024;
+
+/// Reader poll interval: how long a blocked read waits before re-checking
+/// the stop flag (bounds shutdown latency per connection).
+const POLL: Duration = Duration::from_millis(50);
+
+/// TCP front-end knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// listen address; port 0 binds an ephemeral port (see
+    /// [`TcpServer::local_addr`])
+    pub addr: String,
+    /// concurrent-connection cap: connections beyond it are answered
+    /// `Overloaded` and closed at accept
+    pub max_connections: usize,
+    /// per-connection cap on requests awaiting replies; frames beyond it
+    /// are shed with `Overloaded` without reaching the coordinator
+    pub max_inflight: usize,
+    /// whole-frame size cap handed to [`FrameReader`]
+    pub max_frame: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 256,
+            max_inflight: 1024,
+            max_frame: DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// What the reader hands the writer, in request order.
+enum WriterMsg {
+    /// an admitted request: block on its response channel, then reply
+    Wait(u64, mpsc::Receiver<Result<Response, InferError>>),
+    /// an immediate reply (shed load, validation error) — already final
+    Ready(ReplyFrame),
+}
+
+/// State shared by the accept loop, every connection thread, and shutdown.
+struct Shared {
+    stop: AtomicBool,
+    open: AtomicUsize,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+    writers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// A serving coordinator wrapped in a TCP listener.
+pub struct TcpServer {
+    server: Option<Server>,
+    local_addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `config.addr` and start accepting; the coordinator keeps
+    /// serving in-process callers too.
+    pub fn start(server: Server, config: NetConfig) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(&config.addr)?;
+        let local_addr = listener.local_addr()?;
+        let frontend = server
+            .frontend()
+            .ok_or_else(|| anyhow::anyhow!("server is already draining"))?;
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            open: AtomicUsize::new(0),
+            readers: Mutex::new(Vec::new()),
+            writers: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("circnn-net-accept".into())
+            .spawn(move || accept_loop(listener, frontend, config, accept_shared))?;
+        Ok(Self { server: Some(server), local_addr, shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The wrapped coordinator (metrics, telemetry, tracing).
+    pub fn server(&self) -> &Server {
+        // lint:allow(unwrap): Some until shutdown(self)/Drop consumes it
+        self.server.as_ref().unwrap()
+    }
+
+    /// Graceful drain; returns the coordinator so the caller can read its
+    /// metrics/telemetry before shutting it down.  The returned server's
+    /// intake is closed ([`Server::begin_drain`]) — every request admitted
+    /// before the drain has been answered on the wire, and further
+    /// `infer*` calls report `Shutdown`.
+    pub fn shutdown(mut self) -> Server {
+        // teardown() leaves server = None, so the Drop impl is a no-op;
+        // the unwrap is the same Some-until-consumed invariant as server()
+        // lint:allow(unwrap): teardown returns the server exactly once
+        self.teardown().unwrap()
+    }
+
+    fn teardown(&mut self) -> Option<Server> {
+        let mut server = self.server.take()?;
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop, then join it (drops its Frontend)
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // readers notice the flag within one POLL and drop their Frontends
+        for h in drain_handles(&self.shared.readers) {
+            let _ = h.join();
+        }
+        // every sender is gone: close the server's own intake so the
+        // executor drains all queued batches and answers them …
+        server.begin_drain();
+        // … which unblocks the writers' pending Wait receivers
+        for h in drain_handles(&self.shared.writers) {
+            let _ = h.join();
+        }
+        Some(server)
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        // implicit teardown: same drain as shutdown(), then the contained
+        // Server's own Drop joins the executor
+        let _ = self.teardown();
+    }
+}
+
+fn drain_handles(handles: &Mutex<Vec<JoinHandle<()>>>) -> Vec<JoinHandle<()>> {
+    std::mem::take(&mut *handles.lock().unwrap_or_else(|e| e.into_inner()))
+}
+
+fn accept_loop(listener: TcpListener, frontend: Frontend, config: NetConfig, shared: Arc<Shared>) {
+    let metrics = frontend.metrics().clone();
+    loop {
+        let stream = match listener.accept() {
+            Ok((stream, _peer)) => stream,
+            Err(_) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return; // the shutdown wake-up connect lands here
+        }
+        metrics.net.connections.inc();
+        if shared.open.load(Ordering::SeqCst) >= config.max_connections {
+            refuse_connection(stream, &metrics);
+            continue;
+        }
+        set_open(&shared, &metrics, 1);
+        let conn_frontend = frontend.clone();
+        let conn_shared = shared.clone();
+        let conn_config = config.clone();
+        let spawned = std::thread::Builder::new()
+            .name("circnn-net-conn".into())
+            .spawn(move || handle_connection(stream, conn_frontend, conn_config, conn_shared));
+        match spawned {
+            Ok(h) => shared
+                .readers
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(h),
+            Err(_) => set_open(&shared, &metrics, -1),
+        }
+    }
+}
+
+/// Connection-cap shed: one best-effort `Overloaded` reply, then close.
+fn refuse_connection(mut stream: TcpStream, metrics: &Metrics) {
+    metrics.net.overloaded.inc();
+    let bytes = encode_reply(&ReplyFrame::error(0, Status::Overloaded, "connection cap reached"));
+    if stream.write_all(&bytes).is_ok() {
+        metrics.net.frames_tx.inc();
+        metrics.net.bytes_tx.add(bytes.len() as u64);
+    }
+}
+
+fn set_open(shared: &Shared, metrics: &Metrics, delta: i64) {
+    let open = if delta >= 0 {
+        shared.open.fetch_add(delta as usize, Ordering::SeqCst) + delta as usize
+    } else {
+        shared.open.fetch_sub((-delta) as usize, Ordering::SeqCst) - (-delta) as usize
+    };
+    metrics.net.connections_open.set(open as u64);
+}
+
+/// The per-connection reader loop; spawns and outlives-hands-off its
+/// writer (the writer keeps draining admitted replies after the reader
+/// exits, and decrements the open-connection count when done).
+fn handle_connection(
+    stream: TcpStream,
+    frontend: Frontend,
+    config: NetConfig,
+    shared: Arc<Shared>,
+) {
+    let metrics = frontend.metrics().clone();
+    if stream.set_read_timeout(Some(POLL)).is_err() {
+        set_open(&shared, &metrics, -1);
+        return;
+    }
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            set_open(&shared, &metrics, -1);
+            return;
+        }
+    };
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let (writer_tx, writer_rx) = mpsc::sync_channel::<WriterMsg>(config.max_inflight.max(1));
+    let writer_inflight = inflight.clone();
+    let writer_metrics = metrics.clone();
+    let writer_shared = shared.clone();
+    let spawned = std::thread::Builder::new().name("circnn-net-writer".into()).spawn(move || {
+        writer_loop(write_half, writer_rx, writer_inflight, &writer_metrics);
+        set_open(&writer_shared, &writer_metrics, -1);
+    });
+    match spawned {
+        Ok(h) => shared
+            .writers
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(h),
+        Err(_) => {
+            set_open(&shared, &metrics, -1);
+            return;
+        }
+    }
+
+    let mut reader = FrameReader::new(config.max_frame);
+    let mut chunk = vec![0u8; READ_CHUNK];
+    let mut stream = stream;
+    'conn: loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let n = match stream.read(&mut chunk) {
+            Ok(0) => break, // peer closed
+            Ok(n) => n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue; // poll tick: re-check the stop flag
+            }
+            Err(_) => break,
+        };
+        metrics.net.bytes_rx.add(n as u64);
+        reader.feed(&chunk[..n]);
+        loop {
+            match reader.next_frame() {
+                Ok(Some(Frame::Request(req))) => {
+                    // the admission timestamp: latency (and the span, when
+                    // tracing) starts when the frame left the wire
+                    let at = Instant::now();
+                    metrics.net.frames_rx.inc();
+                    if submit_request(req, at, &frontend, &config, &inflight, &writer_tx).is_err() {
+                        break 'conn; // writer gone: connection is dead
+                    }
+                }
+                Ok(Some(Frame::Reply(rep))) => {
+                    // clients don't send replies; the stream is garbage
+                    metrics.net.decode_errors.inc();
+                    let shed =
+                        ReplyFrame::error(rep.id, Status::BadRequest, "unexpected reply frame");
+                    let _ = writer_tx.send(WriterMsg::Ready(shed));
+                    break 'conn;
+                }
+                Ok(None) => break, // partial frame: resume on the next read
+                Err(err) => {
+                    // frame alignment is lost — best-effort error reply,
+                    // then drop the connection
+                    metrics.net.decode_errors.inc();
+                    let status = match err {
+                        crate::net::protocol::WireError::UnsupportedVersion(_) => {
+                            Status::UnsupportedVersion
+                        }
+                        _ => Status::BadRequest,
+                    };
+                    let _ = writer_tx.send(WriterMsg::Ready(ReplyFrame::error(
+                        0,
+                        status,
+                        err.to_string(),
+                    )));
+                    break 'conn;
+                }
+            }
+        }
+    }
+    // dropping writer_tx lets the writer drain its queue and exit; the
+    // Frontend drops with this frame, releasing the executor channel
+    drop(writer_tx);
+}
+
+/// Admission for one decoded request: connection in-flight cap first, then
+/// the coordinator's own validation/backpressure.  `Err` means the writer
+/// side is gone.
+fn submit_request(
+    req: RequestFrame,
+    at: Instant,
+    frontend: &Frontend,
+    config: &NetConfig,
+    inflight: &Arc<AtomicUsize>,
+    writer_tx: &mpsc::SyncSender<WriterMsg>,
+) -> Result<(), mpsc::SendError<WriterMsg>> {
+    if inflight.load(Ordering::SeqCst) >= config.max_inflight {
+        let shed = ReplyFrame::error(req.id, Status::Overloaded, "connection in-flight cap");
+        return writer_tx.send(WriterMsg::Ready(shed));
+    }
+    match frontend.submit_at(&req.model, req.payload, at) {
+        Ok(resp_rx) => {
+            inflight.fetch_add(1, Ordering::SeqCst);
+            writer_tx.send(WriterMsg::Wait(req.id, resp_rx))
+        }
+        Err(err) => writer_tx.send(WriterMsg::Ready(reply_for(req.id, &err))),
+    }
+}
+
+/// Map the serving error taxonomy onto wire status codes.
+fn reply_for(id: u64, err: &InferError) -> ReplyFrame {
+    let status = match err {
+        InferError::Rejected => Status::Overloaded,
+        InferError::Route(RouteError::UnknownModel(_)) => Status::UnknownModel,
+        InferError::Route(_) => Status::BadRequest,
+        InferError::Shutdown => Status::ShuttingDown,
+        InferError::Engine(_) => Status::Internal,
+    };
+    ReplyFrame::error(id, status, err.to_string())
+}
+
+/// Writer: FIFO over the reader's queue, blocking on each admitted
+/// request's response in turn — replies leave in request order.  A dead
+/// socket stops the writes but not the drain (pending responses are still
+/// consumed so the in-flight count stays honest).
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<WriterMsg>,
+    inflight: Arc<AtomicUsize>,
+    metrics: &Metrics,
+) {
+    let mut socket_dead = false;
+    while let Ok(msg) = rx.recv() {
+        let (reply, was_inflight) = match msg {
+            WriterMsg::Ready(r) => (r, false),
+            WriterMsg::Wait(id, resp_rx) => {
+                let r = match resp_rx.recv() {
+                    Ok(Ok(resp)) => ReplyFrame {
+                        id,
+                        status: Status::Ok,
+                        label: resp.label,
+                        occupancy: resp.batch_occupancy as u32,
+                        logits: resp.logits,
+                        message: String::new(),
+                    },
+                    Ok(Err(err)) => reply_for(id, &err),
+                    // the executor never drops a response channel of an
+                    // admitted request; defensive mapping all the same
+                    Err(_) => ReplyFrame::error(id, Status::ShuttingDown, "server shut down"),
+                };
+                (r, true)
+            }
+        };
+        if was_inflight {
+            inflight.fetch_sub(1, Ordering::SeqCst);
+        }
+        if reply.status == Status::Overloaded {
+            metrics.net.overloaded.inc();
+        }
+        if !socket_dead {
+            let bytes = encode_reply(&reply);
+            if stream.write_all(&bytes).is_ok() {
+                metrics.net.frames_tx.inc();
+                metrics.net.bytes_tx.add(bytes.len() as u64);
+            } else {
+                socket_dead = true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_taxonomy_maps_onto_wire_statuses() {
+        let cases: [(InferError, Status); 5] = [
+            (InferError::Rejected, Status::Overloaded),
+            (
+                InferError::Route(RouteError::UnknownModel("nope".into())),
+                Status::UnknownModel,
+            ),
+            (
+                InferError::Route(RouteError::BadInputSize { expected: 784, got: 3 }),
+                Status::BadRequest,
+            ),
+            (InferError::Shutdown, Status::ShuttingDown),
+            (InferError::Engine("boom".into()), Status::Internal),
+        ];
+        for (err, want) in cases {
+            let rep = reply_for(42, &err);
+            assert_eq!(rep.status, want, "{err}");
+            assert_eq!(rep.id, 42);
+            assert!(rep.logits.is_empty());
+            assert!(!rep.message.is_empty());
+        }
+    }
+
+    #[test]
+    fn net_config_defaults_are_sane() {
+        let cfg = NetConfig::default();
+        assert!(cfg.max_frame >= DEFAULT_MAX_FRAME);
+        assert!(cfg.max_inflight > 0 && cfg.max_connections > 0);
+        assert!(cfg.addr.ends_with(":0"), "ephemeral port by default");
+    }
+}

@@ -128,6 +128,40 @@ pub fn write_json(
     std::fs::write(path, doc.to_string() + "\n")
 }
 
+/// Merge derived keys into an existing bench-JSON document's `derived`
+/// map in place (updating keys that exist, appending ones that don't), so
+/// serving-side measurements ride the same perf-trajectory file as the
+/// kernel benches.  A missing or unparseable file gets a fresh doc via
+/// [`write_json`].
+pub fn merge_derived(
+    path: impl AsRef<Path>,
+    suite: &str,
+    extra: &[(String, f64)],
+) -> std::io::Result<()> {
+    let path = path.as_ref();
+    let merged = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|doc| match doc {
+            Json::Obj(mut fields) => {
+                let slot = fields.iter_mut().find(|(k, _)| k == "derived")?;
+                let Json::Obj(entries) = &mut slot.1 else { return None };
+                for (k, v) in extra {
+                    match entries.iter_mut().find(|(n, _)| n == k) {
+                        Some(e) => e.1 = Json::Num(*v),
+                        None => entries.push((k.clone(), Json::Num(*v))),
+                    }
+                }
+                Some(Json::Obj(fields))
+            }
+            _ => None,
+        });
+    match merged {
+        Some(doc) => std::fs::write(path, doc.to_string() + "\n"),
+        None => write_json(path, suite, &[], extra),
+    }
+}
+
 fn percentile(samples: &[f64], p: f64) -> f64 {
     let mut sorted = samples.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -253,6 +287,30 @@ mod tests {
         let derived = doc.get("derived").unwrap();
         assert_eq!(derived.get("rfft_speedup_k256").and_then(|v| v.as_f64()), Some(1.7));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_derived_updates_and_appends() {
+        let path = std::env::temp_dir().join(format!("circnn_merge_{}.json", std::process::id()));
+        write_json(&path, "circulant", &[], &[("a_ratio_x".into(), 1.0)]).unwrap();
+        merge_derived(&path, "circulant", &[("a_ratio_x".into(), 2.0), ("b_ratio_y".into(), 3.0)])
+            .unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let derived = doc.get("derived").unwrap();
+        assert_eq!(derived.get("a_ratio_x").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(derived.get("b_ratio_y").and_then(|v| v.as_f64()), Some(3.0));
+        std::fs::remove_file(&path).ok();
+
+        // a missing file gets a fresh document
+        let fresh = std::env::temp_dir().join(format!("circnn_merge2_{}.json", std::process::id()));
+        std::fs::remove_file(&fresh).ok();
+        merge_derived(&fresh, "circulant", &[("c_ratio_z".into(), 4.0)]).unwrap();
+        let doc = Json::parse(&std::fs::read_to_string(&fresh).unwrap()).unwrap();
+        assert_eq!(
+            doc.get("derived").and_then(|d| d.get("c_ratio_z")).and_then(|v| v.as_f64()),
+            Some(4.0)
+        );
+        std::fs::remove_file(&fresh).ok();
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub fn lonely_hits(r: &Registry) -> Counter {
     r.counter("fixture_cache_hits") // LINT-EXPECT: metric-name
 }
 
+pub fn undocumented(r: &Registry) -> Counter {
+    r.counter("fixture_undocumented_total") // LINT-EXPECT: docs-fresh
+}
+
 // --- negative controls ---------------------------------------------------
 
 pub fn clean_sites(r: &Registry) {

@@ -5,7 +5,10 @@ pub struct Knob {
     pub role: &'static str,
 }
 
-pub const KNOBS: &[Knob] = &[Knob { name: "CIRCNN_FIXTURE_OK", role: "fixture knob" }];
+pub const KNOBS: &[Knob] = &[
+    Knob { name: "CIRCNN_FIXTURE_OK", role: "fixture knob" },
+    Knob { name: "CIRCNN_FIXTURE_UNDOC", role: "absent from the guide" }, // LINT-EXPECT: docs-fresh
+];
 
 pub fn env_flag(name: &str) -> bool {
     std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)

@@ -1,0 +1,32 @@
+//! Seeded `request-unwrap` + `unbounded-channel` violations inside the
+//! TCP front-end scope (`src/net/`), pinning that the request-path
+//! hygiene rules extend beyond `coordinator`/`pipeline` — next to
+//! negative controls (a poisoning-aware lock, an annotated
+//! construction-time invariant, and a bounded channel) that must stay
+//! quiet.
+
+pub fn reader_loop(rx: Receiver<Frame>) {
+    let frame = rx.recv().unwrap(); // LINT-EXPECT: request-unwrap
+    handle(frame);
+}
+
+pub fn writer_queue() {
+    let (tx, rx) = mpsc::channel(); // LINT-EXPECT: unbounded-channel
+    drop((tx, rx));
+}
+
+// --- negative controls ---------------------------------------------------
+
+pub fn open_connections(conns: &Mutex<usize>) -> usize {
+    *conns.lock().unwrap()
+}
+
+pub fn listener(l: &Option<Listener>) -> &Listener {
+    // lint:allow(unwrap): the listener exists until shutdown consumes it
+    l.as_ref().unwrap()
+}
+
+pub fn reply_queue() {
+    let (tx, rx) = mpsc::sync_channel::<u8>(8);
+    drop((tx, rx));
+}

@@ -72,6 +72,7 @@ fn every_seeded_fixture_violation_is_caught_at_its_line() {
         "request-unwrap",
         "unbounded-channel",
         "metric-name",
+        "docs-fresh",
     ] {
         assert!(fired.contains(rule), "no fixture pins rule `{rule}`");
     }

@@ -1,0 +1,296 @@
+//! Loopback integration tests for the TCP serving front-end: a real
+//! `TcpServer` on an ephemeral port, driven by the blocking [`Client`]
+//! and the open-loop load generator, must serve **bitwise identical**
+//! replies to the in-process [`Server`] API for identical request
+//! streams — on both the native and the pipelined engine, including a
+//! partial deadline-released final batch, a deterministic forced
+//! `Overloaded` shed, and a drain-on-shutdown.
+//!
+//! The first test also pins `docs/PROTOCOL.md`: every ```` ```frame ````
+//! hex block in the document is re-parsed and checked byte-for-byte
+//! against the encoder, so the documented wire format cannot drift from
+//! the implementation.
+
+use std::time::Duration;
+
+use circnn::coordinator::{BatchPolicy, EngineKind, Server, ServerConfig};
+use circnn::data;
+use circnn::net::protocol::{decode_frame, encode_reply, encode_request, Frame};
+use circnn::net::{
+    Arrival, Client, LoadConfig, NetConfig, ReplyFrame, RequestFrame, Status, TcpServer,
+};
+use circnn::runtime::Manifest;
+
+const MODEL: &str = "mnist_mlp_1";
+const INPUT: u32 = 784;
+
+fn manifest_for(model: &str) -> Manifest {
+    let mut man = Manifest::synthetic();
+    man.models.retain(|m| m.name == model);
+    assert_eq!(man.models.len(), 1, "{model} missing from the registry");
+    man
+}
+
+fn start(engine: EngineKind, policy: BatchPolicy) -> Server {
+    Server::start_with_manifest(
+        manifest_for(MODEL),
+        ServerConfig {
+            policy,
+            engine,
+            depth: None,
+            init_random_fallback: true,
+            ..ServerConfig::default()
+        },
+    )
+    .expect("server start")
+}
+
+/// (logit bit patterns, label, occupancy) — the bitwise comparison key.
+type Served = (Vec<u32>, u32, u32);
+
+fn bits(logits: &[f32]) -> Vec<u32> {
+    logits.iter().map(|v| v.to_bits()).collect()
+}
+
+/// In-process twin: submit `stream` (sample indices) from one thread,
+/// collect responses in order.
+fn serve_inprocess(server: &Server, stream: &[u64]) -> Vec<Served> {
+    let pending: Vec<_> = stream
+        .iter()
+        .map(|&i| {
+            let (img, _) = data::sample(&data::MNIST_S, i);
+            server.infer_async(MODEL, &img).expect("admitted")
+        })
+        .collect();
+    pending
+        .into_iter()
+        .map(|rx| {
+            let r = rx.recv().expect("channel alive").expect("response");
+            (bits(&r.logits), r.label, r.batch_occupancy as u32)
+        })
+        .collect()
+}
+
+/// TCP path: pipeline the whole stream down one warm connection, then
+/// read the replies back in order.
+fn serve_tcp(addr: std::net::SocketAddr, stream: &[u64]) -> Vec<Served> {
+    let mut client = Client::connect(addr).expect("connect");
+    for &i in stream {
+        let (img, _) = data::sample(&data::MNIST_S, i);
+        client.send(MODEL, &[INPUT], img).expect("send");
+    }
+    stream
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            let rep = client.recv().expect("reply");
+            assert_eq!(rep.id, i as u64, "replies must come back in request order");
+            assert_eq!(rep.status, Status::Ok, "request {i}: {}", rep.message);
+            (bits(&rep.logits), rep.label, rep.occupancy)
+        })
+        .collect()
+}
+
+/// Parse every ```frame block of `docs/PROTOCOL.md` into raw bytes
+/// (lines are `offset  hex bytes  | annotation`).
+fn documented_frames() -> Vec<Vec<u8>> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/PROTOCOL.md");
+    let text = std::fs::read_to_string(path).expect("docs/PROTOCOL.md exists");
+    let mut frames = Vec::new();
+    let mut current: Option<Vec<u8>> = None;
+    for line in text.lines() {
+        if line.trim_start().starts_with("```frame") {
+            current = Some(Vec::new());
+            continue;
+        }
+        match (&mut current, line.trim_start().starts_with("```")) {
+            (Some(bytes), true) => {
+                frames.push(std::mem::take(bytes));
+                current = None;
+            }
+            (Some(bytes), false) => {
+                let hex = line.split('|').next().unwrap_or("");
+                for tok in hex.split_whitespace().skip(1) {
+                    bytes.push(
+                        u8::from_str_radix(tok, 16)
+                            .unwrap_or_else(|_| panic!("bad hex token {tok:?} in PROTOCOL.md")),
+                    );
+                }
+            }
+            (None, _) => {}
+        }
+    }
+    frames
+}
+
+#[test]
+fn documented_example_frames_decode_byte_exactly() {
+    let frames = documented_frames();
+    assert_eq!(frames.len(), 3, "PROTOCOL.md documents three example frames");
+
+    let request = RequestFrame {
+        id: 1,
+        model: "demo".into(),
+        dims: vec![2, 2],
+        payload: vec![0.0, 0.5, -1.0, 2.0],
+    };
+    assert_eq!(encode_request(&request), frames[0], "request example bytes drifted");
+    assert_eq!(decode_frame(&frames[0]).unwrap(), Frame::Request(request));
+
+    let ok = ReplyFrame {
+        id: 1,
+        status: Status::Ok,
+        label: 3,
+        occupancy: 8,
+        logits: vec![0.25, -0.75],
+        message: String::new(),
+    };
+    assert_eq!(encode_reply(&ok), frames[1], "Ok-reply example bytes drifted");
+    assert_eq!(decode_frame(&frames[1]).unwrap(), Frame::Reply(ok));
+
+    let shed = ReplyFrame::error(2, Status::Overloaded, "shed");
+    assert_eq!(encode_reply(&shed), frames[2], "Overloaded example bytes drifted");
+    assert_eq!(decode_frame(&frames[2]).unwrap(), Frame::Reply(shed));
+}
+
+#[test]
+fn tcp_serving_is_bitwise_identical_to_inprocess_on_both_engines() {
+    // 8 + 8 + 5: two size-triggered releases and a deadline-released
+    // partial tail, exactly the pipeline_serve.rs ragged stream
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(300),
+        max_queue: 4096,
+    };
+    let stream: Vec<u64> = (0..21).collect();
+    for engine in [EngineKind::Native, EngineKind::Pipeline] {
+        let twin = start(engine, policy);
+        let want = serve_inprocess(&twin, &stream);
+        twin.shutdown();
+
+        let tcp = TcpServer::start(start(engine, policy), NetConfig::default()).expect("tcp start");
+        let got = serve_tcp(tcp.local_addr(), &stream);
+
+        let net = &tcp.server().metrics().net;
+        assert_eq!(net.connections.get(), 1, "one client connection");
+        assert_eq!(net.frames_rx.get(), stream.len() as u64);
+        assert_eq!(net.frames_tx.get(), stream.len() as u64);
+        assert!(net.bytes_rx.get() > 0 && net.bytes_tx.get() > 0);
+        assert_eq!(net.overloaded.get(), 0);
+        tcp.shutdown().shutdown();
+
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w, g, "request {i} ({engine:?}): TCP reply diverged from in-process");
+        }
+        assert_eq!(got[20].2, 5, "tail batch occupancy ({engine:?})");
+    }
+}
+
+#[test]
+fn inflight_cap_sheds_deterministically_and_admitted_bits_match_twin() {
+    // One connection, in-flight cap 4, six back-to-back requests against
+    // a deadline that cannot fire before the frames land: requests 0-3
+    // are admitted (and ride one deadline batch of 4), requests 4-5 see
+    // inflight == cap while the writer is still parked on reply 0, so
+    // both shed with an explicit Overloaded reply.
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_delay: Duration::from_millis(1200),
+        max_queue: 4096,
+    };
+    let twin = start(EngineKind::Native, policy);
+    let want = serve_inprocess(&twin, &[0, 1, 2, 3]);
+    twin.shutdown();
+
+    let net_cfg = NetConfig { max_inflight: 4, ..NetConfig::default() };
+    let tcp = TcpServer::start(start(EngineKind::Native, policy), net_cfg).expect("tcp start");
+    let mut client = Client::connect(tcp.local_addr()).expect("connect");
+    for i in 0..6u64 {
+        let (img, _) = data::sample(&data::MNIST_S, i);
+        client.send(MODEL, &[INPUT], img).expect("send");
+    }
+    let replies: Vec<_> = (0..6).map(|_| client.recv().expect("reply")).collect();
+
+    for (i, rep) in replies[..4].iter().enumerate() {
+        assert_eq!(rep.id, i as u64);
+        assert_eq!(rep.status, Status::Ok, "admitted request {i}: {}", rep.message);
+        let got = (bits(&rep.logits), rep.label, rep.occupancy);
+        assert_eq!(got, want[i], "admitted request {i} diverged from the in-process twin");
+        assert_eq!(rep.occupancy, 4, "admitted requests ride one deadline batch");
+    }
+    for (i, rep) in replies[4..].iter().enumerate() {
+        assert_eq!(rep.status, Status::Overloaded, "request {} must shed", i + 4);
+        assert!(rep.logits.is_empty() && rep.label == 0);
+    }
+    assert_eq!(tcp.server().metrics().net.overloaded.get(), 2);
+    tcp.shutdown().shutdown();
+}
+
+#[test]
+fn shutdown_drains_admitted_requests() {
+    // five requests sit queued behind a deadline that will never fire;
+    // shutdown must execute and answer all of them before sockets close
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_secs(10),
+        max_queue: 4096,
+    };
+    let tcp = TcpServer::start(start(EngineKind::Native, policy), NetConfig::default())
+        .expect("tcp start");
+    let mut client = Client::connect(tcp.local_addr()).expect("connect");
+    for i in 0..5u64 {
+        let (img, _) = data::sample(&data::MNIST_S, i);
+        client.send(MODEL, &[INPUT], img).expect("send");
+    }
+    // let the reader decode and admit all five frames
+    std::thread::sleep(Duration::from_millis(400));
+    let server = tcp.shutdown();
+    assert_eq!(server.metrics().net.frames_rx.get(), 5);
+    assert_eq!(server.metrics().net.frames_tx.get(), 5, "drain must answer every frame");
+    assert_eq!(server.metrics().net.connections_open.get(), 0, "writers closed out");
+    server.shutdown();
+
+    // the replies were flushed before the socket closed
+    for i in 0..5 {
+        let rep = client.recv().expect("drained reply");
+        assert_eq!(rep.id, i as u64);
+        assert_eq!(rep.status, Status::Ok, "drained request {i}: {}", rep.message);
+        assert_eq!(rep.occupancy, 5, "all five drained as one partial batch");
+    }
+    assert!(client.recv().is_err(), "connection closes after the drain");
+}
+
+#[test]
+fn loadgen_drives_tcp_server_open_loop() {
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_delay: Duration::from_millis(2),
+        max_queue: 4096,
+    };
+    let tcp = TcpServer::start(start(EngineKind::Native, policy), NetConfig::default())
+        .expect("tcp start");
+    let cfg = LoadConfig {
+        model: MODEL.into(),
+        dims: vec![INPUT],
+        requests: 64,
+        rate: 2000.0,
+        arrival: Arrival::Poisson,
+        warm: 2,
+        cold: 1,
+        seed: 0xC1C1,
+    };
+    let sample = |i: u64| data::sample(&data::MNIST_S, i).0;
+    let report = circnn::net::loadgen::run_tcp(tcp.local_addr(), &cfg, &sample);
+    assert_eq!(report.sent, 64, "open loop sends every scheduled request");
+    assert_eq!(report.ok + report.overloaded + report.errors, 64);
+    assert_eq!(report.errors, 0, "no transport/protocol errors on loopback");
+    assert_eq!(report.ok, 64, "uncontended server answers everything");
+    assert!(report.p50_us > 0 && report.p50_us <= report.p95_us && report.p95_us <= report.p99_us);
+
+    // two warm connections plus one fresh connection per cold-slot request
+    let net = &tcp.server().metrics().net;
+    assert!(net.connections.get() > 2, "cold slot must open per-request connections");
+    assert_eq!(net.frames_rx.get(), 64);
+    tcp.shutdown().shutdown();
+}
