@@ -56,6 +56,10 @@ pub const KNOBS: &[Knob] = &[
         name: "CIRCNN_TRACE",
         role: "per-request span tracing in the server (same as serve --trace)",
     },
+    Knob {
+        name: "CIRCNN_SNAP_MS",
+        role: "snapshot-ticker sampling period in ms (0 = sampler off)",
+    },
 ];
 
 /// Every env read funnels through here so an unregistered knob is caught

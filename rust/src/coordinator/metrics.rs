@@ -14,7 +14,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::pipeline::PipelineStats;
-use crate::telemetry::{Counter, Gauge, Histogram, Registry};
+use crate::telemetry::{Counter, Gauge, Histogram, Registry, SnapSample};
 
 /// Log-spaced latency buckets (finite upper bounds, microseconds); the
 /// registry histogram adds the open-ended overflow bucket.
@@ -41,6 +41,12 @@ pub struct Metrics {
     pub padded_slots: Counter,
     latency: Histogram,
     queue_wait: Histogram,
+    /// requests currently queued in the dynamic batcher(s), summed across
+    /// models — maintained by the executor loop each poll iteration
+    pub queue_depth: Gauge,
+    /// requests admitted but not yet answered or rejected — refreshed by
+    /// the executor loop and by [`Metrics::snapshot_sample`]
+    pub inflight: Gauge,
     /// TCP front-end counters (`rust/src/net`).  Registered eagerly here —
     /// not lazily by the listener — so a server started *without* the TCP
     /// front-end still exposes every `net_*` name at zero and the bench
@@ -73,6 +79,10 @@ pub struct NetMetrics {
     pub overloaded: Counter,
     /// connections dropped on a malformed/oversized/unsupported frame
     pub decode_errors: Counter,
+    /// admin (scrape) frames answered on the wire; admin traffic also
+    /// counts in the frame/byte totals, so subtracting this recovers the
+    /// serving-only throughput picture
+    pub admin: Counter,
 }
 
 impl Default for Metrics {
@@ -87,6 +97,8 @@ impl Default for Metrics {
             padded_slots: registry.counter("padded_slots_total"),
             latency: registry.histogram_edges("request_latency_us", &BUCKETS_US),
             queue_wait: registry.histogram("queue_wait_us"),
+            queue_depth: registry.gauge("queue_depth"),
+            inflight: registry.gauge("inflight_requests"),
             net: NetMetrics {
                 connections: registry.counter("net_connections_total"),
                 connections_open: registry.gauge("net_connections_open"),
@@ -96,6 +108,7 @@ impl Default for Metrics {
                 bytes_tx: registry.counter("net_bytes_tx_total"),
                 overloaded: registry.counter("net_overloaded_total"),
                 decode_errors: registry.counter("net_decode_errors_total"),
+                admin: registry.counter("net_admin_total"),
             },
             pipelines: Mutex::new(Vec::new()),
             registry,
@@ -197,20 +210,50 @@ impl Metrics {
         let pipes = self.pipelines.lock().unwrap_or_else(|e| e.into_inner());
         for (_, stats, gauges) in pipes.iter() {
             for (s, gauge) in gauges.iter().enumerate() {
-                gauge.set((1000.0 * stats.busy_fraction(s)) as u64);
+                gauge.set(stats.busy_permille(s));
             }
+        }
+    }
+
+    /// Recompute the `inflight_requests` gauge from the admission
+    /// counters (admitted − answered − rejected; saturating, so a scrape
+    /// racing the counters can momentarily read 0 but never wraps).
+    pub fn refresh_inflight(&self) {
+        let answered = self.responses.get().saturating_add(self.rejected.get());
+        self.inflight.set(self.requests.get().saturating_sub(answered));
+    }
+
+    /// One observation of the serving plane for the snapshot ticker
+    /// (`at_ms` is stamped by the sampler): live queue depth and in-flight
+    /// gauges, open connections, and the busiest pipeline stage's permille.
+    pub fn snapshot_sample(&self) -> SnapSample {
+        self.refresh_inflight();
+        let stage_busy_permille = self
+            .pipelines()
+            .iter()
+            .map(|(_, stats)| stats.max_busy_permille())
+            .max()
+            .unwrap_or(0);
+        SnapSample {
+            at_ms: 0,
+            queue_depth: self.queue_depth.get(),
+            inflight: self.inflight.get(),
+            net_open: self.net.connections_open.get(),
+            stage_busy_permille,
         }
     }
 
     /// Prometheus-style text exposition of every serving metric.
     pub fn export_text(&self) -> String {
         self.refresh_stage_gauges();
+        self.refresh_inflight();
         self.registry.render_text()
     }
 
     /// JSON exposition (`{"counters":…,"gauges":…,"histograms":…}`).
     pub fn export_json(&self) -> String {
         self.refresh_stage_gauges();
+        self.refresh_inflight();
         self.registry.render_json()
     }
 
@@ -382,6 +425,7 @@ mod tests {
             "net_bytes_tx_total",
             "net_overloaded_total",
             "net_decode_errors_total",
+            "net_admin_total",
         ] {
             assert_eq!(counters.get(name).and_then(Json::as_u64), Some(0), "{name}");
         }
@@ -392,6 +436,30 @@ mod tests {
             "{}",
             m.summary()
         );
+    }
+
+    #[test]
+    fn inflight_and_queue_depth_gauges_ride_the_exposition() {
+        let m = Metrics::new();
+        m.requests.add(10);
+        m.responses.add(4);
+        m.rejected.add(1);
+        m.queue_depth.set(3);
+        let doc = Json::parse(&m.export_json()).expect("exposition parses");
+        let gauges = doc.get("gauges").expect("gauges");
+        assert_eq!(gauges.get("queue_depth").and_then(Json::as_u64), Some(3));
+        // export refreshed it: 10 admitted − 4 answered − 1 rejected
+        assert_eq!(gauges.get("inflight_requests").and_then(Json::as_u64), Some(5));
+
+        let sample = m.snapshot_sample();
+        assert_eq!(sample.queue_depth, 3);
+        assert_eq!(sample.inflight, 5);
+        assert_eq!(sample.stage_busy_permille, 0, "no pipeline attached");
+        // counters racing a scrape can momentarily exceed admissions:
+        // the gauge saturates at zero instead of wrapping
+        m.responses.add(100);
+        m.refresh_inflight();
+        assert_eq!(m.inflight.get(), 0);
     }
 
     #[test]

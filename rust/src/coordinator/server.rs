@@ -219,6 +219,54 @@ impl Frontend {
     pub fn metrics(&self) -> &Arc<Metrics> {
         &self.metrics
     }
+
+    /// Whether the server behind this frontend records per-request spans.
+    pub fn tracing(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Completed request spans with pipeline stage hops joined in — the
+    /// same view as [`Server::trace_spans`], available from any clone (the
+    /// live scrape endpoints hold a `Frontend`, not the server).
+    pub fn trace_spans(&self) -> Vec<SpanRecord> {
+        match &self.tracer {
+            Some(tracer) => joined_spans(&self.metrics, tracer),
+            None => Vec::new(),
+        }
+    }
+
+    /// The `/trace.json` document (`{"truncated":N,"spans":[…]}`) for this
+    /// server.  With tracing off it reports zero spans, not an error — a
+    /// scraper can always tell "tracing disabled" (`truncated:0, spans:[]`)
+    /// from "dropped history" (`truncated > 0`).
+    pub fn trace_json(&self) -> String {
+        let dropped = self.tracer.as_ref().map(|t| t.dropped_count()).unwrap_or(0);
+        telemetry::trace_document(&self.trace_spans(), dropped)
+    }
+}
+
+/// Join the tracer's completed spans with the per-stage busy intervals of
+/// any attached pipeline (by batch sequence number — each matching
+/// [`crate::pipeline::StageEvent`] becomes an `sN` segment, converted from
+/// the pipeline's epoch to the tracer's).  Shared by [`Server::trace_spans`]
+/// and [`Frontend::trace_spans`].
+fn joined_spans(metrics: &Metrics, tracer: &Tracer) -> Vec<SpanRecord> {
+    let mut spans = tracer.spans();
+    for (model, stats) in metrics.pipelines() {
+        let base = tracer.offset_us(stats.started());
+        let events = stats.events.lock().unwrap_or_else(|e| e.into_inner());
+        for span in spans.iter_mut().filter(|s| s.model == model) {
+            let Some(seq) = span.seq else { continue };
+            for e in events.iter().filter(|e| e.seq == seq) {
+                span.segs.push(Seg {
+                    label: format!("s{}", e.stage),
+                    start_us: base + e.start_us,
+                    end_us: base + e.end_us,
+                });
+            }
+        }
+    }
+    spans
 }
 
 impl Server {
@@ -285,40 +333,31 @@ impl Server {
         let Some(tracer) = &self.tracer else {
             return Vec::new();
         };
-        let mut spans = tracer.spans();
-        for (model, stats) in self.metrics.pipelines() {
-            let base = tracer.offset_us(stats.started());
-            let events = stats.events.lock().unwrap_or_else(|e| e.into_inner());
-            for span in spans.iter_mut().filter(|s| s.model == model) {
-                let Some(seq) = span.seq else { continue };
-                for e in events.iter().filter(|e| e.seq == seq) {
-                    span.segs.push(Seg {
-                        label: format!("s{}", e.stage),
-                        start_us: base + e.start_us,
-                        end_us: base + e.end_us,
-                    });
-                }
-            }
-        }
-        spans
+        joined_spans(&self.metrics, tracer)
     }
 
-    /// ASCII waterfall of the completed spans ([`telemetry::render_waterfall`]),
+    /// ASCII waterfall of the completed spans ([`telemetry::render_waterfall`],
+    /// with a `truncated: N` banner once the span ring has dropped history),
     /// or `None` when tracing is off.
     pub fn trace_waterfall(&self, width: usize) -> Option<String> {
         self.tracer
             .as_ref()
-            .map(|_| telemetry::render_waterfall(&self.trace_spans(), width))
+            .map(|t| telemetry::render_waterfall(&self.trace_spans(), width, t.dropped_count()))
     }
 
     /// One JSON document with everything observable about this server:
-    /// `{"metrics": <registry exposition>, "spans": [<completed spans>]}` —
-    /// what `circnn serve --trace-dump PATH` writes.
+    /// `{"metrics": <registry exposition>, "spans": [<completed spans>],
+    /// "trace_truncated": N}` — what `circnn serve --trace-dump PATH`
+    /// writes.  `spans` stays a plain array (CI's validator iterates it);
+    /// `trace_truncated` carries the span-ring drop count so a partial
+    /// window is never mistaken for the full history.
     pub fn telemetry_json(&self) -> String {
+        let dropped = self.tracer.as_ref().map(|t| t.dropped_count()).unwrap_or(0);
         format!(
-            "{{\"metrics\":{},\"spans\":{}}}",
+            "{{\"metrics\":{},\"spans\":{},\"trace_truncated\":{}}}",
             self.metrics.export_json(),
             telemetry::spans_to_json(&self.trace_spans()),
+            dropped,
         )
     }
 
@@ -563,6 +602,8 @@ fn executor_loop(
                         execute_batch(engine, state, &metrics, tracer.as_deref());
                     }
                 }
+                metrics.queue_depth.set(0);
+                metrics.refresh_inflight();
                 return;
             }
         }
@@ -574,6 +615,13 @@ fn executor_loop(
                 execute_batch(engine, state, &metrics, tracer.as_deref());
             }
         }
+
+        // refresh the live depth gauges once per poll iteration — the
+        // snapshot ticker and the scrape endpoints read these, so a scrape
+        // mid-burst sees the queue as it actually is, not as it averaged
+        let depth: usize = states.values().map(|s| s.queue.len()).sum();
+        metrics.queue_depth.set(depth as u64);
+        metrics.refresh_inflight();
     }
 }
 

@@ -36,9 +36,9 @@
 //! | [`train`] | native FFT-domain training subsystem: O(n log n) spectral backprop (conjugate-spectrum `dL/dx`, frequency-accumulated `dL/dw`), SGD+momentum, softmax-CE head — `circnn train-demo` on default features |
 //! | [`pipeline`] | deep-pipelined serving engine: the `NativeModel` op walk split into per-layer stage workers with multiple batches in flight (token-bounded depth, bitwise-identical to `forward`, per-stage occupancy timeline — the executable twin of `fpga::controller`'s pipeline-fill story) |
 //! | [`runtime`] | artifact manifest (always) + PJRT engine (`pjrt` feature): load + execute HLO artifacts |
-//! | [`telemetry`] | unified observability substrate: the process-wide metrics [`telemetry::Registry`] (atomic counters/gauges/log2 histograms, Prometheus-style text + JSON exposition, lint-checked snake_case naming contract), per-request span tracing ([`telemetry::Tracer`], ASCII waterfall + JSON dump via `serve --trace`, gated by the registered `CIRCNN_TRACE` knob) and the phase-level profiling hooks `coordinator`/`train` publish through |
+//! | [`telemetry`] | unified observability substrate: the process-wide metrics [`telemetry::Registry`] (atomic counters/gauges/log2 histograms, Prometheus-style text + JSON exposition, lint-checked snake_case naming contract), per-request span tracing ([`telemetry::Tracer`], ASCII waterfall + JSON dump via `serve --trace`, gated by the registered `CIRCNN_TRACE` knob), the time-series [`telemetry::snapshot`] ring (`CIRCNN_SNAP_MS` sampler, `*_watermark` gauges, ASCII sparklines) and the phase-level profiling hooks `coordinator`/`train` publish through |
 //! | [`coordinator`] | router, dynamic batcher, executor over the native, pipelined-native or PJRT backend |
-//! | [`net`] | TCP serving front-end (std::net only): length-framed binary protocol ([`net::protocol`], documented byte-for-byte in `docs/PROTOCOL.md`), per-connection incremental frame reader with layered admission control and explicit `Overloaded` shedding, graceful drain — plus the fixed-seed open-loop load harness `circnn loadgen` ([`net::loadgen`]: Poisson/bursty arrivals, warm/cold connection mixes, registry-derived percentiles) |
+//! | [`net`] | TCP serving front-end (std::net only): length-framed binary protocol ([`net::protocol`], documented byte-for-byte in `docs/PROTOCOL.md`), per-connection incremental frame reader with layered admission control and explicit `Overloaded` shedding, graceful drain, in-band `Admin` scrape frames and the [`net::scrape`] HTTP/1.0 responder (`/metrics`, `/metrics.json`, `/trace.json`, `/healthz` via `serve --metrics-addr`) — plus the fixed-seed open-loop load harness `circnn loadgen` ([`net::loadgen`]: Poisson/bursty arrivals, warm/cold connection mixes, registry-derived percentiles, schedule `--record`/`--replay`, `--slo-p99-us` exit gate) |
 //! | [`experiments`] | Table-1 / Fig-3 / Fig-6 / analog report generators |
 //! | [`util`] | JSON, PRNG, property-test and bench harness kits (incl. machine-readable bench JSON) |
 //!

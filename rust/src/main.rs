@@ -101,7 +101,7 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
              [--engine native|pipeline] [--depth N] [--synthetic]
              [--precision f32|fixed16] [--trace] [--trace-dump PATH]
              [--tcp] [--tcp-addr HOST:PORT] [--max-conns N]
-             [--max-inflight N]
+             [--max-inflight N] [--metrics-addr HOST:PORT]
              --engine native:   serve on the pure-Rust substrate
              --engine pipeline: deep-pipelined serving — per-layer stage
                                 workers, multiple batches in flight
@@ -122,15 +122,36 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
              --tcp:             also serve the framed wire protocol
                                 (docs/PROTOCOL.md) on --tcp-addr (default
                                 127.0.0.1:0 = ephemeral port); the demo
-                                clients then connect over TCP.  --max-conns
+                                clients then connect over TCP.  With
+                                --requests 0 no demo clients run: the
+                                server serves external traffic until
+                                stdin closes (EOF), then drains.
+                                --max-conns
                                 caps concurrent connections, --max-inflight
                                 caps unanswered requests per connection;
                                 both shed with explicit Overloaded replies
                                 (see docs/OPERATIONS.md)
+             --metrics-addr:    live scrape endpoint (HTTP/1.0, std::net
+                                only): GET /metrics (Prometheus text),
+                                /metrics.json (registry JSON + the
+                                snapshot time series), /trace.json (span
+                                ring incl. truncation count), /healthz
+                                (503 once draining); port 0 = ephemeral.
+                                The same documents ride the wire
+                                protocol's admin frames, so `--tcp` alone
+                                is scrapable too.  A background ticker
+                                samples queue depth / in-flight / open
+                                connections / stage busy permille every
+                                CIRCNN_SNAP_MS ms (default 100; 0 turns
+                                the ticker off) into a bounded ring with
+                                *_watermark gauges, and the run report
+                                ends with one sparkline per series
   loadgen    [--addr HOST:PORT | --synthetic] [--model NAME] [--requests N]
              [--rate R] [--process poisson|bursty] [--burst N]
              [--connections N] [--cold N] [--seed N]
              [--engine native|pipeline] [--max-batch N] [--bench-json PATH]
+             [--record PATH] [--replay PATH]
+             [--slo-p99-us N] [--slo-key latency|sched_lag]
              open-loop load harness for the TCP front-end (arrivals follow
              a fixed-seed schedule, never the server's reply rate).
              --addr drives an already-running `serve --tcp`; --synthetic
@@ -138,7 +159,16 @@ runtime (infer/serve need `make artifacts`; PJRT paths need `--features pjrt`):
              identical schedule in-process, and derives
              tcp_vs_inproc_ratio_* alongside serve_tcp_latency_p*_us_*;
              --bench-json merges those keys into BENCH_circulant.json
-             (informational keys, never CI-gated).
+             (informational keys, never CI-gated), plus
+             scrape_overhead_ratio_* from one extra schedule run under a
+             hammering scraper.
+             --record writes the realized schedule (integer-us offsets,
+             sample + slot assignment) as JSON; --replay re-drives a
+             recorded schedule verbatim — same payloads, same slots —
+             instead of deriving one from the flags.
+             --slo-p99-us exits non-zero when the measured p99 (of
+             --slo-key, default "latency"; also "sched_lag") exceeds the
+             budget — the CI latency gate.
              full walkthrough: docs/OPERATIONS.md
   train-demo [--model NAME] [--steps N] [--batch N] [--lr F] [--seed N]
              default build: native spectral-domain trainer (O(n log n)
@@ -554,6 +584,52 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("precision: {} (int16 BFP spectral MAC engine)", precision.name());
     }
 
+    // the live observability plane: a background snapshot ticker
+    // (CIRCNN_SNAP_MS; 0 disables) and, with --metrics-addr, the HTTP
+    // scrape responder.  Both hold Frontend clones, which keep the
+    // executor's intake open — all of it is torn down explicitly before
+    // the final drain below.
+    let frontend = server
+        .frontend()
+        .ok_or_else(|| anyhow::anyhow!("server is already draining"))?;
+    let draining = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let snap_ms: u64 = circnn::circulant::sched::env_parse(
+        "CIRCNN_SNAP_MS",
+        circnn::telemetry::snapshot::DEFAULT_SNAP_MS,
+    );
+    let snap = if snap_ms > 0 {
+        let ring = circnn::telemetry::SnapshotRing::new(
+            frontend.metrics().registry(),
+            circnn::telemetry::snapshot::DEFAULT_SNAP_CAP,
+            snap_ms,
+        );
+        let probe = frontend.metrics().clone();
+        let sampler = circnn::telemetry::Sampler::start(
+            ring.clone(),
+            Box::new(move || probe.snapshot_sample()),
+            std::time::Duration::from_millis(snap_ms),
+        );
+        Some((ring, sampler))
+    } else {
+        None
+    };
+    let scrape = match flags.get("metrics-addr") {
+        Some(addr) => {
+            let sources = circnn::net::ScrapeSources::from_frontend(
+                &frontend,
+                snap.as_ref().map(|(ring, _)| ring.clone()),
+                draining.clone(),
+            );
+            let http = circnn::net::MetricsHttp::start(addr, sources)?;
+            println!(
+                "metrics scrape on http://{}  (/metrics /metrics.json /trace.json /healthz)",
+                http.local_addr()
+            );
+            Some(http)
+        }
+        None => None,
+    };
+
     let t0 = Instant::now();
     // --tcp: wrap the coordinator in the TCP front-end and run the demo
     // clients over the wire protocol instead of in-process calls
@@ -570,33 +646,42 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         let tcp = circnn::net::TcpServer::start(server, net_cfg)?;
         let addr = tcp.local_addr();
         println!("tcp front-end listening on {addr} (protocol: docs/PROTOCOL.md)");
-        std::thread::scope(|scope| {
-            for c in 0..clients {
-                let model = &model;
-                let ds = &ds;
-                scope.spawn(move || {
-                    let mut client = match circnn::net::Client::connect(addr) {
-                        Ok(cl) => cl,
-                        Err(e) => {
-                            eprintln!("client {c}: connect: {e}");
-                            return;
-                        }
-                    };
-                    let per = requests / clients;
-                    for i in 0..per {
-                        let (img, _) = data::sample(ds, (c * per + i) as u64);
-                        let dims = [img.len() as u32];
-                        match client.infer(model, &dims, img) {
-                            Ok(_) => {}
+        if requests == 0 {
+            // no demo clients: serve external traffic (`circnn loadgen
+            // --addr`, scrapers) until stdin closes, then drain — a
+            // pipe-friendly lifetime for backgrounded/CI runs
+            println!("serving external traffic until stdin closes (EOF)");
+            let mut sink = Vec::new();
+            let _ = std::io::Read::read_to_end(&mut std::io::stdin().lock(), &mut sink);
+        } else {
+            std::thread::scope(|scope| {
+                for c in 0..clients {
+                    let model = &model;
+                    let ds = &ds;
+                    scope.spawn(move || {
+                        let mut client = match circnn::net::Client::connect(addr) {
+                            Ok(cl) => cl,
                             Err(e) => {
-                                eprintln!("client {c}: {e}");
+                                eprintln!("client {c}: connect: {e}");
                                 return;
                             }
+                        };
+                        let per = requests / clients;
+                        for i in 0..per {
+                            let (img, _) = data::sample(ds, (c * per + i) as u64);
+                            let dims = [img.len() as u32];
+                            match client.infer(model, &dims, img) {
+                                Ok(_) => {}
+                                Err(e) => {
+                                    eprintln!("client {c}: {e}");
+                                    return;
+                                }
+                            }
                         }
-                    }
-                });
-            }
-        });
+                    });
+                }
+            });
+        }
         // graceful drain: stop accepting, answer everything admitted,
         // then hand the coordinator back for the report below
         tcp.shutdown()
@@ -620,9 +705,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         server
     };
     let dt = t0.elapsed();
+    // the run is over: flip health to draining, stop the ticker, and tear
+    // the scrape plane down so its Frontend clones release the intake
+    // (the executor cannot drain while they live)
+    draining.store(true, std::sync::atomic::Ordering::SeqCst);
+    let snap_status = snap.map(|(ring, sampler)| {
+        drop(sampler); // join the ticker before the final render
+        ring.render_status(96)
+    });
+    drop(scrape);
+    drop(frontend);
     println!("served {requests} requests from {clients} clients in {:.3}s", dt.as_secs_f64());
     println!("throughput: {:.1} req/s", requests as f64 / dt.as_secs_f64());
     println!("{}", server.metrics().summary());
+    if let Some(status) = &snap_status {
+        print!("{status}");
+    }
     // the multi-batch demo payoff: the measured stage-occupancy timeline
     // of the served model — the serving-side Fig. 4 (cf. `simulate
     // --timeline`, which predicts the same picture from the cycle model)
@@ -653,31 +751,54 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 fn cmd_loadgen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     use circnn::net::{loadgen, Arrival, LoadConfig, NetConfig, TcpServer};
 
-    let model = flags
-        .get("model")
-        .cloned()
-        .unwrap_or_else(|| "mnist_mlp_1".to_string());
+    // --replay: the record file defines the whole run (config + realized
+    // schedule); otherwise the schedule derives from the flags' seed
+    let (cfg, sends) = match flags.get("replay") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)?;
+            let (cfg, sends) = loadgen::parse_record(&text).map_err(|e| anyhow::anyhow!(e))?;
+            println!("replaying {} recorded sends from {path}", sends.len());
+            (cfg, sends)
+        }
+        None => {
+            let model = flags
+                .get("model")
+                .cloned()
+                .unwrap_or_else(|| "mnist_mlp_1".to_string());
+            let entry = models::by_name(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (see `circnn models`)"))?;
+            let (h, w, c) = entry.input;
+            let arrival = match flags.get("process").map(String::as_str) {
+                Some("bursty") => Arrival::Bursty { burst: flag_usize(flags, "burst", 8) },
+                Some("poisson") | None => Arrival::Poisson,
+                Some(other) => anyhow::bail!("unknown arrival process {other:?} (poisson|bursty)"),
+            };
+            let cfg = LoadConfig {
+                model,
+                dims: vec![(h * w * c) as u32],
+                requests: flag_usize(flags, "requests", 512),
+                rate: flags.get("rate").and_then(|v| v.parse().ok()).unwrap_or(500.0),
+                arrival,
+                warm: flag_usize(flags, "connections", 4),
+                cold: flag_usize(flags, "cold", 0),
+                seed: flag_usize(flags, "seed", 0x10AD) as u64,
+            };
+            let sends = loadgen::schedule(&cfg);
+            (cfg, sends)
+        }
+    };
+    let model = cfg.model.clone();
     let entry = models::by_name(&model)
         .ok_or_else(|| anyhow::anyhow!("unknown model {model:?} (see `circnn models`)"))?;
-    let (h, w, c) = entry.input;
     let ds = data::dataset(entry.dataset)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {}", entry.dataset))?;
-    let arrival = match flags.get("process").map(String::as_str) {
-        Some("bursty") => Arrival::Bursty { burst: flag_usize(flags, "burst", 8) },
-        Some("poisson") | None => Arrival::Poisson,
-        Some(other) => anyhow::bail!("unknown arrival process {other:?} (poisson|bursty)"),
-    };
-    let cfg = LoadConfig {
-        model: model.clone(),
-        dims: vec![(h * w * c) as u32],
-        requests: flag_usize(flags, "requests", 512),
-        rate: flags.get("rate").and_then(|v| v.parse().ok()).unwrap_or(500.0),
-        arrival,
-        warm: flag_usize(flags, "connections", 4),
-        cold: flag_usize(flags, "cold", 0),
-        seed: flag_usize(flags, "seed", 0x10AD) as u64,
-    };
     let sample = |i: u64| data::sample(&ds, i).0;
+    if let Some(path) = flags.get("record") {
+        // integer-µs offsets: a replay of this file is bit-for-bit the
+        // same offered stream, payloads included
+        std::fs::write(path, loadgen::record_json(&cfg, &sends))?;
+        println!("recorded {} sends to {path}", sends.len());
+    }
     println!(
         "loadgen: {} requests at {:.0} req/s ({:?}), {} warm + {} cold connections, seed {}",
         cfg.requests, cfg.rate, cfg.arrival, cfg.warm, cfg.cold, cfg.seed
@@ -691,9 +812,9 @@ fn cmd_loadgen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .to_socket_addrs()?
             .next()
             .ok_or_else(|| anyhow::anyhow!("{addr:?} resolved to no address"))?;
-        let report = loadgen::run_tcp(addr, &cfg, &sample);
+        let report = loadgen::run_tcp_schedule(addr, &cfg, &sends, &sample);
         println!("tcp     {}", report.summary());
-        return Ok(());
+        return apply_slo_gate(flags, &report);
     }
 
     // --synthetic (default): own server, registry weights, deterministic
@@ -721,7 +842,7 @@ fn cmd_loadgen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let addr = tcp.local_addr();
     println!("synthetic server on {addr} (engine {engine:?}, max_batch {})", policy.max_batch);
 
-    let tcp_report = loadgen::run_tcp(addr, &cfg, &sample);
+    let tcp_report = loadgen::run_tcp_schedule(addr, &cfg, &sends, &sample);
     println!("tcp     {}", tcp_report.summary());
     // the no-network twin: identical schedule, identical server, replies
     // through the in-process seam — isolates the wire + framing cost
@@ -729,22 +850,100 @@ fn cmd_loadgen(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     println!("inproc  {}", inproc_report.summary());
     let ratio = tcp_report.p50_us as f64 / inproc_report.p50_us.max(1) as f64;
     println!("tcp/inproc p50 ratio: {ratio:.2}x");
+
+    // scrape-overhead leg (bench mode only): the identical schedule once
+    // more with a scraper hammering the HTTP plane throughout — an honest
+    // measurement of what observability costs the serving path
+    // (informational `_ratio_` key, never CI-gated)
+    let scrape_ratio = if flags.contains_key("bench-json") {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+        let frontend = tcp
+            .server()
+            .frontend()
+            .ok_or_else(|| anyhow::anyhow!("server is already draining"))?;
+        let sources = circnn::net::ScrapeSources::from_frontend(
+            &frontend,
+            None,
+            Arc::new(AtomicBool::new(false)),
+        );
+        let http = circnn::net::MetricsHttp::start("127.0.0.1:0", sources)?;
+        let scrape_addr = http.local_addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let scraper = std::thread::spawn(move || {
+            let mut scrapes = 0u64;
+            while !stop_flag.load(Ordering::SeqCst) {
+                if scrape_get(scrape_addr, "/metrics").is_ok() {
+                    scrapes += 1;
+                }
+            }
+            scrapes
+        });
+        let scraped_report = loadgen::run_tcp_schedule(addr, &cfg, &sends, &sample);
+        stop.store(true, Ordering::SeqCst);
+        let scrapes = scraper.join().unwrap_or(0);
+        drop(http);
+        drop(frontend);
+        println!("scraped {}  ({scrapes} concurrent scrapes)", scraped_report.summary());
+        let r = scraped_report.p50_us as f64 / tcp_report.p50_us.max(1) as f64;
+        println!("scrape-overhead p50 ratio: {r:.2}x (informational, never gated)");
+        Some(r)
+    } else {
+        None
+    };
+
     let server = tcp.shutdown();
     println!("server  {}", server.metrics().summary());
     server.shutdown();
 
     if let Some(path) = flags.get("bench-json") {
         let tag = format!("b{}_c{}", policy.max_batch, cfg.warm + cfg.cold);
-        let derived = vec![
+        let mut derived = vec![
             (format!("serve_tcp_latency_p50_us_{tag}"), tcp_report.p50_us as f64),
             (format!("serve_tcp_latency_p95_us_{tag}"), tcp_report.p95_us as f64),
             (format!("serve_tcp_latency_p99_us_{tag}"), tcp_report.p99_us as f64),
             (format!("tcp_vs_inproc_ratio_{tag}"), ratio),
         ];
+        if let Some(r) = scrape_ratio {
+            derived.push((format!("scrape_overhead_ratio_{tag}"), r));
+        }
         circnn::util::benchkit::merge_derived(path, "circulant", &derived)?;
         println!("merged {} loadgen keys into {path}", derived.len());
     }
+    apply_slo_gate(flags, &tcp_report)
+}
+
+/// `--slo-p99-us N [--slo-key K]`: compare the measured p99 of the gated
+/// series against the budget; over budget is an error (non-zero exit) —
+/// the CI latency gate.
+fn apply_slo_gate(
+    flags: &HashMap<String, String>,
+    report: &circnn::net::LoadReport,
+) -> anyhow::Result<()> {
+    let Some(budget) = flags.get("slo-p99-us") else {
+        return Ok(());
+    };
+    let budget: u64 = budget
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--slo-p99-us wants an integer µs budget, got {budget:?}"))?;
+    let key = flags.get("slo-key").map(String::as_str).unwrap_or("latency");
+    let measured = report.slo_p99_us(key).map_err(|e| anyhow::anyhow!(e))?;
+    if measured > budget {
+        anyhow::bail!("SLO violated: {key} p99 <= {measured}us exceeds the {budget}us budget");
+    }
+    println!("SLO ok: {key} p99 <= {measured}us within the {budget}us budget");
     Ok(())
+}
+
+/// One blocking HTTP GET against the scrape plane (bench + smoke helper).
+fn scrape_get(addr: std::net::SocketAddr, path: &str) -> std::io::Result<String> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    stream.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes())?;
+    let mut out = String::new();
+    stream.read_to_string(&mut out)?;
+    Ok(out)
 }
 
 fn cmd_train_demo(flags: &HashMap<String, String>) -> anyhow::Result<()> {

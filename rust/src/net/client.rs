@@ -8,7 +8,8 @@ use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
 use crate::net::protocol::{
-    encode_request, Frame, FrameReader, ReplyFrame, RequestFrame, DEFAULT_MAX_FRAME,
+    encode_admin, encode_request, AdminFrame, AdminKind, AdminReplyFrame, Frame, FrameReader,
+    ReplyFrame, RequestFrame, DEFAULT_MAX_FRAME,
 };
 
 /// Blocking connection to a [`crate::net::TcpServer`].
@@ -45,10 +46,50 @@ impl Client {
         loop {
             match self.reader.next_frame() {
                 Ok(Some(Frame::Reply(rep))) => return Ok(rep),
-                Ok(Some(Frame::Request(_))) => {
+                Ok(Some(Frame::Request(_) | Frame::Admin(_))) => {
                     return Err(std::io::Error::new(
                         std::io::ErrorKind::InvalidData,
-                        "server sent a request frame",
+                        "server sent a request/admin frame",
+                    ));
+                }
+                Ok(Some(Frame::AdminReply(_))) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "admin reply arrived while awaiting an inference reply \
+                         (interleaved send/admin must be received in order)",
+                    ));
+                }
+                Ok(None) => {}
+                Err(err) => {
+                    return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, err));
+                }
+            }
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                ));
+            }
+            self.reader.feed(&chunk[..n]);
+        }
+    }
+
+    /// One admin (scrape) round trip over the serving socket: send an
+    /// admin frame of `kind`, block for the matching document.  Shares the
+    /// connection's request-id sequence and FIFO reply order.
+    pub fn admin(&mut self, kind: AdminKind) -> std::io::Result<AdminReplyFrame> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stream.write_all(&encode_admin(&AdminFrame { id, kind }))?;
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.reader.next_frame() {
+                Ok(Some(Frame::AdminReply(rep))) => return Ok(rep),
+                Ok(Some(_)) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "non-admin frame arrived while awaiting an admin reply",
                     ));
                 }
                 Ok(None) => {}

@@ -14,10 +14,14 @@
 //!   `Overloaded` reply counted in `net_overloaded_total`; graceful drain
 //!   on shutdown.
 //! * [`client`] — a minimal blocking [`Client`] (demo clients, tests).
+//! * [`scrape`] — [`MetricsHttp`]: the dependency-free HTTP/1.0 scrape
+//!   responder behind `circnn serve --metrics-addr` (`/metrics`,
+//!   `/metrics.json`, `/trace.json`, `/healthz`); the same documents ride
+//!   the wire protocol's admin frames for single-socket deployments.
 //! * [`loadgen`] — `circnn loadgen`: fixed-seed open-loop generator with
 //!   Poisson and bursty arrivals and warm/cold connection mixes, reporting
 //!   registry-derived latency percentiles (see `docs/OPERATIONS.md` for
-//!   the walkthrough).
+//!   the walkthrough), with schedule record/replay and an SLO exit gate.
 //!
 //! Everything observable lands in the shared [`crate::telemetry`]
 //! registry under `net_*` / `loadgen_*` names; a server without a TCP
@@ -27,9 +31,14 @@
 pub mod client;
 pub mod loadgen;
 pub mod protocol;
+pub mod scrape;
 pub mod server;
 
 pub use client::Client;
 pub use loadgen::{Arrival, LoadConfig, LoadReport};
-pub use protocol::{Frame, FrameReader, ReplyFrame, RequestFrame, Status, WireError};
+pub use protocol::{
+    AdminFrame, AdminKind, AdminReplyFrame, Frame, FrameReader, ReplyFrame, RequestFrame, Status,
+    WireError,
+};
+pub use scrape::{MetricsHttp, ScrapeSources};
 pub use server::{NetConfig, TcpServer};

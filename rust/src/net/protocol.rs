@@ -36,6 +36,11 @@ pub const HEADER_LEN: usize = 20;
 pub const TYPE_REQUEST: u8 = 1;
 /// Frame type tag: server reply.
 pub const TYPE_REPLY: u8 = 2;
+/// Frame type tag: admin scrape request (metrics/trace/health over the
+/// same socket — no second listener needed).
+pub const TYPE_ADMIN: u8 = 3;
+/// Frame type tag: admin scrape reply (the requested document as UTF-8).
+pub const TYPE_ADMIN_REPLY: u8 = 4;
 /// Default cap on a whole frame (header + body): 4 MiB, comfortably above
 /// any registry model's input tensor.
 pub const DEFAULT_MAX_FRAME: usize = 1 << 22;
@@ -105,6 +110,57 @@ pub enum WireError {
     BadPayload { expected: u64, got: u64 },
     #[error("unknown reply status {0}")]
     UnknownStatus(u8),
+    #[error("unknown admin scrape kind {0}")]
+    UnknownAdminKind(u8),
+}
+
+/// What an [`AdminFrame`] asks the server to scrape (byte 0 of an admin
+/// request body, echoed in the reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum AdminKind {
+    /// Prometheus-style text exposition (`Registry::render_text`)
+    MetricsText = 0,
+    /// JSON exposition plus the snapshot ring (`/metrics.json`)
+    MetricsJson = 1,
+    /// the current span-ring snapshot (`/trace.json`)
+    TraceJson = 2,
+    /// drain-aware health document (`/healthz`)
+    Health = 3,
+}
+
+impl AdminKind {
+    pub fn from_u8(v: u8) -> Result<Self, WireError> {
+        Ok(match v {
+            0 => AdminKind::MetricsText,
+            1 => AdminKind::MetricsJson,
+            2 => AdminKind::TraceJson,
+            3 => AdminKind::Health,
+            other => return Err(WireError::UnknownAdminKind(other)),
+        })
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+}
+
+/// A decoded admin scrape request: "send me this observability document".
+/// The body is exactly one byte (the [`AdminKind`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdminFrame {
+    pub id: u64,
+    pub kind: AdminKind,
+}
+
+/// A decoded admin scrape reply: the echoed kind plus the document as
+/// UTF-8 text (Prometheus text for [`AdminKind::MetricsText`], JSON for
+/// the rest) running to the end of the body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdminReplyFrame {
+    pub id: u64,
+    pub kind: AdminKind,
+    pub body: String,
 }
 
 /// A decoded client request: classify `payload` (row-major, shaped `dims`)
@@ -143,6 +199,8 @@ impl ReplyFrame {
 pub enum Frame {
     Request(RequestFrame),
     Reply(ReplyFrame),
+    Admin(AdminFrame),
+    AdminReply(AdminReplyFrame),
 }
 
 fn push_header(out: &mut Vec<u8>, frame_type: u8, id: u64, body_len: usize) {
@@ -170,6 +228,24 @@ pub fn encode_request(req: &RequestFrame) -> Vec<u8> {
     for &v in &req.payload {
         out.extend_from_slice(&v.to_le_bytes());
     }
+    out
+}
+
+/// Encode one admin scrape request (header + 1-byte body) to wire bytes.
+pub fn encode_admin(req: &AdminFrame) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + 1);
+    push_header(&mut out, TYPE_ADMIN, req.id, 1);
+    out.push(req.kind.as_u8());
+    out
+}
+
+/// Encode one admin scrape reply (header + kind byte + UTF-8 document).
+pub fn encode_admin_reply(rep: &AdminReplyFrame) -> Vec<u8> {
+    let body_len = 1 + rep.body.len();
+    let mut out = Vec::with_capacity(HEADER_LEN + body_len);
+    push_header(&mut out, TYPE_ADMIN_REPLY, rep.id, body_len);
+    out.push(rep.kind.as_u8());
+    out.extend_from_slice(rep.body.as_bytes());
     out
 }
 
@@ -206,7 +282,7 @@ fn parse_header(h: &[u8]) -> Result<Header, WireError> {
         return Err(WireError::UnsupportedVersion(h[4]));
     }
     let frame_type = h[5];
-    if frame_type != TYPE_REQUEST && frame_type != TYPE_REPLY {
+    if !(TYPE_REQUEST..=TYPE_ADMIN_REPLY).contains(&frame_type) {
         return Err(WireError::UnknownFrameType(frame_type));
     }
     // bytes 6..8 are reserved: ignored on receive for forward compatibility
@@ -296,6 +372,17 @@ fn decode_body(hdr: Header, body: &[u8]) -> Result<Frame, WireError> {
                 .map_err(|_| WireError::BadUtf8)?
                 .to_string();
             Frame::Reply(ReplyFrame { id: hdr.id, status, label, occupancy, logits, message })
+        }
+        TYPE_ADMIN => {
+            let kind = AdminKind::from_u8(c.u8()?)?;
+            Frame::Admin(AdminFrame { id: hdr.id, kind })
+        }
+        TYPE_ADMIN_REPLY => {
+            let kind = AdminKind::from_u8(c.u8()?)?;
+            let body = std::str::from_utf8(c.take(c.remaining())?)
+                .map_err(|_| WireError::BadUtf8)?
+                .to_string();
+            Frame::AdminReply(AdminReplyFrame { id: hdr.id, kind, body })
         }
         _ => return Err(WireError::UnknownFrameType(hdr.frame_type)),
     };
@@ -415,9 +502,57 @@ mod tests {
     }
 
     #[test]
+    fn admin_roundtrip_is_exact() {
+        let req = AdminFrame { id: 42, kind: AdminKind::MetricsText };
+        let bytes = encode_admin(&req);
+        assert_eq!(bytes.len(), HEADER_LEN + 1, "admin request body is one byte");
+        assert_eq!(bytes[5], TYPE_ADMIN);
+        assert_eq!(decode_frame(&bytes), Ok(Frame::Admin(req)));
+
+        let rep = AdminReplyFrame {
+            id: 42,
+            kind: AdminKind::TraceJson,
+            body: "{\"truncated\":0,\"spans\":[]}".into(),
+        };
+        let bytes = encode_admin_reply(&rep);
+        assert_eq!(bytes[5], TYPE_ADMIN_REPLY);
+        assert_eq!(decode_frame(&bytes), Ok(Frame::AdminReply(rep)));
+
+        // an empty document is legal (body = kind byte only)
+        let empty = AdminReplyFrame { id: 1, kind: AdminKind::Health, body: String::new() };
+        assert_eq!(decode_frame(&encode_admin_reply(&empty)), Ok(Frame::AdminReply(empty)));
+    }
+
+    #[test]
+    fn admin_kind_validation() {
+        for v in 0..=3u8 {
+            let k = AdminKind::from_u8(v).expect("documented kind");
+            assert_eq!(k.as_u8(), v);
+        }
+        assert_eq!(AdminKind::from_u8(4), Err(WireError::UnknownAdminKind(4)));
+        // an undecodable kind byte inside a well-framed admin request
+        let mut bytes = encode_admin(&AdminFrame { id: 5, kind: AdminKind::Health });
+        let last = bytes.len() - 1;
+        bytes[last] = 9;
+        assert_eq!(decode_frame(&bytes), Err(WireError::UnknownAdminKind(9)));
+        // non-UTF-8 admin reply body
+        let mut bytes = encode_admin_reply(&AdminReplyFrame {
+            id: 5,
+            kind: AdminKind::MetricsJson,
+            body: "ok".into(),
+        });
+        let last = bytes.len() - 1;
+        bytes[last] = 0xff;
+        assert_eq!(decode_frame(&bytes), Err(WireError::BadUtf8));
+    }
+
+    #[test]
     fn reader_resumes_partial_frames_byte_by_byte() {
-        // the pathological fragmentation: one byte per feed, two frames
+        // the pathological fragmentation: one byte per feed, three frames
+        // (an admin scrape interleaves with the request stream)
+        let admin = AdminFrame { id: 9, kind: AdminKind::MetricsJson };
         let mut wire = encode_request(&request());
+        wire.extend_from_slice(&encode_admin(&admin));
         wire.extend_from_slice(&encode_reply(&reply()));
         let mut reader = FrameReader::new(DEFAULT_MAX_FRAME);
         let mut frames = Vec::new();
@@ -427,7 +562,10 @@ mod tests {
                 frames.push(f);
             }
         }
-        assert_eq!(frames, vec![Frame::Request(request()), Frame::Reply(reply())]);
+        assert_eq!(
+            frames,
+            vec![Frame::Request(request()), Frame::Admin(admin), Frame::Reply(reply())]
+        );
         assert_eq!(reader.buffered(), 0);
     }
 

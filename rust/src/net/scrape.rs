@@ -1,0 +1,350 @@
+//! The live scrape plane: a deliberately tiny HTTP/1.0 responder that
+//! exposes the serving registry, the span trace, and drain-aware health
+//! over plain sockets — `curl`/Prometheus-compatible without pulling an
+//! HTTP framework into the build.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Observability must not perturb serving.**  The responder reads
+//!    from the same shared [`Registry`](crate::telemetry::Registry) /
+//!    tracer the coordinator writes, over atomic loads and short
+//!    lock-free snapshots — no path through the admission queue, no
+//!    allocation on the serving threads.  The scrape-vs-served-bits
+//!    property test (`tests/pipeline_serve.rs`) pins this.
+//! 2. **Bounded everything.**  One accept thread answers connections
+//!    serially (a scrape is a handful of string renders; serial service
+//!    keeps the thread count flat under scraper misbehaviour), request
+//!    heads are capped at [`REQUEST_CAP`] bytes, and all socket I/O
+//!    carries timeouts.
+//! 3. **No dependencies.**  `std::net` only; HTTP/1.0 with
+//!    `Connection: close` sidesteps keep-alive state entirely.
+//!
+//! Routes:
+//!
+//! | path            | body                                                  |
+//! |-----------------|-------------------------------------------------------|
+//! | `/metrics`      | Prometheus text exposition                            |
+//! | `/metrics.json` | registry JSON, plus a `"snapshots"` time-series key   |
+//! | `/trace.json`   | `{"truncated":N,"spans":[…]}` span-ring snapshot      |
+//! | `/healthz`      | `200` while serving, `503` once draining              |
+//!
+//! The same four documents are reachable over the CIRC wire protocol's
+//! admin frames (`docs/PROTOCOL.md`), so a deployment that only opens the
+//! serving port can still be scraped.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::Frontend;
+use crate::telemetry::SnapshotRing;
+
+/// Cap on one request head; anything longer is answered from what arrived
+/// (the request line always fits — this bounds hostile header floods).
+const REQUEST_CAP: usize = 4096;
+
+/// Accept-loop poll interval while idle (bounds shutdown latency).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+
+/// Per-connection socket read/write timeout — a stalled scraper cannot
+/// wedge the accept thread for longer than this per direction.
+const IO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// The shared health document, also served on the wire protocol's
+/// `Health` admin frame: `draining` flips when intake has closed but
+/// queued work is still being answered.
+pub fn health_document(draining: bool) -> String {
+    if draining {
+        "{\"status\":\"draining\",\"draining\":true}".to_string()
+    } else {
+        "{\"status\":\"ok\",\"draining\":false}".to_string()
+    }
+}
+
+/// Graft the snapshot ring's time series onto a registry JSON document:
+/// `{…}` becomes `{…,"snapshots":{…}}`.  Pure string surgery on the
+/// registry's own renderer output, so the two stay one JSON object
+/// without teaching the registry about snapshot rings.
+pub fn splice_snapshots(registry_json: &str, ring: &SnapshotRing) -> String {
+    let trimmed = registry_json.trim_end();
+    match trimmed.strip_suffix('}') {
+        Some(head) => format!("{head},\"snapshots\":{}}}", ring.render_json()),
+        // not an object (can't happen with our renderer) — pass through
+        None => registry_json.to_string(),
+    }
+}
+
+/// What the responder serves, as render thunks — decoupled from the
+/// coordinator types so unit tests drive the HTTP surface with canned
+/// documents and `main` wires in the real frontend.
+pub struct ScrapeSources {
+    metrics_text: Arc<dyn Fn() -> String + Send + Sync>,
+    metrics_json: Arc<dyn Fn() -> String + Send + Sync>,
+    trace_json: Arc<dyn Fn() -> String + Send + Sync>,
+    draining: Arc<AtomicBool>,
+}
+
+impl ScrapeSources {
+    pub fn new(
+        metrics_text: Arc<dyn Fn() -> String + Send + Sync>,
+        metrics_json: Arc<dyn Fn() -> String + Send + Sync>,
+        trace_json: Arc<dyn Fn() -> String + Send + Sync>,
+        draining: Arc<AtomicBool>,
+    ) -> Self {
+        Self { metrics_text, metrics_json, trace_json, draining }
+    }
+
+    /// The production wiring: registry expositions and the joined trace
+    /// view from a coordinator [`Frontend`], with the snapshot ring (when
+    /// the ticker is on) spliced into `/metrics.json`.
+    pub fn from_frontend(
+        frontend: &Frontend,
+        snapshots: Option<Arc<SnapshotRing>>,
+        draining: Arc<AtomicBool>,
+    ) -> Self {
+        let text_fe = frontend.clone();
+        let json_fe = frontend.clone();
+        let trace_fe = frontend.clone();
+        Self {
+            metrics_text: Arc::new(move || text_fe.metrics().export_text()),
+            metrics_json: Arc::new(move || {
+                let doc = json_fe.metrics().export_json();
+                match &snapshots {
+                    Some(ring) => splice_snapshots(&doc, ring),
+                    None => doc,
+                }
+            }),
+            trace_json: Arc::new(move || trace_fe.trace_json()),
+            draining,
+        }
+    }
+}
+
+/// The running responder; binding is synchronous (so `local_addr` is
+/// final on return), service runs on one named background thread.
+pub struct MetricsHttp {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsHttp {
+    /// Bind `addr` (port 0 picks an ephemeral port) and start answering.
+    pub fn start(addr: &str, sources: ScrapeSources) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread_stop = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("circnn-scrape".into())
+            .spawn(move || scrape_loop(listener, sources, thread_stop))?;
+        Ok(Self { local_addr, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting and join the responder thread.  Idempotent; also
+    /// runs on `Drop`.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsHttp {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn scrape_loop(listener: TcpListener, sources: ScrapeSources, stop: Arc<AtomicBool>) {
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => answer(stream, &sources),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+}
+
+/// Serve one connection: read the request head, route, write one
+/// response, close.  Every error path just drops the socket — the scrape
+/// plane never takes the server down.
+fn answer(mut stream: TcpStream, sources: &ScrapeSources) {
+    if stream.set_nonblocking(false).is_err()
+        || stream.set_read_timeout(Some(IO_TIMEOUT)).is_err()
+        || stream.set_write_timeout(Some(IO_TIMEOUT)).is_err()
+    {
+        return;
+    }
+    let mut head = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&chunk[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= REQUEST_CAP {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let text = String::from_utf8_lossy(&head);
+    let request_line = text.lines().next().unwrap_or("");
+    let (status, ctype, body) = route(request_line, sources);
+    let header = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    if stream.write_all(header.as_bytes()).is_ok() {
+        let _ = stream.write_all(body.as_bytes());
+    }
+}
+
+/// Map one request line onto (status, content-type, body).
+fn route(request_line: &str, sources: &ScrapeSources) -> (&'static str, &'static str, String) {
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    if method != "GET" {
+        return (
+            "405 Method Not Allowed",
+            "text/plain; charset=utf-8",
+            "method not allowed; the scrape plane is GET-only\n".to_string(),
+        );
+    }
+    // ignore any query string: `/metrics?x=1` scrapes like `/metrics`
+    let path = path.split('?').next().unwrap_or(path);
+    match path {
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            (sources.metrics_text)(),
+        ),
+        "/metrics.json" => ("200 OK", "application/json", (sources.metrics_json)()),
+        "/trace.json" => ("200 OK", "application/json", (sources.trace_json)()),
+        "/healthz" => {
+            let draining = sources.draining.load(Ordering::SeqCst);
+            let status = if draining { "503 Service Unavailable" } else { "200 OK" };
+            (status, "application/json", health_document(draining))
+        }
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            "not found; try /metrics, /metrics.json, /trace.json, /healthz\n".to_string(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{Registry, SnapSample, SnapshotRing};
+    use crate::util::json::Json;
+
+    fn canned_sources(draining: Arc<AtomicBool>) -> ScrapeSources {
+        ScrapeSources::new(
+            Arc::new(|| "# TYPE canary counter\ncanary 7\n".to_string()),
+            Arc::new(|| "{\"counters\":{\"canary\":7}}".to_string()),
+            Arc::new(|| "{\"truncated\":0,\"spans\":[]}".to_string()),
+            draining,
+        )
+    }
+
+    /// One raw round-trip: send `request`, read the whole response.
+    fn get(addr: SocketAddr, request: &str) -> String {
+        let mut stream = TcpStream::connect(addr).expect("connect scrape");
+        stream.write_all(request.as_bytes()).expect("send request");
+        let mut out = String::new();
+        stream.read_to_string(&mut out).expect("read response");
+        out
+    }
+
+    #[test]
+    fn http_endpoints_answer_with_documents() {
+        let draining = Arc::new(AtomicBool::new(false));
+        let http = MetricsHttp::start("127.0.0.1:0", canned_sources(draining)).expect("bind");
+        let addr = http.local_addr();
+
+        let text = get(addr, "GET /metrics HTTP/1.0\r\n\r\n");
+        assert!(text.starts_with("HTTP/1.0 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Type: text/plain; version=0.0.4"), "{text}");
+        assert!(text.ends_with("# TYPE canary counter\ncanary 7\n"), "{text}");
+
+        // headers beyond the request line (and query strings) are ignored
+        let json = get(addr, "GET /metrics.json?probe=1 HTTP/1.1\r\nHost: x\r\nAccept: */*\r\n\r\n");
+        assert!(json.starts_with("HTTP/1.0 200 OK\r\n"), "{json}");
+        assert!(json.contains("Content-Type: application/json"), "{json}");
+        assert!(json.ends_with("{\"counters\":{\"canary\":7}}"), "{json}");
+
+        let trace = get(addr, "GET /trace.json HTTP/1.0\r\n\r\n");
+        assert!(trace.ends_with("{\"truncated\":0,\"spans\":[]}"), "{trace}");
+
+        let health = get(addr, "GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.0 200 OK\r\n"), "{health}");
+        assert!(health.ends_with("{\"status\":\"ok\",\"draining\":false}"), "{health}");
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_are_refused() {
+        let draining = Arc::new(AtomicBool::new(false));
+        let http = MetricsHttp::start("127.0.0.1:0", canned_sources(draining)).expect("bind");
+        let addr = http.local_addr();
+        let missing = get(addr, "GET /nope HTTP/1.0\r\n\r\n");
+        assert!(missing.starts_with("HTTP/1.0 404 Not Found\r\n"), "{missing}");
+        let post = get(addr, "POST /metrics HTTP/1.0\r\n\r\n");
+        assert!(post.starts_with("HTTP/1.0 405 Method Not Allowed\r\n"), "{post}");
+    }
+
+    #[test]
+    fn healthz_flips_to_503_when_draining() {
+        let draining = Arc::new(AtomicBool::new(false));
+        let mut http =
+            MetricsHttp::start("127.0.0.1:0", canned_sources(draining.clone())).expect("bind");
+        let addr = http.local_addr();
+        draining.store(true, Ordering::SeqCst);
+        let health = get(addr, "GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(health.starts_with("HTTP/1.0 503 Service Unavailable\r\n"), "{health}");
+        assert!(health.ends_with("{\"status\":\"draining\",\"draining\":true}"), "{health}");
+        http.shutdown();
+        http.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn splice_snapshots_yields_one_json_object() {
+        let reg = Registry::new();
+        let ring = SnapshotRing::new(&reg, 8, 100);
+        ring.push(SnapSample {
+            at_ms: 10,
+            queue_depth: 3,
+            inflight: 2,
+            net_open: 1,
+            stage_busy_permille: 500,
+        });
+        let spliced = splice_snapshots("{\"counters\":{},\"gauges\":{}}", &ring);
+        let doc = Json::parse(&spliced).expect("spliced document parses");
+        let snaps = doc.get("snapshots").expect("snapshots key grafted on");
+        assert_eq!(snaps.get("cap").and_then(Json::as_u64), Some(8));
+        let samples = snaps.get("samples").and_then(Json::as_arr).expect("samples");
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].get("queue_depth").and_then(Json::as_u64), Some(3));
+        // degenerate input passes through untouched
+        assert_eq!(splice_snapshots("[]", &ring), "[]");
+    }
+}

@@ -10,7 +10,9 @@
 //! order: it consumes a bounded FIFO of pending responses and blocks on
 //! each in turn, so replies on one connection never overtake each other
 //! (head-of-line ordering is part of the documented protocol; clients
-//! wanting concurrency open more connections).
+//! wanting concurrency open more connections).  Admin (scrape) frames are
+//! answered in-line from the shared registry — same FIFO, no coordinator
+//! round-trip — so one socket can interleave inference and observability.
 //!
 //! Admission control is layered exactly like the in-process path, plus two
 //! connection-level caps, and every shed is an explicit
@@ -39,8 +41,10 @@ use std::time::{Duration, Instant};
 use crate::coordinator::router::RouteError;
 use crate::coordinator::{Frontend, InferError, Metrics, Response, Server};
 use crate::net::protocol::{
-    encode_reply, Frame, FrameReader, ReplyFrame, RequestFrame, Status, DEFAULT_MAX_FRAME,
+    encode_admin_reply, encode_reply, AdminFrame, AdminKind, AdminReplyFrame, Frame, FrameReader,
+    ReplyFrame, RequestFrame, Status, DEFAULT_MAX_FRAME,
 };
+use crate::net::scrape::health_document;
 
 /// Socket read granularity; also the slack the frame buffer may hold
 /// beyond one maximum-size frame.
@@ -83,6 +87,10 @@ enum WriterMsg {
     Wait(u64, mpsc::Receiver<Result<Response, InferError>>),
     /// an immediate reply (shed load, validation error) — already final
     Ready(ReplyFrame),
+    /// an answered admin (scrape) frame — rendered by the reader at decode
+    /// time so the document reflects the scrape instant, written here so it
+    /// keeps its place in the connection's FIFO reply order
+    AdminReady(AdminReplyFrame),
 }
 
 /// State shared by the accept loop, every connection thread, and shutdown.
@@ -313,11 +321,33 @@ fn handle_connection(
                         break 'conn; // writer gone: connection is dead
                     }
                 }
+                Ok(Some(Frame::Admin(adm))) => {
+                    // scrape-over-the-wire: answer from the shared registry
+                    // without touching the coordinator's admission path, so
+                    // observability never competes for serving capacity
+                    metrics.net.frames_rx.inc();
+                    let draining = shared.stop.load(Ordering::SeqCst);
+                    let rep = admin_reply(adm, &frontend, draining);
+                    if writer_tx.send(WriterMsg::AdminReady(rep)).is_err() {
+                        break 'conn; // writer gone: connection is dead
+                    }
+                }
                 Ok(Some(Frame::Reply(rep))) => {
                     // clients don't send replies; the stream is garbage
                     metrics.net.decode_errors.inc();
                     let shed =
                         ReplyFrame::error(rep.id, Status::BadRequest, "unexpected reply frame");
+                    let _ = writer_tx.send(WriterMsg::Ready(shed));
+                    break 'conn;
+                }
+                Ok(Some(Frame::AdminReply(rep))) => {
+                    // admin replies flow server→client only
+                    metrics.net.decode_errors.inc();
+                    let shed = ReplyFrame::error(
+                        rep.id,
+                        Status::BadRequest,
+                        "unexpected admin-reply frame",
+                    );
                     let _ = writer_tx.send(WriterMsg::Ready(shed));
                     break 'conn;
                 }
@@ -371,6 +401,19 @@ fn submit_request(
     }
 }
 
+/// Render the document an admin frame asked for.  Same sources as the
+/// HTTP scrape endpoints ([`crate::net::scrape`]): the shared registry,
+/// the frontend's joined trace view, and the drain flag for health.
+fn admin_reply(req: AdminFrame, frontend: &Frontend, draining: bool) -> AdminReplyFrame {
+    let body = match req.kind {
+        AdminKind::MetricsText => frontend.metrics().export_text(),
+        AdminKind::MetricsJson => frontend.metrics().export_json(),
+        AdminKind::TraceJson => frontend.trace_json(),
+        AdminKind::Health => health_document(draining),
+    };
+    AdminReplyFrame { id: req.id, kind: req.kind, body }
+}
+
 /// Map the serving error taxonomy onto wire status codes.
 fn reply_for(id: u64, err: &InferError) -> ReplyFrame {
     let status = match err {
@@ -396,6 +439,19 @@ fn writer_loop(
     let mut socket_dead = false;
     while let Ok(msg) = rx.recv() {
         let (reply, was_inflight) = match msg {
+            WriterMsg::AdminReady(rep) => {
+                metrics.net.admin.inc();
+                if !socket_dead {
+                    let bytes = encode_admin_reply(&rep);
+                    if stream.write_all(&bytes).is_ok() {
+                        metrics.net.frames_tx.inc();
+                        metrics.net.bytes_tx.add(bytes.len() as u64);
+                    } else {
+                        socket_dead = true;
+                    }
+                }
+                continue;
+            }
             WriterMsg::Ready(r) => (r, false),
             WriterMsg::Wait(id, resp_rx) => {
                 let r = match resp_rx.recv() {

@@ -165,6 +165,19 @@ impl PipelineStats {
         }
     }
 
+    /// [`busy_fraction`](Self::busy_fraction) in integer thousandths —
+    /// the unit the registry's `*_permille` gauges carry.
+    pub fn busy_permille(&self, stage: usize) -> u64 {
+        (1000.0 * self.busy_fraction(stage)) as u64
+    }
+
+    /// The busiest stage's permille right now — the snapshot ticker's
+    /// per-pipeline sampling hook (the bottleneck stage is the one the
+    /// paper's pipeline-fill story cares about).  0 with no stages.
+    pub fn max_busy_permille(&self) -> u64 {
+        (0..self.stages.len()).map(|s| self.busy_permille(s)).max().unwrap_or(0)
+    }
+
     /// Compact per-stage busy fractions, e.g. `"s0=83% s1=71% s2=64%"` —
     /// what `Metrics::summary()` appends for a pipelined model.
     pub fn occupancy_summary(&self) -> String {
@@ -224,6 +237,8 @@ mod tests {
         stats.stages[0].idle_us.fetch_add(100, Ordering::Relaxed);
         let f = stats.busy_fraction(0);
         assert!((f - 0.75).abs() < 1e-9, "busy fraction {f}");
+        assert_eq!(stats.busy_permille(0), 750);
+        assert_eq!(stats.max_busy_permille(), 750, "busiest stage wins");
         assert_eq!(stats.stages[0].items.load(Ordering::Relaxed), 4);
         let s = stats.occupancy_summary();
         assert!(s.contains("s0=75%") && s.contains("s1=0%"), "{s}");

@@ -79,9 +79,24 @@
 //! (golden-tested).  Histogram quantiles saturate into the last finite
 //! edge on overflow, matching `coordinator::Metrics`' `p95>…` floor
 //! convention.
+//!
+//! ## Live scrape and snapshots
+//!
+//! Both expositions are also served **on-line**: `circnn serve
+//! --metrics-addr HOST:PORT` starts the HTTP/1.0 responder of
+//! `crate::net::scrape` (GET `/metrics`, `/metrics.json`, `/trace.json`,
+//! `/healthz`) against the same registry/tracer, and the CIRC wire
+//! protocol's `Admin` frame scrapes the same documents without a second
+//! socket.  The [`snapshot`] module adds the time dimension: a background
+//! [`snapshot::Sampler`] captures queue depth, in-flight, stage busy
+//! permille, and open connections every `CIRCNN_SNAP_MS` into a bounded
+//! [`snapshot::SnapshotRing`] with `*_watermark` high-water gauges, so
+//! transient saturation is visible instead of averaged away.
 
 pub mod registry;
+pub mod snapshot;
 pub mod span;
 
 pub use registry::{log2_edges, Counter, Gauge, Histogram, Registry};
-pub use span::{render_waterfall, spans_to_json, Seg, SpanRecord, Tracer};
+pub use snapshot::{sparkline, Sampler, SnapSample, SnapshotRing};
+pub use span::{render_waterfall, spans_to_json, trace_document, Seg, SpanRecord, Tracer};

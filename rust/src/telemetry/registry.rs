@@ -445,6 +445,43 @@ demo_wait_us_count 4
     }
 
     #[test]
+    fn quantile_edge_saturates_never_interpolates() {
+        // the satellite audit: `quantile_edge` on degenerate mass
+        // distributions must return the documented saturation values —
+        // never a value interpolated past the last finite edge.
+        let reg = Registry::new();
+
+        // empty histogram: no mass, no bucket — the documented answer is 0
+        let empty = reg.histogram_edges("audit_empty_us", &[10, 100, 1000]);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(empty.quantile_bucket(q), None);
+            assert_eq!(empty.quantile_edge(q), 0, "empty histogram reports 0 at q={q}");
+        }
+
+        // overflow-only: every observation past the last finite edge — every
+        // quantile (even p1) saturates into the last finite edge, the
+        // coordinator's `p95>1000us` floor convention
+        let over = reg.histogram_edges("audit_overflow_us", &[10, 100, 1000]);
+        over.observe(5000);
+        over.observe(u64::MAX);
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(over.quantile_bucket(q), Some(3), "all mass in overflow at q={q}");
+            assert_eq!(over.quantile_edge(q), 1000, "saturates to last finite edge at q={q}");
+        }
+
+        // all mass in the first bucket: even p99/p100 stay on the first
+        // edge — no drift toward later empty buckets
+        let first = reg.histogram_edges("audit_first_bucket_us", &[10, 100, 1000]);
+        for _ in 0..32 {
+            first.observe(3);
+        }
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(first.quantile_bucket(q), Some(0));
+            assert_eq!(first.quantile_edge(q), 10, "first-bucket mass pins to first edge");
+        }
+    }
+
+    #[test]
     fn reregistration_is_idempotent() {
         let reg = Registry::new();
         let a = reg.counter("idem_total");

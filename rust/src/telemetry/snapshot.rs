@@ -1,0 +1,362 @@
+//! Time-series snapshots of the serving plane: a background sampler
+//! captures queue depth, in-flight count, per-stage busy permille, and
+//! open-connection gauges every `CIRCNN_SNAP_MS` into a bounded ring,
+//! tracking the **high watermark** of each series in `*_watermark`
+//! gauges.
+//!
+//! Averaged metrics hide transient saturation: a queue that spikes to its
+//! cap for 50ms and drains again leaves no trace in a per-run mean, but
+//! it is exactly the signal the paper's deep-pipelining story depends on
+//! (sustained occupancy, not one-shot benchmarks).  The ring keeps the
+//! last [`SnapshotRing::cap`] samples for `/metrics.json` consumers and
+//! the ASCII sparkline in the `circnn serve` status output; the watermark
+//! gauges survive ring wrap-around, so "how bad did it ever get" is
+//! always one scrape away.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::registry::{Counter, Gauge, Registry};
+
+/// Default ring capacity: at the default 100ms period this is ~25s of
+/// history — enough to catch a burst, small enough to scrape cheaply.
+pub const DEFAULT_SNAP_CAP: usize = 256;
+
+/// Default sampling period when `CIRCNN_SNAP_MS` is unset.
+pub const DEFAULT_SNAP_MS: u64 = 100;
+
+/// One sampled observation of the serving plane.  `at_ms` is milliseconds
+/// since the ring was created (plain integers — deterministic to
+/// serialize, trivial to diff).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapSample {
+    pub at_ms: u64,
+    /// requests queued in the dynamic batcher(s), summed across models
+    pub queue_depth: u64,
+    /// requests admitted but not yet answered
+    pub inflight: u64,
+    /// open TCP connections (`net_connections_open`)
+    pub net_open: u64,
+    /// busiest pipeline stage, integer thousandths (0 on the serial engine)
+    pub stage_busy_permille: u64,
+}
+
+/// The bounded time-series ring plus its watermark gauges.  Pushing is a
+/// short lock; scraping clones the window.  All five snapshot metrics are
+/// registered here and nowhere else (the `metric-name` single-site rule).
+pub struct SnapshotRing {
+    cap: usize,
+    period_ms: u64,
+    epoch: Instant,
+    inner: Mutex<VecDeque<SnapSample>>,
+    samples_total: Counter,
+    wm_queue_depth: Gauge,
+    wm_inflight: Gauge,
+    wm_net_open: Gauge,
+    wm_stage_busy: Gauge,
+}
+
+impl SnapshotRing {
+    pub fn new(reg: &Registry, cap: usize, period_ms: u64) -> Arc<Self> {
+        Arc::new(SnapshotRing {
+            cap: cap.max(1),
+            period_ms: period_ms.max(1),
+            epoch: Instant::now(),
+            inner: Mutex::new(VecDeque::new()),
+            samples_total: reg.counter("snap_samples_total"),
+            wm_queue_depth: reg.gauge("queue_depth_watermark"),
+            wm_inflight: reg.gauge("inflight_requests_watermark"),
+            wm_net_open: reg.gauge("net_connections_open_watermark"),
+            wm_stage_busy: reg.gauge("stage_busy_permille_watermark"),
+        })
+    }
+
+    /// Ring capacity (samples retained).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Configured sampling period in ms (the `CIRCNN_SNAP_MS` value).
+    pub fn period_ms(&self) -> u64 {
+        self.period_ms
+    }
+
+    /// ms since the ring was created — the `at_ms` stamp for a sample
+    /// taken now.
+    pub fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Append one sample: evicts the oldest at capacity and raises the
+    /// watermark gauges (watermarks are process-lifetime maxima — they
+    /// never decay with the ring).
+    pub fn push(&self, sample: SnapSample) {
+        raise(&self.wm_queue_depth, sample.queue_depth);
+        raise(&self.wm_inflight, sample.inflight);
+        raise(&self.wm_net_open, sample.net_open);
+        raise(&self.wm_stage_busy, sample.stage_busy_permille);
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if inner.len() >= self.cap {
+            inner.pop_front();
+        }
+        inner.push_back(sample);
+        self.samples_total.inc();
+    }
+
+    /// Snapshot of the retained window, oldest first.
+    pub fn samples(&self) -> Vec<SnapSample> {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.iter().copied().collect()
+    }
+
+    /// JSON for the `/metrics.json` `"snapshots"` key:
+    /// `{"period_ms":…,"cap":…,"samples":[{"at_ms":…,"queue_depth":…,
+    /// "inflight":…,"net_open":…,"stage_busy_permille":…},…]}` —
+    /// integers only, parseable by [`crate::util::json`].
+    pub fn render_json(&self) -> String {
+        let rows: Vec<String> = self
+            .samples()
+            .iter()
+            .map(|s| {
+                format!(
+                    "{{\"at_ms\":{},\"queue_depth\":{},\"inflight\":{},\"net_open\":{},\
+                     \"stage_busy_permille\":{}}}",
+                    s.at_ms, s.queue_depth, s.inflight, s.net_open, s.stage_busy_permille
+                )
+            })
+            .collect();
+        format!(
+            "{{\"period_ms\":{},\"cap\":{},\"samples\":[{}]}}",
+            self.period_ms,
+            self.cap,
+            rows.join(",")
+        )
+    }
+
+    /// Multi-line ASCII status block: one sparkline per series over the
+    /// retained window, annotated with the watermark (printed by
+    /// `circnn serve` at shutdown).
+    pub fn render_status(&self, width: usize) -> String {
+        let samples = self.samples();
+        if samples.is_empty() {
+            return "(no snapshots — sampler never ticked)\n".to_string();
+        }
+        let span_ms = samples.last().map(|s| s.at_ms).unwrap_or(0)
+            - samples.first().map(|s| s.at_ms).unwrap_or(0);
+        let mut out = format!(
+            "== snapshot ring ({} samples, {}ms window, period {}ms) ==\n",
+            samples.len(),
+            span_ms,
+            self.period_ms
+        );
+        let series: [(&str, Vec<u64>, u64); 4] = [
+            (
+                "queue_depth",
+                samples.iter().map(|s| s.queue_depth).collect(),
+                self.wm_queue_depth.get(),
+            ),
+            ("inflight", samples.iter().map(|s| s.inflight).collect(), self.wm_inflight.get()),
+            ("net_open", samples.iter().map(|s| s.net_open).collect(), self.wm_net_open.get()),
+            (
+                "stage_busy_pm",
+                samples.iter().map(|s| s.stage_busy_permille).collect(),
+                self.wm_stage_busy.get(),
+            ),
+        ];
+        for (name, vals, watermark) in series {
+            out.push_str(&format!(
+                "{:>14} [wm {:>6}] |{}|\n",
+                name,
+                watermark,
+                sparkline(&vals, width)
+            ));
+        }
+        out
+    }
+}
+
+/// Raise `gauge` to `v` if `v` is higher (last-write-wins is fine: the
+/// sampler is the only writer).
+fn raise(gauge: &Gauge, v: u64) {
+    if v > gauge.get() {
+        gauge.set(v);
+    }
+}
+
+/// ASCII sparkline: downsample `vals` to `width` columns (bucket max, so
+/// a one-sample spike survives downsampling) and paint each column on a
+/// 9-level ramp scaled to the series max.
+pub fn sparkline(vals: &[u64], width: usize) -> String {
+    const RAMP: [char; 9] = [' ', '.', ':', '-', '=', '+', '*', '#', '@'];
+    let width = width.max(8);
+    if vals.is_empty() {
+        return " ".repeat(width);
+    }
+    let cols = width.min(vals.len());
+    let mut maxes = vec![0u64; cols];
+    for (i, &v) in vals.iter().enumerate() {
+        let col = i * cols / vals.len();
+        if v > maxes[col] {
+            maxes[col] = v;
+        }
+    }
+    let peak = maxes.iter().copied().max().unwrap_or(0).max(1);
+    maxes
+        .iter()
+        .map(|&v| {
+            if v == 0 {
+                RAMP[0]
+            } else {
+                // non-zero paints at least level 1; the column holding the
+                // series max always paints the top ramp level
+                let lvl = 1 + (v as u128 * (RAMP.len() - 2) as u128 / peak as u128) as usize;
+                RAMP[lvl.min(RAMP.len() - 1)]
+            }
+        })
+        .collect()
+}
+
+/// The background snapshot ticker: every `period` it runs `probe` and
+/// pushes the stamped sample into `ring`.  Stop with [`Sampler::stop`]
+/// (also run on drop); the thread wakes every few ms so shutdown never
+/// waits a full period.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Sampler {
+    pub fn start(
+        ring: Arc<SnapshotRing>,
+        probe: Box<dyn Fn() -> SnapSample + Send>,
+        period: Duration,
+    ) -> Sampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let period = period.max(Duration::from_millis(1));
+        let handle = std::thread::Builder::new()
+            .name("circnn-snap".into())
+            .spawn(move || {
+                let mut next = Instant::now() + period;
+                loop {
+                    while Instant::now() < next {
+                        if stop_flag.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(2).min(period));
+                    }
+                    next += period;
+                    let mut sample = probe();
+                    sample.at_ms = ring.now_ms();
+                    ring.push(sample);
+                }
+            })
+            .ok();
+        Sampler { stop, handle }
+    }
+
+    /// Signal the ticker and join it.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn ring_is_bounded_and_watermarks_survive_eviction() {
+        let reg = Registry::new();
+        let ring = SnapshotRing::new(&reg, 4, 10);
+        for i in 0..10u64 {
+            // the peak (depth 100) lands mid-run and is evicted by the end
+            let depth = if i == 3 { 100 } else { i };
+            ring.push(SnapSample {
+                at_ms: i * 10,
+                queue_depth: depth,
+                inflight: i * 2,
+                net_open: 1,
+                stage_busy_permille: 500 + i,
+            });
+        }
+        let samples = ring.samples();
+        assert_eq!(samples.len(), 4, "ring holds exactly `cap` samples");
+        assert_eq!(samples[0].at_ms, 60, "oldest samples were evicted");
+        // the evicted spike still shows in the watermark gauge
+        assert_eq!(reg.gauge("queue_depth_watermark").get(), 100);
+        assert_eq!(reg.gauge("inflight_requests_watermark").get(), 18);
+        assert_eq!(reg.gauge("net_connections_open_watermark").get(), 1);
+        assert_eq!(reg.gauge("stage_busy_permille_watermark").get(), 509);
+        assert_eq!(reg.counter("snap_samples_total").get(), 10);
+    }
+
+    #[test]
+    fn snapshot_json_parses_with_integer_series() {
+        let reg = Registry::new();
+        let ring = SnapshotRing::new(&reg, 8, 50);
+        ring.push(SnapSample {
+            at_ms: 1,
+            queue_depth: 2,
+            inflight: 3,
+            net_open: 4,
+            stage_busy_permille: 5,
+        });
+        let doc = Json::parse(&ring.render_json()).expect("snapshot json parses");
+        assert_eq!(doc.get("period_ms").and_then(Json::as_u64), Some(50));
+        assert_eq!(doc.get("cap").and_then(Json::as_u64), Some(8));
+        let rows = doc.get("samples").and_then(Json::as_arr).expect("samples");
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("queue_depth").and_then(Json::as_u64), Some(2));
+        assert_eq!(rows[0].get("stage_busy_permille").and_then(Json::as_u64), Some(5));
+    }
+
+    #[test]
+    fn sparkline_preserves_spikes_and_scales() {
+        // bucket-max downsampling: a single spike in 256 samples must
+        // survive a 16-column render
+        let mut vals = vec![1u64; 256];
+        vals[100] = 1000;
+        let line = sparkline(&vals, 16);
+        assert_eq!(line.chars().count(), 16);
+        assert!(line.contains('@'), "spike must paint the top ramp level: {line}");
+        assert!(line.contains('.'), "baseline must stay visible: {line}");
+        assert!(!sparkline(&[0, 0, 0], 8).contains('@'), "all-zero paints blank");
+        assert_eq!(sparkline(&[], 8), "        ");
+    }
+
+    #[test]
+    fn sampler_ticks_and_stops() {
+        let reg = Registry::new();
+        let ring = SnapshotRing::new(&reg, 32, 2);
+        let mut sampler = Sampler::start(
+            Arc::clone(&ring),
+            Box::new(|| SnapSample { queue_depth: 7, ..SnapSample::default() }),
+            Duration::from_millis(2),
+        );
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while ring.samples().len() < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        sampler.stop();
+        let n = ring.samples().len();
+        assert!(n >= 3, "sampler must have ticked: {n} samples");
+        assert_eq!(reg.gauge("queue_depth_watermark").get(), 7);
+        // stopped: no further ticks
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(ring.samples().len(), n, "no ticks after stop");
+    }
+}

@@ -162,6 +162,14 @@ impl Tracer {
         let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         inner.done.iter().cloned().collect()
     }
+
+    /// Spans dropped at the ring cap so far (`trace_spans_dropped_total`).
+    /// Non-zero means every snapshot from [`Tracer::spans`] is a *window*,
+    /// not the full history — renderers must say so (see
+    /// [`render_waterfall`] / [`trace_document`]).
+    pub fn dropped_count(&self) -> u64 {
+        self.spans_dropped.get()
+    }
 }
 
 /// Paint character for a segment: `queue` → `q`, `exec` → `x`, stage hops
@@ -177,16 +185,29 @@ fn paint(label: &str) -> char {
 /// ASCII waterfall over completed spans: one row per request, segments
 /// painted over a shared time axis (the per-request analogue of
 /// [`crate::pipeline::timeline::render`]).
-pub fn render_waterfall(spans: &[SpanRecord], width: usize) -> String {
+///
+/// `dropped` is the tracer's ring-drop count
+/// ([`Tracer::dropped_count`]): when non-zero the waterfall leads with an
+/// explicit `truncated: N` banner, so a partial window is never presented
+/// as the complete history.
+pub fn render_waterfall(spans: &[SpanRecord], width: usize, dropped: u64) -> String {
     let width = width.max(8);
+    let banner = if dropped > 0 {
+        format!(
+            "!! truncated: {dropped} older span(s) dropped at the ring cap \
+             (trace_spans_dropped_total) !!\n"
+        )
+    } else {
+        String::new()
+    };
     if spans.is_empty() {
-        return "(no completed spans — run with --trace / CIRCNN_TRACE=1)\n".to_string();
+        return format!("{banner}(no completed spans — run with --trace / CIRCNN_TRACE=1)\n");
     }
     let t0 = spans.iter().map(SpanRecord::start_us).min().unwrap_or(0);
     let t1 = spans.iter().map(SpanRecord::end_us).max().unwrap_or(t0).max(t0 + 1);
     let per_col = ((t1 - t0) as f64 / width as f64).max(1.0);
     let mut out = format!(
-        "== per-request span waterfall ({} spans, {}us, 1 col = {:.0}us) ==\n",
+        "{banner}== per-request span waterfall ({} spans, {}us, 1 col = {:.0}us) ==\n",
         spans.len(),
         t1 - t0,
         per_col
@@ -251,6 +272,14 @@ pub fn spans_to_json(spans: &[SpanRecord]) -> String {
     format!("[{}]", rows.join(","))
 }
 
+/// The `/trace.json` document: `{"truncated":N,"spans":[…]}`.  `truncated`
+/// is the ring-drop count ([`Tracer::dropped_count`]) — `0` means the
+/// `spans` array is the complete history, `N > 0` means the `N` oldest
+/// spans were dropped at the ring cap and only a window remains.
+pub fn trace_document(spans: &[SpanRecord], dropped: u64) -> String {
+    format!("{{\"truncated\":{dropped},\"spans\":{}}}", spans_to_json(spans))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -301,8 +330,47 @@ mod tests {
         let spans = tr.spans();
         assert_eq!(spans.len(), SPAN_RING_CAP);
         assert_eq!(reg.counter("trace_spans_dropped_total").get(), 10);
+        assert_eq!(tr.dropped_count(), 10);
         // oldest were dropped: the first surviving span is id 11
         assert_eq!(spans[0].id, 11);
+    }
+
+    #[test]
+    fn truncated_ring_is_bannered_never_silent() {
+        // the regression pin: at exactly ring-capacity + 1 spans the
+        // waterfall and the trace document must both announce the single
+        // dropped span instead of presenting the window as complete.
+        let reg = Registry::new();
+        let tr = Tracer::new(&reg);
+        for i in 0..(SPAN_RING_CAP + 1) {
+            let id = tr.admitted("m", at(&tr, i as u64));
+            tr.finished(id, at(&tr, i as u64 + 1));
+        }
+        assert_eq!(tr.dropped_count(), 1);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), SPAN_RING_CAP);
+
+        let text = render_waterfall(&spans, 32, tr.dropped_count());
+        assert!(
+            text.contains("truncated: 1 older span(s) dropped at the ring cap"),
+            "waterfall must banner the drop: {}",
+            text.lines().next().unwrap_or("")
+        );
+
+        let doc = Json::parse(&trace_document(&spans, tr.dropped_count())).expect("doc parses");
+        assert_eq!(doc.get("truncated").and_then(Json::as_u64), Some(1));
+        let arr = doc.get("spans").and_then(Json::as_arr).expect("spans array");
+        assert_eq!(arr.len(), SPAN_RING_CAP);
+
+        // one span under the cap: no banner, truncated: 0
+        let reg2 = Registry::new();
+        let tr2 = Tracer::new(&reg2);
+        let id = tr2.admitted("m", at(&tr2, 1));
+        tr2.finished(id, at(&tr2, 2));
+        let text2 = render_waterfall(&tr2.spans(), 32, tr2.dropped_count());
+        assert!(!text2.contains("truncated"), "no banner without drops: {text2}");
+        let doc2 = Json::parse(&trace_document(&tr2.spans(), tr2.dropped_count())).expect("parses");
+        assert_eq!(doc2.get("truncated").and_then(Json::as_u64), Some(0));
     }
 
     #[test]
@@ -317,7 +385,7 @@ mod tests {
         let mut spans = tr.spans();
         // a stage hop appended by the server-side join paints its digit
         spans[0].segs.push(Seg { label: "s1".into(), start_us: 50, end_us: 70 });
-        let text = render_waterfall(&spans, 48);
+        let text = render_waterfall(&spans, 48, 0);
         assert!(text.contains("3 spans"), "{text}");
         assert!(text.contains('q') && text.contains('x'), "{text}");
         assert!(text.contains('1'), "stage digit missing: {text}");
@@ -334,7 +402,7 @@ mod tests {
 
     #[test]
     fn empty_waterfall_is_a_hint_not_a_panic() {
-        let text = render_waterfall(&[], 32);
+        let text = render_waterfall(&[], 32, 0);
         assert!(text.contains("no completed spans"), "{text}");
     }
 }

@@ -8,6 +8,7 @@ pub struct Knob {
 pub const KNOBS: &[Knob] = &[
     Knob { name: "CIRCNN_FIXTURE_OK", role: "fixture knob" },
     Knob { name: "CIRCNN_FIXTURE_UNDOC", role: "absent from the guide" }, // LINT-EXPECT: docs-fresh
+    Knob { name: "CIRCNN_SNAP_MS", role: "snapshot-ticker period" },
 ];
 
 pub fn env_flag(name: &str) -> bool {

@@ -1,0 +1,27 @@
+//! Seeded violations on the observability plane: the snapshot-ticker
+//! knob read raw instead of through the sched helpers, and a watermark
+//! gauge the operator's guide never mentions — next to negative controls
+//! (the helper-routed knob read and documented snapshot metrics) that
+//! must stay quiet.
+
+pub fn snap_period_raw() -> u64 {
+    std::env::var("CIRCNN_SNAP_MS") // LINT-EXPECT: env-knob
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100)
+}
+
+pub fn undocumented_watermark(r: &Registry) -> Gauge {
+    r.gauge("fixture_queue_depth_watermark") // LINT-EXPECT: docs-fresh
+}
+
+// --- negative controls ---------------------------------------------------
+
+pub fn snap_period_registered() -> bool {
+    crate::circulant::sched::env_flag("CIRCNN_SNAP_MS")
+}
+
+pub fn documented_snapshot_metrics(r: &Registry) {
+    let _ = r.counter("fixture_snap_samples_total");
+    let _ = r.gauge("fixture_inflight_watermark");
+}

@@ -15,11 +15,15 @@ use std::time::Duration;
 
 use circnn::coordinator::{BatchPolicy, EngineKind, Server, ServerConfig};
 use circnn::data;
-use circnn::net::protocol::{decode_frame, encode_reply, encode_request, Frame};
+use circnn::net::protocol::{
+    decode_frame, encode_admin, encode_admin_reply, encode_reply, encode_request, Frame,
+};
 use circnn::net::{
-    Arrival, Client, LoadConfig, NetConfig, ReplyFrame, RequestFrame, Status, TcpServer,
+    AdminFrame, AdminKind, AdminReplyFrame, Arrival, Client, LoadConfig, NetConfig, ReplyFrame,
+    RequestFrame, Status, TcpServer,
 };
 use circnn::runtime::Manifest;
+use circnn::util::json::Json;
 
 const MODEL: &str = "mnist_mlp_1";
 const INPUT: u32 = 784;
@@ -126,7 +130,7 @@ fn documented_frames() -> Vec<Vec<u8>> {
 #[test]
 fn documented_example_frames_decode_byte_exactly() {
     let frames = documented_frames();
-    assert_eq!(frames.len(), 3, "PROTOCOL.md documents three example frames");
+    assert_eq!(frames.len(), 5, "PROTOCOL.md documents five example frames");
 
     let request = RequestFrame {
         id: 1,
@@ -151,6 +155,68 @@ fn documented_example_frames_decode_byte_exactly() {
     let shed = ReplyFrame::error(2, Status::Overloaded, "shed");
     assert_eq!(encode_reply(&shed), frames[2], "Overloaded example bytes drifted");
     assert_eq!(decode_frame(&frames[2]).unwrap(), Frame::Reply(shed));
+
+    let admin = AdminFrame { id: 7, kind: AdminKind::Health };
+    assert_eq!(encode_admin(&admin), frames[3], "admin example bytes drifted");
+    assert_eq!(decode_frame(&frames[3]).unwrap(), Frame::Admin(admin));
+
+    let admin_reply = AdminReplyFrame {
+        id: 7,
+        kind: AdminKind::Health,
+        body: "{\"status\":\"ok\",\"draining\":false}".into(),
+    };
+    assert_eq!(encode_admin_reply(&admin_reply), frames[4], "admin-reply example bytes drifted");
+    assert_eq!(decode_frame(&frames[4]).unwrap(), Frame::AdminReply(admin_reply));
+}
+
+#[test]
+fn admin_frames_scrape_the_wire_without_a_second_socket() {
+    // Four inference round trips interleaved with admin scrapes on the
+    // *same* connection: the scrape documents must reflect the served
+    // work, ride the FIFO reply order, and count only in net_admin_total.
+    let policy = BatchPolicy {
+        max_batch: 4,
+        max_delay: Duration::from_millis(2),
+        max_queue: 4096,
+    };
+    let tcp = TcpServer::start(start(EngineKind::Native, policy), NetConfig::default())
+        .expect("tcp start");
+    let mut client = Client::connect(tcp.local_addr()).expect("connect");
+    for i in 0..4u64 {
+        let (img, _) = data::sample(&data::MNIST_S, i);
+        let rep = client.infer(MODEL, &[INPUT], img).expect("round trip");
+        assert_eq!(rep.status, Status::Ok, "request {i}: {}", rep.message);
+    }
+
+    let text = client.admin(AdminKind::MetricsText).expect("metrics text");
+    assert_eq!(text.kind, AdminKind::MetricsText);
+    assert!(text.body.contains("requests_total"), "prometheus text names the counters");
+
+    let json = client.admin(AdminKind::MetricsJson).expect("metrics json");
+    let doc = Json::parse(&json.body).expect("metrics json parses");
+    let served = doc
+        .get("counters")
+        .and_then(|c| c.get("requests_total"))
+        .and_then(|v| v.as_u64())
+        .expect("requests_total present");
+    assert_eq!(served, 4, "scrape sees the four served requests");
+
+    let trace = client.admin(AdminKind::TraceJson).expect("trace json");
+    let tdoc = Json::parse(&trace.body).expect("trace json parses");
+    assert_eq!(tdoc.get("truncated").and_then(|v| v.as_u64()), Some(0));
+    assert_eq!(
+        tdoc.get("spans").and_then(|v| v.as_arr()).map(|a| a.len()),
+        Some(0),
+        "tracing is off, so the span array is empty"
+    );
+
+    let health = client.admin(AdminKind::Health).expect("health");
+    assert!(health.body.contains("\"draining\":false"), "live server reports not draining");
+
+    let net = &tcp.server().metrics().net;
+    assert_eq!(net.admin.get(), 4, "four admin replies written");
+    assert_eq!(net.frames_rx.get(), 8, "four inference + four admin frames read");
+    tcp.shutdown().shutdown();
 }
 
 #[test]

@@ -218,6 +218,97 @@ fn prop_tracing_does_not_change_served_bits() {
 }
 
 #[test]
+fn prop_scraping_does_not_change_served_bits() {
+    // the observability-plane pin: a server being scraped concurrently —
+    // text + JSON expositions and the trace document, as fast as a thread
+    // can pull them — must serve bitwise identical results to an unscraped
+    // one, on both engines; and the counters a scraper reads must be
+    // monotone across scrapes (a scrape never perturbs the books)
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use circnn::util::json::Json;
+
+    forall(
+        "serve under concurrent scrape == serve (bitwise)",
+        |r| {
+            let pipelined = r.below(2) == 1;
+            let max_batch = 1 + r.below(5) as usize;
+            let waves = 1 + r.below(3) as usize;
+            (pipelined, max_batch, waves)
+        },
+        |&(pipelined, max_batch, waves)| {
+            let policy = BatchPolicy {
+                max_batch,
+                max_delay: Duration::from_secs(10), // size-triggered only
+                max_queue: 4096,
+            };
+            let engine = if pipelined { EngineKind::Pipeline } else { EngineKind::Native };
+            let stream: Vec<u64> = (0..(max_batch * waves) as u64).collect();
+            let plain = start_cfg(engine, policy, None, false);
+            let want = serve_stream(&plain, &stream);
+            plain.shutdown();
+
+            let scraped = start_cfg(engine, policy, None, false);
+            let frontend = scraped.frontend().expect("serving server has a frontend");
+            let stop = Arc::new(AtomicBool::new(false));
+            let stop_flag = stop.clone();
+            let scraper = std::thread::spawn(move || {
+                let mut last_requests = 0u64;
+                let mut scrapes = 0u64;
+                // at least one full scrape even if serving wins the race
+                loop {
+                    let text = frontend.metrics().export_text();
+                    if !text.contains("requests_total") {
+                        return Err("text exposition lost requests_total".to_string());
+                    }
+                    let doc = Json::parse(&frontend.metrics().export_json())
+                        .map_err(|e| format!("json exposition unparseable mid-run: {e}"))?;
+                    let requests = doc
+                        .get("counters")
+                        .and_then(|c| c.get("requests_total"))
+                        .and_then(Json::as_u64)
+                        .ok_or("requests_total missing from json exposition")?;
+                    if requests < last_requests {
+                        return Err(format!(
+                            "requests_total went backwards across scrapes: \
+                             {last_requests} -> {requests}"
+                        ));
+                    }
+                    last_requests = requests;
+                    Json::parse(&frontend.trace_json())
+                        .map_err(|e| format!("trace document unparseable mid-run: {e}"))?;
+                    scrapes += 1;
+                    if stop_flag.load(Ordering::SeqCst) {
+                        return Ok(scrapes);
+                    }
+                }
+            });
+            let got = serve_stream(&scraped, &stream);
+            stop.store(true, Ordering::SeqCst);
+            // join before shutdown: the scraper's Frontend must drop for
+            // the executor to drain
+            let scrapes = scraper
+                .join()
+                .map_err(|_| "scraper thread panicked".to_string())??;
+            scraped.shutdown();
+            if scrapes == 0 {
+                return Err("scraper never completed a scrape".to_string());
+            }
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                if w != g {
+                    return Err(format!(
+                        "request {i}: serving under scrape diverged from unscraped \
+                         (engine {engine:?}, max_batch {max_batch}, {scrapes} scrapes)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn traced_server_renders_waterfall_and_telemetry_json() {
     let policy = BatchPolicy {
         max_batch: 4,
